@@ -1,0 +1,171 @@
+//! Regenerates paper **Figure 5**: prediction RMSE (± STD) and training+
+//! prediction time for the Schwefel and Rastrigin surfaces, D ∈ {10, 20},
+//! comparing GKP (ours) vs FGP / IP / state-space ("VBEM" stand-in).
+//!
+//! Scaled-down defaults (documented in DESIGN.md §4): n sweeps to 12000 by
+//! default (30000 with `--full`), 10 macro-reps instead of 100, and FGP is
+//! capped at n ≤ 2000 (its O(n³) fit dominates all wall-clock otherwise).
+//!
+//! ```sh
+//! cargo run --release --example figure5 [-- --full]
+//! ```
+//! CSV columns: fn,d,n,method,rmse,std,fit_time_s,pred_time_s
+
+use std::io::Write;
+use std::time::Instant;
+
+use addgp::baselines::full_gp::FullGP;
+use addgp::baselines::inducing::InducingGP;
+use addgp::baselines::statespace::StateSpaceBackfit;
+use addgp::bo::testfns::{rastrigin_classic, schwefel};
+use addgp::gp::model::{AdditiveGP, AdditiveGpConfig};
+use addgp::gp::train::TrainCfg;
+use addgp::util::Rng;
+
+const N_TEST: usize = 100;
+const FGP_CAP: usize = 2000;
+
+struct Series {
+    rmse_mean: f64,
+    rmse_std: f64,
+    fit_s: f64,
+    pred_s: f64,
+}
+
+fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
+    (pred.iter().zip(truth).map(|(a, b)| (a - b) * (a - b)).sum::<f64>() / pred.len() as f64)
+        .sqrt()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn eval_method(
+    method: &str,
+    f: &dyn Fn(&[f64]) -> f64,
+    d: usize,
+    n: usize,
+    lo: f64,
+    hi: f64,
+    reps: usize,
+    seed0: u64,
+) -> Option<Series> {
+    if method == "FGP" && n > FGP_CAP {
+        return None;
+    }
+    let mut rmses = Vec::with_capacity(reps);
+    let mut fit_s = 0.0;
+    let mut pred_s = 0.0;
+    for rep in 0..reps {
+        let mut rng = Rng::new(seed0 + rep as u64);
+        let x: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.uniform_in(lo, hi)).collect()).collect();
+        let y: Vec<f64> = x.iter().map(|r| f(r) + rng.normal()).collect();
+        let xt: Vec<Vec<f64>> =
+            (0..N_TEST).map(|_| (0..d).map(|_| rng.uniform_in(lo, hi)).collect()).collect();
+        let truth: Vec<f64> = xt.iter().map(|r| f(r)).collect();
+        let omega0 = 10.0 / (hi - lo);
+
+        let mut pred = vec![0.0; N_TEST];
+        match method {
+            "GKP" => {
+                let mut cfg = AdditiveGpConfig::default();
+                cfg.omega0 = omega0;
+                cfg.stochastic.trace_probes = 8; // MLE gradient probes
+                let mut gp = AdditiveGP::new(cfg, d);
+                let t0 = Instant::now();
+                gp.fit(&x, &y);
+                gp.optimize_hypers(&TrainCfg { steps: 6, lr: 0.25, ..Default::default() });
+                fit_s += t0.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                for (i, q) in xt.iter().enumerate() {
+                    pred[i] = gp.mean(q);
+                }
+                pred_s += t0.elapsed().as_secs_f64();
+            }
+            "FGP" => {
+                let mut gp = FullGP::new(addgp::Nu::Half, omega0, 1.0, d);
+                let t0 = Instant::now();
+                gp.fit(&x, &y);
+                gp.optimize_shared_omega(omega0 * 0.1, omega0 * 10.0, 8);
+                fit_s += t0.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                for (i, q) in xt.iter().enumerate() {
+                    pred[i] = gp.predict(q).0;
+                }
+                pred_s += t0.elapsed().as_secs_f64();
+            }
+            "IP" => {
+                let mut gp = InducingGP::new(addgp::Nu::Half, omega0, 1.0, d, seed0);
+                let t0 = Instant::now();
+                gp.fit(&x, &y);
+                fit_s += t0.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                for (i, q) in xt.iter().enumerate() {
+                    pred[i] = gp.predict(q).0;
+                }
+                pred_s += t0.elapsed().as_secs_f64();
+            }
+            "SS" => {
+                let omegas = vec![omega0; d];
+                let t0 = Instant::now();
+                let gp = StateSpaceBackfit::fit(&x, &y, &omegas, 1.0, 8);
+                fit_s += t0.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                for (i, q) in xt.iter().enumerate() {
+                    pred[i] = gp.predict_mean(q);
+                }
+                pred_s += t0.elapsed().as_secs_f64();
+            }
+            _ => unreachable!(),
+        }
+        rmses.push(rmse(&pred, &truth));
+    }
+    let mean = rmses.iter().sum::<f64>() / reps as f64;
+    let var = rmses.iter().map(|r| (r - mean) * (r - mean)).sum::<f64>() / reps as f64;
+    Some(Series {
+        rmse_mean: mean,
+        rmse_std: var.sqrt(),
+        fit_s: fit_s / reps as f64,
+        pred_s: pred_s / reps as f64,
+    })
+}
+
+fn main() -> std::io::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let reps = if full { 20 } else { 5 };
+    let ns: Vec<usize> = if full {
+        vec![3000, 6000, 12000, 30000]
+    } else {
+        vec![1000, 2000, 4000, 8000]
+    };
+    let out_dir = "target/figures";
+    std::fs::create_dir_all(out_dir)?;
+    let mut w = std::fs::File::create(format!("{out_dir}/figure5.csv"))?;
+    writeln!(w, "fn,d,n,method,rmse,std,fit_time_s,pred_time_s")?;
+
+    for (fname, f, lo, hi) in [
+        ("schwefel", schwefel as fn(&[f64]) -> f64, -500.0, 500.0),
+        ("rastrigin", rastrigin_classic as fn(&[f64]) -> f64, -5.12, 5.12),
+    ] {
+        for d in [10usize, 20] {
+            for &n in &ns {
+                for method in ["GKP", "FGP", "IP", "SS"] {
+                    let seed = 0xF5 + d as u64 * 1000 + n as u64;
+                    let Some(s) = eval_method(method, &f, d, n, lo, hi, reps, seed) else {
+                        continue;
+                    };
+                    println!(
+                        "{fname} D={d} n={n} {method:>4}: RMSE {:.3} ± {:.3}  fit {:.2}s pred {:.3}s",
+                        s.rmse_mean, s.rmse_std, s.fit_s, s.pred_s
+                    );
+                    writeln!(
+                        w,
+                        "{fname},{d},{n},{method},{},{},{},{}",
+                        s.rmse_mean, s.rmse_std, s.fit_s, s.pred_s
+                    )?;
+                }
+            }
+        }
+    }
+    println!("wrote {out_dir}/figure5.csv");
+    Ok(())
+}

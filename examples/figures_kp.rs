@@ -1,0 +1,104 @@
+//! Regenerates the data behind paper **Figures 1 and 2** as CSV:
+//!
+//! * Figure 1 (left): five Matérn-3/2 kernels `a_j k(·, x_j)` whose sum is a
+//!   compactly-supported KP; (right) the ten KPs obtained from ten kernels.
+//! * Figure 2: the generalized KPs of `∂ω k` for Matérn-1/2, ω = 1,
+//!   X = {0.1, …, 1.0}.
+//!
+//! ```sh
+//! cargo run --release --example figures_kp [-- out_dir]
+//! ```
+
+use addgp::kernels::gkp::GkpFactorization;
+use addgp::kernels::kp::KpFactorization;
+use addgp::kernels::matern::{Matern, Nu};
+use std::io::Write;
+
+fn main() -> std::io::Result<()> {
+    let out_dir = std::env::args().nth(1).unwrap_or_else(|| "target/figures".into());
+    std::fs::create_dir_all(&out_dir)?;
+
+    // ---- Figure 1: Matérn-3/2 KPs on 10 equispaced points -------------
+    let xs: Vec<f64> = (1..=10).map(|i| i as f64 / 10.0).collect();
+    let kernel = Matern::new(Nu::ThreeHalves, 1.0);
+    let f = KpFactorization::new(&xs, kernel);
+    let grid: Vec<f64> = (0..=600).map(|i| -0.2 + 1.4 * i as f64 / 600.0).collect();
+
+    // Left panel: the central packet at row 5 and its five scaled kernels.
+    let mut w = std::fs::File::create(format!("{out_dir}/figure1_left.csv"))?;
+    writeln!(w, "x,kp,term1,term2,term3,term4,term5")?;
+    let row = 5usize;
+    let (lo, hi) = f.a.row_range(row);
+    for &x in &grid {
+        let mut terms = Vec::new();
+        let mut kp = 0.0;
+        for s in lo..hi {
+            let t = f.a.get(row, s) * kernel.k(f.xs[s], x);
+            terms.push(t);
+            kp += t;
+        }
+        while terms.len() < 5 {
+            terms.push(0.0);
+        }
+        writeln!(
+            w,
+            "{x},{kp},{},{},{},{},{}",
+            terms[0], terms[1], terms[2], terms[3], terms[4]
+        )?;
+    }
+
+    // Right panel: all ten KPs.
+    let mut w = std::fs::File::create(format!("{out_dir}/figure1_right.csv"))?;
+    let header: Vec<String> = (0..10).map(|i| format!("kp{i}")).collect();
+    writeln!(w, "x,{}", header.join(","))?;
+    for &x in &grid {
+        let mut row = vec![x.to_string()];
+        for i in 0..10 {
+            let (lo, hi) = f.a.row_range(i);
+            let v: f64 = (lo..hi).map(|s| f.a.get(i, s) * kernel.k(f.xs[s], x)).sum();
+            row.push(format!("{v}"));
+        }
+        writeln!(w, "{}", row.join(","))?;
+    }
+
+    // Numeric verification of the compact-support claim (Fig 1's point):
+    let mut max_out: f64 = 0.0;
+    for i in f.w()..10 - f.w() {
+        for &x in &grid {
+            let (plo, phi_) = (f.xs[i - f.w()], f.xs[i + f.w()]);
+            if x < plo - 1e-9 || x > phi_ + 1e-9 {
+                let (lo, hi) = f.a.row_range(i);
+                let v: f64 = (lo..hi).map(|s| f.a.get(i, s) * kernel.k(f.xs[s], x)).sum();
+                max_out = max_out.max(v.abs());
+            }
+        }
+    }
+    println!("figure1: max |KP| outside support = {max_out:.3e} (should be ~0)");
+
+    // ---- Figure 2: generalized KPs of ∂ωk, Matérn-1/2 ------------------
+    let kernel2 = Matern::new(Nu::Half, 1.0);
+    let g = GkpFactorization::new_sorted(&xs, kernel2);
+    let mut w = std::fs::File::create(format!("{out_dir}/figure2.csv"))?;
+    let header: Vec<String> = (0..10).map(|i| format!("gkp{i}")).collect();
+    writeln!(w, "x,dk_example,{}", header.join(","))?;
+    let mut max_out2: f64 = 0.0;
+    for &x in &grid {
+        let mut row = vec![x.to_string(), format!("{}", kernel2.dk_domega(0.5, x))];
+        for i in 0..10 {
+            let (lo, hi) = g.b.row_range(i);
+            let v: f64 = (lo..hi).map(|s| g.b.get(i, s) * kernel2.dk_domega(g.xs[s], x)).sum();
+            row.push(format!("{v}"));
+            let wb = 2; // ν+3/2 for ν=1/2
+            if i >= wb && i + wb < 10 {
+                let (plo, phi_) = (g.xs[i - wb], g.xs[i + wb]);
+                if x < plo - 1e-9 || x > phi_ + 1e-9 {
+                    max_out2 = max_out2.max(v.abs());
+                }
+            }
+        }
+        writeln!(w, "{}", row.join(","))?;
+    }
+    println!("figure2: max |GKP| outside support = {max_out2:.3e} (should be ~0)");
+    println!("CSV written to {out_dir}/figure1_left.csv, figure1_right.csv, figure2.csv");
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Empirical complexity study — verifies the paper's headline claims
+//! (Table 1 and §5/§6) by fitting log–log slopes over an n-sweep:
+//!
+//! * KP factorization + posterior (`b_Y`) build:        ~O(n log n)  (slope ≈ 1)
+//! * log-likelihood + gradient:                         ~O(n log n)
+//! * acquisition value+gradient at a *new* point:        ~O(log n)   (slope ≈ 0)
+//! * acquisition step after a tiny move (cache warm):    ~O(1)
+//! * dense FGP fit:                                      ~O(n³)      (slope ≈ 3)
+//!
+//! ```sh
+//! cargo run --release --example scaling
+//! ```
+
+use std::time::Instant;
+
+use addgp::baselines::full_gp::FullGP;
+use addgp::gp::model::{AdditiveGP, AdditiveGpConfig};
+use addgp::util::timer::loglog_slope;
+use addgp::util::Rng;
+
+fn main() {
+    let d = 5;
+    let ns = [1000usize, 2000, 4000, 8000, 16000];
+    let mut fit_t = Vec::new();
+    let mut nllgrad_t = Vec::new();
+    let mut query_cold_t = Vec::new();
+    let mut query_warm_t = Vec::new();
+
+    println!("n-sweep (D={d}, Matérn-1/2):");
+    for &n in &ns {
+        let mut rng = Rng::new(n as u64);
+        let x: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.uniform_in(0.0, 10.0)).collect()).collect();
+        let y: Vec<f64> =
+            x.iter().map(|r| r.iter().map(|v| v.sin()).sum::<f64>() + rng.normal()).collect();
+        let mut cfg = AdditiveGpConfig::default();
+        cfg.omega0 = 1.0;
+        let mut gp = AdditiveGP::new(cfg, d);
+
+        let t0 = Instant::now();
+        gp.fit(&x, &y);
+        gp.ensure_posterior();
+        let t_fit = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let _ = gp.nll_grad();
+        let t_grad = t0.elapsed().as_secs_f64();
+
+        // Cold query: fresh point, cache must be built for its windows.
+        let q = vec![5.0; d];
+        let t0 = Instant::now();
+        let _ = gp.predict(&q, true);
+        let t_cold = t0.elapsed().as_secs_f64();
+
+        // Warm queries: tiny moves around q (the paper's O(1) step).
+        let reps = 2000;
+        let mut qq = q.clone();
+        let t0 = Instant::now();
+        for i in 0..reps {
+            qq[i % d] += 1e-7;
+            let _ = std::hint::black_box(gp.predict(&qq, true));
+        }
+        let t_warm = t0.elapsed().as_secs_f64() / reps as f64;
+
+        println!(
+            "  n={n:6}: fit+posterior {t_fit:8.3}s  ∇NLL {t_grad:8.3}s  \
+             cold query {:.3}ms  warm step {:.1}µs",
+            t_cold * 1e3,
+            t_warm * 1e6
+        );
+        fit_t.push(t_fit);
+        nllgrad_t.push(t_grad);
+        query_cold_t.push(t_cold);
+        query_warm_t.push(t_warm);
+    }
+    let nsf: Vec<f64> = ns.iter().map(|&n| n as f64).collect();
+    println!("log–log slopes vs n:");
+    println!("  fit+posterior : {:+.2}  (paper: ~1, O(n log n))", loglog_slope(&nsf, &fit_t));
+    println!("  NLL gradient  : {:+.2}  (paper: ~1, O(n log n))", loglog_slope(&nsf, &nllgrad_t));
+    println!(
+        "  cold query    : {:+.2}  (paper: ~0, O(log n) + window build)",
+        loglog_slope(&nsf, &query_cold_t)
+    );
+    println!(
+        "  warm step     : {:+.2}  (paper: ~0, O(1))",
+        loglog_slope(&nsf, &query_warm_t)
+    );
+
+    // Dense baseline for contrast (small ns only).
+    let ns_fgp = [250usize, 500, 1000, 2000];
+    let mut fgp_t = Vec::new();
+    for &n in &ns_fgp {
+        let mut rng = Rng::new(n as u64);
+        let x: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.uniform_in(0.0, 10.0)).collect()).collect();
+        let y: Vec<f64> =
+            x.iter().map(|r| r.iter().map(|v| v.sin()).sum::<f64>() + rng.normal()).collect();
+        let mut gp = FullGP::new(addgp::Nu::Half, 1.0, 1.0, d);
+        let t0 = Instant::now();
+        gp.fit(&x, &y);
+        fgp_t.push(t0.elapsed().as_secs_f64());
+        println!("  FGP n={n:5}: fit {:.3}s", fgp_t.last().unwrap());
+    }
+    let nsf: Vec<f64> = ns_fgp.iter().map(|&n| n as f64).collect();
+    println!("  FGP fit slope : {:+.2}  (theory: ~3, O(n³))", loglog_slope(&nsf, &fgp_t));
+}

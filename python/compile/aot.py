@@ -1,0 +1,102 @@
+"""AOT lowering: jax → HLO *text* artifacts for the rust PJRT runtime.
+
+HLO text (not `.serialize()`) is the interchange format — jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the image's xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example/README.md
+and gen_hlo.py there).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one `window_acq_D{D}_W{W}_B{B}.hlo.txt` per shipped configuration plus
+`manifest.json` describing shapes, in/out orders and dtypes for the loader
+(`rust/src/runtime`).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import batch_acq
+
+# (D, W, B): input dimension, KP window width (2ν+1 → 2 for ν=1/2,
+# 4 for ν=3/2), batch size. B must be a multiple of window_acq.B_TILE.
+DEFAULT_CONFIGS = [
+    (2, 2, 64),
+    (5, 2, 64),
+    (10, 2, 64),
+    (20, 2, 64),
+    (2, 4, 64),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_config(d: int, w: int, b: int) -> str:
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    args = (
+        spec((b, d, w), f32),        # phi
+        spec((b, d, w), f32),        # dphi
+        spec((b, d, w), f32),        # bwin
+        spec((b, d, w, w), f32),     # cwin
+        spec((b, d, w, d, w), f32),  # mwin
+        spec((b,), f32),             # kdiag
+        spec((), f32),               # beta
+    )
+    lowered = jax.jit(batch_acq).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--configs",
+        default=None,
+        help="comma-separated D:W:B triples, e.g. 2:2:64,10:2:64",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    configs = DEFAULT_CONFIGS
+    if args.configs:
+        configs = [tuple(int(t) for t in c.split(":")) for c in args.configs.split(",")]
+
+    manifest = {"artifacts": []}
+    for d, w, b in configs:
+        name = f"window_acq_D{d}_W{w}_B{b}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        text = lower_config(d, w, b)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "kind": "window_acq",
+                "d": d,
+                "w": w,
+                "b": b,
+                "inputs": ["phi", "dphi", "bwin", "cwin", "mwin", "kdiag", "beta"],
+                "outputs": ["mu", "svar", "acq", "gacq"],
+                "dtype": "f32",
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""L1 — the Pallas kernel for the batched window-acquisition hot-spot.
+
+The O(1)-per-query prediction of §5.2/§6 reduces to tiny dense contractions
+over gathered windows. Batched over B queries this is MXU-shaped work: the
+`M̃` quadratic form is a `[B, DW] × [B, DW, DW]` batched mat-vec. The kernel
+tiles over the batch (BlockSpec on axis 0) so the per-step VMEM footprint is
+`O(B_TILE · (DW)²)` — a few hundred KiB for every shipped configuration.
+
+TPU adaptation note (DESIGN.md §Hardware-Adaptation): the paper ran MATLAB on
+a CPU; here the per-query window algebra is reorganized into batched dense
+einsums so the flattened `[DW]` windows feed the MXU, with the batch tiled
+through VMEM via BlockSpec. `interpret=True` everywhere — the CPU PJRT
+client cannot execute Mosaic custom-calls; real-TPU numbers are estimated
+analytically in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile — the kernel grid iterates over ceil(B / B_TILE) steps.
+B_TILE = 16
+
+
+def _window_kernel(phi_ref, dphi_ref, b_ref, c_ref, m_ref, kdiag_ref,
+                   mu_ref, svar_ref, gmu_ref, gs_ref):
+    """One batch tile: windows → (μ, s, ∇μ, ∇s)."""
+    phi = phi_ref[...]      # [T, D, W]
+    dphi = dphi_ref[...]    # [T, D, W]
+    bwin = b_ref[...]       # [T, D, W]
+    cwin = c_ref[...]       # [T, D, W, W]
+    mwin = m_ref[...]       # [T, D, W, D, W]
+    kdiag = kdiag_ref[...]  # [T]
+
+    t, d, w = phi.shape
+    # Flatten windows to [T, DW] so the M̃ contraction is a plain batched
+    # matvec (MXU-friendly when lowered for real hardware).
+    phi_f = phi.reshape(t, d * w)
+    m_f = mwin.reshape(t, d * w, d * w)
+
+    mu = jnp.einsum("tdw,tdw->t", phi, bwin)
+    gmu = jnp.einsum("tdw,tdw->td", dphi, bwin)
+
+    cphi = jnp.einsum("tdwv,tdv->tdw", cwin, phi)
+    term2 = jnp.einsum("tdw,tdw->t", phi, cphi)
+    dterm2 = jnp.einsum("tdw,tdw->td", dphi, cphi)
+
+    mphi_f = jnp.einsum("tij,tj->ti", m_f, phi_f)
+    mphi = mphi_f.reshape(t, d, w)
+    term3 = jnp.einsum("ti,ti->t", phi_f, mphi_f)
+    dterm3 = jnp.einsum("tdw,tdw->td", dphi, mphi)
+
+    mu_ref[...] = mu
+    svar_ref[...] = jnp.maximum(kdiag - term2 + term3, 0.0)
+    gmu_ref[...] = gmu
+    gs_ref[...] = -2.0 * dterm2 + 2.0 * dterm3
+
+
+@functools.partial(jax.jit, static_argnames=())
+def window_posterior(phi, dphi, bwin, cwin, mwin, kdiag):
+    """Batched posterior from windows via the Pallas kernel.
+
+    All inputs batched on axis 0 with B divisible by `B_TILE` (the AOT
+    configurations pad the batch).
+    """
+    b, d, w = phi.shape
+    assert b % B_TILE == 0, f"batch {b} must be a multiple of {B_TILE}"
+    grid = (b // B_TILE,)
+
+    def bspec(*rest):
+        return pl.BlockSpec((B_TILE, *rest), lambda i: (i, *([0] * len(rest))))
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((b,), phi.dtype),          # mu
+        jax.ShapeDtypeStruct((b,), phi.dtype),          # svar
+        jax.ShapeDtypeStruct((b, d), phi.dtype),        # gmu
+        jax.ShapeDtypeStruct((b, d), phi.dtype),        # gs
+    )
+    return pl.pallas_call(
+        _window_kernel,
+        grid=grid,
+        in_specs=[
+            bspec(d, w),
+            bspec(d, w),
+            bspec(d, w),
+            bspec(d, w, w),
+            bspec(d, w, d, w),
+            bspec(),
+        ],
+        out_specs=(bspec(), bspec(), bspec(d), bspec(d)),
+        out_shape=out_shapes,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(phi, dphi, bwin, cwin, mwin, kdiag)

@@ -1,0 +1,25 @@
+"""L2 — the JAX model: batched acquisition evaluation over KP windows.
+
+The rust coordinator gathers windows (an `O(log n)` binary search per query,
+per §5.2) and hands fixed-shape tensors to this graph. The graph calls the
+L1 Pallas kernel for the window contractions and finishes the GP-LCB value
+and gradient (eq. 29) in jnp — a single fused jit region, lowered once by
+`aot.py` and executed from rust via PJRT. Python never sees a request.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.window_acq import window_posterior
+
+
+def batch_acq(phi, dphi, bwin, cwin, mwin, kdiag, beta):
+    """Batched `(μ, s, A_LCB, ∇A_LCB)` from gathered windows.
+
+    `beta` is a rank-0 array so one artifact serves any UCB bandwidth
+    schedule β_n.
+    """
+    mu, svar, gmu, gs = window_posterior(phi, dphi, bwin, cwin, mwin, kdiag)
+    sd = jnp.sqrt(jnp.maximum(svar, 1e-12))
+    acq = -mu + beta * sd
+    gacq = -gmu + (beta / (2.0 * sd))[:, None] * gs
+    return mu, svar, acq, gacq

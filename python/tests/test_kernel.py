@@ -1,0 +1,95 @@
+"""L1 correctness: the Pallas window kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and seeds; numpy fixtures assert allclose. This is
+the CORE correctness signal for the compiled artifact — the rust integration
+test then checks the same numbers through PJRT.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.ref import batch_acq_ref, window_posterior_ref
+from compile.kernels.window_acq import B_TILE, window_posterior
+from compile.model import batch_acq
+
+
+def make_inputs(rng, b, d, w, dtype=np.float32):
+    phi = rng.standard_normal((b, d, w)).astype(dtype)
+    dphi = rng.standard_normal((b, d, w)).astype(dtype)
+    bwin = rng.standard_normal((b, d, w)).astype(dtype)
+    # SPD-ish symmetric window blocks, like the real C_d and M̃ blocks.
+    c0 = rng.standard_normal((b, d, w, w)).astype(dtype)
+    cwin = 0.5 * (c0 + c0.transpose(0, 1, 3, 2))
+    m0 = rng.standard_normal((b, d * w, d * w)).astype(dtype)
+    m0 = 0.5 * (m0 + m0.transpose(0, 2, 1)) + 2.0 * w * d * np.eye(d * w, dtype=dtype)
+    mwin = m0.reshape(b, d, w, d, w)
+    kdiag = (rng.random(b).astype(dtype) + 1.0) * d
+    return phi, dphi, bwin, cwin, mwin, kdiag
+
+
+@pytest.mark.parametrize("d,w", [(2, 2), (5, 2), (10, 2), (2, 4), (3, 4)])
+def test_kernel_matches_ref(d, w):
+    rng = np.random.default_rng(42)
+    b = 2 * B_TILE
+    args = make_inputs(rng, b, d, w)
+    got = window_posterior(*map(jnp.asarray, args))
+    want = window_posterior_ref(*map(jnp.asarray, args))
+    for g, r, name in zip(got, want, ["mu", "svar", "gmu", "gs"]):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r), rtol=2e-5,
+                                   atol=1e-5, err_msg=name)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=8),
+    w=st.sampled_from([2, 4, 6]),
+    tiles=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(d, w, tiles, seed):
+    rng = np.random.default_rng(seed)
+    b = tiles * B_TILE
+    args = make_inputs(rng, b, d, w)
+    got = window_posterior(*map(jnp.asarray, args))
+    want = window_posterior_ref(*map(jnp.asarray, args))
+    for g, r in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r), rtol=3e-5, atol=3e-5)
+
+
+def test_model_acq_matches_ref():
+    rng = np.random.default_rng(7)
+    b, d, w = B_TILE, 4, 2
+    args = make_inputs(rng, b, d, w)
+    beta = jnp.float32(2.0)
+    got = batch_acq(*map(jnp.asarray, args), beta)
+    want = batch_acq_ref(*map(jnp.asarray, args), beta)
+    for g, r, name in zip(got, want, ["mu", "svar", "acq", "gacq"]):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r), rtol=2e-5,
+                                   atol=1e-5, err_msg=name)
+
+
+def test_variance_nonnegative_clamp():
+    """svar is clamped at zero even when kdiag − term2 + term3 < 0."""
+    rng = np.random.default_rng(3)
+    b, d, w = B_TILE, 2, 2
+    phi, dphi, bwin, cwin, mwin, kdiag = make_inputs(rng, b, d, w)
+    kdiag = -10.0 * np.ones_like(kdiag)  # force negativity
+    out = window_posterior(*map(jnp.asarray, (phi, dphi, bwin, cwin, mwin, kdiag)))
+    assert np.all(np.asarray(out[1]) >= 0.0)
+
+
+def test_zero_windows_give_prior():
+    """All-zero φ windows ⇒ μ=0, s=kdiag (the prior)."""
+    b, d, w = B_TILE, 3, 2
+    z = jnp.zeros((b, d, w), jnp.float32)
+    cwin = jnp.zeros((b, d, w, w), jnp.float32)
+    mwin = jnp.zeros((b, d, w, d, w), jnp.float32)
+    kdiag = jnp.full((b,), 3.0, jnp.float32)
+    mu, svar, gmu, gs = window_posterior(z, z, z, cwin, mwin, kdiag)
+    np.testing.assert_allclose(np.asarray(mu), 0.0)
+    np.testing.assert_allclose(np.asarray(svar), 3.0)
+    np.testing.assert_allclose(np.asarray(gmu), 0.0)
+    np.testing.assert_allclose(np.asarray(gs), 0.0)

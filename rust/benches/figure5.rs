@@ -1,0 +1,55 @@
+//! Bench companion to paper **Figure 5** — one end-to-end (fit + MLE +
+//! predict) measurement per method at a fixed workload, so regressions in
+//! the prediction pipeline show up in `cargo bench`. The full sweep with
+//! RMSE curves is `examples/figure5.rs`.
+
+use addgp::baselines::full_gp::FullGP;
+use addgp::baselines::inducing::InducingGP;
+use addgp::baselines::statespace::StateSpaceBackfit;
+use addgp::bo::testfns::schwefel;
+use addgp::gp::model::{AdditiveGP, AdditiveGpConfig};
+use addgp::gp::train::TrainCfg;
+use addgp::util::timer::bench;
+use addgp::util::Rng;
+
+fn main() {
+    println!("# Figure 5 workload: Schwefel, D = 10, fit + 100 predictions\n");
+    let d = 10;
+    let n = 4000;
+    let mut rng = Rng::new(55);
+    let x: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..d).map(|_| rng.uniform_in(-500.0, 500.0)).collect()).collect();
+    let y: Vec<f64> = x.iter().map(|r| schwefel(r) + rng.normal()).collect();
+    let xt: Vec<Vec<f64>> =
+        (0..100).map(|_| (0..d).map(|_| rng.uniform_in(-500.0, 500.0)).collect()).collect();
+
+    bench("figure5_gkp_fit_mle_predict/n=4000", 0, 3, || {
+        let mut cfg = AdditiveGpConfig::default();
+        cfg.omega0 = 0.01;
+        let mut gp = AdditiveGP::new(cfg, d);
+        gp.fit(&x, &y);
+        gp.optimize_hypers(&TrainCfg { steps: 5, lr: 0.2, ..Default::default() });
+        xt.iter().map(|q| gp.mean(q)).sum::<f64>()
+    });
+
+    bench("figure5_ip_fit_predict/n=4000", 0, 3, || {
+        let mut gp = InducingGP::new(addgp::Nu::Half, 0.01, 1.0, d, 1);
+        gp.fit(&x, &y);
+        xt.iter().map(|q| gp.predict(q).0).sum::<f64>()
+    });
+
+    bench("figure5_statespace_fit_predict/n=4000", 0, 3, || {
+        let gp = StateSpaceBackfit::fit(&x, &y, &vec![0.01; d], 1.0, 8);
+        xt.iter().map(|q| gp.predict_mean(q)).sum::<f64>()
+    });
+
+    // Dense baseline at its cap (n = 1500 here so the bench terminates).
+    let n2 = 1500;
+    let x2 = &x[..n2];
+    let y2 = &y[..n2];
+    bench("figure5_fgp_fit_predict/n=1500", 0, 2, || {
+        let mut gp = FullGP::new(addgp::Nu::Half, 0.01, 1.0, d);
+        gp.fit(x2, y2);
+        xt.iter().map(|q| gp.predict(q).0).sum::<f64>()
+    });
+}

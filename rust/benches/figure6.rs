@@ -1,0 +1,48 @@
+//! Bench companion to paper **Figure 6** — the per-iteration cost of the BO
+//! inner loop (acquisition search + posterior update) for the sparse GKP
+//! engine vs the dense FGP baseline, at matched state size. The full
+//! optimization traces are `examples/figure6.rs`.
+
+use addgp::baselines::full_gp::FullGP;
+use addgp::bo::acquisition::Acquisition;
+use addgp::bo::search::{search_next, SearchCfg};
+use addgp::bo::testfns::schwefel;
+use addgp::gp::model::{AdditiveGP, AdditiveGpConfig};
+use addgp::util::timer::bench;
+use addgp::util::Rng;
+
+fn main() {
+    println!("# Figure 6 workload: one BO iteration (search + observe), D = 5\n");
+    let d = 5;
+    let n = 1000;
+    let mut rng = Rng::new(66);
+    let x: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..d).map(|_| rng.uniform_in(-500.0, 500.0)).collect()).collect();
+    let y: Vec<f64> = x.iter().map(|r| schwefel(r) + rng.normal()).collect();
+
+    let acq = Acquisition::LcbMin { beta: 2.0 };
+    let scfg = SearchCfg { restarts: 4, steps: 30, ..Default::default() };
+
+    // Sparse engine.
+    let mut cfg = AdditiveGpConfig::default();
+    cfg.omega0 = 0.01;
+    let mut gkp = AdditiveGP::new(cfg, d);
+    gkp.fit(&x, &y);
+    let mut rng2 = Rng::new(1);
+    bench("figure6_gkp_acq_search/n=1000", 0, 3, || {
+        search_next(&mut gkp, &acq, d, -500.0, 500.0, &scfg, &mut rng2)
+    });
+    bench("figure6_gkp_observe_refit/n=1000", 0, 3, || {
+        gkp.observe(&[0.0; 5], 400.0);
+    });
+
+    // Dense engine.
+    let mut fgp = FullGP::new(addgp::Nu::Half, 0.01, 1.0, d);
+    fgp.fit(&x, &y);
+    bench("figure6_fgp_acq_search/n=1000", 0, 2, || {
+        search_next(&mut fgp, &acq, d, -500.0, 500.0, &scfg, &mut rng2)
+    });
+    bench("figure6_fgp_observe_refit/n=1000", 0, 2, || {
+        fgp.observe(&[0.0; 5], 400.0);
+    });
+}

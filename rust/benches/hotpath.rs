@@ -1,0 +1,92 @@
+//! Micro-benchmarks of the hot paths the perf pass optimizes (EXPERIMENTS.md
+//! §Perf): banded solves, PCG vs plain Gauss–Seidel, window gathering, the
+//! M̃-column build, and the PJRT batch execution.
+//!
+//! ```sh
+//! cargo bench --bench hotpath
+//! ```
+
+use addgp::gp::backfit::{BlockVec, GaussSeidel};
+use addgp::gp::dim::DimFactor;
+use addgp::gp::model::{AdditiveGP, AdditiveGpConfig};
+use addgp::kernels::matern::{Matern, Nu};
+use addgp::runtime::{ArtifactManifest, WindowBatch, WindowExecutable};
+use addgp::util::timer::bench;
+use addgp::util::Rng;
+
+fn main() {
+    let n = 8000;
+    let d = 5;
+    let mut rng = Rng::new(1);
+    let x: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..d).map(|_| rng.uniform_in(0.0, 10.0)).collect()).collect();
+    let y: Vec<f64> =
+        x.iter().map(|r| r.iter().map(|v| v.sin()).sum::<f64>() + rng.normal()).collect();
+
+    let dims: Vec<DimFactor> = (0..d)
+        .map(|dd| {
+            let col: Vec<f64> = x.iter().map(|r| r[dd]).collect();
+            DimFactor::new(&col, Matern::new(Nu::Half, 1.0), 1.0)
+        })
+        .collect();
+
+    // Banded LU solve (the O(n) primitive under everything).
+    let rhs = rng.normal_vec(n);
+    bench("banded_lu_solve/n=8000", 2, 20, || dims[0].t_lu.solve(&rhs));
+    bench("banded_matvec/n=8000", 2, 50, || dims[0].kp.phi.matvec(&rhs));
+    bench("kinv_apply/n=8000", 2, 20, || dims[0].kinv_sorted(&rhs));
+
+    // Solver comparison on the Algorithm-4 system.
+    let v: BlockVec = (0..d).map(|_| rng.normal_vec(n)).collect();
+    let gs = GaussSeidel::new(&dims, 1.0);
+    bench("alg4_pcg_solve/D=5,n=8000", 1, 5, || gs.solve(&v).1.sweeps);
+    let mut gs_plain = GaussSeidel::new(&dims, 1.0);
+    gs_plain.tol = 1e-8;
+    gs_plain.max_sweeps = 2000;
+    bench("alg4_plain_gs_solve/D=5,n=8000(tol 1e-8)", 0, 2, || {
+        gs_plain.solve_gs(&v).1.sweeps
+    });
+
+    // Window gathering (the per-query O(log n) part).
+    let mut cfg = AdditiveGpConfig::default();
+    cfg.omega0 = 1.0;
+    let mut gp = AdditiveGP::new(cfg, d);
+    gp.fit(&x, &y);
+    gp.ensure_posterior();
+    let q = vec![5.0; d];
+    let _ = gp.predict(&q, true);
+    bench("gather_windows_warm/n=8000", 10, 500, || gp.gather_windows(&q).kdiag);
+
+    // One cold M̃ column (dominates cold queries).
+    bench("mtilde_cold_column/n=8000", 0, 3, || {
+        let mut cfg = AdditiveGpConfig::default();
+        cfg.omega0 = 1.0;
+        let mut gp2 = AdditiveGP::new(cfg, d);
+        gp2.fit(&x, &y);
+        gp2.predict(&q, false).var
+    });
+
+    // PJRT batch execution (needs `make artifacts`).
+    let dir = ArtifactManifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        let manifest = ArtifactManifest::load(&dir).unwrap();
+        if let Some(spec) = manifest.select("window_acq", d, 2, 64) {
+            let client = xla::PjRtClient::cpu().unwrap();
+            let exe = WindowExecutable::load(&client, spec).unwrap();
+            let mut batch = WindowBatch::zeros(spec, 2.0);
+            batch.rows = spec.b;
+            let mut r2 = Rng::new(2);
+            for v in batch.phi.iter_mut() {
+                *v = r2.normal() as f32;
+            }
+            for v in batch.mwin.iter_mut() {
+                *v = 0.01 * r2.normal() as f32;
+            }
+            bench(&format!("pjrt_window_acq_batch/B={}", spec.b), 3, 30, || {
+                exe.execute(&batch).unwrap().mu[0]
+            });
+        }
+    } else {
+        println!("(skipping PJRT bench: run `make artifacts`)");
+    }
+}

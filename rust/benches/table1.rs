@@ -1,0 +1,106 @@
+//! Bench for paper **Table 1** — per-term cost of the sparse computations,
+//! one row per table entry, across an n-sweep. (Criterion is unavailable
+//! offline; `util::timer::bench` prints min/median/max like criterion.)
+//!
+//! ```sh
+//! cargo bench --bench table1
+//! ```
+
+use addgp::gp::backfit::GaussSeidel;
+use addgp::gp::dim::DimFactor;
+use addgp::gp::likelihood::{self, StochasticCfg};
+use addgp::gp::model::{AdditiveGP, AdditiveGpConfig};
+use addgp::kernels::matern::{Matern, Nu};
+use addgp::util::timer::bench;
+use addgp::util::Rng;
+
+fn main() {
+    println!("# Table 1: per-term computations (D = 5, Matérn-1/2)\n");
+    let d = 5;
+    for n in [2000usize, 8000] {
+        println!("## n = {n}");
+        let mut rng = Rng::new(n as u64);
+        let x: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.uniform_in(0.0, 10.0)).collect()).collect();
+        let y: Vec<f64> =
+            x.iter().map(|r| r.iter().map(|v| v.sin()).sum::<f64>() + rng.normal()).collect();
+
+        // Row: KP factorization (Algorithm 2) for one dimension.
+        let col0: Vec<f64> = x.iter().map(|r| r[0]).collect();
+        bench(&format!("alg2_kp_factorization/n={n}"), 1, 5, || {
+            DimFactor::new(&col0, Matern::new(Nu::Half, 1.0), 1.0)
+        });
+
+        let mut cfg = AdditiveGpConfig::default();
+        cfg.omega0 = 1.0;
+        let mut gp = AdditiveGP::new(cfg, d);
+        gp.fit(&x, &y);
+
+        // Row: b_Y (Algorithm 4 + banded solves) — posterior build.
+        bench(&format!("b_y_posterior_build/n={n}"), 1, 5, || {
+            gp.refit();
+            gp.ensure_posterior();
+        });
+
+        // Row: band of Φ^{-T}A^{-1} (Algorithm 5), one dimension.
+        bench(&format!("alg5_band_of_inverse/n={n}"), 1, 5, || {
+            let mut dim = DimFactor::new(&col0, Matern::new(Nu::Half, 1.0), 1.0);
+            dim.c_band().get(0, 0)
+        });
+
+        // Rows: φ(x*) windows + sparse μ / acquisition gradient (warm).
+        gp.ensure_posterior();
+        let mut q = vec![5.0; d];
+        let _ = gp.predict(&q, true); // warm the M̃ cache at q
+        bench(&format!("mu_query_warm/n={n}"), 100, 2000, || {
+            q[0] += 1e-9;
+            gp.predict(&q, false).mean
+        });
+        bench(&format!("acq_grad_query_warm/n={n}"), 100, 2000, || {
+            q[1] += 1e-9;
+            gp.predict(&q, true).var_grad[0]
+        });
+
+        // Row: quadratic forms (quad-A/B via Algorithm 4 + LU).
+        let dims_owned: Vec<DimFactor> = (0..d)
+            .map(|dd| {
+                let col: Vec<f64> = x.iter().map(|r| r[dd]).collect();
+                DimFactor::new(&col, Matern::new(Nu::Half, 1.0), 1.0)
+            })
+            .collect();
+        let gs = GaussSeidel::new(&dims_owned, 1.0);
+        bench(&format!("quad_rmatvec/n={n}"), 1, 5, || {
+            likelihood::r_matvec(&dims_owned, 1.0, &gs, &y)
+        });
+
+        // Row: banded log-dets (log|Φ|, log|A|).
+        bench(&format!("logdet_banded/n={n}"), 1, 10, || {
+            likelihood::logdet_k(&dims_owned)
+        });
+
+        // Row: stochastic log-det (Algorithms 6+7+8), reduced probes.
+        let scfg = StochasticCfg {
+            logdet_probes: 4,
+            logdet_terms: 20,
+            power_iters: 10,
+            power_restarts: 1,
+            ..Default::default()
+        };
+        bench(&format!("alg8_logdet_stochastic/n={n}"), 0, 2, || {
+            likelihood::logdet_m_stochastic(&dims_owned, &gs, &scfg)
+        });
+
+        // Row: full gradient with Hutchinson traces (Algorithm 7 / eq. 24).
+        let mut dims_mut: Vec<DimFactor> = (0..d)
+            .map(|dd| {
+                let col: Vec<f64> = x.iter().map(|r| r[dd]).collect();
+                DimFactor::new(&col, Matern::new(Nu::Half, 1.0), 1.0)
+            })
+            .collect();
+        let scfg2 = StochasticCfg { trace_probes: 8, ..Default::default() };
+        bench(&format!("grad_with_traces/n={n}"), 0, 2, || {
+            likelihood::nll_grad(&mut dims_mut, 1.0, &y, &scfg2).omega[0]
+        });
+        println!();
+    }
+}

@@ -1,0 +1,254 @@
+//! "FGP" — the naive dense additive GP baseline (paper §7):
+//! Cholesky of `Σ = Σ_d K_d + σ²I`, `O(n³)` fit, `O(n)` mean / `O(n²)`
+//! variance per prediction. Also the exact oracle used by tests.
+
+use crate::kernels::matern::{Matern, Nu};
+use crate::linalg::Dense;
+
+/// Dense additive-Matérn GP.
+pub struct FullGP {
+    pub nu: Nu,
+    pub omegas: Vec<f64>,
+    pub sigma2_y: f64,
+    x_cols: Vec<Vec<f64>>,
+    y: Vec<f64>,
+    /// Cholesky factor of Σ.
+    chol: Option<Dense>,
+    alpha: Option<Vec<f64>>,
+}
+
+impl FullGP {
+    pub fn new(nu: Nu, omega0: f64, sigma2_y: f64, d: usize) -> Self {
+        FullGP {
+            nu,
+            omegas: vec![omega0; d],
+            sigma2_y,
+            x_cols: vec![Vec::new(); d],
+            y: Vec::new(),
+            chol: None,
+            alpha: None,
+        }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.x_cols.len()
+    }
+
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    fn kernels(&self) -> Vec<Matern> {
+        self.omegas.iter().map(|&o| Matern::new(self.nu, o)).collect()
+    }
+
+    /// Replace the data set (rows) and refit (`O(n³)`).
+    pub fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        let d = self.input_dim();
+        self.x_cols = vec![Vec::with_capacity(x.len()); d];
+        for row in x {
+            for (dd, &v) in row.iter().enumerate() {
+                self.x_cols[dd].push(v);
+            }
+        }
+        self.y = y.to_vec();
+        self.refit();
+    }
+
+    /// Append one observation and refit.
+    pub fn observe(&mut self, x: &[f64], y: f64) {
+        for (d, &v) in x.iter().enumerate() {
+            self.x_cols[d].push(v);
+        }
+        self.y.push(y);
+        self.refit();
+    }
+
+    /// Rebuild Σ and its Cholesky.
+    pub fn refit(&mut self) {
+        let n = self.n();
+        if n == 0 {
+            self.chol = None;
+            self.alpha = None;
+            return;
+        }
+        let sig = self.sigma_matrix();
+        let chol = sig.cholesky().expect("Σ must be SPD");
+        let alpha = chol.backward_sub_t(&chol.forward_sub(&self.y));
+        self.chol = Some(chol);
+        self.alpha = Some(alpha);
+    }
+
+    fn sigma_matrix(&self) -> Dense {
+        let n = self.n();
+        let mut sig = Dense::zeros(n, n);
+        for (d, k) in self.kernels().iter().enumerate() {
+            let col = &self.x_cols[d];
+            for i in 0..n {
+                for j in 0..n {
+                    sig.add(i, j, k.k(col[i], col[j]));
+                }
+            }
+        }
+        for i in 0..n {
+            sig.add(i, i, self.sigma2_y);
+        }
+        sig
+    }
+
+    fn kvec(&self, x: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        let ks = self.kernels();
+        (0..n)
+            .map(|i| {
+                ks.iter().enumerate().map(|(d, k)| k.k(self.x_cols[d][i], x[d])).sum()
+            })
+            .collect()
+    }
+
+    /// Posterior mean and variance (eq. 1) — `O(n)` / `O(n²)`.
+    pub fn predict(&self, x: &[f64]) -> (f64, f64) {
+        let kv = self.kvec(x);
+        let alpha = self.alpha.as_ref().expect("fit first");
+        let mu: f64 = kv.iter().zip(alpha).map(|(a, b)| a * b).sum();
+        let chol = self.chol.as_ref().unwrap();
+        let w = chol.forward_sub(&kv);
+        let kxx: f64 = self.kernels().iter().map(|k| k.k(0.0, 0.0)).sum();
+        let var = (kxx - w.iter().map(|v| v * v).sum::<f64>()).max(0.0);
+        (mu, var)
+    }
+
+    /// Gradient of (μ, s) — `O(n D)` + `O(n²)`.
+    pub fn predict_grad(&self, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let n = self.n();
+        let d_in = self.input_dim();
+        let ks = self.kernels();
+        let alpha = self.alpha.as_ref().expect("fit first");
+        let chol = self.chol.as_ref().unwrap();
+        let kv = self.kvec(x);
+        // Σ^{-1} k
+        let sik = chol.backward_sub_t(&chol.forward_sub(&kv));
+        let mut gmu = vec![0.0; d_in];
+        let mut gs = vec![0.0; d_in];
+        for d in 0..d_in {
+            for i in 0..n {
+                let dk = ks[d].dk_dx(self.x_cols[d][i], x[d]);
+                gmu[d] += dk * alpha[i];
+                gs[d] += -2.0 * dk * sik[i];
+            }
+        }
+        (gmu, gs)
+    }
+
+    /// Exact NLL (eq. 2 up to constant).
+    pub fn nll(&self) -> f64 {
+        let chol = self.chol.as_ref().expect("fit first");
+        let alpha = self.alpha.as_ref().unwrap();
+        let quad: f64 = self.y.iter().zip(alpha).map(|(a, b)| a * b).sum();
+        let mut logdet = 0.0;
+        for i in 0..self.n() {
+            logdet += chol.get(i, i).ln();
+        }
+        0.5 * (quad + 2.0 * logdet + self.n() as f64 * (2.0 * std::f64::consts::PI).ln())
+    }
+
+    /// Shared-ω MLE by golden-section search on `log ω` (the classic
+    /// dense-GP training loop; `O(n³)` per evaluation).
+    pub fn optimize_shared_omega(&mut self, lo: f64, hi: f64, iters: usize) -> f64 {
+        let gr = (5.0f64.sqrt() - 1.0) / 2.0;
+        let (mut a, mut b) = (lo.ln(), hi.ln());
+        let eval = |s: &mut Self, t: f64| -> f64 {
+            s.omegas.iter_mut().for_each(|o| *o = t.exp());
+            s.refit();
+            s.nll()
+        };
+        let mut c = b - gr * (b - a);
+        let mut d = a + gr * (b - a);
+        let mut fc = eval(self, c);
+        let mut fd = eval(self, d);
+        for _ in 0..iters {
+            if fc < fd {
+                b = d;
+                d = c;
+                fd = fc;
+                c = b - gr * (b - a);
+                fc = eval(self, c);
+            } else {
+                a = c;
+                c = d;
+                fc = fd;
+                d = a + gr * (b - a);
+                fd = eval(self, d);
+            }
+        }
+        let t = 0.5 * (a + b);
+        eval(self, t);
+        t.exp()
+    }
+
+    pub fn data(&self) -> (&[Vec<f64>], &[f64]) {
+        (&self.x_cols, &self.y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn interpolates_with_small_noise() {
+        let mut rng = Rng::new(1);
+        let n = 40;
+        let x: Vec<Vec<f64>> =
+            (0..n).map(|_| vec![rng.uniform_in(0.0, 5.0), rng.uniform_in(0.0, 5.0)]).collect();
+        let y: Vec<f64> = x.iter().map(|r| r[0].sin() + (0.7 * r[1]).cos()).collect();
+        let mut gp = FullGP::new(Nu::Half, 1.0, 1e-4, 2);
+        gp.fit(&x, &y);
+        for i in 0..5 {
+            let (mu, var) = gp.predict(&x[i]);
+            assert!((mu - y[i]).abs() < 0.05, "{mu} vs {}", y[i]);
+            assert!(var < 0.05);
+        }
+    }
+
+    #[test]
+    fn gradient_matches_fd() {
+        let mut rng = Rng::new(2);
+        let n = 25;
+        let x: Vec<Vec<f64>> =
+            (0..n).map(|_| vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)]).collect();
+        let y: Vec<f64> = x.iter().map(|r| (r[0] - r[1]).sin()).collect();
+        let mut gp = FullGP::new(Nu::ThreeHalves, 1.2, 0.1, 2);
+        gp.fit(&x, &y);
+        let x0 = vec![1.3, 2.1];
+        let (gmu, gs) = gp.predict_grad(&x0);
+        let h = 1e-6;
+        for d in 0..2 {
+            let mut xp = x0.clone();
+            xp[d] += h;
+            let mut xm = x0.clone();
+            xm[d] -= h;
+            let (mp, sp) = gp.predict(&xp);
+            let (mm, sm) = gp.predict(&xm);
+            let fdm = (mp - mm) / (2.0 * h);
+            let fds = (sp - sm) / (2.0 * h);
+            assert!((fdm - gmu[d]).abs() < 1e-5 * fdm.abs().max(1.0));
+            assert!((fds - gs[d]).abs() < 1e-4 * fds.abs().max(1.0), "{} vs {}", gs[d], fds);
+        }
+    }
+
+    #[test]
+    fn mle_moves_toward_data_scale() {
+        let mut rng = Rng::new(3);
+        let n = 35;
+        let x: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform_in(0.0, 6.0)]).collect();
+        let y: Vec<f64> = x.iter().map(|r| (1.0 * r[0]).sin() + 0.05 * rng.normal()).collect();
+        let mut gp = FullGP::new(Nu::Half, 50.0, 0.01, 1);
+        gp.fit(&x, &y);
+        let nll_before = gp.nll();
+        let omega = gp.optimize_shared_omega(1e-2, 1e2, 25);
+        assert!(gp.nll() < nll_before);
+        assert!(omega < 50.0);
+    }
+}

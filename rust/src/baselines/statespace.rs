@@ -1,0 +1,212 @@
+//! State-space back-fitting baseline (VBEM stand-in; see `baselines`
+//! module docs and DESIGN.md §4).
+//!
+//! Each one-dimensional Matérn-1/2 (Ornstein–Uhlenbeck) component is an SDE
+//! with exact discrete transition `a_i = e^{-ω Δ_i}`, process noise
+//! `q_i = σ_f²(1 − a_i²)`. A Kalman filter + RTS smoother computes the
+//! component posterior mean over the sorted inputs in `O(n)`; the classic
+//! back-fitting loop (Hastie et al. 2009, Gilboa et al. 2013) cycles the
+//! components on partial residuals. Posterior mean at an off-grid point is
+//! exact by the OU bridge + Markov property:
+//! `E[f(x)|data] = bridge(E[f(x_l)|data], E[f(x_r)|data])`.
+
+use crate::linalg::Permutation;
+
+/// One OU component over sorted inputs.
+struct OuComponent {
+    perm: Permutation,
+    xs: Vec<f64>,
+    omega: f64,
+    /// Smoothed posterior means at `xs` (sorted order).
+    smoothed: Vec<f64>,
+}
+
+impl OuComponent {
+    fn new(points: &[f64], omega: f64) -> Self {
+        let perm = Permutation::sorting(points);
+        let xs = perm.apply_sort(points);
+        OuComponent { perm, xs, omega, smoothed: vec![0.0; points.len()] }
+    }
+
+    /// Kalman filter + RTS smoother for observations `r` (data order) with
+    /// noise variance `sigma2`; prior marginal variance `sigma2_f`.
+    fn smooth(&mut self, r: &[f64], sigma2: f64, sigma2_f: f64) {
+        let n = self.xs.len();
+        let rs = self.perm.to_sorted(r);
+        // Filter.
+        let mut mf = vec![0.0; n]; // filtered means
+        let mut pf = vec![0.0; n]; // filtered variances
+        let mut mp = vec![0.0; n]; // predicted means
+        let mut pp = vec![0.0; n]; // predicted variances
+        let mut m_prev = 0.0;
+        let mut p_prev = sigma2_f;
+        for i in 0..n {
+            let (m_pred, p_pred) = if i == 0 {
+                (0.0, sigma2_f)
+            } else {
+                let a = (-self.omega * (self.xs[i] - self.xs[i - 1])).exp();
+                (a * m_prev, a * a * p_prev + sigma2_f * (1.0 - a * a))
+            };
+            mp[i] = m_pred;
+            pp[i] = p_pred;
+            let s = p_pred + sigma2;
+            let k = p_pred / s;
+            m_prev = m_pred + k * (rs[i] - m_pred);
+            p_prev = (1.0 - k) * p_pred;
+            mf[i] = m_prev;
+            pf[i] = p_prev;
+        }
+        // RTS smoother.
+        let mut ms = vec![0.0; n];
+        ms[n - 1] = mf[n - 1];
+        let mut m_next = mf[n - 1];
+        for i in (0..n - 1).rev() {
+            let a = (-self.omega * (self.xs[i + 1] - self.xs[i])).exp();
+            let g = pf[i] * a / pp[i + 1];
+            let m_sm = mf[i] + g * (m_next - mp[i + 1]);
+            ms[i] = m_sm;
+            m_next = m_sm;
+        }
+        self.smoothed = ms;
+    }
+
+    /// Posterior-mean fitted values at the training inputs, data order.
+    fn fitted(&self) -> Vec<f64> {
+        self.perm.to_original(&self.smoothed)
+    }
+
+    /// Posterior mean at an arbitrary point via the OU bridge.
+    fn predict(&self, x: f64) -> f64 {
+        let n = self.xs.len();
+        let j = crate::linalg::perm::lower_index(&self.xs, x);
+        match j {
+            None => {
+                // Left of all data: E[f(x)|f(x_0)] = e^{-ω(x_0 - x)} m_0.
+                self.smoothed[0] * (-self.omega * (self.xs[0] - x)).exp()
+            }
+            Some(j) if j + 1 >= n => {
+                self.smoothed[n - 1] * (-self.omega * (x - self.xs[n - 1])).exp()
+            }
+            Some(j) => {
+                // OU bridge between x_j and x_{j+1}:
+                // E[f(x)|f_l, f_r] = w_l f_l + w_r f_r with
+                // w_l = (e^{-ωδl} − e^{-ω(δl+2δr)}) / (1 − e^{-2ωΔ}) etc.
+                let (xl, xr) = (self.xs[j], self.xs[j + 1]);
+                let (dl, dr) = (x - xl, xr - x);
+                let om = self.omega;
+                let denom = 1.0 - (-2.0 * om * (xr - xl)).exp();
+                let wl = ((-om * dl).exp() - (-om * (dl + 2.0 * dr)).exp()) / denom;
+                let wr = ((-om * dr).exp() - (-om * (dr + 2.0 * dl)).exp()) / denom;
+                wl * self.smoothed[j] + wr * self.smoothed[j + 1]
+            }
+        }
+    }
+}
+
+/// Back-fitting additive model of OU components (posterior-mean only — the
+/// mean is what Figure 5's RMSE measures; see module docs).
+pub struct StateSpaceBackfit {
+    comps: Vec<OuComponent>,
+    pub sigma2_y: f64,
+    pub sigma2_f: f64,
+    pub sweeps: usize,
+}
+
+impl StateSpaceBackfit {
+    /// Fit on rows `x` with `sweeps` back-fitting passes.
+    pub fn fit(
+        x: &[Vec<f64>],
+        y: &[f64],
+        omegas: &[f64],
+        sigma2_y: f64,
+        sweeps: usize,
+    ) -> Self {
+        let d = omegas.len();
+        let n = y.len();
+        let mut cols: Vec<Vec<f64>> = vec![Vec::with_capacity(n); d];
+        for row in x {
+            for (dd, &v) in row.iter().enumerate() {
+                cols[dd].push(v);
+            }
+        }
+        let mut comps: Vec<OuComponent> =
+            cols.iter().zip(omegas).map(|(c, &o)| OuComponent::new(c, o)).collect();
+        let sigma2_f = 1.0;
+        // Back-fitting: cycle components on partial residuals.
+        let mut fitted: Vec<Vec<f64>> = vec![vec![0.0; n]; d];
+        for _ in 0..sweeps {
+            for dd in 0..d {
+                let mut r = vec![0.0; n];
+                for i in 0..n {
+                    let others: f64 =
+                        (0..d).filter(|&o| o != dd).map(|o| fitted[o][i]).sum();
+                    r[i] = y[i] - others;
+                }
+                comps[dd].smooth(&r, sigma2_y, sigma2_f);
+                fitted[dd] = comps[dd].fitted();
+            }
+        }
+        StateSpaceBackfit { comps, sigma2_y, sigma2_f, sweeps }
+    }
+
+    /// Posterior mean at `x`.
+    pub fn predict_mean(&self, x: &[f64]) -> f64 {
+        self.comps.iter().zip(x).map(|(c, &xd)| c.predict(xd)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// The OU smoother must match the dense GP posterior mean for D=1.
+    #[test]
+    fn d1_matches_dense_gp() {
+        use crate::kernels::matern::{Matern, Nu};
+        let mut rng = Rng::new(5);
+        let n = 30;
+        let xs: Vec<f64> = rng.uniform_vec(n, 0.0, 5.0);
+        let y: Vec<f64> = xs.iter().map(|&v| (1.1 * v).sin() + 0.1 * rng.normal()).collect();
+        let x_rows: Vec<Vec<f64>> = xs.iter().map(|&v| vec![v]).collect();
+        let omega = 1.3;
+        let sigma2 = 0.3;
+        let model = StateSpaceBackfit::fit(&x_rows, &y, &[omega], sigma2, 1);
+
+        let kern = Matern::new(Nu::Half, omega);
+        let mut sig = kern.gram(&xs);
+        for i in 0..n {
+            sig.add(i, i, sigma2);
+        }
+        let alpha = sig.solve(&y);
+        for t in 0..10 {
+            let xq = 0.3 + 0.45 * t as f64;
+            let want: f64 =
+                xs.iter().zip(&alpha).map(|(&xi, &a)| kern.k(xi, xq) * a).sum();
+            let got = model.predict_mean(&[xq]);
+            assert!(
+                (got - want).abs() < 1e-8 * want.abs().max(1.0),
+                "x={xq}: {got} vs {want}"
+            );
+        }
+    }
+
+    /// Back-fitting recovers an additive signal in 2-D.
+    #[test]
+    fn backfit_recovers_additive_signal() {
+        let mut rng = Rng::new(6);
+        let n = 300;
+        let x: Vec<Vec<f64>> =
+            (0..n).map(|_| vec![rng.uniform_in(0.0, 5.0), rng.uniform_in(0.0, 5.0)]).collect();
+        let f = |r: &[f64]| r[0].sin() + 0.7 * (1.3 * r[1]).cos();
+        let y: Vec<f64> = x.iter().map(|r| f(r) + 0.1 * rng.normal()).collect();
+        let model = StateSpaceBackfit::fit(&x, &y, &[1.0, 1.0], 0.1, 10);
+        let mut err = 0.0;
+        for _ in 0..50 {
+            let xt = vec![rng.uniform_in(0.5, 4.5), rng.uniform_in(0.5, 4.5)];
+            err += (model.predict_mean(&xt) - f(&xt)).abs();
+        }
+        err /= 50.0;
+        assert!(err < 0.25, "mean abs err {err}");
+    }
+}

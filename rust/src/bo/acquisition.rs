@@ -1,0 +1,135 @@
+//! Acquisition functions and their gradients — paper §2.2 and §6.
+//!
+//! All acquisitions are *maximized* by the searcher. For minimization
+//! problems (the paper's Schwefel/Rastrigin experiments) use [`Acquisition::LcbMin`],
+//! which maximizes `−μ + β√s` (the lower-confidence-bound rule).
+//!
+//! Values and gradients are assembled from `(μ, s, ∇μ, ∇s)`, which the
+//! sparse engine provides in `O(log n)`→`O(1)` per point (eqs. 28–30); the
+//! gradient of any acquisition is then `O(D)` extra (§6's "independent of
+//! n" claim).
+
+/// Which acquisition rule to use.
+#[derive(Clone, Copy, Debug)]
+pub enum Acquisition {
+    /// GP-UCB (maximization): `A = μ + β√s` (eq. 27).
+    UcbMax { beta: f64 },
+    /// GP-LCB for minimization: `A = −μ + β√s`.
+    LcbMin { beta: f64 },
+    /// Expected improvement for maximization over current best `y⁺`:
+    /// `A = (μ−y⁺)Φ(z) + √s φ(z)`, `z = (μ−y⁺)/√s`.
+    EiMax { best: f64 },
+    /// Expected improvement for minimization (improvement `y⁻ − μ`).
+    EiMin { best: f64 },
+}
+
+/// Standard normal pdf.
+fn phi_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard normal cdf via `erf` (Abramowitz–Stegun 7.1.26, |err| < 1.5e-7
+/// — far below the stochastic noise of the surrounding estimators).
+fn phi_cdf(z: f64) -> f64 {
+    let x = z / std::f64::consts::SQRT_2;
+    let t = 1.0 / (1.0 + 0.3275911 * x.abs());
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    let erf = 1.0 - poly * (-x * x).exp();
+    let erf = if x >= 0.0 { erf } else { -erf };
+    0.5 * (1.0 + erf)
+}
+
+impl Acquisition {
+    /// Acquisition value from posterior `(μ, s)`.
+    pub fn value(&self, mu: f64, s: f64) -> f64 {
+        let sd = s.max(1e-300).sqrt();
+        match *self {
+            Acquisition::UcbMax { beta } => mu + beta * sd,
+            Acquisition::LcbMin { beta } => -mu + beta * sd,
+            Acquisition::EiMax { best } => {
+                let z = (mu - best) / sd;
+                (mu - best) * phi_cdf(z) + sd * phi_pdf(z)
+            }
+            Acquisition::EiMin { best } => {
+                let z = (best - mu) / sd;
+                (best - mu) * phi_cdf(z) + sd * phi_pdf(z)
+            }
+        }
+    }
+
+    /// Acquisition value and gradient from `(μ, s, ∇μ, ∇s)`.
+    pub fn value_grad(
+        &self,
+        mu: f64,
+        s: f64,
+        gmu: &[f64],
+        gs: &[f64],
+    ) -> (f64, Vec<f64>) {
+        let sd = s.max(1e-300).sqrt();
+        let d = gmu.len();
+        let val = self.value(mu, s);
+        // ∂A/∂μ and ∂A/∂s, then chain through ∇μ, ∇s.
+        let (da_dmu, da_ds) = match *self {
+            Acquisition::UcbMax { beta } => (1.0, beta / (2.0 * sd)),
+            Acquisition::LcbMin { beta } => (-1.0, beta / (2.0 * sd)),
+            Acquisition::EiMax { best } => {
+                let z = (mu - best) / sd;
+                // dEI/dμ = Φ(z);  dEI/dσ = φ(z);  dσ/ds = 1/(2σ).
+                (phi_cdf(z), phi_pdf(z) / (2.0 * sd))
+            }
+            Acquisition::EiMin { best } => {
+                let z = (best - mu) / sd;
+                (-phi_cdf(z), phi_pdf(z) / (2.0 * sd))
+            }
+        };
+        let grad = (0..d).map(|i| da_dmu * gmu[i] + da_ds * gs[i]).collect();
+        (val, grad)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdf_pdf_sanity() {
+        assert!((phi_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((phi_cdf(1.96) - 0.975).abs() < 1e-3);
+        assert!((phi_cdf(-1.96) - 0.025).abs() < 1e-3);
+        assert!((phi_pdf(0.0) - 0.39894228).abs() < 1e-7);
+    }
+
+    #[test]
+    fn ucb_value_grad() {
+        let a = Acquisition::UcbMax { beta: 2.0 };
+        let (v, g) = a.value_grad(1.0, 4.0, &[0.5, -0.3], &[0.1, 0.2]);
+        assert!((v - (1.0 + 2.0 * 2.0)).abs() < 1e-12);
+        // grad = gmu + beta/(2σ) gs = gmu + 0.5 gs
+        assert!((g[0] - (0.5 + 0.5 * 0.1)).abs() < 1e-12);
+        assert!((g[1] - (-0.3 + 0.5 * 0.2)).abs() < 1e-12);
+    }
+
+    /// EI gradient matches finite differences of the value.
+    #[test]
+    fn ei_grad_matches_fd() {
+        let a = Acquisition::EiMin { best: 0.3 };
+        let f = |mu: f64, s: f64| a.value(mu, s);
+        let (mu, s) = (0.5, 0.8);
+        let h = 1e-6;
+        let (_, g) = a.value_grad(mu, s, &[1.0, 0.0], &[0.0, 1.0]);
+        // g[0] = dA/dμ, g[1] = dA/ds by the chosen unit gradients.
+        let fd_mu = (f(mu + h, s) - f(mu - h, s)) / (2.0 * h);
+        let fd_s = (f(mu, s + h) - f(mu, s - h)) / (2.0 * h);
+        assert!((g[0] - fd_mu).abs() < 1e-5, "{} vs {}", g[0], fd_mu);
+        assert!((g[1] - fd_s).abs() < 1e-5, "{} vs {}", g[1], fd_s);
+    }
+
+    #[test]
+    fn ei_nonnegative_and_monotone_in_s() {
+        let a = Acquisition::EiMax { best: 1.0 };
+        assert!(a.value(0.0, 0.01) >= 0.0);
+        assert!(a.value(0.0, 2.0) > a.value(0.0, 0.5));
+    }
+}

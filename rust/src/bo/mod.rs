@@ -1,0 +1,18 @@
+//! Bayesian optimization on additive GPs — paper §2.2, §6 and §7.2.
+//!
+//! * [`testfns`] — the paper's Schwefel (eq. 31) and Rastrigin (eq. 32)
+//!   benchmark functions with the Gaussian noise model.
+//! * [`acquisition`] — GP-UCB / GP-LCB / EI values and their sparse-window
+//!   gradients (eqs. 27–30).
+//! * [`search`] — multi-start projected gradient ascent over the acquisition
+//!   with `M̃`-window reuse (the paper's `O(1)`-per-step claim).
+//! * [`run`] — Algorithm 1, generic over the GP engine (sparse GKP or the
+//!   dense FGP baseline).
+
+pub mod acquisition;
+pub mod run;
+pub mod search;
+pub mod testfns;
+
+pub use acquisition::Acquisition;
+pub use run::{BoConfig, BoEngine, BoResult};

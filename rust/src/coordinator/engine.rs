@@ -1,0 +1,349 @@
+//! Per-model worker: owns the sparse [`AdditiveGP`] and (when an artifact
+//! matches) the compiled PJRT `window_acq` executable. Requests arrive on an
+//! mpsc queue; `Predict` requests are *dynamically batched* — the worker
+//! drains whatever is queued (up to the artifact batch size), gathers
+//! windows in rust (`O(log n)` per query), runs one PJRT execution, and
+//! fans the rows back out to their callers.
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use crate::bo::acquisition::Acquisition;
+use crate::bo::search::{search_next, SearchCfg};
+use crate::coordinator::protocol::Response;
+use crate::gp::model::{AdditiveGP, AdditiveGpConfig};
+use crate::gp::train::TrainCfg;
+use crate::kernels::matern::Nu;
+use crate::runtime::{ArtifactManifest, WindowBatch, WindowExecutable};
+use crate::util::Rng;
+
+/// Engine construction options.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub d: usize,
+    pub nu: Nu,
+    pub omega0: f64,
+    pub sigma2: f64,
+    /// Box bounds used by `suggest`.
+    pub lo: f64,
+    pub hi: f64,
+    /// Try to load a matching PJRT artifact (otherwise native-only).
+    pub use_pjrt: bool,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            d: 2,
+            nu: Nu::Half,
+            omega0: 1.0,
+            sigma2: 1.0,
+            lo: -500.0,
+            hi: 500.0,
+            use_pjrt: true,
+            seed: 7,
+        }
+    }
+}
+
+/// A command sent to the worker. `reply` receives exactly one [`Response`].
+pub enum Command {
+    Observe { x: Vec<f64>, y: f64, reply: Sender<Response> },
+    ObserveBatch { xs: Vec<Vec<f64>>, ys: Vec<f64>, reply: Sender<Response> },
+    Fit { steps: usize, reply: Sender<Response> },
+    Predict { xs: Vec<Vec<f64>>, beta: f64, grad: bool, reply: Sender<Response> },
+    Suggest { beta: f64, reply: Sender<Response> },
+    Stats { reply: Sender<Response> },
+    Stop,
+}
+
+/// The worker state. PJRT handles are not `Send`, so the engine (and its
+/// own `PjRtClient`) must be constructed *on the worker thread* — see
+/// [`crate::coordinator::server`].
+pub struct ModelEngine {
+    pub cfg: EngineConfig,
+    gp: AdditiveGP,
+    /// Keeps the client alive for the executable's lifetime.
+    _client: Option<xla::PjRtClient>,
+    exe: Option<WindowExecutable>,
+    rng: Rng,
+    pub pjrt_batches: u64,
+    pub native_queries: u64,
+}
+
+impl ModelEngine {
+    /// Build the engine, creating a PJRT CPU client and compiling the
+    /// matching `(D, W)` artifact when `cfg.use_pjrt` and one exists.
+    pub fn new(cfg: EngineConfig) -> Self {
+        let mut gpcfg = AdditiveGpConfig::default();
+        gpcfg.nu = cfg.nu;
+        gpcfg.omega0 = cfg.omega0;
+        gpcfg.sigma2_y = cfg.sigma2;
+        let gp = AdditiveGP::new(gpcfg, cfg.d);
+        let client = if cfg.use_pjrt { xla::PjRtClient::cpu().ok() } else { None };
+        let exe = client.as_ref().and_then(|cl| {
+            let manifest = ArtifactManifest::load(ArtifactManifest::default_dir()).ok()?;
+            let w = 2 * (cfg.nu.q() + 1); // window width 2ν+1 (even form)
+            let spec = manifest.select("window_acq", cfg.d, w, 64)?;
+            WindowExecutable::load(cl, spec).ok()
+        });
+        ModelEngine {
+            rng: Rng::new(cfg.seed),
+            cfg,
+            gp,
+            _client: client,
+            exe,
+            pjrt_batches: 0,
+            native_queries: 0,
+        }
+    }
+
+    pub fn has_pjrt(&self) -> bool {
+        self.exe.is_some()
+    }
+
+    /// Blocking worker loop: drain the queue, batching Predicts.
+    pub fn run(mut self, rx: Receiver<Command>) {
+        // Pending predict rows: (x, beta, grad, reply, row index base).
+        loop {
+            let cmd = match rx.recv() {
+                Ok(c) => c,
+                Err(_) => return,
+            };
+            match cmd {
+                Command::Stop => return,
+                Command::Predict { xs, beta, grad, reply } => {
+                    // Dynamic batching: opportunistically drain more queued
+                    // Predicts with the same β/grad before executing.
+                    let mut batch: Vec<(Vec<Vec<f64>>, Sender<Response>)> = vec![(xs, reply)];
+                    let mut deferred: Vec<Command> = Vec::new();
+                    while let Ok(next) = rx.try_recv() {
+                        match next {
+                            Command::Predict { xs, beta: b2, grad: g2, reply }
+                                if b2 == beta && g2 == grad =>
+                            {
+                                batch.push((xs, reply))
+                            }
+                            other => {
+                                deferred.push(other);
+                                break;
+                            }
+                        }
+                    }
+                    self.serve_predicts(batch, beta, grad);
+                    for cmd in deferred {
+                        if !self.handle_simple(cmd) {
+                            return;
+                        }
+                    }
+                }
+                other => {
+                    if !self.handle_simple(other) {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Handle a non-batchable command; returns `false` on Stop.
+    fn handle_simple(&mut self, cmd: Command) -> bool {
+        match cmd {
+            Command::Stop => return false,
+            Command::Observe { x, y, reply } => {
+                self.gp.observe(&x, y);
+                let _ = reply.send(Response::Ok);
+            }
+            Command::ObserveBatch { xs, ys, reply } => {
+                if xs.len() != ys.len() {
+                    let _ = reply.send(Response::Error("xs/ys length mismatch".into()));
+                } else {
+                    for (x, y) in xs.iter().zip(&ys) {
+                        self.gp.observe(x, *y);
+                    }
+                    let _ = reply.send(Response::Ok);
+                }
+            }
+            Command::Fit { steps, reply } => {
+                let tcfg = TrainCfg { steps, ..Default::default() };
+                self.gp.optimize_hypers(&tcfg);
+                let _ = reply.send(Response::Ok);
+            }
+            Command::Predict { xs, beta, grad, reply } => {
+                self.serve_predicts(vec![(xs, reply)], beta, grad);
+            }
+            Command::Suggest { beta, reply } => {
+                let acq = Acquisition::LcbMin { beta };
+                let scfg = SearchCfg::default();
+                let x = search_next(
+                    &mut self.gp,
+                    &acq,
+                    self.cfg.d,
+                    self.cfg.lo,
+                    self.cfg.hi,
+                    &scfg,
+                    &mut self.rng,
+                );
+                let _ = reply.send(Response::Suggestion { x });
+            }
+            Command::Stats { reply } => {
+                let (hits, misses, _) = self.gp.cache_stats();
+                let _ = reply.send(Response::Stats {
+                    n: self.gp.n(),
+                    d: self.gp.input_dim(),
+                    omegas: self.gp.omegas.clone(),
+                    cache_hits: hits,
+                    cache_misses: misses,
+                    pjrt_batches: self.pjrt_batches,
+                    native_queries: self.native_queries,
+                });
+            }
+        }
+        true
+    }
+
+    /// Serve a set of predict requests, through PJRT when possible.
+    fn serve_predicts(
+        &mut self,
+        requests: Vec<(Vec<Vec<f64>>, Sender<Response>)>,
+        beta: f64,
+        grad: bool,
+    ) {
+        // Flatten rows, remembering per-request extents.
+        let mut rows: Vec<Vec<f64>> = Vec::new();
+        let mut extents = Vec::with_capacity(requests.len());
+        for (xs, _) in &requests {
+            extents.push((rows.len(), xs.len()));
+            rows.extend(xs.iter().cloned());
+        }
+        let results = if self.gp.n() >= self.gp.min_points() {
+            self.predict_rows(&rows, beta, grad)
+        } else {
+            Err("not enough observations".to_string())
+        };
+        match results {
+            Err(e) => {
+                for (_, reply) in requests {
+                    let _ = reply.send(Response::Error(e.clone()));
+                }
+            }
+            Ok((mu, svar, acq, gacq, path)) => {
+                for ((start, len), (_, reply)) in extents.into_iter().zip(requests) {
+                    let _ = reply.send(Response::Prediction {
+                        mu: mu[start..start + len].to_vec(),
+                        svar: svar[start..start + len].to_vec(),
+                        acq: acq[start..start + len].to_vec(),
+                        gacq: if grad {
+                            gacq[start..start + len].to_vec()
+                        } else {
+                            Vec::new()
+                        },
+                        path,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Evaluate all rows; PJRT path when an executable exists.
+    #[allow(clippy::type_complexity)]
+    fn predict_rows(
+        &mut self,
+        rows: &[Vec<f64>],
+        beta: f64,
+        grad: bool,
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>, Vec<Vec<f64>>, &'static str), String> {
+        let d = self.cfg.d;
+        for r in rows {
+            if r.len() != d {
+                return Err(format!("expected {d}-dim points"));
+            }
+        }
+        if let Some(exe) = &self.exe {
+            let spec_b = exe.spec.b;
+            let (sd, sw) = (exe.spec.d, exe.spec.w);
+            let mut mu = Vec::with_capacity(rows.len());
+            let mut svar = Vec::with_capacity(rows.len());
+            let mut acq = Vec::with_capacity(rows.len());
+            let mut gacq = Vec::with_capacity(rows.len());
+            for chunk in rows.chunks(spec_b) {
+                let mut batch = WindowBatch::zeros(&exe.spec, beta as f32);
+                batch.rows = chunk.len();
+                for (bi, x) in chunk.iter().enumerate() {
+                    let qw = self.gp.gather_windows(x);
+                    debug_assert_eq!(qw.w_max, sw);
+                    for di in 0..sd {
+                        for wi in 0..sw {
+                            let src = di * sw + wi;
+                            let dst = (bi * sd + di) * sw + wi;
+                            batch.phi[dst] = qw.phi[src] as f32;
+                            batch.dphi[dst] = qw.dphi[src] as f32;
+                            batch.bwin[dst] = qw.bwin[src] as f32;
+                            for wj in 0..sw {
+                                batch.cwin[dst * sw + wj] =
+                                    qw.cwin[src * sw + wj] as f32;
+                            }
+                            for dj in 0..sd {
+                                for wj in 0..sw {
+                                    let srcm = (src * sd + dj) * sw + wj;
+                                    let dstm = ((bi * sd + di) * sw + wi) * sd * sw
+                                        + dj * sw
+                                        + wj;
+                                    batch.mwin[dstm] = qw.mwin[srcm] as f32;
+                                }
+                            }
+                        }
+                    }
+                    batch.kdiag[bi] = qw.kdiag as f32;
+                }
+                let out = exe.execute(&batch).map_err(|e| e.to_string())?;
+                self.pjrt_batches += 1;
+                for bi in 0..chunk.len() {
+                    mu.push(out.mu[bi] as f64);
+                    svar.push(out.svar[bi] as f64);
+                    acq.push(out.acq[bi] as f64);
+                    gacq.push(
+                        (0..sd).map(|di| out.gacq[bi * sd + di] as f64).collect(),
+                    );
+                }
+            }
+            return Ok((mu, svar, acq, gacq, "pjrt"));
+        }
+        // Native fallback: identical math through the sparse engine.
+        let a = Acquisition::LcbMin { beta };
+        let mut mu = Vec::new();
+        let mut svar = Vec::new();
+        let mut acqv = Vec::new();
+        let mut gacq = Vec::new();
+        for x in rows {
+            let out = self.gp.predict(x, grad);
+            self.native_queries += 1;
+            let (v, g) = if grad {
+                a.value_grad(out.mean, out.var, &out.mean_grad, &out.var_grad)
+            } else {
+                (a.value(out.mean, out.var), Vec::new())
+            };
+            mu.push(out.mean);
+            svar.push(out.var);
+            acqv.push(v);
+            gacq.push(g);
+        }
+        Ok((mu, svar, acqv, gacq, "native"))
+    }
+
+    /// Direct (in-process, non-threaded) access for tests and examples.
+    pub fn gp_mut(&mut self) -> &mut AdditiveGP {
+        &mut self.gp
+    }
+
+    /// In-process predict used by integration tests.
+    #[allow(clippy::type_complexity)]
+    pub fn predict_inline(
+        &mut self,
+        rows: &[Vec<f64>],
+        beta: f64,
+        grad: bool,
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>, Vec<Vec<f64>>, &'static str), String> {
+        self.predict_rows(rows, beta, grad)
+    }
+}

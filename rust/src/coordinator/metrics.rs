@@ -1,0 +1,142 @@
+//! Serving metrics: lock-free counters and a log₂-bucketed latency
+//! histogram (p50/p95/p99), exposed through the `stats` op and printed by
+//! the server on shutdown. (No external metrics crate offline.)
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log₂-bucketed latency histogram over microseconds: bucket `i` holds
+/// latencies in `[2^i, 2^{i+1})` µs, 0..=31.
+#[derive(Default)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; 32],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl LatencyHistogram {
+    pub fn record(&self, seconds: f64) {
+        let us = (seconds * 1e6).max(0.0) as u64;
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(31);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in seconds.
+    pub fn mean_s(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64 / 1e6
+    }
+
+    /// Approximate quantile (upper bucket edge), seconds.
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return (1u64 << (i + 1)) as f64 / 1e6;
+            }
+        }
+        (1u64 << 31) as f64 / 1e6
+    }
+
+    /// One-line report.
+    pub fn report(&self) -> String {
+        format!(
+            "count={} mean={:.2}ms p50≤{:.2}ms p95≤{:.2}ms p99≤{:.2}ms",
+            self.count(),
+            self.mean_s() * 1e3,
+            self.quantile_s(0.50) * 1e3,
+            self.quantile_s(0.95) * 1e3,
+            self.quantile_s(0.99) * 1e3
+        )
+    }
+}
+
+/// Per-server request counters.
+#[derive(Default)]
+pub struct ServerMetrics {
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+    pub predict_points: AtomicU64,
+    pub predict_latency: LatencyHistogram,
+    pub suggest_latency: LatencyHistogram,
+}
+
+impl ServerMetrics {
+    pub fn inc_requests(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_errors(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_predict_points(&self, n: usize) {
+        self.predict_points.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} errors={} predict_points={} | predict: {} | suggest: {}",
+            self.requests.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            self.predict_points.load(Ordering::Relaxed),
+            self.predict_latency.report(),
+            self.suggest_latency.report()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = LatencyHistogram::default();
+        for i in 1..=1000u64 {
+            h.record(i as f64 * 1e-5); // 10µs .. 10ms
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_s(0.5);
+        let p95 = h.quantile_s(0.95);
+        let p99 = h.quantile_s(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        // p50 of uniform 10µs..10ms ≈ 5ms; bucket edge ≤ 8.4ms.
+        assert!(p50 > 2e-3 && p50 < 1.7e-2, "p50 {p50}");
+        assert!(h.mean_s() > 3e-3 && h.mean_s() < 7e-3);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.quantile_s(0.5), 0.0);
+        assert_eq!(h.mean_s(), 0.0);
+    }
+
+    #[test]
+    fn counters() {
+        let m = ServerMetrics::default();
+        m.inc_requests();
+        m.inc_requests();
+        m.inc_errors();
+        m.add_predict_points(64);
+        let r = m.report();
+        assert!(r.contains("requests=2"));
+        assert!(r.contains("errors=1"));
+        assert!(r.contains("predict_points=64"));
+    }
+}

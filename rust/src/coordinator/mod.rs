@@ -1,0 +1,22 @@
+//! The L3 serving layer: a threaded BO-as-a-service coordinator.
+//!
+//! * [`protocol`] — the JSON-line wire protocol (create / observe / fit /
+//!   predict / suggest / stats).
+//! * [`engine`] — one worker thread per model, owning the sparse GP and the
+//!   compiled PJRT `window_acq` executable; drains its queue as dynamic
+//!   batches and fans results back out.
+//! * [`server`] — TCP accept loop, one reader thread per connection,
+//!   model registry routing requests to engine queues.
+//!
+//! The offline image has no tokio, so concurrency is std threads + mpsc —
+//! the batching architecture (queue → drain ≤ B → PJRT execute → fan out)
+//! is the same one a tokio version would use.
+
+pub mod engine;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+
+pub use engine::{EngineConfig, ModelEngine};
+pub use protocol::{Request, Response};
+pub use server::Server;

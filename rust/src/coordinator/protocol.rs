@@ -1,0 +1,244 @@
+//! JSON-line wire protocol for the coordinator.
+//!
+//! One JSON object per line in both directions. Requests carry an `op` and
+//! (except `create_model`) a `model` id; responses always carry `ok` and
+//! echo the request's `id` when present.
+
+use crate::util::Json;
+
+/// A parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    CreateModel {
+        d: usize,
+        /// 2ν (1, 3 or 5).
+        nu2: usize,
+        omega: f64,
+        sigma2: f64,
+    },
+    Observe {
+        model: u64,
+        x: Vec<f64>,
+        y: f64,
+    },
+    ObserveBatch {
+        model: u64,
+        xs: Vec<Vec<f64>>,
+        ys: Vec<f64>,
+    },
+    Fit {
+        model: u64,
+        steps: usize,
+    },
+    Predict {
+        model: u64,
+        xs: Vec<Vec<f64>>,
+        beta: f64,
+        grad: bool,
+    },
+    Suggest {
+        model: u64,
+        beta: f64,
+    },
+    Stats {
+        model: u64,
+    },
+    Shutdown,
+}
+
+impl Request {
+    /// Parse one request line. Returns `(request, client id echo)`.
+    pub fn parse(line: &str) -> Result<(Request, Option<f64>), String> {
+        let v = Json::parse(line)?;
+        let id = v.get("id").and_then(|x| x.as_f64());
+        let op = v.get("op").and_then(|x| x.as_str()).ok_or("missing op")?;
+        let model = || -> Result<u64, String> {
+            v.get("model")
+                .and_then(|x| x.as_f64())
+                .map(|x| x as u64)
+                .ok_or_else(|| "missing model".into())
+        };
+        let xs_field = |key: &str| -> Result<Vec<Vec<f64>>, String> {
+            v.get(key)
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| format!("missing {key}"))?
+                .iter()
+                .map(|row| row.as_f64_vec().ok_or_else(|| "bad row".to_string()))
+                .collect()
+        };
+        let req = match op {
+            "create_model" => Request::CreateModel {
+                d: v.get("d").and_then(|x| x.as_usize()).ok_or("missing d")?,
+                nu2: v.get("nu2").and_then(|x| x.as_usize()).unwrap_or(1),
+                omega: v.get("omega").and_then(|x| x.as_f64()).unwrap_or(1.0),
+                sigma2: v.get("sigma2").and_then(|x| x.as_f64()).unwrap_or(1.0),
+            },
+            "observe" => Request::Observe {
+                model: model()?,
+                x: v.get("x").and_then(|x| x.as_f64_vec()).ok_or("missing x")?,
+                y: v.get("y").and_then(|x| x.as_f64()).ok_or("missing y")?,
+            },
+            "observe_batch" => Request::ObserveBatch {
+                model: model()?,
+                xs: xs_field("xs")?,
+                ys: v.get("ys").and_then(|x| x.as_f64_vec()).ok_or("missing ys")?,
+            },
+            "fit" => Request::Fit {
+                model: model()?,
+                steps: v.get("steps").and_then(|x| x.as_usize()).unwrap_or(10),
+            },
+            "predict" => Request::Predict {
+                model: model()?,
+                xs: xs_field("xs")?,
+                beta: v.get("beta").and_then(|x| x.as_f64()).unwrap_or(2.0),
+                grad: v.get("grad").and_then(|x| x.as_bool()).unwrap_or(false),
+            },
+            "suggest" => Request::Suggest {
+                model: model()?,
+                beta: v.get("beta").and_then(|x| x.as_f64()).unwrap_or(2.0),
+            },
+            "stats" => Request::Stats { model: model()? },
+            "shutdown" => Request::Shutdown,
+            other => return Err(format!("unknown op '{other}'")),
+        };
+        Ok((req, id))
+    }
+}
+
+/// A server response.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Ok,
+    Error(String),
+    ModelCreated {
+        model: u64,
+    },
+    Prediction {
+        mu: Vec<f64>,
+        svar: Vec<f64>,
+        acq: Vec<f64>,
+        /// Row-major `[B, D]`; empty when gradients were not requested.
+        gacq: Vec<Vec<f64>>,
+        /// Which execution path served it: "pjrt" or "native".
+        path: &'static str,
+    },
+    Suggestion {
+        x: Vec<f64>,
+    },
+    Stats {
+        n: usize,
+        d: usize,
+        omegas: Vec<f64>,
+        cache_hits: u64,
+        cache_misses: u64,
+        pjrt_batches: u64,
+        native_queries: u64,
+    },
+}
+
+impl Response {
+    /// Serialize with the echoed request id.
+    pub fn to_json(&self, id: Option<f64>) -> Json {
+        let mut pairs: Vec<(&str, Json)> = Vec::new();
+        if let Some(id) = id {
+            pairs.push(("id", Json::Num(id)));
+        }
+        match self {
+            Response::Ok => pairs.push(("ok", Json::Bool(true))),
+            Response::Error(e) => {
+                pairs.push(("ok", Json::Bool(false)));
+                pairs.push(("error", Json::Str(e.clone())));
+            }
+            Response::ModelCreated { model } => {
+                pairs.push(("ok", Json::Bool(true)));
+                pairs.push(("model", Json::Num(*model as f64)));
+            }
+            Response::Prediction { mu, svar, acq, gacq, path } => {
+                pairs.push(("ok", Json::Bool(true)));
+                pairs.push(("mu", Json::arr_f64(mu)));
+                pairs.push(("svar", Json::arr_f64(svar)));
+                pairs.push(("acq", Json::arr_f64(acq)));
+                pairs.push((
+                    "gacq",
+                    Json::Arr(gacq.iter().map(|row| Json::arr_f64(row)).collect()),
+                ));
+                pairs.push(("path", Json::Str(path.to_string())));
+            }
+            Response::Suggestion { x } => {
+                pairs.push(("ok", Json::Bool(true)));
+                pairs.push(("x", Json::arr_f64(x)));
+            }
+            Response::Stats {
+                n,
+                d,
+                omegas,
+                cache_hits,
+                cache_misses,
+                pjrt_batches,
+                native_queries,
+            } => {
+                pairs.push(("ok", Json::Bool(true)));
+                pairs.push(("n", Json::Num(*n as f64)));
+                pairs.push(("d", Json::Num(*d as f64)));
+                pairs.push(("omegas", Json::arr_f64(omegas)));
+                pairs.push(("cache_hits", Json::Num(*cache_hits as f64)));
+                pairs.push(("cache_misses", Json::Num(*cache_misses as f64)));
+                pairs.push(("pjrt_batches", Json::Num(*pjrt_batches as f64)));
+                pairs.push(("native_queries", Json::Num(*native_queries as f64)));
+            }
+        }
+        Json::obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let (r, id) = Request::parse(
+            r#"{"op":"predict","model":3,"xs":[[1,2],[3,4]],"beta":1.5,"grad":true,"id":9}"#,
+        )
+        .unwrap();
+        assert_eq!(id, Some(9.0));
+        match r {
+            Request::Predict { model, xs, beta, grad } => {
+                assert_eq!(model, 3);
+                assert_eq!(xs, vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+                assert_eq!(beta, 1.5);
+                assert!(grad);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn parse_create_and_errors() {
+        let (r, _) = Request::parse(r#"{"op":"create_model","d":5}"#).unwrap();
+        assert_eq!(
+            r,
+            Request::CreateModel { d: 5, nu2: 1, omega: 1.0, sigma2: 1.0 }
+        );
+        assert!(Request::parse(r#"{"op":"nope"}"#).is_err());
+        assert!(Request::parse("garbage").is_err());
+        assert!(Request::parse(r#"{"op":"observe","x":[1],"y":2}"#).is_err());
+    }
+
+    #[test]
+    fn response_serializes() {
+        let resp = Response::Prediction {
+            mu: vec![1.0],
+            svar: vec![0.5],
+            acq: vec![0.2],
+            gacq: vec![vec![0.1, -0.2]],
+            path: "native",
+        };
+        let j = resp.to_json(Some(4.0));
+        let v = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("id").unwrap().as_f64(), Some(4.0));
+        assert_eq!(v.get("mu").unwrap().as_f64_vec().unwrap(), vec![1.0]);
+        assert_eq!(v.get("path").unwrap().as_str(), Some("native"));
+    }
+}

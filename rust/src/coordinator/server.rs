@@ -1,0 +1,229 @@
+//! TCP server: JSON lines in, JSON lines out. One reader thread per
+//! connection; a registry routes requests to per-model engine workers.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::engine::{Command, EngineConfig, ModelEngine};
+use crate::coordinator::metrics::ServerMetrics;
+use crate::coordinator::protocol::{Request, Response};
+use crate::kernels::matern::Nu;
+
+/// Shared server state.
+struct Shared {
+    engines: Mutex<HashMap<u64, Sender<Command>>>,
+    next_id: AtomicU64,
+    shutting_down: AtomicBool,
+    /// Engines create their own PJRT clients on their worker threads (the
+    /// xla handles are not Send); this only gates whether they try.
+    use_pjrt: bool,
+    /// Box bounds handed to each engine's `suggest`.
+    lo: f64,
+    hi: f64,
+    metrics: ServerMetrics,
+}
+
+/// The coordinator server.
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+}
+
+impl Server {
+    /// Bind to `addr` (e.g. `127.0.0.1:0`). `use_pjrt=false` skips the PJRT
+    /// client entirely (native-only engines).
+    pub fn bind(addr: &str, use_pjrt: bool, lo: f64, hi: f64) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(Server {
+            listener,
+            shared: Arc::new(Shared {
+                engines: Mutex::new(HashMap::new()),
+                next_id: AtomicU64::new(1),
+                shutting_down: AtomicBool::new(false),
+                use_pjrt,
+                lo,
+                hi,
+                metrics: ServerMetrics::default(),
+            }),
+        })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.listener.local_addr().unwrap()
+    }
+
+    /// One-line serving-metrics report (also printed at shutdown).
+    pub fn metrics_report(&self) -> String {
+        self.shared.metrics.report()
+    }
+
+    /// Accept-loop. Returns when a client sends `shutdown`.
+    pub fn serve(&self) -> anyhow::Result<()> {
+        for stream in self.listener.incoming() {
+            if self.shared.shutting_down.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = stream?;
+            let shared = Arc::clone(&self.shared);
+            std::thread::spawn(move || handle_conn(stream, shared));
+        }
+        println!("coordinator metrics: {}", self.shared.metrics.report());
+        Ok(())
+    }
+}
+
+fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, id) = dispatch(&line, &shared);
+        let out = format!("{}\n", resp.to_json(id));
+        if writer.write_all(out.as_bytes()).is_err() {
+            break;
+        }
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            // Poke the accept loop so `serve` can exit.
+            let addr = writer.local_addr().ok();
+            if let Some(addr) = addr {
+                let _ = TcpStream::connect(addr);
+            }
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
+    shared.metrics.inc_requests();
+    let t0 = std::time::Instant::now();
+    let (req, id) = match Request::parse(line) {
+        Ok(v) => v,
+        Err(e) => {
+            shared.metrics.inc_errors();
+            return (Response::Error(e), None);
+        }
+    };
+    let is_predict = matches!(req, Request::Predict { .. });
+    let is_suggest = matches!(req, Request::Suggest { .. });
+    if let Request::Predict { xs, .. } = &req {
+        shared.metrics.add_predict_points(xs.len());
+    }
+    let resp = match req {
+        Request::CreateModel { d, nu2, omega, sigma2 } => {
+            let nu = match Nu::from_two_nu(nu2) {
+                Some(nu) => nu,
+                None => return (Response::Error(format!("bad nu2 {nu2}")), id),
+            };
+            let cfg = EngineConfig {
+                d,
+                nu,
+                omega0: omega,
+                sigma2,
+                lo: shared.lo,
+                hi: shared.hi,
+                use_pjrt: shared.use_pjrt,
+                seed: 0xC0FE ^ d as u64,
+            };
+            let (tx, rx) = channel();
+            // Construct on the worker thread: PJRT handles are not Send.
+            std::thread::spawn(move || ModelEngine::new(cfg).run(rx));
+            let idx = shared.next_id.fetch_add(1, Ordering::SeqCst);
+            shared.engines.lock().unwrap().insert(idx, tx);
+            Response::ModelCreated { model: idx }
+        }
+        Request::Shutdown => {
+            shared.shutting_down.store(true, Ordering::SeqCst);
+            let engines = shared.engines.lock().unwrap();
+            for tx in engines.values() {
+                let _ = tx.send(Command::Stop);
+            }
+            Response::Ok
+        }
+        other => {
+            let model = match &other {
+                Request::Observe { model, .. }
+                | Request::ObserveBatch { model, .. }
+                | Request::Fit { model, .. }
+                | Request::Predict { model, .. }
+                | Request::Suggest { model, .. }
+                | Request::Stats { model } => *model,
+                _ => unreachable!(),
+            };
+            let tx = {
+                let engines = shared.engines.lock().unwrap();
+                engines.get(&model).cloned()
+            };
+            let Some(tx) = tx else {
+                return (Response::Error(format!("unknown model {model}")), id);
+            };
+            let (rtx, rrx) = channel();
+            let cmd = match other {
+                Request::Observe { x, y, .. } => Command::Observe { x, y, reply: rtx },
+                Request::ObserveBatch { xs, ys, .. } => {
+                    Command::ObserveBatch { xs, ys, reply: rtx }
+                }
+                Request::Fit { steps, .. } => Command::Fit { steps, reply: rtx },
+                Request::Predict { xs, beta, grad, .. } => {
+                    Command::Predict { xs, beta, grad, reply: rtx }
+                }
+                Request::Suggest { beta, .. } => Command::Suggest { beta, reply: rtx },
+                Request::Stats { .. } => Command::Stats { reply: rtx },
+                _ => unreachable!(),
+            };
+            if tx.send(cmd).is_err() {
+                return (Response::Error("engine stopped".into()), id);
+            }
+            match rrx.recv() {
+                Ok(r) => r,
+                Err(_) => Response::Error("engine dropped reply".into()),
+            }
+        }
+    };
+    if matches!(resp, Response::Error(_)) {
+        shared.metrics.inc_errors();
+    }
+    if is_predict {
+        shared.metrics.predict_latency.record(t0.elapsed().as_secs_f64());
+    } else if is_suggest {
+        shared.metrics.suggest_latency.record(t0.elapsed().as_secs_f64());
+    }
+    (resp, id)
+}
+
+/// Minimal blocking client for tests, examples and benches.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> anyhow::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one JSON line and read one JSON-line reply.
+    pub fn call(&mut self, req: &str) -> anyhow::Result<crate::util::Json> {
+        self.writer.write_all(req.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        crate::util::Json::parse(&line).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
+    }
+}

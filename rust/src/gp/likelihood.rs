@@ -1,0 +1,540 @@
+//! Log-likelihood (eq. 14) and its gradient (eq. 15) — paper §5.1.2.
+//!
+//! The negative log marginal likelihood of the additive model is
+//!
+//! ```text
+//! NLL(ω, σ_y) = ½ [ Yᵀ R Y + log|Σ| + n log 2π ],   Σ = Σ_d K_d + σ_y² I
+//! R = Σ^{-1} = σ⁻² I − σ⁻⁴ Sᵀ [K^{-1}+σ⁻²SSᵀ]^{-1} S          (Woodbury)
+//! log|Σ| = 2n log σ_y + Σ_d (log|Φ_d| − log|A_d|) + log|K^{-1}+σ⁻²SSᵀ|
+//! ```
+//!
+//! * `R·v` costs one Algorithm 4 solve (`O(Dn)` per Gauss–Seidel sweep).
+//! * The banded log-dets come from the banded LU (`O(ν²n)`).
+//! * `log|K^{-1}+σ⁻²SSᵀ|` uses the **power method (Algorithm 6)** for
+//!   `λ_max`, then the truncated-Taylor + **Hutchinson (Algorithm 7)**
+//!   stochastic estimator (**Algorithm 8**).
+//! * The gradient `∂NLL/∂ω_d = ½[tr(R ∂K_d) − YᵀR (∂K_d) R Y]` applies
+//!   `∂K_d = B_d^{-1}Ψ_d` via the generalized-KP factorization (eq. 15) and
+//!   estimates the trace with shared Hutchinson probes (eq. 24).
+
+use crate::gp::backfit::{BlockVec, GaussSeidel};
+use crate::gp::dim::DimFactor;
+use crate::util::Rng;
+
+/// Tunables for the stochastic estimators.
+#[derive(Clone, Copy, Debug)]
+pub struct StochasticCfg {
+    /// Hutchinson probes for traces (paper's `Q`).
+    pub trace_probes: usize,
+    /// Probes for the log-det estimator (Algorithm 8's outer loop `Q`).
+    pub logdet_probes: usize,
+    /// Taylor truncation order (Algorithm 8's inner loop `S`); `0` → use
+    /// `⌈4 log₂ n⌉`.
+    pub logdet_terms: usize,
+    /// Power-method restarts / iterations (Algorithm 6's `Q` and `S`).
+    pub power_restarts: usize,
+    pub power_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for StochasticCfg {
+    fn default() -> Self {
+        StochasticCfg {
+            trace_probes: 24,
+            logdet_probes: 24,
+            logdet_terms: 0,
+            power_restarts: 3,
+            power_iters: 30,
+            seed: 0xADD6,
+        }
+    }
+}
+
+/// Apply `R = [Σ_d K_d + σ²I]^{-1}` to an `n`-vector (data order).
+pub fn r_matvec(dims: &[DimFactor], sigma2_y: f64, gs: &GaussSeidel, v: &[f64]) -> Vec<f64> {
+    let n = v.len();
+    let inv2 = 1.0 / sigma2_y;
+    // S v: every block gets v. Solve [K^{-1}+σ⁻²SSᵀ]u = S v.
+    let blocks: BlockVec = (0..dims.len()).map(|_| v.to_vec()).collect();
+    let (u, _) = gs.solve(&blocks);
+    let mut out = vec![0.0; n];
+    for b in &u {
+        for i in 0..n {
+            out[i] += b[i];
+        }
+    }
+    for i in 0..n {
+        out[i] = inv2 * v[i] - inv2 * inv2 * out[i];
+    }
+    out
+}
+
+/// `Σ_d (log|Φ_d| − log|A_d|) = log|K|` — the banded log-det terms of (14).
+pub fn logdet_k(dims: &[DimFactor]) -> f64 {
+    dims.iter()
+        .map(|d| {
+            let (lphi, _) = d.phi_lu.logdet();
+            let (la, _) = d.a_lu.logdet();
+            lphi - la
+        })
+        .sum()
+}
+
+/// **Algorithm 6** (power method): estimate `λ_max` of
+/// `M = K^{-1} + σ⁻²SSᵀ` using the `O(n)` operator.
+pub fn lambda_max(dims: &[DimFactor], gs: &GaussSeidel, cfg: &StochasticCfg, rng: &mut Rng) -> f64 {
+    let n = dims[0].n();
+    let dd = dims.len();
+    let mut best = 0.0f64;
+    for _ in 0..cfg.power_restarts.max(1) {
+        let mut v: BlockVec = (0..dd).map(|_| rng.rademacher_vec(n)).collect();
+        for _ in 0..cfg.power_iters {
+            let mut w = gs.apply(&v);
+            let norm = w
+                .iter()
+                .flat_map(|b| b.iter())
+                .map(|x| x * x)
+                .sum::<f64>()
+                .sqrt()
+                .max(1e-300);
+            for b in &mut w {
+                for x in b.iter_mut() {
+                    *x /= norm;
+                }
+            }
+            v = w;
+        }
+        let mv = gs.apply(&v);
+        let num: f64 = v
+            .iter()
+            .zip(&mv)
+            .flat_map(|(a, b)| a.iter().zip(b.iter()))
+            .map(|(a, b)| a * b)
+            .sum();
+        let den: f64 = v.iter().flat_map(|b| b.iter()).map(|x| x * x).sum();
+        best = best.max(num / den);
+    }
+    best
+}
+
+/// **Algorithm 8**: stochastic `log|K^{-1} + σ⁻²SSᵀ|` via power method,
+/// Taylor expansion of `log det`, and Hutchinson traces (**Algorithm 7**).
+pub fn logdet_m_stochastic(dims: &[DimFactor], gs: &GaussSeidel, cfg: &StochasticCfg) -> f64 {
+    let n = dims[0].n();
+    let dd = dims.len();
+    let mut rng = Rng::new(cfg.seed ^ 0x10adde7);
+    // Slight over-estimate of λ_max keeps all normalized eigenvalues < 1.
+    let lam = lambda_max(dims, gs, cfg, &mut rng) * 1.05;
+    let terms = if cfg.logdet_terms > 0 {
+        cfg.logdet_terms
+    } else {
+        (4.0 * (n as f64).log2()).ceil() as usize
+    };
+    let mut gamma = 0.0;
+    for _ in 0..cfg.logdet_probes {
+        let v0: BlockVec = (0..dd).map(|_| rng.rademacher_vec(n)).collect();
+        let mut u = v0.clone();
+        let mut acc = 0.0;
+        for s in 1..=terms {
+            // u ← (I − M/λ) u
+            let mu = gs.apply(&u);
+            for (ub, mb) in u.iter_mut().zip(&mu) {
+                for (x, m) in ub.iter_mut().zip(mb) {
+                    *x -= m / lam;
+                }
+            }
+            let dot: f64 = v0
+                .iter()
+                .zip(&u)
+                .flat_map(|(a, b)| a.iter().zip(b.iter()))
+                .map(|(a, b)| a * b)
+                .sum();
+            acc += dot / s as f64;
+        }
+        gamma += acc;
+    }
+    gamma /= cfg.logdet_probes as f64;
+    (dd * n) as f64 * lam.ln() - gamma
+}
+
+/// Exact dense `log|K^{-1}+σ⁻²SSᵀ|` (tests / tiny n).
+pub fn logdet_m_dense(dims: &[DimFactor], sigma2_y: f64) -> f64 {
+    let n = dims[0].n();
+    let dd = dims.len();
+    let mut m = crate::linalg::Dense::zeros(dd * n, dd * n);
+    for (d, dim) in dims.iter().enumerate() {
+        let kinv = dim.kernel().gram(&dim.kp.xs).inverse();
+        for i in 0..n {
+            for j in 0..n {
+                let io = dim.kp.perm.orig(i);
+                let jo = dim.kp.perm.orig(j);
+                m.add(d * n + io, d * n + jo, kinv.get(i, j));
+            }
+        }
+    }
+    for d1 in 0..dd {
+        for d2 in 0..dd {
+            for i in 0..n {
+                m.add(d1 * n + i, d2 * n + i, 1.0 / sigma2_y);
+            }
+        }
+    }
+    m.lu_logdet().0
+}
+
+/// Full negative log marginal likelihood (up to the `n log 2π / 2` constant
+/// included), with the stochastic log-det.
+pub fn nll(dims: &[DimFactor], sigma2_y: f64, y: &[f64], cfg: &StochasticCfg) -> f64 {
+    let gs = GaussSeidel::new(dims, sigma2_y);
+    let ry = r_matvec(dims, sigma2_y, &gs, y);
+    let quad: f64 = y.iter().zip(&ry).map(|(a, b)| a * b).sum();
+    let n = y.len() as f64;
+    let logdet_sigma = n * sigma2_y.ln()
+        + logdet_k(dims)
+        + logdet_m_stochastic(dims, &gs, cfg);
+    0.5 * (quad + logdet_sigma + n * (2.0 * std::f64::consts::PI).ln())
+}
+
+/// Exact NLL with the dense log-det (tests / small n).
+pub fn nll_exact(dims: &[DimFactor], sigma2_y: f64, y: &[f64]) -> f64 {
+    let gs = GaussSeidel::new(dims, sigma2_y);
+    let ry = r_matvec(dims, sigma2_y, &gs, y);
+    let quad: f64 = y.iter().zip(&ry).map(|(a, b)| a * b).sum();
+    let n = y.len() as f64;
+    let logdet_sigma =
+        n * sigma2_y.ln() + logdet_k(dims) + logdet_m_dense(dims, sigma2_y);
+    0.5 * (quad + logdet_sigma + n * (2.0 * std::f64::consts::PI).ln())
+}
+
+/// Gradient of the NLL.
+#[derive(Clone, Debug)]
+pub struct NllGrad {
+    /// `∂NLL/∂ω_d`.
+    pub omega: Vec<f64>,
+    /// `∂NLL/∂σ_y²`.
+    pub sigma2: f64,
+}
+
+/// `∂NLL/∂ω_d = ½ [tr(R ∂K_d) − YᵀR (∂K_d) R Y]` (eq. 15 up to sign — the
+/// paper writes the gradient of `l = −2·NLL + const`), and
+/// `∂NLL/∂σ² = ½ [tr(R) − ‖R Y‖²]`.
+///
+/// Traces use `Q` shared Hutchinson probes (Algorithm 7 / eq. 24): for each
+/// probe `v`, one Algorithm 4 solve yields `Rv`, then each dimension costs
+/// only a generalized-KP matvec — `O(Q·Dn)` total.
+pub fn nll_grad(dims: &mut [DimFactor], sigma2_y: f64, y: &[f64], cfg: &StochasticCfg) -> NllGrad {
+    let n = y.len();
+    let dd = dims.len();
+    // Ensure GKPs exist (mutable phase), then borrow immutably.
+    for dim in dims.iter_mut() {
+        dim.gkp();
+    }
+    let dims = &*dims;
+    let gs = GaussSeidel::new(dims, sigma2_y);
+    let ry = r_matvec(dims, sigma2_y, &gs, y);
+    // Probe solves feed a Monte-Carlo trace with O(1/sqrt(Q)) error - a
+    // loose solver tolerance is statistically free (EXPERIMENTS.md Perf).
+    let mut gs_probe = GaussSeidel::new(dims, sigma2_y);
+    gs_probe.tol = 1e-6;
+
+    // Quadratic parts.
+    let dk_ry: Vec<Vec<f64>> = dims
+        .iter()
+        .map(|dim| {
+            let s = dim.kp.perm.to_sorted(&ry);
+            let out = dim
+                .gkp_cached()
+                .expect("gkp built above")
+                .dk_matvec(&s);
+            dim.kp.perm.to_original(&out)
+        })
+        .collect();
+    let mut quad_omega = vec![0.0; dd];
+    for d in 0..dd {
+        quad_omega[d] = ry.iter().zip(&dk_ry[d]).map(|(a, b)| a * b).sum();
+    }
+    let quad_sigma: f64 = ry.iter().map(|x| x * x).sum();
+
+    // Hutchinson traces with shared probes.
+    let mut rng = Rng::new(cfg.seed ^ 0x7eace);
+    let mut tr_omega = vec![0.0; dd];
+    let mut tr_sigma = 0.0;
+    for _ in 0..cfg.trace_probes {
+        let v = rng.rademacher_vec(n);
+        let rv = r_matvec(dims, sigma2_y, &gs_probe, &v);
+        tr_sigma += v.iter().zip(&rv).map(|(a, b)| a * b).sum::<f64>();
+        for (d, dim) in dims.iter().enumerate() {
+            let vs = dim.kp.perm.to_sorted(&v);
+            let dkv = dim.gkp_cached().unwrap().dk_matvec(&vs);
+            let dkv_o = dim.kp.perm.to_original(&dkv);
+            tr_omega[d] += rv.iter().zip(&dkv_o).map(|(a, b)| a * b).sum::<f64>();
+        }
+    }
+    let q = cfg.trace_probes as f64;
+    NllGrad {
+        omega: (0..dd).map(|d| 0.5 * (tr_omega[d] / q - quad_omega[d])).collect(),
+        sigma2: 0.5 * (tr_sigma / q - quad_sigma),
+    }
+}
+
+/// Exact gradient via dense algebra (tests / small n).
+pub fn nll_grad_exact(dims: &[DimFactor], sigma2_y: f64, y: &[f64]) -> NllGrad {
+    let n = y.len();
+    let dd = dims.len();
+    let mut sigma = crate::linalg::Dense::zeros(n, n);
+    let mut dks = Vec::with_capacity(dd);
+    for dim in dims {
+        let xs_orig: Vec<f64> = (0..n).map(|i| dim.kp.xs[dim.kp.perm.sorted_pos(i)]).collect();
+        let k = dim.kernel().gram(&xs_orig);
+        let dk = dim.kernel().gram_domega(&xs_orig);
+        for i in 0..n {
+            for j in 0..n {
+                sigma.add(i, j, k.get(i, j));
+            }
+        }
+        dks.push(dk);
+    }
+    for i in 0..n {
+        sigma.add(i, i, sigma2_y);
+    }
+    let r = sigma.inverse();
+    let ry = r.matvec(y);
+    let mut omega = vec![0.0; dd];
+    for d in 0..dd {
+        let quad: f64 = ry.iter().zip(dks[d].matvec(&ry)).map(|(a, b)| a * b).sum();
+        // tr(R dK)
+        let rdk = r.matmul(&dks[d]);
+        let mut tr = 0.0;
+        for i in 0..n {
+            tr += rdk.get(i, i);
+        }
+        omega[d] = 0.5 * (tr - quad);
+    }
+    let mut tr_r = 0.0;
+    for i in 0..n {
+        tr_r += r.get(i, i);
+    }
+    let quad_s: f64 = ry.iter().map(|x| x * x).sum();
+    NllGrad { omega, sigma2: 0.5 * (tr_r - quad_s) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::matern::{Matern, Nu};
+    use crate::util::Rng;
+
+    fn setup(n: usize, dd: usize, nu: Nu, sigma2: f64, seed: u64) -> (Vec<DimFactor>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let dims: Vec<DimFactor> = (0..dd)
+            .map(|d| {
+                let pts = rng.uniform_vec(n, 0.0, 5.0);
+                DimFactor::new(&pts, Matern::new(nu, 0.7 + 0.2 * d as f64), sigma2)
+            })
+            .collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        (dims, y)
+    }
+
+    /// `R` really is `Σ^{-1}`: `Σ (R y) = y`.
+    #[test]
+    fn r_matvec_is_sigma_inverse() {
+        let sigma2 = 0.9;
+        let (dims, y) = setup(20, 3, Nu::Half, sigma2, 1);
+        let gs = GaussSeidel::new(&dims, sigma2);
+        let ry = r_matvec(&dims, sigma2, &gs, &y);
+        // Build Σ densely.
+        let n = 20;
+        let mut sig = crate::linalg::Dense::zeros(n, n);
+        for dim in &dims {
+            let xs_orig: Vec<f64> =
+                (0..n).map(|i| dim.kp.xs[dim.kp.perm.sorted_pos(i)]).collect();
+            let k = dim.kernel().gram(&xs_orig);
+            for i in 0..n {
+                for j in 0..n {
+                    sig.add(i, j, k.get(i, j));
+                }
+            }
+        }
+        for i in 0..n {
+            sig.add(i, i, sigma2);
+        }
+        let back = sig.matvec(&ry);
+        for i in 0..n {
+            assert!((back[i] - y[i]).abs() < 1e-6, "i={i}: {} vs {}", back[i], y[i]);
+        }
+    }
+
+    /// Banded `log|K|` matches the dense log-det of the per-dim grams.
+    #[test]
+    fn logdet_k_matches_dense() {
+        let (dims, _) = setup(18, 2, Nu::ThreeHalves, 1.0, 2);
+        let got = logdet_k(&dims);
+        let want: f64 = dims
+            .iter()
+            .map(|dim| dim.kernel().gram(&dim.kp.xs).lu_logdet().0)
+            .sum();
+        assert!((got - want).abs() < 1e-7, "{got} vs {want}");
+    }
+
+    /// Algorithm 8 approaches the dense log-det. The Taylor series converges
+    /// at rate `1 − λ_min/λ_max`, so the test uses a well-conditioned
+    /// instance (spread-out points, rough kernel) — the regime the paper's
+    /// `S = O(log n)` claim assumes; see DESIGN.md for the caveat.
+    #[test]
+    fn stochastic_logdet_close_to_dense() {
+        let sigma2 = 1.0;
+        let mut rng = Rng::new(3);
+        let dims: Vec<DimFactor> = (0..2)
+            .map(|_| {
+                let pts: Vec<f64> = (0..16)
+                    .map(|i| (i as f64 + 0.3 * rng.uniform()) * 1.5)
+                    .collect();
+                DimFactor::new(&pts, Matern::new(Nu::Half, 3.0), sigma2)
+            })
+            .collect();
+        let gs = GaussSeidel::new(&dims, sigma2);
+        let cfg = StochasticCfg {
+            logdet_probes: 400,
+            logdet_terms: 600,
+            power_iters: 80,
+            ..Default::default()
+        };
+        let got = logdet_m_stochastic(&dims, &gs, &cfg);
+        let want = logdet_m_dense(&dims, sigma2);
+        let rel = (got - want).abs() / want.abs().max(1.0);
+        assert!(rel < 0.05, "stochastic {got} vs dense {want} (rel {rel})");
+    }
+
+    /// λ_max from Algorithm 6 matches the dense spectrum (upper end).
+    #[test]
+    fn power_method_lambda_max() {
+        let sigma2 = 0.8;
+        let (dims, _) = setup(14, 2, Nu::Half, sigma2, 4);
+        let gs = GaussSeidel::new(&dims, sigma2);
+        let cfg = StochasticCfg { power_iters: 80, power_restarts: 4, ..Default::default() };
+        let mut rng = Rng::new(9);
+        let lam = lambda_max(&dims, &gs, &cfg, &mut rng);
+        // Dense check: λ_max via many power iterations on the dense matrix.
+        let n = 14;
+        let dd = 2;
+        let mut m = crate::linalg::Dense::zeros(dd * n, dd * n);
+        for (d, dim) in dims.iter().enumerate() {
+            let kinv = dim.kernel().gram(&dim.kp.xs).inverse();
+            for i in 0..n {
+                for j in 0..n {
+                    let io = dim.kp.perm.orig(i);
+                    let jo = dim.kp.perm.orig(j);
+                    m.add(d * n + io, d * n + jo, kinv.get(i, j));
+                }
+            }
+        }
+        for d1 in 0..dd {
+            for d2 in 0..dd {
+                for i in 0..n {
+                    m.add(d1 * n + i, d2 * n + i, 1.0 / sigma2);
+                }
+            }
+        }
+        let mut v = vec![1.0; dd * n];
+        for _ in 0..500 {
+            let w = m.matvec(&v);
+            let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+            v = w.into_iter().map(|x| x / norm).collect();
+        }
+        let lam_dense: f64 =
+            v.iter().zip(m.matvec(&v)).map(|(a, b)| a * b).sum::<f64>();
+        assert!(
+            (lam - lam_dense).abs() < 0.05 * lam_dense,
+            "power {lam} vs dense {lam_dense}"
+        );
+    }
+
+    /// Exact sparse NLL (quad + banded dets + dense logdet-M) equals the
+    /// classic dense GP NLL.
+    #[test]
+    fn nll_exact_matches_classic_formula() {
+        let sigma2 = 1.1;
+        let (dims, y) = setup(15, 2, Nu::ThreeHalves, sigma2, 5);
+        let got = nll_exact(&dims, sigma2, &y);
+        // Classic: ½ [yᵀΣ⁻¹y + log|Σ| + n log 2π].
+        let n = 15;
+        let mut sig = crate::linalg::Dense::zeros(n, n);
+        for dim in &dims {
+            let xs_orig: Vec<f64> =
+                (0..n).map(|i| dim.kp.xs[dim.kp.perm.sorted_pos(i)]).collect();
+            let k = dim.kernel().gram(&xs_orig);
+            for i in 0..n {
+                for j in 0..n {
+                    sig.add(i, j, k.get(i, j));
+                }
+            }
+        }
+        for i in 0..n {
+            sig.add(i, i, sigma2);
+        }
+        let quad: f64 = y.iter().zip(sig.solve(&y)).map(|(a, b)| a * b).sum();
+        let want = 0.5
+            * (quad + sig.lu_logdet().0 + n as f64 * (2.0 * std::f64::consts::PI).ln());
+        assert!((got - want).abs() < 1e-5 * want.abs(), "{got} vs {want}");
+    }
+
+    /// Stochastic gradient ≈ exact dense gradient.
+    #[test]
+    fn grad_matches_dense() {
+        let sigma2 = 1.0;
+        let (mut dims, y) = setup(18, 2, Nu::Half, sigma2, 6);
+        let cfg = StochasticCfg { trace_probes: 4000, ..Default::default() };
+        let got = nll_grad(&mut dims, sigma2, &y, &cfg);
+        let want = nll_grad_exact(&dims, sigma2, &y);
+        for d in 0..2 {
+            let tol = 0.05 * want.omega[d].abs().max(1.0);
+            assert!(
+                (got.omega[d] - want.omega[d]).abs() < tol,
+                "ω_{d}: {} vs {}",
+                got.omega[d],
+                want.omega[d]
+            );
+        }
+        assert!(
+            (got.sigma2 - want.sigma2).abs() < 0.05 * want.sigma2.abs().max(1.0),
+            "σ²: {} vs {}",
+            got.sigma2,
+            want.sigma2
+        );
+    }
+
+    /// The exact dense gradient itself matches finite differences of the
+    /// exact NLL — guards the eq. (15) sign conventions end to end.
+    #[test]
+    fn dense_grad_matches_fd() {
+        let sigma2 = 1.0;
+        let n = 14;
+        let mut rng = Rng::new(7);
+        let pts: Vec<Vec<f64>> = (0..2).map(|_| rng.uniform_vec(n, 0.0, 5.0)).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let build = |omegas: [f64; 2]| -> Vec<DimFactor> {
+            (0..2)
+                .map(|d| DimFactor::new(&pts[d], Matern::new(Nu::Half, omegas[d]), sigma2))
+                .collect()
+        };
+        let base = [0.9, 1.3];
+        let dims = build(base);
+        let g = nll_grad_exact(&dims, sigma2, &y);
+        let h = 1e-5;
+        for d in 0..2 {
+            let mut up = base;
+            up[d] += h;
+            let mut dn = base;
+            dn[d] -= h;
+            let fp = nll_exact(&build(up), sigma2, &y);
+            let fm = nll_exact(&build(dn), sigma2, &y);
+            let fd = (fp - fm) / (2.0 * h);
+            assert!(
+                (fd - g.omega[d]).abs() < 1e-3 * fd.abs().max(1.0),
+                "ω_{d}: fd {fd} vs exact {}",
+                g.omega[d]
+            );
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! The sparse additive-GP engine — paper §3 and §5.
+//!
+//! * [`dim`] — per-dimension factorization state (KP, GKP, the banded LUs).
+//! * [`backfit`] — block Gauss–Seidel for `[K^{-1}+σ⁻²SS^T]^{-1}v`
+//!   (**Algorithm 4**).
+//! * [`posterior`] — posterior mean (12) / variance (13), sparse windows,
+//!   band-of-inverse (via **Algorithm 5**) and the lazy `M̃`-column cache.
+//! * [`likelihood`] — log-likelihood (14), its gradient (15), power method
+//!   (**Algorithm 6**), Hutchinson trace (**Algorithm 7**) and the stochastic
+//!   log-determinant (**Algorithm 8**).
+//! * [`train`] — MLE of the scale hyperparameters by Adam on ∇l.
+//! * [`model`] — the [`model::AdditiveGP`] façade tying it together.
+
+pub mod backfit;
+pub mod dim;
+pub mod likelihood;
+pub mod model;
+pub mod posterior;
+pub mod train;
+
+pub use backfit::{BlockVec, GaussSeidel};
+pub use dim::DimFactor;
+pub use model::{AdditiveGP, AdditiveGpConfig};

@@ -1,0 +1,300 @@
+//! [`AdditiveGP`] — the user-facing façade over the sparse engine: fit,
+//! sequentially observe, learn hyperparameters, and predict mean/variance
+//! (with gradients) at `O(log n)`→`O(1)` per query.
+
+use crate::gp::backfit::GaussSeidel;
+use crate::gp::dim::DimFactor;
+use crate::gp::likelihood::{self, StochasticCfg};
+use crate::gp::posterior::{self, MTildeCache, Posterior, PredictOut};
+use crate::gp::train::{self, TrainCfg};
+use crate::kernels::matern::{Matern, Nu};
+
+/// Configuration of an additive Matérn GP.
+#[derive(Clone, Copy, Debug)]
+pub struct AdditiveGpConfig {
+    pub nu: Nu,
+    /// Initial (or fixed) scale ω for every dimension.
+    pub omega0: f64,
+    /// Observation noise variance σ_y².
+    pub sigma2_y: f64,
+    /// Gauss–Seidel controls (Algorithm 4).
+    pub gs_max_sweeps: usize,
+    pub gs_tol: f64,
+    /// Stochastic-estimator controls (Algorithms 6–8).
+    pub stochastic: StochasticCfg,
+    /// `M̃` cache capacity (columns); 0 = unbounded.
+    pub cache_capacity: usize,
+}
+
+impl Default for AdditiveGpConfig {
+    fn default() -> Self {
+        AdditiveGpConfig {
+            nu: Nu::Half,
+            omega0: 1.0,
+            sigma2_y: 1.0,
+            gs_max_sweeps: 60,
+            gs_tol: 1e-10,
+            stochastic: StochasticCfg::default(),
+            cache_capacity: 8192,
+        }
+    }
+}
+
+/// An additive Matérn GP `y = Σ_d 𝒢_d(x_d) + ε` backed by the sparse
+/// KP representation (paper §3–§6).
+pub struct AdditiveGP {
+    pub cfg: AdditiveGpConfig,
+    /// Current per-dimension scales.
+    pub omegas: Vec<f64>,
+    /// Column-major data: `x_cols[d][i]`.
+    x_cols: Vec<Vec<f64>>,
+    y: Vec<f64>,
+    dims: Option<Vec<DimFactor>>,
+    post: Option<Posterior>,
+    cache: MTildeCache,
+}
+
+impl AdditiveGP {
+    /// Empty model over `d` input dimensions.
+    pub fn new(cfg: AdditiveGpConfig, d: usize) -> Self {
+        AdditiveGP {
+            omegas: vec![cfg.omega0; d],
+            x_cols: vec![Vec::new(); d],
+            y: Vec::new(),
+            dims: None,
+            post: None,
+            cache: MTildeCache::new(cfg.cache_capacity),
+            cfg,
+        }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.x_cols.len()
+    }
+
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Minimum number of observations before the KP factorization is valid.
+    pub fn min_points(&self) -> usize {
+        2 * (self.cfg.nu.q() + 2) + 1 // n ≥ 2ν+4 (GKP is the binding one)
+    }
+
+    /// Replace the data set (rows of `x`) and refit the factorizations.
+    pub fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert_eq!(x.len(), y.len());
+        let d = self.input_dim();
+        self.x_cols = vec![Vec::with_capacity(x.len()); d];
+        for row in x {
+            assert_eq!(row.len(), d);
+            for (dd, &v) in row.iter().enumerate() {
+                self.x_cols[dd].push(v);
+            }
+        }
+        self.y = y.to_vec();
+        self.refit();
+    }
+
+    /// Append one observation (sequential sampling). Refits the banded
+    /// factorizations (`O(Dn)`) and invalidates the posterior and caches.
+    pub fn observe(&mut self, x: &[f64], y: f64) {
+        assert_eq!(x.len(), self.input_dim());
+        for (d, &v) in x.iter().enumerate() {
+            self.x_cols[d].push(v);
+        }
+        self.y.push(y);
+        if self.n() >= self.min_points() {
+            self.refit();
+        }
+    }
+
+    /// Rebuild per-dimension factorizations with the current hyperparameters.
+    pub fn refit(&mut self) {
+        if self.n() < self.min_points() {
+            self.dims = None;
+            self.post = None;
+            return;
+        }
+        let sigma2 = self.cfg.sigma2_y;
+        let nu = self.cfg.nu;
+        self.dims = Some(
+            self.x_cols
+                .iter()
+                .zip(&self.omegas)
+                .map(|(col, &om)| DimFactor::new(col, Matern::new(nu, om), sigma2))
+                .collect(),
+        );
+        self.post = None;
+        self.cache.clear();
+    }
+
+    fn gs<'a>(&self, dims: &'a [DimFactor]) -> GaussSeidel<'a> {
+        let mut gs = GaussSeidel::new(dims, self.cfg.sigma2_y);
+        gs.max_sweeps = self.cfg.gs_max_sweeps;
+        gs.tol = self.cfg.gs_tol;
+        gs
+    }
+
+    /// Ensure the posterior state (`b_Y`) exists — one Algorithm 4 solve.
+    pub fn ensure_posterior(&mut self) {
+        if self.post.is_some() {
+            return;
+        }
+        let dims = self.dims.as_ref().expect("fit() with enough points first");
+        let gs = self.gs(dims);
+        self.post = Some(posterior::compute_posterior(dims, self.cfg.sigma2_y, &self.y, &gs));
+    }
+
+    /// Posterior mean at `x` — `O(D log n)` given the posterior.
+    pub fn mean(&mut self, x: &[f64]) -> f64 {
+        self.ensure_posterior();
+        posterior::mean(self.dims.as_ref().unwrap(), self.post.as_ref().unwrap(), x)
+    }
+
+    /// Posterior mean and variance (plus gradients if requested).
+    pub fn predict(&mut self, x: &[f64], want_grad: bool) -> PredictOut {
+        self.ensure_posterior();
+        let sigma2 = self.cfg.sigma2_y;
+        let dims = self.dims.as_mut().unwrap();
+        let post = self.post.as_ref().unwrap();
+        posterior::predict_cached(dims, sigma2, post, &mut self.cache, x, want_grad)
+    }
+
+    /// Negative log marginal likelihood (stochastic log-det).
+    pub fn nll(&self) -> f64 {
+        let dims = self.dims.as_ref().expect("fit first");
+        likelihood::nll(dims, self.cfg.sigma2_y, &self.y, &self.cfg.stochastic)
+    }
+
+    /// Gradient of the NLL w.r.t. each ω_d (and σ²).
+    pub fn nll_grad(&mut self) -> likelihood::NllGrad {
+        let dims = self.dims.as_mut().expect("fit first");
+        likelihood::nll_grad(dims, self.cfg.sigma2_y, &self.y, &self.cfg.stochastic)
+    }
+
+    /// Learn the scales by Adam (paper §5.1); updates `self.omegas` and the
+    /// factorizations.
+    pub fn optimize_hypers(&mut self, tcfg: &TrainCfg) -> Vec<train::TrainStep> {
+        let (omegas, dims, hist) = train::optimize_omegas(
+            &self.x_cols,
+            &self.y,
+            self.cfg.nu,
+            &self.omegas.clone(),
+            self.cfg.sigma2_y,
+            tcfg,
+            &self.cfg.stochastic,
+        );
+        self.omegas = omegas;
+        self.dims = Some(dims);
+        self.post = None;
+        self.cache.clear();
+        hist
+    }
+
+    /// Gather the fixed-shape window payload for one query (the PJRT
+    /// batcher's input row; see [`posterior::gather_windows`]).
+    pub fn gather_windows(&mut self, x: &[f64]) -> posterior::QueryWindows {
+        self.ensure_posterior();
+        let sigma2 = self.cfg.sigma2_y;
+        let dims = self.dims.as_mut().unwrap();
+        let post = self.post.as_ref().unwrap();
+        posterior::gather_windows(dims, sigma2, post, &mut self.cache, x)
+    }
+
+    /// Cache statistics `(hits, misses, resident columns)`.
+    pub fn cache_stats(&self) -> (u64, u64, usize) {
+        (self.cache.hits, self.cache.misses, self.cache.len())
+    }
+
+    /// Data access for baselines/benchmarks.
+    pub fn data(&self) -> (&[Vec<f64>], &[f64]) {
+        (&self.x_cols, &self.y)
+    }
+
+    /// Immutable access to the factorizations (None before `fit`).
+    pub fn dims(&self) -> Option<&[DimFactor]> {
+        self.dims.as_deref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn toy_data(n: usize, d: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.uniform_in(0.0, 5.0)).collect()).collect();
+        let y: Vec<f64> = x
+            .iter()
+            .map(|row| row.iter().map(|v| (1.2 * v).sin()).sum::<f64>() + 0.1 * rng.normal())
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn fit_predict_roundtrip() {
+        let (x, y) = toy_data(60, 3, 1);
+        let mut gp = AdditiveGP::new(AdditiveGpConfig::default(), 3);
+        gp.fit(&x, &y);
+        let out = gp.predict(&[2.0, 3.0, 1.0], true);
+        assert!(out.var > 0.0);
+        assert!(out.mean.is_finite());
+        assert_eq!(out.mean_grad.len(), 3);
+        assert_eq!(out.var_grad.len(), 3);
+    }
+
+    /// Interpolation sanity: at a data point with small noise the posterior
+    /// mean is close to the observed value.
+    #[test]
+    fn approaches_data_with_small_noise() {
+        let (x, y) = toy_data(80, 2, 2);
+        let mut cfg = AdditiveGpConfig::default();
+        cfg.sigma2_y = 1e-3;
+        cfg.omega0 = 1.0;
+        let mut gp = AdditiveGP::new(cfg, 2);
+        gp.fit(&x, &y);
+        let mut err = 0.0;
+        for i in 0..10 {
+            let m = gp.mean(&x[i]);
+            err += (m - y[i]).abs();
+        }
+        err /= 10.0;
+        assert!(err < 0.15, "mean abs error at data points: {err}");
+    }
+
+    #[test]
+    fn observe_accumulates_then_activates() {
+        let mut gp = AdditiveGP::new(AdditiveGpConfig::default(), 2);
+        let (x, y) = toy_data(30, 2, 3);
+        for i in 0..30 {
+            gp.observe(&x[i], y[i]);
+        }
+        assert_eq!(gp.n(), 30);
+        let out = gp.predict(&[1.0, 1.0], false);
+        assert!(out.var.is_finite());
+    }
+
+    #[test]
+    fn variance_shrinks_near_data() {
+        let (x, y) = toy_data(100, 2, 4);
+        let mut gp = AdditiveGP::new(AdditiveGpConfig::default(), 2);
+        gp.fit(&x, &y);
+        let near = gp.predict(&x[0], false).var;
+        let far = gp.predict(&[50.0, -40.0], false).var;
+        assert!(near < far, "near {near} !< far {far}");
+    }
+
+    #[test]
+    fn nll_finite_and_grad_shaped() {
+        let (x, y) = toy_data(40, 2, 5);
+        let mut gp = AdditiveGP::new(AdditiveGpConfig::default(), 2);
+        gp.fit(&x, &y);
+        assert!(gp.nll().is_finite());
+        let g = gp.nll_grad();
+        assert_eq!(g.omega.len(), 2);
+        assert!(g.sigma2.is_finite());
+    }
+}

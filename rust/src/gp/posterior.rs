@@ -1,0 +1,632 @@
+//! Posterior mean (eq. 12) and variance (eq. 13) in sparse-window form,
+//! plus their x-gradients (eq. 30) — paper §5.2 and §6.
+//!
+//! After training, the mean is an `O(1)` window dot against the vector
+//! `b = Φ^{-T} P^T [K^{-1}+σ⁻²SS^T]^{-1} S Y/σ²`. The variance combines a
+//! `2ν`-band of `C_d = Φ_d^{-T}A_d^{-1}` (Algorithm 5) with a quadratic form
+//! in `M̃ = Φ^{-T}P^T M P Φ^{-1}`; `M̃` is never materialized — its columns
+//! are computed on demand with Algorithm 4 and memoized in [`MTildeCache`],
+//! which is what makes small-step acquisition ascent `O(1)` amortized (§6).
+
+use std::collections::HashMap;
+
+use crate::gp::backfit::{BlockVec, GaussSeidel, GsStats};
+use crate::gp::dim::DimFactor;
+
+/// Trained posterior state: the `b` vectors of eq. (12), per dimension, in
+/// sorted coordinates.
+#[derive(Clone, Debug)]
+pub struct Posterior {
+    /// `b_d = Φ_d^{-T} (P_d^T ṽ_d)`, sorted coordinates.
+    pub b: Vec<Vec<f64>>,
+    pub gs_stats: GsStats,
+}
+
+/// Compute the posterior state (`O(n log n)`): one Algorithm 4 solve with the
+/// shared right-hand side `S Y/σ²`, then one banded `Φ^T`-solve per dim.
+pub fn compute_posterior(dims: &[DimFactor], sigma2_y: f64, y: &[f64], gs: &GaussSeidel) -> Posterior {
+    let (tilde, gs_stats) = gs.solve_shared(y);
+    let b = dims
+        .iter()
+        .zip(&tilde)
+        .map(|(dim, t)| {
+            let ts = dim.kp.perm.to_sorted(t);
+            dim.phit_lu.solve(&ts)
+        })
+        .collect();
+    let _ = sigma2_y;
+    Posterior { b, gs_stats }
+}
+
+/// Posterior mean `μ_n(x*) = Σ_d φ_d(x*_d)·b_d` — `O(D log n)`.
+pub fn mean(dims: &[DimFactor], post: &Posterior, x: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for (d, dim) in dims.iter().enumerate() {
+        let (start, vals) = dim.kp.phi_window(x[d]);
+        for (r, &v) in vals.iter().enumerate() {
+            acc += v * post.b[d][start + r];
+        }
+    }
+    acc
+}
+
+/// Gradient of the posterior mean, `∂μ/∂x_d = ∂φ_d(x_d)·b_d` — `O(D log n)`.
+pub fn mean_grad(dims: &[DimFactor], post: &Posterior, x: &[f64]) -> Vec<f64> {
+    dims.iter()
+        .enumerate()
+        .map(|(d, dim)| {
+            let (start, dvals) = dim.kp.dphi_window(x[d]);
+            dvals.iter().enumerate().map(|(r, &v)| v * post.b[d][start + r]).sum()
+        })
+        .collect()
+}
+
+/// Memoized columns of `M̃ = Φ^{-T} P^T [K^{-1}+σ⁻²SS^T]^{-1} P Φ^{-1}`,
+/// keyed by `(dim, sorted index)`. Each miss costs one Algorithm 4 solve
+/// (`O(Dn)`); hits are free — consecutive small acquisition steps touch the
+/// same window columns, giving the paper's `O(1)` per-step claim.
+#[derive(Default)]
+pub struct MTildeCache {
+    cols: HashMap<(u32, u32), Vec<Vec<f64>>>,
+    pub hits: u64,
+    pub misses: u64,
+    /// Queries answered by the one-shot single-solve path (see
+    /// [`predict_cached`]'s cold-start policy).
+    pub single_solves: u64,
+    /// Soft cap on resident columns (FIFO-ish eviction by generation).
+    pub capacity: usize,
+    order: Vec<(u32, u32)>,
+    /// Visit counts per window signature — columns are only materialized on
+    /// the second visit, when locality makes them pay off.
+    visits: HashMap<Vec<u32>, u32>,
+}
+
+impl MTildeCache {
+    pub fn new(capacity: usize) -> Self {
+        MTildeCache { capacity, ..Default::default() }
+    }
+
+    pub fn clear(&mut self) {
+        self.cols.clear();
+        self.order.clear();
+        self.visits.clear();
+    }
+
+    /// Count a visit to a window signature; returns the previous count.
+    fn visit(&mut self, starts: &[usize]) -> u32 {
+        let key: Vec<u32> = starts.iter().map(|&s| s as u32).collect();
+        let c = self.visits.entry(key).or_insert(0);
+        let prev = *c;
+        *c += 1;
+        prev
+    }
+
+    /// How many of the window columns for `(dcol, j)` are resident.
+    fn cached_count(&self, needs: &[(usize, usize)]) -> usize {
+        needs
+            .iter()
+            .filter(|&&(d, j)| self.cols.contains_key(&(d as u32, j as u32)))
+            .count()
+    }
+
+    pub fn len(&self) -> usize {
+        self.cols.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cols.is_empty()
+    }
+
+    /// Column `(d', j)` of `M̃` (all `D × n` sorted-coordinate entries).
+    fn column<'c>(
+        &'c mut self,
+        dims: &[DimFactor],
+        gs: &GaussSeidel,
+        dcol: usize,
+        j: usize,
+    ) -> &'c Vec<Vec<f64>> {
+        let key = (dcol as u32, j as u32);
+        if self.cols.contains_key(&key) {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            if self.capacity > 0 && self.cols.len() >= self.capacity {
+                // Evict the oldest half to amortize.
+                let drop = self.order.len() / 2;
+                for k in self.order.drain(..drop) {
+                    self.cols.remove(&k);
+                }
+            }
+            let n = dims[0].n();
+            // z = P Φ^{-1} e_j  (block d' only), data order.
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            let z_s = dims[dcol].phi_lu.solve(&e);
+            let z = dims[dcol].kp.perm.to_original(&z_s);
+            let mut rhs: BlockVec = vec![vec![0.0; n]; dims.len()];
+            rhs[dcol] = z;
+            let (u, _) = gs.solve(&rhs);
+            // col_d = Φ_d^{-T} (P_d^T u_d), sorted coordinates.
+            let col: Vec<Vec<f64>> = dims
+                .iter()
+                .zip(&u)
+                .map(|(dim, ud)| dim.phit_lu.solve(&dim.kp.perm.to_sorted(ud)))
+                .collect();
+            self.cols.insert(key, col);
+            self.order.push(key);
+        }
+        self.cols.get(&key).unwrap()
+    }
+}
+
+/// Output of a full posterior evaluation at one point.
+#[derive(Clone, Debug)]
+pub struct PredictOut {
+    pub mean: f64,
+    pub var: f64,
+    /// `∇μ` (empty unless gradients were requested).
+    pub mean_grad: Vec<f64>,
+    /// `∇s` (empty unless gradients were requested).
+    pub var_grad: Vec<f64>,
+}
+
+/// Posterior variance (and optionally its gradient) at `x`, using the
+/// `M̃`-column cache: `O(1)` amortized when the window columns are cached,
+/// one `O(Dn)` Algorithm 4 solve per uncached column otherwise.
+pub fn predict_cached(
+    dims: &mut [DimFactor],
+    sigma2_y: f64,
+    post: &Posterior,
+    cache: &mut MTildeCache,
+    x: &[f64],
+    want_grad: bool,
+) -> PredictOut {
+    let ddim = dims.len();
+    // Gather windows (and ensure C bands exist) first.
+    let mut windows = Vec::with_capacity(ddim);
+    for (d, dim) in dims.iter_mut().enumerate() {
+        let (start, vals) = dim.kp.phi_window(x[d]);
+        let dvals = if want_grad { dim.kp.dphi_window(x[d]).1 } else { Vec::new() };
+        dim.c_band();
+        windows.push((start, vals, dvals));
+        let _ = d;
+    }
+
+    let mut mean_acc = 0.0;
+    let mut term1 = 0.0;
+    let mut term2 = 0.0;
+    let mut mean_grad = vec![0.0; if want_grad { ddim } else { 0 }];
+    // dφ_d^T C_d φ_d per dim (for the variance gradient).
+    let mut dterm2 = vec![0.0; if want_grad { ddim } else { 0 }];
+    for (d, dim) in dims.iter().enumerate() {
+        let (start, vals, dvals) = &windows[d];
+        term1 += dim.kernel().k(x[d], x[d]);
+        let c = dim.c_band_cached().expect("c_band built above");
+        for (r, &vr) in vals.iter().enumerate() {
+            mean_acc += vr * post.b[d][start + r];
+            for (s, &vs) in vals.iter().enumerate() {
+                term2 += vr * vs * c.get(start + r, start + s);
+            }
+        }
+        if want_grad {
+            for (r, &dv) in dvals.iter().enumerate() {
+                mean_grad[d] += dv * post.b[d][start + r];
+                for (s, &vs) in vals.iter().enumerate() {
+                    dterm2[d] += dv * vs * c.get(start + r, start + s);
+                }
+            }
+        }
+    }
+
+    // term3 = Σ_{d,d'} φ_d^T M̃_{d,d'} φ_{d'}.
+    //
+    // Cold-start policy (perf; EXPERIMENTS.md §Perf): the column cache only
+    // pays off when a window region is revisited (gradient-ascent steps).
+    // On the *first* visit to a window signature with mostly-cold columns we
+    // answer with ONE Algorithm 4 solve (`u = M^{-1} P Φ^{-1} φ`), which
+    // also yields the gradient via `M̃φ = Φ^{-T} P^T u`; columns are only
+    // materialized from the second visit on.
+    let gs = GaussSeidel::new(dims, sigma2_y);
+    let n = dims[0].n();
+    let needs: Vec<(usize, usize)> = windows
+        .iter()
+        .enumerate()
+        .flat_map(|(d, (start, vals, _))| (0..vals.len()).map(move |s| (d, start + s)))
+        .collect();
+    let prev_visits = cache.visit(&windows.iter().map(|w| w.0).collect::<Vec<_>>());
+    let mostly_cold = cache.cached_count(&needs) * 2 < needs.len();
+    let mut term3 = 0.0;
+    let mut dterm3 = vec![0.0; if want_grad { ddim } else { 0 }];
+    if prev_visits == 0 && mostly_cold {
+        cache.single_solves += 1;
+        // z = P Φ^{-1} φ (all dims at once), one backfit solve.
+        let mut z: BlockVec = vec![vec![0.0; n]; ddim];
+        for (d, dim) in dims.iter().enumerate() {
+            let (start, vals, _) = &windows[d];
+            let mut phi_sparse = vec![0.0; n];
+            for (r, &vr) in vals.iter().enumerate() {
+                phi_sparse[start + r] = vr;
+            }
+            let z_s = dim.phi_lu.solve(&phi_sparse);
+            z[d] = dim.kp.perm.to_original(&z_s);
+        }
+        let (u, _) = gs.solve(&z);
+        term3 = z
+            .iter()
+            .zip(&u)
+            .map(|(zd, ud)| zd.iter().zip(ud).map(|(a, b)| a * b).sum::<f64>())
+            .sum();
+        if want_grad {
+            for (d, dim) in dims.iter().enumerate() {
+                let mphi = dim.phit_lu.solve(&dim.kp.perm.to_sorted(&u[d]));
+                let (start, _, dvals) = &windows[d];
+                for (r, &dv) in dvals.iter().enumerate() {
+                    dterm3[d] += dv * mphi[start + r];
+                }
+            }
+        }
+    } else {
+        for dcol in 0..ddim {
+            let (start_c, vals_c, _) = windows[dcol].clone();
+            for (s, &vs) in vals_c.iter().enumerate() {
+                if vs == 0.0 {
+                    continue;
+                }
+                let col = cache.column(dims, &gs, dcol, start_c + s);
+                for (d, (start, vals, dvals)) in windows.iter().enumerate() {
+                    for (r, &vr) in vals.iter().enumerate() {
+                        term3 += vr * vs * col[d][start + r];
+                    }
+                    if want_grad {
+                        for (r, &dv) in dvals.iter().enumerate() {
+                            dterm3[d] += dv * vs * col[d][start + r];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let var = (term1 - term2 + term3).max(0.0);
+    let var_grad = if want_grad {
+        (0..ddim).map(|d| -2.0 * dterm2[d] + 2.0 * dterm3[d]).collect()
+    } else {
+        Vec::new()
+    };
+    PredictOut { mean: mean_acc, var, mean_grad, var_grad }
+}
+
+/// Fixed-shape window payload for one query — the exact input row of the
+/// AOT-compiled `window_acq` kernel (`python/compile/model.py`). Windows
+/// shorter than `w_max` are left-aligned and zero-padded (padded slots
+/// contribute nothing to any contraction).
+#[derive(Clone, Debug)]
+pub struct QueryWindows {
+    pub w_max: usize,
+    /// Per-dim window start (sorted index).
+    pub starts: Vec<usize>,
+    pub lens: Vec<usize>,
+    /// `[D, W]` row-major.
+    pub phi: Vec<f64>,
+    pub dphi: Vec<f64>,
+    pub bwin: Vec<f64>,
+    /// `[D, W, W]` — C_d window blocks.
+    pub cwin: Vec<f64>,
+    /// `[D, W, D, W]` — M̃ window blocks.
+    pub mwin: Vec<f64>,
+    pub kdiag: f64,
+}
+
+/// Gather the full window payload at `x` (mean/variance/gradients become
+/// pure contractions — executed either natively or by the PJRT kernel).
+/// Costs `O(D log n)` searches plus cache misses as in [`predict_cached`].
+pub fn gather_windows(
+    dims: &mut [DimFactor],
+    sigma2_y: f64,
+    post: &Posterior,
+    cache: &mut MTildeCache,
+    x: &[f64],
+) -> QueryWindows {
+    let ddim = dims.len();
+    let w_max = 2 * dims[0].kp.w();
+    let mut windows = Vec::with_capacity(ddim);
+    for (d, dim) in dims.iter_mut().enumerate() {
+        let (start, vals) = dim.kp.phi_window(x[d]);
+        let dvals = dim.kp.dphi_window(x[d]).1;
+        dim.c_band();
+        windows.push((start, vals, dvals));
+        let _ = d;
+    }
+    let mut out = QueryWindows {
+        w_max,
+        starts: windows.iter().map(|w| w.0).collect(),
+        lens: windows.iter().map(|w| w.1.len()).collect(),
+        phi: vec![0.0; ddim * w_max],
+        dphi: vec![0.0; ddim * w_max],
+        bwin: vec![0.0; ddim * w_max],
+        cwin: vec![0.0; ddim * w_max * w_max],
+        mwin: vec![0.0; ddim * w_max * ddim * w_max],
+        kdiag: 0.0,
+    };
+    for (d, dim) in dims.iter().enumerate() {
+        let (start, vals, dvals) = &windows[d];
+        out.kdiag += dim.kernel().k(x[d], x[d]);
+        let c = dim.c_band_cached().unwrap();
+        for (r, &v) in vals.iter().enumerate() {
+            out.phi[d * w_max + r] = v;
+            out.dphi[d * w_max + r] = dvals[r];
+            out.bwin[d * w_max + r] = post.b[d][start + r];
+            for s in 0..vals.len() {
+                out.cwin[(d * w_max + r) * w_max + s] = c.get(start + r, start + s);
+            }
+        }
+    }
+    // M̃ blocks via cached columns.
+    let gs = GaussSeidel::new(dims, sigma2_y);
+    for dcol in 0..ddim {
+        let (start_c, len_c) = (windows[dcol].0, windows[dcol].1.len());
+        for s in 0..len_c {
+            let col = cache.column(dims, &gs, dcol, start_c + s);
+            for (d, (start, vals, _)) in windows.iter().enumerate() {
+                for r in 0..vals.len() {
+                    // mwin[d, r, dcol, s]
+                    let idx = ((d * w_max + r) * ddim + dcol) * w_max + s;
+                    out.mwin[idx] = col[d][start + r];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Posterior variance at `x` *without* the cache — one Algorithm 4 solve
+/// (`O(Dn)`) per query; the "predetermined predictive point" path of §5.2.
+pub fn variance_direct(dims: &mut [DimFactor], sigma2_y: f64, x: &[f64]) -> f64 {
+    let ddim = dims.len();
+    let n = dims[0].n();
+    let mut windows = Vec::with_capacity(ddim);
+    for (d, dim) in dims.iter_mut().enumerate() {
+        let w = dim.kp.phi_window(x[d]);
+        dim.c_band();
+        windows.push(w);
+        let _ = d;
+    }
+    let mut term1 = 0.0;
+    let mut term2 = 0.0;
+    let mut z: BlockVec = vec![vec![0.0; n]; ddim];
+    for (d, dim) in dims.iter().enumerate() {
+        let (start, vals) = &windows[d];
+        term1 += dim.kernel().k(x[d], x[d]);
+        let c = dim.c_band_cached().unwrap();
+        let mut phi_sparse = vec![0.0; n];
+        for (r, &vr) in vals.iter().enumerate() {
+            phi_sparse[start + r] = vr;
+            for (s, &vs) in vals.iter().enumerate() {
+                term2 += vr * vs * c.get(start + r, start + s);
+            }
+        }
+        let z_s = dim.phi_lu.solve(&phi_sparse);
+        z[d] = dim.kp.perm.to_original(&z_s);
+    }
+    let gs = GaussSeidel::new(dims, sigma2_y);
+    let (u, _) = gs.solve(&z);
+    let term3: f64 = z
+        .iter()
+        .zip(&u)
+        .map(|(zd, ud)| zd.iter().zip(ud).map(|(a, b)| a * b).sum::<f64>())
+        .sum();
+    (term1 - term2 + term3).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::matern::{Matern, Nu};
+    use crate::linalg::Dense;
+    use crate::util::Rng;
+
+    /// Dense-oracle additive GP posterior (standard eq. 1 with the summed
+    /// kernel) for verification.
+    struct DenseOracle {
+        x_cols: Vec<Vec<f64>>, // D × n
+        kernels: Vec<Matern>,
+        sigma2: f64,
+        kinv: Dense, // (Σ_d K_d + σ²I)^{-1}
+        alpha: Vec<f64>,
+    }
+
+    impl DenseOracle {
+        fn new(x_cols: &[Vec<f64>], kernels: &[Matern], sigma2: f64, y: &[f64]) -> Self {
+            let n = y.len();
+            let mut sig = Dense::zeros(n, n);
+            for (d, k) in kernels.iter().enumerate() {
+                for i in 0..n {
+                    for j in 0..n {
+                        sig.add(i, j, k.k(x_cols[d][i], x_cols[d][j]));
+                    }
+                }
+            }
+            for i in 0..n {
+                sig.add(i, i, sigma2);
+            }
+            let kinv = sig.inverse();
+            let alpha = kinv.matvec(y);
+            DenseOracle { x_cols: x_cols.to_vec(), kernels: kernels.to_vec(), sigma2, kinv, alpha }
+        }
+
+        fn kvec(&self, x: &[f64]) -> Vec<f64> {
+            let n = self.alpha.len();
+            (0..n)
+                .map(|i| {
+                    self.kernels
+                        .iter()
+                        .enumerate()
+                        .map(|(d, k)| k.k(self.x_cols[d][i], x[d]))
+                        .sum()
+                })
+                .collect()
+        }
+
+        fn mean(&self, x: &[f64]) -> f64 {
+            self.kvec(x).iter().zip(&self.alpha).map(|(a, b)| a * b).sum()
+        }
+
+        fn var(&self, x: &[f64]) -> f64 {
+            let kv = self.kvec(x);
+            let kk: f64 = self.kernels.iter().map(|k| k.k(0.0, 0.0)).sum();
+            let quad: f64 = kv.iter().zip(self.kinv.matvec(&kv)).map(|(a, b)| a * b).sum();
+            let _ = self.sigma2;
+            kk - quad
+        }
+    }
+
+    fn setup(
+        n: usize,
+        ddim: usize,
+        nu: Nu,
+        sigma2: f64,
+        seed: u64,
+    ) -> (Vec<Vec<f64>>, Vec<Matern>, Vec<f64>, Vec<DimFactor>) {
+        let mut rng = Rng::new(seed);
+        let x_cols: Vec<Vec<f64>> = (0..ddim).map(|_| rng.uniform_vec(n, 0.0, 4.0)).collect();
+        let kernels: Vec<Matern> =
+            (0..ddim).map(|d| Matern::new(nu, 0.8 + 0.15 * d as f64)).collect();
+        let y: Vec<f64> = (0..n)
+            .map(|i| {
+                (0..ddim).map(|d| (x_cols[d][i] * 1.3).sin()).sum::<f64>() + 0.1 * rng.normal()
+            })
+            .collect();
+        let dims: Vec<DimFactor> = (0..ddim)
+            .map(|d| DimFactor::new(&x_cols[d], kernels[d], sigma2))
+            .collect();
+        (x_cols, kernels, y, dims)
+    }
+
+    #[test]
+    fn posterior_mean_matches_dense() {
+        let sigma2 = 1.0;
+        for (nu, ddim) in [(Nu::Half, 2), (Nu::ThreeHalves, 3)] {
+            let (x_cols, kernels, y, dims) = setup(25, ddim, nu, sigma2, 10);
+            let gs = GaussSeidel::new(&dims, sigma2);
+            let post = compute_posterior(&dims, sigma2, &y, &gs);
+            let oracle = DenseOracle::new(&x_cols, &kernels, sigma2, &y);
+            let mut rng = Rng::new(20);
+            for _ in 0..8 {
+                let x: Vec<f64> = (0..ddim).map(|_| rng.uniform_in(0.2, 3.8)).collect();
+                let got = mean(&dims, &post, &x);
+                let want = oracle.mean(&x);
+                assert!(
+                    (got - want).abs() < 1e-6 * want.abs().max(1.0),
+                    "{nu:?} D={ddim}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn posterior_variance_matches_dense_direct() {
+        let sigma2 = 0.8;
+        for (nu, ddim) in [(Nu::Half, 2), (Nu::ThreeHalves, 2)] {
+            let (x_cols, kernels, y, mut dims) = setup(22, ddim, nu, sigma2, 30);
+            let oracle = DenseOracle::new(&x_cols, &kernels, sigma2, &y);
+            let mut rng = Rng::new(31);
+            for _ in 0..6 {
+                let x: Vec<f64> = (0..ddim).map(|_| rng.uniform_in(0.2, 3.8)).collect();
+                let got = variance_direct(&mut dims, sigma2, &x);
+                let want = oracle.var(&x);
+                assert!(
+                    (got - want).abs() < 1e-5 * want.abs().max(1.0),
+                    "{nu:?}: var {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cached_predict_matches_direct() {
+        let sigma2 = 1.0;
+        let (_xc, _k, y, mut dims) = setup(20, 3, Nu::Half, sigma2, 40);
+        let gs_post = {
+            let gs = GaussSeidel::new(&dims, sigma2);
+            compute_posterior(&dims, sigma2, &y, &gs)
+        };
+        let mut cache = MTildeCache::new(0);
+        let mut rng = Rng::new(41);
+        for _ in 0..5 {
+            let x: Vec<f64> = (0..3).map(|_| rng.uniform_in(0.3, 3.7)).collect();
+            let out = predict_cached(&mut dims, sigma2, &gs_post, &mut cache, &x, false);
+            let direct = variance_direct(&mut dims, sigma2, &x);
+            assert!(
+                (out.var - direct).abs() < 1e-6 * direct.max(1.0),
+                "var {} vs {}",
+                out.var,
+                direct
+            );
+            let m = mean(&dims, &gs_post, &x);
+            assert!((out.mean - m).abs() < 1e-12);
+        }
+        // Every point was fresh, so all went through the single-solve path.
+        assert!(cache.single_solves > 0);
+    }
+
+    #[test]
+    fn cache_hits_on_nearby_points() {
+        let sigma2 = 1.0;
+        let (_xc, _k, y, mut dims) = setup(30, 2, Nu::Half, sigma2, 50);
+        let post = {
+            let gs = GaussSeidel::new(&dims, sigma2);
+            compute_posterior(&dims, sigma2, &y, &gs)
+        };
+        let mut cache = MTildeCache::new(0);
+        let x = vec![1.5, 2.0];
+        // 1st visit: answered by the one-shot single-solve path.
+        let _ = predict_cached(&mut dims, sigma2, &post, &mut cache, &x, true);
+        assert_eq!(cache.single_solves, 1);
+        // 2nd visit (tiny step, same windows): columns get materialized.
+        let x2 = vec![1.5 + 1e-6, 2.0 - 1e-6];
+        let _ = predict_cached(&mut dims, sigma2, &post, &mut cache, &x2, true);
+        let misses_second = cache.misses;
+        assert!(misses_second > 0);
+        // 3rd+ visits: pure cache hits — the paper's O(1) step.
+        let x3 = vec![1.5 + 2e-6, 2.0 - 2e-6];
+        let _ = predict_cached(&mut dims, sigma2, &post, &mut cache, &x3, true);
+        assert_eq!(cache.misses, misses_second, "warm step should not miss");
+        assert!(cache.hits > 0);
+    }
+
+    #[test]
+    fn gradients_match_finite_difference() {
+        let sigma2 = 1.0;
+        let (_xc, _k, y, mut dims) = setup(24, 2, Nu::ThreeHalves, sigma2, 60);
+        let post = {
+            let gs = GaussSeidel::new(&dims, sigma2);
+            compute_posterior(&dims, sigma2, &y, &gs)
+        };
+        let mut cache = MTildeCache::new(0);
+        let x = vec![1.7, 2.3];
+        let out = predict_cached(&mut dims, sigma2, &post, &mut cache, &x, true);
+        let h = 1e-6;
+        for d in 0..2 {
+            let mut xp = x.clone();
+            xp[d] += h;
+            let mut xm = x.clone();
+            xm[d] -= h;
+            let op = predict_cached(&mut dims, sigma2, &post, &mut cache, &xp, false);
+            let om = predict_cached(&mut dims, sigma2, &post, &mut cache, &xm, false);
+            let fd_mean = (op.mean - om.mean) / (2.0 * h);
+            let fd_var = (op.var - om.var) / (2.0 * h);
+            assert!(
+                (fd_mean - out.mean_grad[d]).abs() < 1e-4 * fd_mean.abs().max(1.0),
+                "d={d} mean grad {} vs fd {}",
+                out.mean_grad[d],
+                fd_mean
+            );
+            assert!(
+                (fd_var - out.var_grad[d]).abs() < 1e-4 * fd_var.abs().max(1.0),
+                "d={d} var grad {} vs fd {}",
+                out.var_grad[d],
+                fd_var
+            );
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Generalized Kernel Packets — paper §4.2, Theorems 4–6 and **Algorithm 3**.
+//!
+//! The ω-derivative of a Matérn-ν covariance matrix also factors as
+//!
+//! ```text
+//! P^T [∂_ω K] P = B^{-1} Ψ        (paper eq. 11)
+//! ```
+//!
+//! where `B` is `ν+3/2`-banded and `Ψ` is `ν+1/2`-banded. The coefficients of
+//! the generalized packets are exactly the KP coefficients *of order ν+1 at
+//! the same rate ω* (Theorems 5–6): `∂_ω k` is `e^{-ωr}` times a polynomial
+//! one degree higher, so the moment systems gain one more power `l` but keep
+//! the same exponential rate. Algorithm 3 therefore reuses
+//! [`build_packet_matrix`] with `q+1` and evaluates the Gram of `∂_ω k`.
+
+use crate::kernels::kp::build_packet_matrix;
+use crate::kernels::matern::Matern;
+use crate::linalg::Banded;
+
+/// The generalized-KP factorization `P^T ∂_ω K P = B^{-1} Ψ` of one
+/// dimension (paper **Algorithm 3**). Shares the sorted points of the parent
+/// [`crate::kernels::KpFactorization`].
+#[derive(Clone, Debug)]
+pub struct GkpFactorization {
+    pub kernel: Matern,
+    /// Sorted points (copied from the KP factorization).
+    pub xs: Vec<f64>,
+    /// Generalized-packet coefficients, half-bandwidth `ν+3/2`.
+    pub b: Banded,
+    /// Gram of the ω-derivative `Ψ[i,j] = ψ_i(x_j)`, half-bandwidth `ν+1/2`.
+    pub psi: Banded,
+}
+
+impl GkpFactorization {
+    /// Factorize `∂_ω k(X, X)` for *sorted* `xs` (requires `n ≥ 2ν+4`).
+    pub fn new_sorted(xs: &[f64], kernel: Matern) -> Self {
+        let q = kernel.nu.q();
+        let wb = q + 2; // ν + 3/2
+        let n = xs.len();
+        assert!(n >= 2 * wb + 1, "need n ≥ 2ν+4 = {} points, got {n}", 2 * wb + 1);
+        let b = build_packet_matrix(xs, kernel.omega, q + 1);
+        // Ψ = band_{ν+1/2}(B ∂ωK).
+        let band = q + 1;
+        let mut psi = Banded::zeros(n, band, band);
+        for i in 0..n {
+            let (jlo, jhi) = psi.row_range(i);
+            let (slo, shi) = b.row_range(i);
+            for j in jlo..jhi {
+                let mut acc = 0.0;
+                for s in slo..shi {
+                    acc += b.get(i, s) * kernel.dk_domega(xs[s], xs[j]);
+                }
+                psi.set(i, j, acc);
+            }
+        }
+        GkpFactorization { kernel, xs: xs.to_vec(), b, psi }
+    }
+
+    pub fn n(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// Apply `∂_ω K = B^{-1} Ψ` to a vector in sorted coordinates: `O(n)`.
+    pub fn dk_matvec(&self, v: &[f64]) -> Vec<f64> {
+        let t = self.psi.matvec(v);
+        self.b.solve(&t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::matern::Nu;
+    use crate::util::Rng;
+
+    fn sorted_points(n: usize, lo: f64, hi: f64, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut pts = rng.uniform_vec(n, lo, hi);
+        pts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for i in 1..n {
+            if pts[i] - pts[i - 1] < 1e-9 {
+                pts[i] = pts[i - 1] + 1e-6;
+            }
+        }
+        pts
+    }
+
+    /// `B · ∂ωK` must be `ν+1/2`-banded (Theorem 4 / Figure 2), and `Ψ`
+    /// must equal its band.
+    fn check_gkp(nu: Nu, omega: f64, n: usize, seed: u64) {
+        let xs = sorted_points(n, -1.0, 4.0, seed);
+        let kernel = Matern::new(nu, omega);
+        let g = GkpFactorization::new_sorted(&xs, kernel);
+        let dk = kernel.gram_domega(&xs);
+        let prod = g.b.to_dense().matmul(&dk);
+        let band = nu.q() + 1;
+        let mut max_in: f64 = 0.0;
+        let mut max_out: f64 = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                let v = prod.get(i, j).abs();
+                if j + band >= i && j <= i + band {
+                    max_in = max_in.max(v);
+                } else {
+                    max_out = max_out.max(v);
+                }
+            }
+        }
+        assert!(
+            max_out < 1e-8 * max_in.max(1.0),
+            "{nu:?} ω={omega}: GKP outside-band {max_out:.3e} vs {max_in:.3e}"
+        );
+        for i in 0..n {
+            let (lo, hi) = g.psi.row_range(i);
+            for j in lo..hi {
+                assert!((g.psi.get(i, j) - prod.get(i, j)).abs() < 1e-9 * max_in.max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn gkp_banded_matern12() {
+        check_gkp(Nu::Half, 1.0, 30, 21);
+        check_gkp(Nu::Half, 0.07, 30, 22);
+        check_gkp(Nu::Half, 10.0, 30, 23);
+    }
+
+    #[test]
+    fn gkp_banded_matern32() {
+        check_gkp(Nu::ThreeHalves, 1.0, 32, 24);
+        check_gkp(Nu::ThreeHalves, 0.2, 32, 25);
+    }
+
+    #[test]
+    fn gkp_banded_matern52() {
+        check_gkp(Nu::FiveHalves, 0.9, 36, 26);
+    }
+
+    /// Figure 2's explicit example: Matérn-1/2, ω=1, X = {0.1, …, 1.0}.
+    #[test]
+    fn gkp_figure2_example() {
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64 / 10.0).collect();
+        let kernel = Matern::new(Nu::Half, 1.0);
+        let g = GkpFactorization::new_sorted(&xs, kernel);
+        // ∂ωk(ω|x−x'|) = −|x−x'| e^{−|x−x'|} (paper §4.2 text).
+        let d = kernel.dk_domega(0.3, 0.7);
+        assert!((d - (-0.4 * (-0.4f64).exp())).abs() < 1e-12);
+        // Ψ is (ν+1/2)=1-banded: entries |i−j| ≥ 2 of B·∂ωK vanish.
+        let dk = kernel.gram_domega(&xs);
+        let prod = g.b.to_dense().matmul(&dk);
+        for i in 0..10 {
+            for j in 0..10 {
+                if (i as isize - j as isize).abs() >= 2 {
+                    assert!(prod.get(i, j).abs() < 1e-9, "Ψ[{i},{j}]={}", prod.get(i, j));
+                }
+            }
+        }
+    }
+
+    /// `dk_matvec` reproduces the dense `∂ωK v`.
+    #[test]
+    fn dk_matvec_matches_dense() {
+        for nu in [Nu::Half, Nu::ThreeHalves] {
+            let xs = sorted_points(25, 0.0, 2.0, 31);
+            let kernel = Matern::new(nu, 1.4);
+            let g = GkpFactorization::new_sorted(&xs, kernel);
+            let mut rng = Rng::new(8);
+            let v = rng.normal_vec(25);
+            let got = g.dk_matvec(&v);
+            let want = kernel.gram_domega(&xs).matvec(&v);
+            let scale = want.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+            for i in 0..25 {
+                // packet coefficients carry ~1e-8 relative conditioning error;
+                // n of them accumulate in a matvec.
+                assert!((got[i] - want[i]).abs() < 1e-6 * scale, "{nu:?} i={i}");
+            }
+        }
+    }
+
+    /// B must be invertible for scattered points (Theorem 4).
+    #[test]
+    fn b_invertible() {
+        let xs = sorted_points(40, -3.0, 3.0, 99);
+        let g = GkpFactorization::new_sorted(&xs, Matern::new(Nu::Half, 0.8));
+        let (ld, _) = g.b.lu().logdet();
+        assert!(ld.is_finite());
+        // Solve and verify residual.
+        let v: Vec<f64> = (0..40).map(|i| (i as f64 * 0.3).sin()).collect();
+        let x = g.b.solve(&v);
+        let r = g.b.matvec(&x);
+        for i in 0..40 {
+            assert!((r[i] - v[i]).abs() < 1e-8);
+        }
+    }
+}

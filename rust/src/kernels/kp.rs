@@ -1,0 +1,438 @@
+//! Kernel Packets — paper §4.1, Theorem 3 and **Algorithm 2**.
+//!
+//! For a Matérn-ν kernel with half-integer ν and sorted points
+//! `x_1 < … < x_n`, there exist banded matrices `A` (half-bandwidth
+//! `w = ν+1/2`) and `Φ` (half-bandwidth `w−1`) such that
+//!
+//! ```text
+//! P^T K P = A^{-1} Φ        (paper eq. 8)
+//! ```
+//!
+//! Row `i` of `A` holds the coefficients of the *i-th kernel packet*
+//! `φ_i(·) = Σ_s A[i,s] k(·, x_s)`, which is non-zero only on
+//! `(x_{i−w}, x_{i+w})` (central), `(−∞, x_{i+w})` (left boundary) or
+//! `(x_{i−w}, ∞)` (right boundary); `Φ[i,j] = φ_i(x_j)` is its Gram matrix.
+//!
+//! The coefficients span the 1-dimensional nullspace of tiny "exponential
+//! moment" systems (paper eqs. 9–10). For numerical robustness the window is
+//! centered (`t_i = ω(x_i − c)` — the nullspace is invariant under this
+//! affine change) and the central system is expressed in the equivalent
+//! `cosh/sinh` row basis, which is far better conditioned when `ω·spacing`
+//! is small.
+
+use crate::kernels::matern::Matern;
+use crate::linalg::perm::lower_index;
+use crate::linalg::{Banded, Dense, Permutation};
+
+/// Which kind of packet (paper Theorem 3 cases).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Side {
+    /// `p = 2q+3` points, support `(x_1, x_p)`.
+    Central,
+    /// Boundary packet with support `(−∞, x_p)` (paper's `h = +1`).
+    Left,
+    /// Boundary packet with support `(x_1, ∞)` (paper's `h = −1`).
+    Right,
+}
+
+/// Solve the exponential-moment system for one packet.
+///
+/// `ts` are the *pre-scaled, centered* points `t_i = ω(x_i − c)`, sorted
+/// increasing; `q` is the polynomial order (`ν−1/2` for KPs of Matérn-ν,
+/// `ν+1/2` for generalized KPs). Returns the `‖·‖∞ = 1` nullspace vector.
+///
+/// System shapes (all `(p−1) × p`, nullspace dimension 1):
+/// * Central: `p = 2q+3`, rows `t^l cosh(t)` and `t^l sinh(t)`, `l = 0..=q`
+///   (equivalent to paper eq. 9's `e^{±t}` rows).
+/// * Left (`h=+1`): rows `t^l e^{+t}`, `l = 0..=q`, plus auxiliary rows
+///   `t^r e^{−t}`, `r = 0..=p−q−3` (paper eq. 10) — valid for
+///   `q+2 ≤ p ≤ 2q+2`.
+/// * Right (`h=−1`): mirror of Left.
+pub fn packet_coeffs(ts: &[f64], side: Side, q: usize) -> Vec<f64> {
+    let p = ts.len();
+    let mut rows: Vec<Vec<f64>> = Vec::with_capacity(p - 1);
+    match side {
+        Side::Central => {
+            assert_eq!(p, 2 * q + 3, "central packet needs 2q+3 points");
+            for l in 0..=q {
+                let mut rc = Vec::with_capacity(p);
+                let mut rs = Vec::with_capacity(p);
+                for &t in ts {
+                    let tl = t.powi(l as i32);
+                    rc.push(tl * t.cosh());
+                    rs.push(tl * t.sinh());
+                }
+                rows.push(rc);
+                // The last sinh row is dropped to keep p−1 rows; with
+                // l=0..=q that is 2(q+1) = p−1 rows exactly — keep both.
+                rows.push(rs);
+            }
+            // 2(q+1) = 2q+2 = p−1 rows. ✓
+        }
+        Side::Left | Side::Right => {
+            assert!(
+                (q + 2..=2 * q + 2).contains(&p),
+                "one-sided packet needs q+2..=2q+2 points, got {p} (q={q})"
+            );
+            let h = if side == Side::Left { 1.0 } else { -1.0 };
+            for l in 0..=q {
+                rows.push(ts.iter().map(|&t| t.powi(l as i32) * (h * t).exp()).collect());
+            }
+            if p >= q + 3 {
+                for r in 0..=(p - q - 3) {
+                    rows.push(
+                        ts.iter().map(|&t| t.powi(r as i32) * (-h * t).exp()).collect(),
+                    );
+                }
+            }
+        }
+    }
+    debug_assert_eq!(rows.len(), p - 1);
+    Dense::from_rows(&rows).nullspace_vector()
+}
+
+/// The KP factorization `P^T K P = A^{-1} Φ` of one dimension's covariance
+/// matrix (paper **Algorithm 2**), plus the `O(log n)` sparse-window
+/// evaluations of `φ(x*)` and `∂φ(x*)/∂x*` used throughout §5.2 and §6.
+#[derive(Clone, Debug)]
+pub struct KpFactorization {
+    pub kernel: Matern,
+    /// Sorting permutation of the original points.
+    pub perm: Permutation,
+    /// Sorted points.
+    pub xs: Vec<f64>,
+    /// Packet-coefficient matrix, half-bandwidth `w = ν+1/2`.
+    pub a: Banded,
+    /// Packet Gram matrix `Φ[i,j] = φ_i(x_j)`, half-bandwidth `w−1`.
+    pub phi: Banded,
+}
+
+impl KpFactorization {
+    /// Factorize `k(X, X)` for scattered (unsorted) `points`.
+    ///
+    /// Requires `points.len() ≥ 2ν+2` (paper's `Ensure`) and strictly
+    /// distinct sorted points.
+    pub fn new(points: &[f64], kernel: Matern) -> Self {
+        let q = kernel.nu.q();
+        let w = q + 1; // ν + 1/2
+        let n = points.len();
+        assert!(n >= 2 * w + 1, "need n ≥ 2ν+2 = {} points, got {n}", 2 * w + 1);
+        let perm = Permutation::sorting(points);
+        let mut xs = perm.apply_sort(points);
+        // The factorization needs strictly increasing points. Coincident
+        // coordinates (common in BO once the box boundary is hit) are nudged
+        // apart by a deterministic ~1e-10·span offset — far below any
+        // kernel length scale of interest and equivalent to an infinitesimal
+        // design perturbation.
+        let span = (xs[n - 1] - xs[0]).abs().max(1e-9);
+        let gap = 1e-10 * span;
+        for i in 1..n {
+            if xs[i] <= xs[i - 1] {
+                xs[i] = xs[i - 1] + gap;
+            }
+        }
+        let a = build_packet_matrix(&xs, kernel.omega, q);
+        let phi = build_gram(&a, &xs, &kernel, w - 1);
+        KpFactorization { kernel, perm, xs, a, phi }
+    }
+
+    pub fn n(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// Packet half-bandwidth `w = ν+1/2`.
+    pub fn w(&self) -> usize {
+        self.kernel.nu.q() + 1
+    }
+
+    /// Sparse evaluation of `φ(x*) = A k(X, x*)`: returns `(start, vals)`
+    /// where `vals[r] = φ_{start+r}(x*)` and all other entries are zero.
+    /// `O(log n)` search + `O(w²)` arithmetic; at most `2w = 2ν+1` entries.
+    pub fn phi_window(&self, x: f64) -> (usize, Vec<f64>) {
+        self.window_impl(x, |s, xstar| self.kernel.k(s, xstar))
+    }
+
+    /// Sparse evaluation of `∂φ(x*)/∂x*` (same support as `φ`).
+    pub fn dphi_window(&self, x: f64) -> (usize, Vec<f64>) {
+        self.window_impl(x, |s, xstar| self.kernel.dk_dx(s, xstar))
+    }
+
+    fn window_impl(&self, x: f64, kfun: impl Fn(f64, f64) -> f64) -> (usize, Vec<f64>) {
+        let n = self.n();
+        let w = self.w();
+        // j = index with xs[j] <= x < xs[j+1]; -1 when x < xs[0].
+        let j = lower_index(&self.xs, x).map(|v| v as isize).unwrap_or(-1);
+        let start = (j + 1 - w as isize).max(0) as usize;
+        let end = ((j + w as isize) as usize).min(n - 1); // inclusive
+        let mut vals = Vec::with_capacity(end + 1 - start);
+        for i in start..=end {
+            let (lo, hi) = self.a.row_range(i);
+            let mut acc = 0.0;
+            for s in lo..hi {
+                acc += self.a.get(i, s) * kfun(self.xs[s], x);
+            }
+            vals.push(acc);
+        }
+        (start, vals)
+    }
+
+    /// Dense `φ(x*)` (tests only).
+    pub fn phi_full(&self, x: f64) -> Vec<f64> {
+        let kv: Vec<f64> = self.xs.iter().map(|&s| self.kernel.k(s, x)).collect();
+        self.a.matvec(&kv)
+    }
+
+    /// `log|det Φ|` and `log|det A|` — the banded log-det terms of eq. (14).
+    pub fn logdets(&self) -> (f64, f64) {
+        (self.phi.lu().logdet().0, self.a.lu().logdet().0)
+    }
+}
+
+/// Build the packet-coefficient matrix `A` (rows = packets) for sorted `xs`
+/// with polynomial order `q` (half-bandwidth `w = q+1`). Shared by
+/// Algorithm 2 (`q = ν−1/2`) and Algorithm 3 (`q = ν+1/2`, same rate ω).
+pub fn build_packet_matrix(xs: &[f64], omega: f64, q: usize) -> Banded {
+    let n = xs.len();
+    let w = q + 1;
+    assert!(n >= 2 * w + 1);
+    let mut a = Banded::zeros(n, w, w);
+    let scaled = |lo: usize, hi: usize| -> Vec<f64> {
+        // t_i = ω (x_i − c), centered at the window midpoint.
+        let c = 0.5 * (xs[lo] + xs[hi]);
+        xs[lo..=hi].iter().map(|&x| omega * (x - c)).collect()
+    };
+    // Left boundary packets: rows 0..w use points 0..=i+w.
+    for i in 0..w {
+        let hi = i + w;
+        let coef = packet_coeffs(&scaled(0, hi), Side::Left, q);
+        for (s, &c) in coef.iter().enumerate() {
+            a.set(i, s, c);
+        }
+    }
+    // Central packets.
+    for i in w..n - w {
+        let (lo, hi) = (i - w, i + w);
+        let coef = packet_coeffs(&scaled(lo, hi), Side::Central, q);
+        for (s, &c) in coef.iter().enumerate() {
+            a.set(i, lo + s, c);
+        }
+    }
+    // Right boundary packets: rows n−w..n use points i−w..n−1.
+    for i in n - w..n {
+        let lo = i - w;
+        let coef = packet_coeffs(&scaled(lo, n - 1), Side::Right, q);
+        for (s, &c) in coef.iter().enumerate() {
+            a.set(i, lo + s, c);
+        }
+    }
+    a
+}
+
+/// Gram matrix `Φ[i,j] = Σ_s A[i,s] k(x_s, x_j)` restricted to the
+/// `band`-band (entries outside are exact zeros by the packet property).
+fn build_gram(a: &Banded, xs: &[f64], kernel: &Matern, band: usize) -> Banded {
+    let n = xs.len();
+    let mut phi = Banded::zeros(n, band, band);
+    for i in 0..n {
+        let (jlo, jhi) = phi.row_range(i);
+        let (slo, shi) = a.row_range(i);
+        for j in jlo..jhi {
+            let mut acc = 0.0;
+            for s in slo..shi {
+                acc += a.get(i, s) * kernel.k(xs[s], xs[j]);
+            }
+            phi.set(i, j, acc);
+        }
+    }
+    phi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::matern::Nu;
+    use crate::util::Rng;
+
+    fn random_points(n: usize, lo: f64, hi: f64, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut pts = rng.uniform_vec(n, lo, hi);
+        // ensure distinct
+        pts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for i in 1..n {
+            if pts[i] - pts[i - 1] < 1e-9 {
+                pts[i] = pts[i - 1] + 1e-6;
+            }
+        }
+        // shuffle back to scattered order
+        for i in (1..n).rev() {
+            let j = rng.below(i + 1);
+            pts.swap(i, j);
+        }
+        pts
+    }
+
+    /// `A · K_sorted` must be banded with half-bandwidth `w−1` — the core
+    /// compact-support claim of Theorem 3 / Figure 1.
+    fn check_banded(nu: Nu, omega: f64, n: usize, seed: u64) {
+        let pts = random_points(n, -2.0, 3.0, seed);
+        let kernel = Matern::new(nu, omega);
+        let f = KpFactorization::new(&pts, kernel);
+        let kd = kernel.gram(&f.xs);
+        let ad = f.a.to_dense();
+        let prod = ad.matmul(&kd);
+        let w = f.w();
+        let mut max_out: f64 = 0.0;
+        let mut max_in: f64 = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                let v = prod.get(i, j).abs();
+                if j + w > i && j < i + w {
+                    max_in = max_in.max(v);
+                } else {
+                    max_out = max_out.max(v);
+                }
+            }
+        }
+        assert!(
+            max_out < 1e-8 * max_in.max(1.0),
+            "{nu:?} ω={omega}: outside-band {max_out:.3e} vs inside {max_in:.3e}"
+        );
+        // And Φ must equal the band of A·K.
+        for i in 0..n {
+            let (lo, hi) = f.phi.row_range(i);
+            for j in lo..hi {
+                assert!(
+                    (f.phi.get(i, j) - prod.get(i, j)).abs() < 1e-9 * max_in.max(1.0),
+                    "Φ[{i},{j}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kp_compact_support_matern12() {
+        check_banded(Nu::Half, 1.0, 30, 1);
+        check_banded(Nu::Half, 0.05, 30, 2); // small ω·spacing stress
+        check_banded(Nu::Half, 20.0, 30, 3);
+    }
+
+    #[test]
+    fn kp_compact_support_matern32() {
+        check_banded(Nu::ThreeHalves, 1.0, 30, 4);
+        check_banded(Nu::ThreeHalves, 0.1, 30, 5);
+        check_banded(Nu::ThreeHalves, 8.0, 30, 6);
+    }
+
+    #[test]
+    fn kp_compact_support_matern52() {
+        check_banded(Nu::FiveHalves, 1.0, 30, 7);
+        check_banded(Nu::FiveHalves, 0.3, 30, 8);
+    }
+
+    /// Full factorization identity: `A (P^T K P) = Φ`, i.e.
+    /// `P^T K P = A^{-1} Φ` (paper eq. 8).
+    #[test]
+    fn factorization_identity() {
+        for nu in [Nu::Half, Nu::ThreeHalves, Nu::FiveHalves] {
+            let pts = random_points(25, 0.0, 10.0, 42);
+            let kernel = Matern::new(nu, 0.7);
+            let f = KpFactorization::new(&pts, kernel);
+            // Reconstruct K_sorted = A^{-1} Φ and compare to the true gram.
+            let kd = kernel.gram(&f.xs);
+            let alu = f.a.lu();
+            for j in 0..25 {
+                let col: Vec<f64> = (0..25).map(|i| f.phi.get(i, j)).collect();
+                let kcol = alu.solve(&col);
+                for i in 0..25 {
+                    assert!(
+                        (kcol[i] - kd.get(i, j)).abs() < 1e-8,
+                        "{nu:?} K[{i},{j}]: {} vs {}",
+                        kcol[i],
+                        kd.get(i, j)
+                    );
+                }
+            }
+        }
+    }
+
+    /// `φ_i` evaluated at data points outside its support must vanish
+    /// (Figure 1's right panel).
+    #[test]
+    fn packet_vanishes_outside_support() {
+        let pts: Vec<f64> = (1..=10).map(|i| i as f64 / 10.0).collect();
+        let f = KpFactorization::new(&pts, Matern::new(Nu::ThreeHalves, 1.0));
+        let w = f.w(); // 2
+        for i in w..10 - w {
+            // central packet i: support (xs[i-2], xs[i+2])
+            for (j, &xj) in f.xs.iter().enumerate() {
+                let val: f64 = {
+                    let (lo, hi) = f.a.row_range(i);
+                    (lo..hi).map(|s| f.a.get(i, s) * f.kernel.k(f.xs[s], xj)).sum()
+                };
+                if j + w <= i || j >= i + w {
+                    assert!(val.abs() < 1e-10, "φ_{i}(x_{j}) = {val}");
+                }
+            }
+        }
+    }
+
+    /// Sparse window evaluation matches the dense `A k(X, x*)`.
+    #[test]
+    fn phi_window_matches_dense() {
+        for nu in [Nu::Half, Nu::ThreeHalves, Nu::FiveHalves] {
+            let pts = random_points(40, -1.0, 1.0, 9);
+            let f = KpFactorization::new(&pts, Matern::new(nu, 2.0));
+            let mut rng = Rng::new(100);
+            for _ in 0..30 {
+                let x = rng.uniform_in(-1.3, 1.3);
+                let dense = f.phi_full(x);
+                let (start, vals) = f.phi_window(x);
+                assert!(vals.len() <= 2 * f.w());
+                for (i, &d) in dense.iter().enumerate() {
+                    let wv = if i >= start && i < start + vals.len() {
+                        vals[i - start]
+                    } else {
+                        0.0
+                    };
+                    assert!(
+                        (d - wv).abs() < 1e-10,
+                        "{nu:?} x={x}: φ_{i} dense={d} window={wv}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Derivative windows match finite differences of the φ windows.
+    #[test]
+    fn dphi_window_matches_fd() {
+        let pts = random_points(30, 0.0, 5.0, 13);
+        let f = KpFactorization::new(&pts, Matern::new(Nu::ThreeHalves, 1.1));
+        let h = 1e-6;
+        let mut rng = Rng::new(5);
+        for _ in 0..20 {
+            // avoid evaluating across a data point (φ has kinks there)
+            let x = rng.uniform_in(0.1, 4.9);
+            if f.xs.iter().any(|&p| (p - x).abs() < 1e-3) {
+                continue;
+            }
+            let dense_p = f.phi_full(x + h);
+            let dense_m = f.phi_full(x - h);
+            let (start, dvals) = f.dphi_window(x);
+            for (r, &dv) in dvals.iter().enumerate() {
+                let fd = (dense_p[start + r] - dense_m[start + r]) / (2.0 * h);
+                assert!((fd - dv).abs() < 1e-5, "i={} fd={fd} dv={dv}", start + r);
+            }
+        }
+    }
+
+    /// The permutation round-trips scattered order.
+    #[test]
+    fn permutation_consistency() {
+        let pts = random_points(20, 0.0, 1.0, 77);
+        let f = KpFactorization::new(&pts, Matern::new(Nu::Half, 3.0));
+        for (orig, &p) in pts.iter().enumerate() {
+            assert_eq!(f.xs[f.perm.sorted_pos(orig)], p);
+        }
+    }
+}

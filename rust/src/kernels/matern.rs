@@ -1,0 +1,255 @@
+//! One-dimensional Matérn kernels with half-integer smoothness, in the
+//! paper's eq. (37) parameterization:
+//!
+//! ```text
+//! k(x, x' | ω) = σ² · exp(-ω r) · P_q(ω r),   r = |x - x'|,  q = ν - 1/2
+//! P_0(t) = 1                      (ν = 1/2, exponential / OU kernel)
+//! P_1(t) = 1 + t                  (ν = 3/2)
+//! P_2(t) = 1 + t + t²/3           (ν = 5/2)
+//! ```
+//!
+//! `ω` is the *rate* hyperparameter (the paper's scale; the experiments use
+//! `k = exp(-θ|x-x'|)`). Closed forms for `∂k/∂ω` and `∂k/∂x` are provided —
+//! both are needed for eq. (15) (likelihood gradient via generalized KPs) and
+//! eq. (29)–(30) (acquisition gradients).
+
+/// Half-integer Matérn smoothness ν ∈ {1/2, 3/2, 5/2}.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Nu {
+    Half,
+    ThreeHalves,
+    FiveHalves,
+}
+
+impl Nu {
+    /// `2ν` as an integer.
+    pub fn two_nu(self) -> usize {
+        match self {
+            Nu::Half => 1,
+            Nu::ThreeHalves => 3,
+            Nu::FiveHalves => 5,
+        }
+    }
+
+    /// Polynomial order `q = ν − 1/2`.
+    pub fn q(self) -> usize {
+        match self {
+            Nu::Half => 0,
+            Nu::ThreeHalves => 1,
+            Nu::FiveHalves => 2,
+        }
+    }
+
+    /// Half-bandwidth of the KP coefficient matrix `A`: `ν + 1/2`.
+    pub fn band_a(self) -> usize {
+        self.q() + 1
+    }
+
+    /// Half-bandwidth of the Gram matrix `Φ`: `ν − 1/2`.
+    pub fn band_phi(self) -> usize {
+        self.q()
+    }
+
+    /// Number of points in a central KP: `2ν + 2`.
+    pub fn kp_points(self) -> usize {
+        self.two_nu() + 2
+    }
+
+    /// Window width of nonzero `φ(x*)` entries: `2ν + 1`.
+    pub fn window(self) -> usize {
+        self.two_nu() + 1
+    }
+
+    pub fn from_two_nu(two_nu: usize) -> Option<Nu> {
+        match two_nu {
+            1 => Some(Nu::Half),
+            3 => Some(Nu::ThreeHalves),
+            5 => Some(Nu::FiveHalves),
+            _ => None,
+        }
+    }
+}
+
+/// A one-dimensional Matérn kernel `σ² e^{-ωr} P_q(ωr)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Matern {
+    pub nu: Nu,
+    /// Rate (inverse length-scale) ω > 0.
+    pub omega: f64,
+    /// Signal variance σ².
+    pub sigma2: f64,
+}
+
+impl Matern {
+    pub fn new(nu: Nu, omega: f64) -> Self {
+        Matern { nu, omega, sigma2: 1.0 }
+    }
+
+    pub fn with_sigma2(nu: Nu, omega: f64, sigma2: f64) -> Self {
+        Matern { nu, omega, sigma2 }
+    }
+
+    /// Kernel value `k(x, y)`.
+    #[inline]
+    pub fn k(&self, x: f64, y: f64) -> f64 {
+        let t = self.omega * (x - y).abs();
+        let p = match self.nu {
+            Nu::Half => 1.0,
+            Nu::ThreeHalves => 1.0 + t,
+            Nu::FiveHalves => 1.0 + t + t * t / 3.0,
+        };
+        self.sigma2 * (-t).exp() * p
+    }
+
+    /// `∂k/∂ω` at `(x, y)`:  `σ² r e^{-t} (P'_q - P_q)(t)`, `t = ωr`.
+    #[inline]
+    pub fn dk_domega(&self, x: f64, y: f64) -> f64 {
+        let r = (x - y).abs();
+        let t = self.omega * r;
+        let f = match self.nu {
+            // P' − P:  ν=1/2: −1 ; ν=3/2: −t ; ν=5/2: −t(1+t)/3
+            Nu::Half => -1.0,
+            Nu::ThreeHalves => -t,
+            Nu::FiveHalves => -t * (1.0 + t) / 3.0,
+        };
+        self.sigma2 * r * (-t).exp() * f
+    }
+
+    /// `∂k(y, x)/∂x` — derivative in the *second* argument (the prediction
+    /// point). For ν = 1/2 this is the a.e. derivative (kink at `x = y`).
+    #[inline]
+    pub fn dk_dx(&self, y: f64, x: f64) -> f64 {
+        let d = x - y;
+        let t = self.omega * d.abs();
+        let e = (-t).exp();
+        self.sigma2
+            * match self.nu {
+                Nu::Half => -self.omega * d.signum() * e,
+                Nu::ThreeHalves => -self.omega * self.omega * d * e,
+                Nu::FiveHalves => -self.omega * self.omega * d * e * (1.0 + t) / 3.0,
+            }
+    }
+
+    /// `∂²k(y, x)/∂x∂ω` — needed for the gradient of `∂φ/∂x` windows when
+    /// hyperparameters move; exposed for completeness of the sparse calculus.
+    #[inline]
+    pub fn d2k_dx_domega(&self, y: f64, x: f64) -> f64 {
+        let d = x - y;
+        let r = d.abs();
+        let t = self.omega * r;
+        let e = (-t).exp();
+        self.sigma2
+            * match self.nu {
+                // d/dω [−ω sgn e^{-ωr}] = sgn e^{-t} (ωr − 1)
+                Nu::Half => d.signum() * e * (t - 1.0),
+                // d/dω [−ω² d e^{-ωr}] = d e^{-t} ω (ωr − 2)
+                Nu::ThreeHalves => d * e * self.omega * (t - 2.0),
+                // d/dω [−ω² d e^{-t}(1+t)/3]
+                //  = −d/3 · e^{-t} (2ω(1+t) + ω²r − ωr·ω(1+t))... expanded below
+                Nu::FiveHalves => {
+                    -d / 3.0 * e * (2.0 * self.omega * (1.0 + t) + self.omega * self.omega * r
+                        - self.omega * r * self.omega * (1.0 + t))
+                }
+            }
+    }
+
+    /// Covariance matrix `k(X, X)` (dense; tests/baselines only).
+    pub fn gram(&self, xs: &[f64]) -> crate::linalg::Dense {
+        let n = xs.len();
+        let mut g = crate::linalg::Dense::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                g.set(i, j, self.k(xs[i], xs[j]));
+            }
+        }
+        g
+    }
+
+    /// Dense `∂K/∂ω` (tests only).
+    pub fn gram_domega(&self, xs: &[f64]) -> crate::linalg::Dense {
+        let n = xs.len();
+        let mut g = crate::linalg::Dense::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                g.set(i, j, self.dk_domega(xs[i], xs[j]));
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_domega_fd(nu: Nu) {
+        let omega = 0.8;
+        let h = 1e-6;
+        for &(x, y) in &[(0.3, 1.7), (2.0, 2.0), (-1.0, 4.0)] {
+            let kp = Matern::new(nu, omega + h).k(x, y);
+            let km = Matern::new(nu, omega - h).k(x, y);
+            let fd = (kp - km) / (2.0 * h);
+            let an = Matern::new(nu, omega).dk_domega(x, y);
+            assert!((fd - an).abs() < 1e-6, "{nu:?} ({x},{y}): fd={fd} an={an}");
+        }
+    }
+
+    #[test]
+    fn domega_matches_finite_difference() {
+        check_domega_fd(Nu::Half);
+        check_domega_fd(Nu::ThreeHalves);
+        check_domega_fd(Nu::FiveHalves);
+    }
+
+    fn check_dx_fd(nu: Nu) {
+        let k = Matern::new(nu, 1.3);
+        let h = 1e-6;
+        for &(y, x) in &[(0.3, 1.7), (2.0, -0.5), (-1.0, 4.0)] {
+            let fd = (k.k(y, x + h) - k.k(y, x - h)) / (2.0 * h);
+            let an = k.dk_dx(y, x);
+            assert!((fd - an).abs() < 1e-5, "{nu:?} ({y},{x}): fd={fd} an={an}");
+        }
+    }
+
+    #[test]
+    fn dx_matches_finite_difference() {
+        check_dx_fd(Nu::Half);
+        check_dx_fd(Nu::ThreeHalves);
+        check_dx_fd(Nu::FiveHalves);
+    }
+
+    #[test]
+    fn d2_dx_domega_matches_fd() {
+        for nu in [Nu::Half, Nu::ThreeHalves, Nu::FiveHalves] {
+            let omega = 0.9;
+            let h = 1e-6;
+            for &(y, x) in &[(0.3, 1.7), (-2.0, 0.4)] {
+                let fp = Matern::new(nu, omega + h).dk_dx(y, x);
+                let fm = Matern::new(nu, omega - h).dk_dx(y, x);
+                let fd = (fp - fm) / (2.0 * h);
+                let an = Matern::new(nu, omega).d2k_dx_domega(y, x);
+                assert!((fd - an).abs() < 1e-5, "{nu:?}: fd={fd} an={an}");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_basic_properties() {
+        for nu in [Nu::Half, Nu::ThreeHalves, Nu::FiveHalves] {
+            let k = Matern::new(nu, 2.0);
+            assert!((k.k(1.0, 1.0) - 1.0).abs() < 1e-15); // k(x,x) = σ²
+            assert_eq!(k.k(0.0, 3.0), k.k(3.0, 0.0)); // symmetry
+            assert!(k.k(0.0, 1.0) > k.k(0.0, 2.0)); // decay
+            assert!(k.k(0.0, 100.0) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn gram_is_spd() {
+        let xs = [0.1, 0.5, 0.9, 1.4, 2.0];
+        for nu in [Nu::Half, Nu::ThreeHalves, Nu::FiveHalves] {
+            let g = Matern::new(nu, 1.0).gram(&xs);
+            assert!(g.cholesky().is_some(), "{nu:?} gram not SPD");
+        }
+    }
+}

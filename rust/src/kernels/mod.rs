@@ -1,0 +1,10 @@
+//! Matérn kernels (half-integer smoothness) and their sparse Kernel-Packet
+//! factorizations — paper §4, Algorithms 2 and 3.
+
+pub mod gkp;
+pub mod kp;
+pub mod matern;
+
+pub use gkp::GkpFactorization;
+pub use kp::KpFactorization;
+pub use matern::Matern;

@@ -1,0 +1,470 @@
+//! General banded matrices in LAPACK-like band storage, with matrix–vector
+//! products and an LU factorization with partial pivoting (the `O(b²n)`
+//! "banded matrix solver"/"LU decomposition" primitive the paper leans on
+//! throughout Table 1).
+
+/// An `n × n` banded matrix with `kl` sub-diagonals and `ku` super-diagonals.
+///
+/// Entry `(i, j)` is stored iff `j - i ∈ [-kl, ku]`; reads outside the band
+/// return `0.0`, writes outside the band panic. Storage is row-major band
+/// layout: row `i` occupies `data[i*(kl+ku+1) ..]` with column `j` at offset
+/// `j - i + kl`.
+#[derive(Clone, Debug)]
+pub struct Banded {
+    n: usize,
+    kl: usize,
+    ku: usize,
+    data: Vec<f64>,
+}
+
+impl Banded {
+    /// Zero matrix of size `n` with bandwidths `kl` (lower), `ku` (upper).
+    pub fn zeros(n: usize, kl: usize, ku: usize) -> Self {
+        Banded { n, kl, ku, data: vec![0.0; n * (kl + ku + 1)] }
+    }
+
+    /// Identity matrix stored with the given bandwidths.
+    pub fn eye(n: usize, kl: usize, ku: usize) -> Self {
+        let mut m = Self::zeros(n, kl, ku);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn kl(&self) -> usize {
+        self.kl
+    }
+
+    pub fn ku(&self) -> usize {
+        self.ku
+    }
+
+    #[inline]
+    fn idx(&self, i: usize, j: usize) -> usize {
+        i * (self.kl + self.ku + 1) + (j + self.kl - i)
+    }
+
+    /// `true` iff `(i, j)` lies inside the stored band.
+    #[inline]
+    pub fn in_band(&self, i: usize, j: usize) -> bool {
+        j + self.kl >= i && j <= i + self.ku && i < self.n && j < self.n
+    }
+
+    /// Read entry `(i, j)`; zero outside the band.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        if self.in_band(i, j) {
+            self.data[self.idx(i, j)]
+        } else {
+            0.0
+        }
+    }
+
+    /// Write entry `(i, j)`. Panics outside the band.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        assert!(
+            self.in_band(i, j),
+            "set({i},{j}) outside band kl={} ku={} n={}",
+            self.kl,
+            self.ku,
+            self.n
+        );
+        let idx = self.idx(i, j);
+        self.data[idx] = v;
+    }
+
+    /// Add `v` to entry `(i, j)`. Panics outside the band.
+    #[inline]
+    pub fn add(&mut self, i: usize, j: usize, v: f64) {
+        assert!(self.in_band(i, j), "add({i},{j}) outside band");
+        let idx = self.idx(i, j);
+        self.data[idx] += v;
+    }
+
+    /// Column range `[lo, hi)` of stored entries in row `i`.
+    #[inline]
+    pub fn row_range(&self, i: usize) -> (usize, usize) {
+        (i.saturating_sub(self.kl), (i + self.ku + 1).min(self.n))
+    }
+
+    /// `y = self * x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let mut y = vec![0.0; self.n];
+        let w = self.kl + self.ku + 1;
+        for i in 0..self.n {
+            let (lo, hi) = self.row_range(i);
+            let row = &self.data[i * w..(i + 1) * w];
+            let mut acc = 0.0;
+            for j in lo..hi {
+                acc += row[j + self.kl - i] * x[j];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// `y = self^T * x`.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let mut y = vec![0.0; self.n];
+        let w = self.kl + self.ku + 1;
+        for i in 0..self.n {
+            let (lo, hi) = self.row_range(i);
+            let row = &self.data[i * w..(i + 1) * w];
+            let xi = x[i];
+            if xi != 0.0 {
+                for j in lo..hi {
+                    y[j] += row[j + self.kl - i] * xi;
+                }
+            }
+        }
+        y
+    }
+
+    /// Transposed copy (bandwidths swap).
+    pub fn transpose(&self) -> Banded {
+        let mut t = Banded::zeros(self.n, self.ku, self.kl);
+        for i in 0..self.n {
+            let (lo, hi) = self.row_range(i);
+            for j in lo..hi {
+                t.set(j, i, self.get(i, j));
+            }
+        }
+        t
+    }
+
+    /// Banded × banded product. The result has bandwidths
+    /// `(kl1 + kl2, ku1 + ku2)` (clipped to the matrix size).
+    pub fn matmul(&self, other: &Banded) -> Banded {
+        assert_eq!(self.n, other.n);
+        let kl = (self.kl + other.kl).min(self.n - 1);
+        let ku = (self.ku + other.ku).min(self.n - 1);
+        let mut out = Banded::zeros(self.n, kl, ku);
+        for i in 0..self.n {
+            let (lo, hi) = self.row_range(i);
+            for k in lo..hi {
+                let a = self.get(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let (lo2, hi2) = other.row_range(k);
+                for j in lo2..hi2 {
+                    let v = a * other.get(k, j);
+                    if out.in_band(i, j) {
+                        out.add(i, j, v);
+                    } else if v.abs() > 1e-12 {
+                        panic!("matmul fill outside declared band at ({i},{j})");
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// `self + alpha * other`, widening the band as needed.
+    pub fn add_scaled(&self, other: &Banded, alpha: f64) -> Banded {
+        assert_eq!(self.n, other.n);
+        let kl = self.kl.max(other.kl);
+        let ku = self.ku.max(other.ku);
+        let mut out = Banded::zeros(self.n, kl, ku);
+        for i in 0..self.n {
+            let (lo, hi) = out.row_range(i);
+            for j in lo..hi {
+                out.set(i, j, self.get(i, j) + alpha * other.get(i, j));
+            }
+        }
+        out
+    }
+
+    /// Scale all entries in place.
+    pub fn scale(&mut self, alpha: f64) {
+        for v in &mut self.data {
+            *v *= alpha;
+        }
+    }
+
+    /// Densify (for tests / tiny problems).
+    pub fn to_dense(&self) -> crate::linalg::Dense {
+        let mut d = crate::linalg::Dense::zeros(self.n, self.n);
+        for i in 0..self.n {
+            let (lo, hi) = self.row_range(i);
+            for j in lo..hi {
+                d.set(i, j, self.get(i, j));
+            }
+        }
+        d
+    }
+
+    /// LU-factorize with partial pivoting (row swaps). `O((kl+ku)² n)`.
+    pub fn lu(&self) -> BandedLU {
+        BandedLU::factor(self)
+    }
+
+    /// Convenience: solve `self * x = b` via a fresh LU factorization.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        self.lu().solve(b)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Maximum absolute entry strictly outside the `(kl', ku')` band — used
+    /// by tests asserting that a product really is banded.
+    pub fn max_abs_outside(&self, kl2: usize, ku2: usize) -> f64 {
+        let mut m: f64 = 0.0;
+        for i in 0..self.n {
+            let (lo, hi) = self.row_range(i);
+            for j in lo..hi {
+                let inside = j + kl2 >= i && j <= i + ku2;
+                if !inside {
+                    m = m.max(self.get(i, j).abs());
+                }
+            }
+        }
+        m
+    }
+}
+
+/// LU factorization (partial pivoting) of a [`Banded`] matrix.
+///
+/// Standard LAPACK `gbtrf`-style scheme: with row swaps the `U` factor's
+/// upper bandwidth grows to `kl + ku`; `L`'s multipliers stay within `kl`.
+pub struct BandedLU {
+    n: usize,
+    kl: usize,
+    /// Upper bandwidth of U after fill-in (`kl + ku`).
+    kuf: usize,
+    /// `U` (including diagonal) in band storage with bandwidths `(0, kuf)`
+    /// plus the `L` multipliers in the sub-diagonal part `(kl, 0)`.
+    fac: Banded,
+    /// `piv[k]` = row swapped with row `k` at step `k`.
+    piv: Vec<usize>,
+    sign: f64,
+}
+
+impl BandedLU {
+    fn factor(a: &Banded) -> Self {
+        let n = a.n;
+        let kl = a.kl;
+        let kuf = (a.kl + a.ku).min(n.saturating_sub(1));
+        // Working copy with widened upper band for fill-in.
+        let mut f = Banded::zeros(n, kl, kuf);
+        for i in 0..n {
+            let (lo, hi) = a.row_range(i);
+            for j in lo..hi {
+                f.set(i, j, a.get(i, j));
+            }
+        }
+        let mut piv = vec![0usize; n];
+        let mut sign = 1.0;
+        for k in 0..n {
+            // Pivot search in column k, rows k..=k+kl.
+            let last = (k + kl).min(n - 1);
+            let mut p = k;
+            let mut best = f.get(k, k).abs();
+            for r in (k + 1)..=last {
+                let v = f.get(r, k).abs();
+                if v > best {
+                    best = v;
+                    p = r;
+                }
+            }
+            piv[k] = p;
+            if p != k {
+                sign = -sign;
+                // Swap rows k and p within their shared band columns.
+                let hi = (k + kuf + 1).min(n);
+                for j in k..hi {
+                    let a = f.get(k, j);
+                    let b = if f.in_band(p, j) { f.get(p, j) } else { 0.0 };
+                    f.set(k, j, b);
+                    if f.in_band(p, j) {
+                        f.set(p, j, a);
+                    } else {
+                        assert!(a == 0.0, "pivot swap lost fill at ({p},{j})");
+                    }
+                }
+            }
+            let pivot = f.get(k, k);
+            if pivot == 0.0 {
+                continue; // singular; solve will produce inf/nan, logdet -inf
+            }
+            for r in (k + 1)..=last {
+                let m = f.get(r, k) / pivot;
+                f.set(r, k, m); // store multiplier
+                if m != 0.0 {
+                    let hi = (k + kuf + 1).min(n);
+                    for j in (k + 1)..hi {
+                        let v = f.get(r, j) - m * f.get(k, j);
+                        f.set(r, j, v);
+                    }
+                }
+            }
+        }
+        BandedLU { n, kl, kuf, fac: f, piv, sign }
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        self.solve_in_place(&mut x);
+        x
+    }
+
+    /// Solve `A x = b` in place. The inner loops index the band storage
+    /// directly (no per-element bounds logic) — this is the `O(n)` primitive
+    /// under every algorithm in the crate, see EXPERIMENTS.md §Perf.
+    pub fn solve_in_place(&self, x: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        let n = self.n;
+        let w = self.kl + self.kuf + 1;
+        let data = &self.fac.data;
+        let kl = self.kl;
+        // Forward: apply P and L^{-1}. fac[r, k] = data[r*w + k + kl - r].
+        for k in 0..n {
+            let p = self.piv[k];
+            if p != k {
+                x.swap(k, p);
+            }
+            let last = (k + kl).min(n - 1);
+            let xk = x[k];
+            if xk != 0.0 {
+                for r in (k + 1)..=last {
+                    x[r] -= data[r * w + k + kl - r] * xk;
+                }
+            }
+        }
+        // Backward: U x = y. Row k of U is contiguous: fac[k, j] =
+        // data[k*w + kl + (j-k)] for j = k..k+kuf.
+        for k in (0..n).rev() {
+            let hi = (k + self.kuf + 1).min(n);
+            let row = &data[k * w + kl..k * w + kl + (hi - k)];
+            let mut acc = x[k];
+            for (off, &f) in row.iter().enumerate().skip(1) {
+                acc -= f * x[k + off];
+            }
+            x[k] = acc / row[0];
+        }
+    }
+
+    /// `log |det A|` and the determinant sign.
+    pub fn logdet(&self) -> (f64, f64) {
+        let mut ld = 0.0;
+        let mut sign = self.sign;
+        for k in 0..self.n {
+            let d = self.fac.get(k, k);
+            ld += d.abs().ln();
+            if d < 0.0 {
+                sign = -sign;
+            }
+        }
+        (ld, sign)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tridiag(n: usize, lo: f64, di: f64, up: f64) -> Banded {
+        let mut m = Banded::zeros(n, 1, 1);
+        for i in 0..n {
+            if i > 0 {
+                m.set(i, i - 1, lo);
+            }
+            m.set(i, i, di);
+            if i + 1 < n {
+                m.set(i, i + 1, up);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let m = tridiag(6, -1.0, 2.5, -0.5);
+        let x: Vec<f64> = (0..6).map(|i| (i as f64).sin() + 1.0).collect();
+        let y = m.matvec(&x);
+        let yd = m.to_dense().matvec(&x);
+        for i in 0..6 {
+            assert!((y[i] - yd[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matvec_t_matches_transpose() {
+        let m = tridiag(7, 0.3, 1.7, -2.0);
+        let x: Vec<f64> = (0..7).map(|i| (i as f64 * 0.7).cos()).collect();
+        let a = m.matvec_t(&x);
+        let b = m.transpose().matvec(&x);
+        for i in 0..7 {
+            assert!((a[i] - b[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn lu_solve_roundtrip() {
+        let m = tridiag(40, -1.0, 2.0, -1.0); // SPD (discrete Laplacian)
+        let x_true: Vec<f64> = (0..40).map(|i| ((i * 7 % 11) as f64) - 5.0).collect();
+        let b = m.matvec(&x_true);
+        let x = m.solve(&b);
+        for i in 0..40 {
+            assert!((x[i] - x_true[i]).abs() < 1e-9, "i={i}: {} vs {}", x[i], x_true[i]);
+        }
+    }
+
+    #[test]
+    fn lu_solve_needs_pivoting() {
+        // Small diagonal entry forces a pivot swap.
+        let mut m = Banded::zeros(4, 1, 1);
+        m.set(0, 0, 1e-14);
+        m.set(0, 1, 1.0);
+        m.set(1, 0, 1.0);
+        m.set(1, 1, 1.0);
+        m.set(1, 2, 2.0);
+        m.set(2, 1, -1.0);
+        m.set(2, 2, 3.0);
+        m.set(2, 3, 0.5);
+        m.set(3, 2, 1.0);
+        m.set(3, 3, -2.0);
+        let x_true = vec![1.0, -2.0, 3.0, -4.0];
+        let b = m.matvec(&x_true);
+        let x = m.solve(&b);
+        for i in 0..4 {
+            assert!((x[i] - x_true[i]).abs() < 1e-8, "{:?}", x);
+        }
+    }
+
+    #[test]
+    fn logdet_matches_dense() {
+        let m = tridiag(12, -0.8, 2.2, -0.8);
+        let (ld, sign) = m.lu().logdet();
+        let (ldd, signd) = m.to_dense().lu_logdet();
+        assert!((ld - ldd).abs() < 1e-9);
+        assert_eq!(sign, signd);
+    }
+
+    #[test]
+    fn matmul_band_widths() {
+        let a = tridiag(10, 1.0, 2.0, 3.0);
+        let b = tridiag(10, -0.5, 1.0, 0.25);
+        let c = a.matmul(&b);
+        assert_eq!(c.kl(), 2);
+        assert_eq!(c.ku(), 2);
+        let cd = a.to_dense().matmul(&b.to_dense());
+        for i in 0..10 {
+            for j in 0..10 {
+                assert!((c.get(i, j) - cd.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,448 @@
+//! Small dense matrices: LU with partial pivoting, Cholesky, inverse,
+//! nullspace. Used for the tiny per-KP coefficient systems (p ≤ 2ν+4), the
+//! 2ν×2ν blocks of Algorithm 5, and the dense baselines / test oracles.
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug)]
+pub struct Dense {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Dense {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Dense { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut m = Self::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c);
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn add(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] += v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Dense {
+        let mut t = Dense::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.set(j, i, self.get(i, j));
+            }
+        }
+        t
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for j in 0..self.cols {
+                acc += row[j] * x[j];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    pub fn matmul(&self, other: &Dense) -> Dense {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Dense::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.get(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out.add(i, j, a * other.get(k, j));
+                }
+            }
+        }
+        out
+    }
+
+    /// `self + alpha * other`.
+    pub fn add_scaled(&self, other: &Dense, alpha: f64) -> Dense {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        for i in 0..self.data.len() {
+            out.data[i] += alpha * other.data[i];
+        }
+        out
+    }
+
+    pub fn scale(&mut self, alpha: f64) {
+        for v in &mut self.data {
+            *v *= alpha;
+        }
+    }
+
+    /// Solve `A x = b` via LU with partial pivoting. Panics if non-square.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let lu = DenseLU::factor(self);
+        lu.solve(b)
+    }
+
+    /// Solve `A X = B` column-wise.
+    pub fn solve_mat(&self, b: &Dense) -> Dense {
+        let lu = DenseLU::factor(self);
+        let mut out = Dense::zeros(self.rows, b.cols);
+        for j in 0..b.cols {
+            let col: Vec<f64> = (0..b.rows).map(|i| b.get(i, j)).collect();
+            let x = lu.solve(&col);
+            for i in 0..self.rows {
+                out.set(i, j, x[i]);
+            }
+        }
+        out
+    }
+
+    /// Dense inverse (for tests / tiny blocks).
+    pub fn inverse(&self) -> Dense {
+        self.solve_mat(&Dense::eye(self.rows))
+    }
+
+    /// `(log|det|, sign)` via LU.
+    pub fn lu_logdet(&self) -> (f64, f64) {
+        DenseLU::factor(self).logdet()
+    }
+
+    /// Cholesky factor `L` (lower) of an SPD matrix. Returns `None` if a
+    /// non-positive pivot is met.
+    pub fn cholesky(&self) -> Option<Dense> {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut l = Dense::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = self.get(i, j);
+                for k in 0..j {
+                    s -= l.get(i, k) * l.get(j, k);
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return None;
+                    }
+                    l.set(i, j, s.sqrt());
+                } else {
+                    l.set(i, j, s / l.get(j, j));
+                }
+            }
+        }
+        Some(l)
+    }
+
+    /// Solve `L y = b` (forward substitution) for lower-triangular `L`.
+    pub fn forward_sub(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.rows;
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.get(i, k) * y[k];
+            }
+            y[i] = s / self.get(i, i);
+        }
+        y
+    }
+
+    /// Solve `L^T x = b` (backward substitution) for lower-triangular `L`.
+    pub fn backward_sub_t(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.rows;
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = b[i];
+            for k in (i + 1)..n {
+                s -= self.get(k, i) * x[k];
+            }
+            x[i] = s / self.get(i, i);
+        }
+        x
+    }
+
+    /// A unit-∞-norm vector spanning the (assumed 1-dimensional) nullspace of
+    /// a `(m) × (m+1)` (or rank-deficient square) matrix, via Gaussian
+    /// elimination with full pivoting. The free variable is back-substituted.
+    pub fn nullspace_vector(&self) -> Vec<f64> {
+        let m = self.rows;
+        let n = self.cols;
+        assert!(n >= 1);
+        // Work on a copy with column permutation bookkeeping.
+        let mut a = self.clone();
+        let mut colperm: Vec<usize> = (0..n).collect();
+        let rank_max = m.min(n);
+        let mut rank = 0;
+        for k in 0..rank_max {
+            // Full pivot search in the remaining submatrix.
+            let (mut pi, mut pj, mut best) = (k, k, 0.0f64);
+            for i in k..m {
+                for j in k..n {
+                    let v = a.get(i, j).abs();
+                    if v > best {
+                        best = v;
+                        pi = i;
+                        pj = j;
+                    }
+                }
+            }
+            if best < 1e-300 {
+                break;
+            }
+            // Swap rows k<->pi and columns k<->pj.
+            if pi != k {
+                for j in 0..n {
+                    let t = a.get(k, j);
+                    a.set(k, j, a.get(pi, j));
+                    a.set(pi, j, t);
+                }
+            }
+            if pj != k {
+                for i in 0..m {
+                    let t = a.get(i, k);
+                    a.set(i, k, a.get(i, pj));
+                    a.set(i, pj, t);
+                }
+                colperm.swap(k, pj);
+            }
+            let piv = a.get(k, k);
+            for i in (k + 1)..m {
+                let f = a.get(i, k) / piv;
+                if f != 0.0 {
+                    for j in k..n {
+                        let v = a.get(i, j) - f * a.get(k, j);
+                        a.set(i, j, v);
+                    }
+                }
+            }
+            rank += 1;
+        }
+        // Free variable: the first non-pivot column (index `rank`).
+        assert!(rank < n, "matrix has full column rank; no nullspace");
+        let mut x = vec![0.0; n];
+        x[rank] = 1.0;
+        for k in (0..rank).rev() {
+            let mut s = 0.0;
+            for j in (k + 1)..n {
+                s += a.get(k, j) * x[j];
+            }
+            x[k] = -s / a.get(k, k);
+        }
+        // Undo the column permutation.
+        let mut out = vec![0.0; n];
+        for (pos, &orig) in colperm.iter().enumerate() {
+            out[orig] = x[pos];
+        }
+        // Normalize to unit ∞-norm with a sign convention (first nonzero > 0).
+        let mx = out.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        if mx > 0.0 {
+            let first = out.iter().find(|v| v.abs() > 1e-300 * mx).copied().unwrap_or(1.0);
+            let s = if first < 0.0 { -1.0 / mx } else { 1.0 / mx };
+            for v in &mut out {
+                *v *= s;
+            }
+        }
+        out
+    }
+}
+
+/// LU factorization with partial pivoting for [`Dense`] square matrices.
+pub struct DenseLU {
+    n: usize,
+    lu: Dense,
+    piv: Vec<usize>,
+    sign: f64,
+}
+
+impl DenseLU {
+    pub fn factor(a: &Dense) -> Self {
+        assert_eq!(a.rows, a.cols);
+        let n = a.rows;
+        let mut lu = a.clone();
+        let mut piv = vec![0usize; n];
+        let mut sign = 1.0;
+        for k in 0..n {
+            let mut p = k;
+            let mut best = lu.get(k, k).abs();
+            for r in (k + 1)..n {
+                let v = lu.get(r, k).abs();
+                if v > best {
+                    best = v;
+                    p = r;
+                }
+            }
+            piv[k] = p;
+            if p != k {
+                sign = -sign;
+                // Swap only columns k.. — prior L-multiplier columns stay with
+                // their original rows (gbtrf convention), which is what the
+                // interleaved swap-then-eliminate replay in `solve` expects.
+                for j in k..n {
+                    let t = lu.get(k, j);
+                    lu.set(k, j, lu.get(p, j));
+                    lu.set(p, j, t);
+                }
+            }
+            let pivot = lu.get(k, k);
+            if pivot == 0.0 {
+                continue;
+            }
+            for r in (k + 1)..n {
+                let m = lu.get(r, k) / pivot;
+                lu.set(r, k, m);
+                if m != 0.0 {
+                    for j in (k + 1)..n {
+                        let v = lu.get(r, j) - m * lu.get(k, j);
+                        lu.set(r, j, v);
+                    }
+                }
+            }
+        }
+        DenseLU { n, lu, piv, sign }
+    }
+
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.n);
+        let mut x = b.to_vec();
+        for k in 0..self.n {
+            let p = self.piv[k];
+            if p != k {
+                x.swap(k, p);
+            }
+            let xk = x[k];
+            if xk != 0.0 {
+                for r in (k + 1)..self.n {
+                    x[r] -= self.lu.get(r, k) * xk;
+                }
+            }
+        }
+        for k in (0..self.n).rev() {
+            let mut acc = x[k];
+            for j in (k + 1)..self.n {
+                acc -= self.lu.get(k, j) * x[j];
+            }
+            x[k] = acc / self.lu.get(k, k);
+        }
+        x
+    }
+
+    pub fn logdet(&self) -> (f64, f64) {
+        let mut ld = 0.0;
+        let mut sign = self.sign;
+        for k in 0..self.n {
+            let d = self.lu.get(k, k);
+            ld += d.abs().ln();
+            if d < 0.0 {
+                sign = -sign;
+            }
+        }
+        (ld, sign)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solve_roundtrip() {
+        let a = Dense::from_rows(&[
+            vec![4.0, 1.0, 0.5],
+            vec![1.0, 3.0, -1.0],
+            vec![0.5, -1.0, 5.0],
+        ]);
+        let x_true = vec![1.0, -2.0, 0.5];
+        let b = a.matvec(&x_true);
+        let x = a.solve(&b);
+        for i in 0..3 {
+            assert!((x[i] - x_true[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = Dense::from_rows(&[
+            vec![4.0, 1.0, 0.5],
+            vec![1.0, 3.0, -1.0],
+            vec![0.5, -1.0, 5.0],
+        ]);
+        let l = a.cholesky().unwrap();
+        let llt = l.matmul(&l.transpose());
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((llt.get(i, j) - a.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn nullspace_of_wide_matrix() {
+        // Rows: [1, 1, 1], [1, 2, 4] — nullspace spanned by (2, -3, 1).
+        let a = Dense::from_rows(&[vec![1.0, 1.0, 1.0], vec![1.0, 2.0, 4.0]]);
+        let v = a.nullspace_vector();
+        let r = a.matvec(&v);
+        assert!(r.iter().all(|x| x.abs() < 1e-12), "{v:?} -> {r:?}");
+        assert!((v.iter().fold(0.0f64, |m, x| m.max(x.abs())) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let a = Dense::from_rows(&[vec![2.0, 1.0], vec![1.0, 3.0]]);
+        let inv = a.inverse();
+        let id = a.matmul(&inv);
+        for i in 0..2 {
+            for j in 0..2 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((id.get(i, j) - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn logdet_sign() {
+        let a = Dense::from_rows(&[vec![0.0, 1.0], vec![1.0, 0.0]]); // det = -1
+        let (ld, sign) = a.lu_logdet();
+        assert!(ld.abs() < 1e-12);
+        assert_eq!(sign, -1.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Linear-algebra substrate: banded matrices with LU solvers, small dense
+//! matrices (LU / Cholesky / nullspace), permutations, and the selected
+//! band-of-inverse of a symmetric banded matrix (paper Algorithm 5).
+
+pub mod banded;
+pub mod block_tridiag;
+pub mod dense;
+pub mod perm;
+
+pub use banded::Banded;
+pub use dense::Dense;
+pub use perm::Permutation;

@@ -1,0 +1,119 @@
+//! Sorting permutations — the `P_d` matrices of the paper, stored as index
+//! vectors instead of explicit matrices.
+
+/// A permutation `π` of `0..n`, representing the matrix `P` with
+/// `P[i, π(i)] = 1`, i.e. `(P^T x)[i] = x[π(i)]` gathers into sorted order
+/// when `π` is the argsort of the points.
+#[derive(Clone, Debug)]
+pub struct Permutation {
+    /// `fwd[s]` = original index of the point at sorted position `s`.
+    fwd: Vec<usize>,
+    /// `inv[o]` = sorted position of original index `o`.
+    inv: Vec<usize>,
+}
+
+impl Permutation {
+    /// Argsort permutation of `points` (increasing). `O(n log n)`.
+    pub fn sorting(points: &[f64]) -> Self {
+        let mut fwd: Vec<usize> = (0..points.len()).collect();
+        fwd.sort_by(|&a, &b| points[a].partial_cmp(&points[b]).unwrap());
+        let mut inv = vec![0usize; points.len()];
+        for (s, &o) in fwd.iter().enumerate() {
+            inv[o] = s;
+        }
+        Permutation { fwd, inv }
+    }
+
+    /// Identity permutation.
+    pub fn identity(n: usize) -> Self {
+        let fwd: Vec<usize> = (0..n).collect();
+        Permutation { inv: fwd.clone(), fwd }
+    }
+
+    pub fn len(&self) -> usize {
+        self.fwd.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fwd.is_empty()
+    }
+
+    /// Original index of sorted position `s`.
+    #[inline]
+    pub fn orig(&self, s: usize) -> usize {
+        self.fwd[s]
+    }
+
+    /// Sorted position of original index `o`.
+    #[inline]
+    pub fn sorted_pos(&self, o: usize) -> usize {
+        self.inv[o]
+    }
+
+    /// Gather `x` (original order) into sorted order: `y[s] = x[orig(s)]`.
+    pub fn to_sorted(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.fwd.len());
+        self.fwd.iter().map(|&o| x[o]).collect()
+    }
+
+    /// Scatter `x` (sorted order) back to original order.
+    pub fn to_original(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.fwd.len());
+        let mut y = vec![0.0; x.len()];
+        for (s, &o) in self.fwd.iter().enumerate() {
+            y[o] = x[s];
+        }
+        y
+    }
+
+    /// The sorted copy of `points` (convenience).
+    pub fn apply_sort(&self, points: &[f64]) -> Vec<f64> {
+        self.to_sorted(points)
+    }
+}
+
+/// Binary search: largest `i` with `xs[i] <= x` in a sorted slice, or `None`
+/// if `x < xs[0]`. This is the `O(log n)` window lookup of §5.2.
+pub fn lower_index(xs: &[f64], x: f64) -> Option<usize> {
+    if xs.is_empty() || x < xs[0] {
+        return None;
+    }
+    let mut lo = 0usize;
+    let mut hi = xs.len(); // invariant: xs[lo] <= x < xs[hi]
+    while lo + 1 < hi {
+        let mid = (lo + hi) / 2;
+        if xs[mid] <= x {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Some(lo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sort_roundtrip() {
+        let pts = vec![3.0, -1.0, 2.0, 0.5];
+        let p = Permutation::sorting(&pts);
+        let s = p.to_sorted(&pts);
+        assert_eq!(s, vec![-1.0, 0.5, 2.0, 3.0]);
+        assert_eq!(p.to_original(&s), pts);
+        for o in 0..4 {
+            assert_eq!(p.orig(p.sorted_pos(o)), o);
+        }
+    }
+
+    #[test]
+    fn lower_index_edges() {
+        let xs = vec![0.0, 1.0, 2.0, 3.0];
+        assert_eq!(lower_index(&xs, -0.5), None);
+        assert_eq!(lower_index(&xs, 0.0), Some(0));
+        assert_eq!(lower_index(&xs, 1.5), Some(1));
+        assert_eq!(lower_index(&xs, 3.0), Some(3));
+        assert_eq!(lower_index(&xs, 99.0), Some(3));
+    }
+}

@@ -1,0 +1,80 @@
+//! `addgp` CLI — the leader entrypoint.
+//!
+//! ```text
+//! addgp serve [--addr 127.0.0.1:7878] [--no-pjrt] [--lo -500] [--hi 500]
+//! addgp bo    [--fn schwefel|rastrigin] [--d 10] [--budget 300] [--warmup 100]
+//! addgp selfcheck
+//! ```
+//!
+//! (Hand-rolled argument parsing — clap is unavailable offline.)
+
+use addgp::bo::run::{run_bo, BoConfig};
+use addgp::bo::testfns::{self, NoisyObjective};
+use addgp::coordinator::server::Server;
+use addgp::gp::model::{AdditiveGP, AdditiveGpConfig};
+
+fn arg_value(args: &[String], key: &str) -> Option<String> {
+    args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn flag(args: &[String], key: &str) -> bool {
+    args.iter().any(|a| a == key)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("serve") => {
+            let addr = arg_value(&args, "--addr").unwrap_or_else(|| "127.0.0.1:7878".into());
+            let lo = arg_value(&args, "--lo").and_then(|v| v.parse().ok()).unwrap_or(-500.0);
+            let hi = arg_value(&args, "--hi").and_then(|v| v.parse().ok()).unwrap_or(500.0);
+            let use_pjrt = !flag(&args, "--no-pjrt");
+            let server = Server::bind(&addr, use_pjrt, lo, hi)?;
+            println!("addgp coordinator listening on {}", server.local_addr());
+            server.serve()?;
+        }
+        Some("bo") => {
+            let d: usize = arg_value(&args, "--d").and_then(|v| v.parse().ok()).unwrap_or(10);
+            let budget =
+                arg_value(&args, "--budget").and_then(|v| v.parse().ok()).unwrap_or(300);
+            let warmup =
+                arg_value(&args, "--warmup").and_then(|v| v.parse().ok()).unwrap_or(100);
+            let fname = arg_value(&args, "--fn").unwrap_or_else(|| "schwefel".into());
+            let (f, lo, hi): (fn(&[f64]) -> f64, f64, f64) = match fname.as_str() {
+                "rastrigin" => {
+                    (testfns::rastrigin, testfns::RASTRIGIN_LO, testfns::RASTRIGIN_HI)
+                }
+                _ => (testfns::schwefel, testfns::SCHWEFEL_LO, testfns::SCHWEFEL_HI),
+            };
+            let obj = NoisyObjective::new(&f, 1.0);
+            let mut gpcfg = AdditiveGpConfig::default();
+            gpcfg.omega0 = 10.0 / (hi - lo);
+            let mut engine = AdditiveGP::new(gpcfg, d);
+            let cfg = BoConfig { budget, warmup, lo, hi, ..Default::default() };
+            let res = run_bo(&mut engine, &obj, d, &cfg);
+            println!(
+                "{fname} d={d}: best={:.4} at {:?} (model time {:.2}s)",
+                res.best_y, res.best_x, res.model_time_s
+            );
+        }
+        Some("selfcheck") => {
+            // Tiny end-to-end: fit + predict.
+            let mut gp = AdditiveGP::new(AdditiveGpConfig::default(), 2);
+            let mut rng = addgp::util::Rng::new(1);
+            for _ in 0..50 {
+                let x = vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)];
+                let y = x[0].sin() + x[1].cos() + 0.1 * rng.normal();
+                gp.observe(&x, y);
+            }
+            let out = gp.predict(&[2.0, 2.0], true);
+            println!("selfcheck: μ={:.4} s={:.4} ∇μ={:?}", out.mean, out.var, out.mean_grad);
+            anyhow::ensure!(out.var.is_finite() && out.var >= 0.0);
+            println!("OK");
+        }
+        _ => {
+            eprintln!("usage: addgp <serve|bo|selfcheck> [options]");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

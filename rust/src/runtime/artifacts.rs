@@ -1,0 +1,112 @@
+//! Artifact manifest: which AOT-compiled executables exist and their static
+//! shapes. Written by `python/compile/aot.py` as `artifacts/manifest.json`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+/// One compiled `window_acq` configuration.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: String,
+    /// Input dimension D.
+    pub d: usize,
+    /// KP window width W = 2ν+1.
+    pub w: usize,
+    /// Batch size B (static).
+    pub b: usize,
+    pub path: PathBuf,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let arts = json
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            artifacts.push(ArtifactSpec {
+                kind: a
+                    .get("kind")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("window_acq")
+                    .to_string(),
+                d: a.get("d").and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("missing d"))?,
+                w: a.get("w").and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("missing w"))?,
+                b: a.get("b").and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("missing b"))?,
+                path: dir.join(&name),
+                name,
+            });
+        }
+        Ok(ArtifactManifest { artifacts })
+    }
+
+    /// Find the artifact for `(d, w)` with the smallest batch ≥ `want_b`
+    /// (or the largest available batch if none is big enough).
+    pub fn select(&self, kind: &str, d: usize, w: usize, want_b: usize) -> Option<&ArtifactSpec> {
+        let mut candidates: Vec<&ArtifactSpec> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.d == d && a.w == w)
+            .collect();
+        candidates.sort_by_key(|a| a.b);
+        candidates
+            .iter()
+            .find(|a| a.b >= want_b)
+            .copied()
+            .or_else(|| candidates.last().copied())
+    }
+
+    /// Default artifacts directory: `$ADDGP_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("ADDGP_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_written_manifest() {
+        let dir = std::env::temp_dir().join(format!("addgp_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts":[
+                {"name":"window_acq_D2_W2_B64.hlo.txt","kind":"window_acq","d":2,"w":2,"b":64},
+                {"name":"window_acq_D2_W2_B16.hlo.txt","kind":"window_acq","d":2,"w":2,"b":16}
+            ]}"#,
+        )
+        .unwrap();
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.select("window_acq", 2, 2, 10).unwrap().b, 16);
+        assert_eq!(m.select("window_acq", 2, 2, 20).unwrap().b, 64);
+        assert_eq!(m.select("window_acq", 2, 2, 100).unwrap().b, 64);
+        assert!(m.select("window_acq", 3, 2, 1).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime — loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, see `python/compile/aot.py`) and executes them
+//! from the rust hot path. Python is never on the request path.
+
+pub mod artifacts;
+pub mod window_exec;
+
+pub use artifacts::{ArtifactManifest, ArtifactSpec};
+pub use window_exec::{WindowBatch, WindowExecutable, WindowOutputs};

@@ -1,0 +1,107 @@
+//! The compiled `window_acq` executable: load HLO text, compile on the PJRT
+//! CPU client, and execute batches of gathered windows.
+//!
+//! Follows the `/opt/xla-example/load_hlo` pattern: HLO *text* interchange,
+//! `return_tuple=True` on the python side, `to_tuple()` on this side.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::artifacts::ArtifactSpec;
+
+/// A batch of gathered windows, exactly the L2 model's input signature
+/// (`python/compile/model.py::batch_acq`). Row-major flattened.
+#[derive(Clone, Debug)]
+pub struct WindowBatch {
+    /// Active rows (≤ spec.b); the rest is zero padding.
+    pub rows: usize,
+    pub phi: Vec<f32>,   // [B, D, W]
+    pub dphi: Vec<f32>,  // [B, D, W]
+    pub bwin: Vec<f32>,  // [B, D, W]
+    pub cwin: Vec<f32>,  // [B, D, W, W]
+    pub mwin: Vec<f32>,  // [B, D, W, D, W]
+    pub kdiag: Vec<f32>, // [B]
+    pub beta: f32,
+}
+
+impl WindowBatch {
+    /// Zero-padded batch for a spec.
+    pub fn zeros(spec: &ArtifactSpec, beta: f32) -> Self {
+        let (b, d, w) = (spec.b, spec.d, spec.w);
+        WindowBatch {
+            rows: 0,
+            phi: vec![0.0; b * d * w],
+            dphi: vec![0.0; b * d * w],
+            bwin: vec![0.0; b * d * w],
+            cwin: vec![0.0; b * d * w * w],
+            mwin: vec![0.0; b * d * w * d * w],
+            kdiag: vec![0.0; b],
+            beta,
+        }
+    }
+}
+
+/// Executable outputs (only the first `rows` entries are meaningful).
+#[derive(Clone, Debug)]
+pub struct WindowOutputs {
+    pub mu: Vec<f32>,   // [B]
+    pub svar: Vec<f32>, // [B]
+    pub acq: Vec<f32>,  // [B]
+    pub gacq: Vec<f32>, // [B, D]
+}
+
+/// A compiled PJRT executable for one `(D, W, B)` configuration.
+pub struct WindowExecutable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl WindowExecutable {
+    /// Load + compile the artifact on a PJRT client.
+    pub fn load(client: &xla::PjRtClient, spec: &ArtifactSpec) -> Result<Self> {
+        let path = spec
+            .path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.name))?;
+        Ok(WindowExecutable { spec: spec.clone(), exe })
+    }
+
+    /// Execute one batch. `batch` tensors must match the spec's shapes.
+    pub fn execute(&self, batch: &WindowBatch) -> Result<WindowOutputs> {
+        let (b, d, w) = (self.spec.b as i64, self.spec.d as i64, self.spec.w as i64);
+        let lit = |data: &[f32], dims: &[i64]| -> Result<xla::Literal> {
+            let expect: i64 = dims.iter().product();
+            anyhow::ensure!(
+                data.len() as i64 == expect,
+                "shape mismatch: {} vs {:?}",
+                data.len(),
+                dims
+            );
+            Ok(xla::Literal::vec1(data).reshape(dims)?)
+        };
+        let args = [
+            lit(&batch.phi, &[b, d, w])?,
+            lit(&batch.dphi, &[b, d, w])?,
+            lit(&batch.bwin, &[b, d, w])?,
+            lit(&batch.cwin, &[b, d, w, w])?,
+            lit(&batch.mwin, &[b, d, w, d, w])?,
+            lit(&batch.kdiag, &[b])?,
+            xla::Literal::scalar(batch.beta),
+        ];
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 4, "expected 4 outputs, got {}", parts.len());
+        let mut it = parts.into_iter();
+        Ok(WindowOutputs {
+            mu: it.next().unwrap().to_vec::<f32>()?,
+            svar: it.next().unwrap().to_vec::<f32>()?,
+            acq: it.next().unwrap().to_vec::<f32>()?,
+            gacq: it.next().unwrap().to_vec::<f32>()?,
+        })
+    }
+}

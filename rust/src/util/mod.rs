@@ -1,0 +1,10 @@
+//! Offline-build substrates: the environment ships no general-purpose crates
+//! (no `rand`, `serde_json`, `clap`, `criterion`), so the small pieces this
+//! library needs are implemented here from scratch.
+
+pub mod json;
+pub mod rng;
+pub mod timer;
+
+pub use json::Json;
+pub use rng::Rng;

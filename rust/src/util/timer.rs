@@ -1,0 +1,108 @@
+//! Tiny timing/benchmark helpers (criterion is unavailable offline).
+//! `cargo bench` targets use [`bench`] directly from their `main()`.
+
+use std::time::Instant;
+
+/// Time a closure once, returning `(result, seconds)`.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Benchmark statistics over repeated runs.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStats {
+    /// Criterion-like one-line report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} time: [{} {} {}]  ({} iters)",
+            self.name,
+            fmt_time(self.min_s),
+            fmt_time(self.median_s),
+            fmt_time(self.max_s),
+            self.iters
+        )
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Run `f` with warmup, then measure `iters` runs and report stats.
+/// A `std::hint::black_box` is applied to the closure result.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        median_s: times[times.len() / 2],
+        min_s: times[0],
+        max_s: *times.last().unwrap(),
+    };
+    println!("{}", stats.report());
+    stats
+}
+
+/// Least-squares slope of `log(y)` against `log(x)` — used by the scaling
+/// study to verify the paper's empirical complexity exponents.
+pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let lx: Vec<f64> = xs.iter().map(|x| x.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|y| y.ln()).collect();
+    let mx = lx.iter().sum::<f64>() / n;
+    let my = ly.iter().sum::<f64>() / n;
+    let cov: f64 = lx.iter().zip(&ly).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let var: f64 = lx.iter().map(|x| (x - mx) * (x - mx)).sum();
+    cov / var
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slope_of_quadratic_is_two() {
+        let xs = vec![10.0, 20.0, 40.0, 80.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x * x).collect();
+        assert!((loglog_slope(&xs, &ys) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let s = bench("noop", 1, 5, || 1 + 1);
+        assert_eq!(s.iters, 5);
+        assert!(s.min_s <= s.median_s && s.median_s <= s.max_s);
+    }
+}

@@ -1,0 +1,133 @@
+//! End-to-end coordinator test: boot the TCP server, create a model over
+//! the wire, stream observations, predict (batched), suggest, and shut
+//! down. Runs native-only (`use_pjrt = false`) so it passes without
+//! artifacts; the PJRT path is covered by `runtime_pjrt.rs` and the
+//! `serve_bo` example.
+
+use addgp::coordinator::server::{Client, Server};
+use addgp::util::Rng;
+
+fn boot(use_pjrt: bool) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let server = Server::bind("127.0.0.1:0", use_pjrt, 0.0, 4.0).unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || {
+        let _ = server.serve();
+    });
+    (addr, handle)
+}
+
+#[test]
+fn full_protocol_roundtrip() {
+    let (addr, _handle) = boot(false);
+    let mut c = Client::connect(addr).unwrap();
+
+    // Create.
+    let r = c
+        .call(r#"{"op":"create_model","d":2,"nu2":1,"omega":1.0,"sigma2":1.0,"id":1}"#)
+        .unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    let model = r.get("model").unwrap().as_usize().unwrap();
+
+    // Observe a batch.
+    let mut rng = Rng::new(9);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for _ in 0..60 {
+        let x = vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)];
+        ys.push(x[0].sin() + x[1].cos() + 0.1 * rng.normal());
+        xs.push(format!("[{},{}]", x[0], x[1]));
+    }
+    let req = format!(
+        r#"{{"op":"observe_batch","model":{model},"xs":[{}],"ys":[{}]}}"#,
+        xs.join(","),
+        ys.iter().map(|y| y.to_string()).collect::<Vec<_>>().join(",")
+    );
+    let r = c.call(&req).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+
+    // Predict a small batch with gradients.
+    let r = c
+        .call(&format!(
+            r#"{{"op":"predict","model":{model},"xs":[[1.0,1.0],[2.0,3.0]],"beta":2.0,"grad":true}}"#
+        ))
+        .unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    let mu = r.get("mu").unwrap().as_f64_vec().unwrap();
+    let svar = r.get("svar").unwrap().as_f64_vec().unwrap();
+    assert_eq!(mu.len(), 2);
+    assert!(svar.iter().all(|&v| v >= 0.0));
+    assert_eq!(r.get("path").unwrap().as_str(), Some("native"));
+    let gacq = r.get("gacq").unwrap().as_arr().unwrap();
+    assert_eq!(gacq.len(), 2);
+    assert_eq!(gacq[0].as_f64_vec().unwrap().len(), 2);
+
+    // Suggest.
+    let r = c.call(&format!(r#"{{"op":"suggest","model":{model},"beta":2.0}}"#)).unwrap();
+    let x = r.get("x").unwrap().as_f64_vec().unwrap();
+    assert_eq!(x.len(), 2);
+    assert!(x.iter().all(|&v| (0.0..=4.0).contains(&v)));
+
+    // Stats.
+    let r = c.call(&format!(r#"{{"op":"stats","model":{model}}}"#)).unwrap();
+    assert_eq!(r.get("n").unwrap().as_usize(), Some(60));
+    assert_eq!(r.get("d").unwrap().as_usize(), Some(2));
+
+    // Errors surface cleanly.
+    let r = c.call(r#"{"op":"predict","model":999,"xs":[[1,1]]}"#).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    let r = c.call(r#"{"op":"wat"}"#).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+
+    // Shutdown.
+    let r = c.call(r#"{"op":"shutdown"}"#).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+}
+
+#[test]
+fn concurrent_clients_batch_through_one_engine() {
+    let (addr, _handle) = boot(false);
+    let mut c = Client::connect(addr).unwrap();
+    let r = c.call(r#"{"op":"create_model","d":2,"nu2":1,"omega":1.0,"sigma2":1.0}"#).unwrap();
+    let model = r.get("model").unwrap().as_usize().unwrap();
+
+    let mut rng = Rng::new(5);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for _ in 0..50 {
+        let x = vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)];
+        ys.push(x[0].sin() + x[1].cos());
+        xs.push(format!("[{},{}]", x[0], x[1]));
+    }
+    let req = format!(
+        r#"{{"op":"observe_batch","model":{model},"xs":[{}],"ys":[{}]}}"#,
+        xs.join(","),
+        ys.iter().map(|y| y.to_string()).collect::<Vec<_>>().join(",")
+    );
+    assert_eq!(c.call(&req).unwrap().get("ok").unwrap().as_bool(), Some(true));
+
+    // Fan out 8 clients issuing predictions concurrently.
+    let mut handles = Vec::new();
+    for t in 0..8u64 {
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            let mut rng = Rng::new(100 + t);
+            for _ in 0..10 {
+                let x0 = rng.uniform_in(0.5, 3.5);
+                let x1 = rng.uniform_in(0.5, 3.5);
+                let r = c
+                    .call(&format!(
+                        r#"{{"op":"predict","model":{model},"xs":[[{x0},{x1}]],"beta":2.0,"grad":false}}"#
+                    ))
+                    .unwrap();
+                assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+                let mu = r.get("mu").unwrap().as_f64_vec().unwrap();
+                assert!(mu[0].is_finite());
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut c2 = Client::connect(addr).unwrap();
+    let _ = c2.call(r#"{"op":"shutdown"}"#);
+}

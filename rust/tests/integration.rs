@@ -1,0 +1,187 @@
+//! Cross-module integration tests: the sparse engine against the dense FGP
+//! baseline on identical data (the strongest end-to-end correctness signal),
+//! MLE consistency, the Algorithm 4 summary-table paths, and a miniature
+//! BO run through the public API.
+
+use addgp::baselines::full_gp::FullGP;
+use addgp::baselines::inducing::InducingGP;
+use addgp::baselines::statespace::StateSpaceBackfit;
+use addgp::bo::run::{run_bo, BoConfig, BoEngine};
+use addgp::bo::testfns::{schwefel, NoisyObjective};
+use addgp::gp::likelihood::{nll_exact, nll_grad_exact};
+use addgp::gp::model::{AdditiveGP, AdditiveGpConfig};
+use addgp::kernels::matern::Nu;
+use addgp::util::Rng;
+
+fn toy(n: usize, d: usize, lo: f64, hi: f64, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let x: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..d).map(|_| rng.uniform_in(lo, hi)).collect()).collect();
+    let y: Vec<f64> = x
+        .iter()
+        .map(|r| {
+            r.iter().enumerate().map(|(i, &v)| ((1.0 + 0.2 * i as f64) * v).sin()).sum::<f64>()
+                + 0.1 * rng.normal()
+        })
+        .collect();
+    (x, y)
+}
+
+/// Sparse engine == dense baseline on mean, variance and gradients.
+#[test]
+fn sparse_engine_matches_dense_fgp() {
+    let (x, y) = toy(60, 3, 0.0, 5.0, 11);
+    let sigma2 = 0.5;
+    let omega = 1.1;
+
+    let mut sparse_cfg = AdditiveGpConfig::default();
+    sparse_cfg.omega0 = omega;
+    sparse_cfg.sigma2_y = sigma2;
+    let mut sparse = AdditiveGP::new(sparse_cfg, 3);
+    sparse.fit(&x, &y);
+
+    let mut dense = FullGP::new(Nu::Half, omega, sigma2, 3);
+    dense.fit(&x, &y);
+
+    let mut rng = Rng::new(12);
+    for _ in 0..10 {
+        let q: Vec<f64> = (0..3).map(|_| rng.uniform_in(0.3, 4.7)).collect();
+        let so = sparse.predict(&q, true);
+        let (dm, dv) = dense.predict(&q);
+        let (dgm, dgv) = dense.predict_grad(&q);
+        assert!((so.mean - dm).abs() < 1e-6 * dm.abs().max(1.0), "mean {} vs {}", so.mean, dm);
+        assert!((so.var - dv).abs() < 1e-6 * dv.max(1e-3), "var {} vs {}", so.var, dv);
+        for d in 0..3 {
+            assert!(
+                (so.mean_grad[d] - dgm[d]).abs() < 1e-5 * dgm[d].abs().max(1.0),
+                "∇μ[{d}] {} vs {}",
+                so.mean_grad[d],
+                dgm[d]
+            );
+            assert!(
+                (so.var_grad[d] - dgv[d]).abs() < 1e-5 * dgv[d].abs().max(1e-2),
+                "∇s[{d}] {} vs {}",
+                so.var_grad[d],
+                dgv[d]
+            );
+        }
+    }
+}
+
+/// Sparse exact NLL == dense baseline NLL (same constant convention).
+#[test]
+fn sparse_nll_matches_dense_fgp() {
+    let (x, y) = toy(40, 2, 0.0, 5.0, 13);
+    let sigma2 = 0.8;
+    let omega = 0.9;
+    let mut sparse_cfg = AdditiveGpConfig::default();
+    sparse_cfg.omega0 = omega;
+    sparse_cfg.sigma2_y = sigma2;
+    let mut sparse = AdditiveGP::new(sparse_cfg, 2);
+    sparse.fit(&x, &y);
+    let dims = sparse.dims().unwrap();
+    let sparse_nll = nll_exact(dims, sigma2, &y);
+
+    let mut dense = FullGP::new(Nu::Half, omega, sigma2, 2);
+    dense.fit(&x, &y);
+    let dense_nll = dense.nll();
+    assert!(
+        (sparse_nll - dense_nll).abs() < 1e-5 * dense_nll.abs(),
+        "{sparse_nll} vs {dense_nll}"
+    );
+
+    // Gradient should point the same way as a dense finite difference.
+    let g = nll_grad_exact(dims, sigma2, &y);
+    let h = 1e-4;
+    let mut up = FullGP::new(Nu::Half, omega + h, sigma2, 2);
+    up.fit(&x, &y);
+    let mut dn = FullGP::new(Nu::Half, omega - h, sigma2, 2);
+    dn.fit(&x, &y);
+    let fd = (up.nll() - dn.nll()) / (2.0 * h);
+    let total: f64 = g.omega.iter().sum();
+    assert!((fd - total).abs() < 1e-2 * fd.abs().max(1.0), "fd {fd} vs grad {total}");
+}
+
+/// All three baselines produce sane predictions on the same data.
+#[test]
+fn baselines_agree_qualitatively() {
+    let (x, y) = toy(200, 2, 0.0, 5.0, 17);
+    let truth = |r: &[f64]| (r[0]).sin() + (1.2f64 * r[1]).sin();
+
+    let mut fgp = FullGP::new(Nu::Half, 1.0, 0.1, 2);
+    fgp.fit(&x, &y);
+    let mut ip = InducingGP::new(Nu::Half, 1.0, 0.1, 2, 3);
+    ip.fit(&x, &y);
+    let ss = StateSpaceBackfit::fit(&x, &y, &[1.0, 1.0], 0.1, 8);
+
+    let mut rng = Rng::new(18);
+    let (mut e_f, mut e_i, mut e_s) = (0.0, 0.0, 0.0);
+    for _ in 0..40 {
+        let q = vec![rng.uniform_in(0.5, 4.5), rng.uniform_in(0.5, 4.5)];
+        let t = truth(&q);
+        e_f += (fgp.predict(&q).0 - t).abs();
+        e_i += (ip.predict(&q).0 - t).abs();
+        e_s += (ss.predict_mean(&q) - t).abs();
+    }
+    e_f /= 40.0;
+    e_i /= 40.0;
+    e_s /= 40.0;
+    assert!(e_f < 0.3, "FGP err {e_f}");
+    assert!(e_i < 0.6, "IP err {e_i}");
+    assert!(e_s < 0.4, "state-space err {e_s}");
+}
+
+/// Large-ish n: the sparse engine handles n = 4000, D = 5 comfortably and
+/// the posterior remains consistent with a spot-check against FGP on a
+/// subsample neighborhood being impractical, we instead verify internal
+/// consistency: cached vs direct variance and mean-at-data fidelity.
+#[test]
+fn large_n_consistency() {
+    let (x, y) = toy(4000, 5, 0.0, 10.0, 21);
+    let mut cfg = AdditiveGpConfig::default();
+    cfg.omega0 = 1.0;
+    cfg.sigma2_y = 0.2;
+    let mut gp = AdditiveGP::new(cfg, 5);
+    let t0 = std::time::Instant::now();
+    gp.fit(&x, &y);
+    let fit_s = t0.elapsed().as_secs_f64();
+    let out = gp.predict(&[5.0; 5], false);
+    assert!(out.var.is_finite() && out.var >= 0.0);
+    // mean at a few data points should track y (signal-to-noise is high).
+    let mut err = 0.0;
+    for i in 0..20 {
+        err += (gp.mean(&x[i]) - y[i]).abs();
+    }
+    err /= 20.0;
+    assert!(err < 0.5, "mean abs err at data {err}");
+    // Keep an eye on scale: fit must be far below dense O(n³) territory.
+    assert!(fit_s < 30.0, "fit took {fit_s}s");
+}
+
+/// The BoEngine abstraction runs the same loop for sparse and dense engines.
+#[test]
+fn bo_runs_with_both_engines() {
+    let f = schwefel;
+    let obj = NoisyObjective::new(&f, 1.0);
+    let mut cfg = BoConfig {
+        budget: 10,
+        warmup: 20,
+        hyper_every: 0,
+        seed: 23,
+        ..Default::default()
+    };
+    cfg.search.restarts = 2;
+    cfg.search.steps = 15;
+
+    let mut gp_cfg = AdditiveGpConfig::default();
+    gp_cfg.omega0 = 0.02;
+    let mut sparse = AdditiveGP::new(gp_cfg, 2);
+    let r1 = run_bo(&mut sparse, &obj, 2, &cfg);
+    assert_eq!(r1.best_trace.len(), 10);
+    assert_eq!(sparse.name(), "GKP");
+
+    let mut dense = FullGP::new(Nu::Half, 0.02, 1.0, 2);
+    let r2 = run_bo(&mut dense, &obj, 2, &cfg);
+    assert_eq!(r2.best_trace.len(), 10);
+    assert!(r2.best_y.is_finite());
+}

@@ -1,0 +1,205 @@
+//! Property-style randomized tests (the offline image has no `proptest`, so
+//! this is a hand-rolled driver: many seeded random cases per property,
+//! shrink-free but reproducible — failures print the seed).
+//!
+//! Properties cover the core mathematical invariants of the paper:
+//! factorization identity, posterior consistency, SPD-ness, cache
+//! transparency, protocol round-trips.
+
+use addgp::gp::backfit::{BlockVec, GaussSeidel};
+use addgp::gp::dim::DimFactor;
+use addgp::gp::model::{AdditiveGP, AdditiveGpConfig};
+use addgp::kernels::kp::KpFactorization;
+use addgp::kernels::matern::{Matern, Nu};
+use addgp::util::{Json, Rng};
+
+const CASES: u64 = 12;
+
+fn random_points(rng: &mut Rng, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+    rng.uniform_vec(n, lo, hi)
+}
+
+/// ∀ random designs: `A·K_sorted` has no mass outside the `ν−1/2` band.
+#[test]
+fn prop_kp_band_identity() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(0x100 + seed);
+        let n = 12 + rng.below(30);
+        let omega = 10f64.powf(rng.uniform_in(-1.2, 1.0));
+        let nu = [Nu::Half, Nu::ThreeHalves][rng.below(2)];
+        let pts = random_points(&mut rng, n, -3.0, 7.0);
+        let kernel = Matern::new(nu, omega);
+        let f = KpFactorization::new(&pts, kernel);
+        let kd = kernel.gram(&f.xs);
+        let prod = f.a.to_dense().matmul(&kd);
+        let w = f.w();
+        let mut max_out: f64 = 0.0;
+        let mut max_in: f64 = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                let v = prod.get(i, j).abs();
+                if j + w > i && j < i + w {
+                    max_in = max_in.max(v);
+                } else {
+                    max_out = max_out.max(v);
+                }
+            }
+        }
+        assert!(
+            max_out < 1e-7 * max_in.max(1.0),
+            "seed {seed}: n={n} ω={omega} {nu:?}: out {max_out:.2e} in {max_in:.2e}"
+        );
+    }
+}
+
+/// ∀ random inputs: the Algorithm-4 solve satisfies `M ṽ = v`.
+#[test]
+fn prop_backfit_solves_system() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(0x200 + seed);
+        let n = 15 + rng.below(25);
+        let dd = 1 + rng.below(4);
+        let sigma2 = rng.uniform_in(0.3, 2.0);
+        let dims: Vec<DimFactor> = (0..dd)
+            .map(|_| {
+                let pts = random_points(&mut rng, n, 0.0, 5.0);
+                DimFactor::new(&pts, Matern::new(Nu::Half, rng.uniform_in(0.4, 2.5)), sigma2)
+            })
+            .collect();
+        let gs = GaussSeidel::new(&dims, sigma2);
+        let v: BlockVec = (0..dd).map(|_| rng.normal_vec(n)).collect();
+        let (x, stats) = gs.solve(&v);
+        assert!(stats.rel_residual < 1e-8, "seed {seed}: residual {}", stats.rel_residual);
+        let back = gs.apply(&x);
+        let scale = v
+            .iter()
+            .flat_map(|b| b.iter())
+            .fold(0.0f64, |m, &t| m.max(t.abs()));
+        for d in 0..dd {
+            for i in 0..n {
+                assert!(
+                    (back[d][i] - v[d][i]).abs() < 1e-6 * scale,
+                    "seed {seed} d={d} i={i}"
+                );
+            }
+        }
+    }
+}
+
+/// ∀ models and queries: variance ≥ 0 and shrinks when a point is observed
+/// exactly at the query.
+#[test]
+fn prop_variance_positive_and_contracts() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(0x300 + seed);
+        let d = 1 + rng.below(3);
+        let mut cfg = AdditiveGpConfig::default();
+        cfg.omega0 = rng.uniform_in(0.5, 2.0);
+        cfg.sigma2_y = 0.2;
+        let mut gp = AdditiveGP::new(cfg, d);
+        let n = 30 + rng.below(30);
+        for _ in 0..n {
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform_in(0.0, 4.0)).collect();
+            let y: f64 = x.iter().map(|v| v.sin()).sum::<f64>() + 0.3 * rng.normal();
+            gp.observe(&x, y);
+        }
+        let q: Vec<f64> = (0..d).map(|_| rng.uniform_in(0.5, 3.5)).collect();
+        let before = gp.predict(&q, false).var;
+        assert!(before >= 0.0, "seed {seed}: negative variance {before}");
+        gp.observe(&q, q.iter().map(|v| v.sin()).sum::<f64>());
+        let after = gp.predict(&q, false).var;
+        assert!(
+            after <= before + 1e-9,
+            "seed {seed}: variance grew after observing at query: {before} -> {after}"
+        );
+    }
+}
+
+/// ∀ points: cached O(1) prediction equals the cold-cache prediction.
+#[test]
+fn prop_cache_transparent() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(0x400 + seed);
+        let mut cfg = AdditiveGpConfig::default();
+        cfg.omega0 = 1.0;
+        let mut gp = AdditiveGP::new(cfg, 2);
+        for _ in 0..50 {
+            let x = vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)];
+            gp.observe(&x, x[0].cos() + x[1].sin());
+        }
+        let q = vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)];
+        // 1st visit = single-solve path, 2nd = M̃ columns, 3rd = cache hits.
+        // All three are PCG-based (tol 1e-10), so they agree to solver
+        // tolerance, not to the last bit.
+        let first = gp.predict(&q, true);
+        let second = gp.predict(&q, true);
+        let third = gp.predict(&q, true);
+        assert!((first.mean - second.mean).abs() < 1e-12);
+        assert!((first.var - second.var).abs() < 1e-7 * second.var.max(1e-3));
+        for d in 0..2 {
+            assert!(
+                (first.var_grad[d] - second.var_grad[d]).abs()
+                    < 1e-6 * second.var_grad[d].abs().max(1e-3),
+                "seed {seed}"
+            );
+            assert!((second.var_grad[d] - third.var_grad[d]).abs() < 1e-12);
+        }
+    }
+}
+
+/// ∀ JSON values we emit: parse(print(v)) == v.
+#[test]
+fn prop_json_roundtrip() {
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(0x500 + seed);
+        let v = random_json(&mut rng, 3);
+        let s = v.to_string();
+        let back = Json::parse(&s).unwrap_or_else(|e| panic!("seed {seed}: {e} in {s}"));
+        assert_eq!(v, back, "seed {seed}");
+    }
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+        3 => {
+            let n = rng.below(8);
+            Json::Str((0..n).map(|_| (b'a' + rng.below(26) as u8) as char).collect())
+        }
+        4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below(4))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+/// ∀ sorted data and queries: the φ-window has ≤ 2ν+1 entries and matches
+/// the dense evaluation (routing invariant behind the batcher).
+#[test]
+fn prop_window_sparsity() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(0x600 + seed);
+        let n = 20 + rng.below(40);
+        let pts = random_points(&mut rng, n, -2.0, 2.0);
+        let nu = [Nu::Half, Nu::ThreeHalves][rng.below(2)];
+        let f = KpFactorization::new(&pts, Matern::new(nu, 1.3));
+        for _ in 0..5 {
+            let x = rng.uniform_in(-2.5, 2.5);
+            let (start, vals) = f.phi_window(x);
+            assert!(vals.len() <= 2 * f.w(), "seed {seed}: window too wide");
+            let dense = f.phi_full(x);
+            for (i, &dv) in dense.iter().enumerate() {
+                let wv = if i >= start && i < start + vals.len() {
+                    vals[i - start]
+                } else {
+                    0.0
+                };
+                assert!((dv - wv).abs() < 1e-9, "seed {seed} i={i}");
+            }
+        }
+    }
+}

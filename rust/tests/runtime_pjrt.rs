@@ -1,0 +1,131 @@
+//! Integration: the AOT-compiled JAX/Pallas `window_acq` executable, loaded
+//! and run through the PJRT CPU client, must reproduce the native sparse
+//! engine's posterior numbers (f32 tolerance).
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use addgp::bo::acquisition::Acquisition;
+use addgp::gp::model::{AdditiveGP, AdditiveGpConfig};
+use addgp::runtime::{ArtifactManifest, WindowBatch, WindowExecutable};
+use addgp::util::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = ArtifactManifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        None
+    }
+}
+
+#[test]
+fn pjrt_window_acq_matches_native() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    };
+    let manifest = ArtifactManifest::load(&dir).unwrap();
+    let Some(spec) = manifest.select("window_acq", 2, 2, 64) else {
+        eprintln!("SKIP: no D=2 W=2 artifact");
+        return;
+    };
+    let client = xla::PjRtClient::cpu().unwrap();
+    let exe = WindowExecutable::load(&client, spec).unwrap();
+
+    // Build a model and some queries.
+    let mut cfg = AdditiveGpConfig::default();
+    cfg.omega0 = 1.0;
+    let mut gp = AdditiveGP::new(cfg, 2);
+    let mut rng = Rng::new(42);
+    for _ in 0..80 {
+        let x = vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)];
+        let y = x[0].sin() + (0.7 * x[1]).cos() + 0.1 * rng.normal();
+        gp.observe(&x, y);
+    }
+
+    let beta = 2.0f64;
+    let queries: Vec<Vec<f64>> =
+        (0..10).map(|_| vec![rng.uniform_in(0.2, 3.8), rng.uniform_in(0.2, 3.8)]).collect();
+
+    // Pack one PJRT batch.
+    let (sd, sw) = (spec.d, spec.w);
+    let mut batch = WindowBatch::zeros(spec, beta as f32);
+    batch.rows = queries.len();
+    for (bi, x) in queries.iter().enumerate() {
+        let qw = gp.gather_windows(x);
+        assert_eq!(qw.w_max, sw);
+        for di in 0..sd {
+            for wi in 0..sw {
+                let src = di * sw + wi;
+                let dst = (bi * sd + di) * sw + wi;
+                batch.phi[dst] = qw.phi[src] as f32;
+                batch.dphi[dst] = qw.dphi[src] as f32;
+                batch.bwin[dst] = qw.bwin[src] as f32;
+                for wj in 0..sw {
+                    batch.cwin[dst * sw + wj] = qw.cwin[src * sw + wj] as f32;
+                }
+                for dj in 0..sd {
+                    for wj in 0..sw {
+                        let srcm = (src * sd + dj) * sw + wj;
+                        let dstm =
+                            ((bi * sd + di) * sw + wi) * sd * sw + dj * sw + wj;
+                        batch.mwin[dstm] = qw.mwin[srcm] as f32;
+                    }
+                }
+            }
+        }
+        batch.kdiag[bi] = qw.kdiag as f32;
+    }
+    let out = exe.execute(&batch).unwrap();
+
+    // Native reference.
+    let acq = Acquisition::LcbMin { beta };
+    for (bi, x) in queries.iter().enumerate() {
+        let native = gp.predict(x, true);
+        let (aval, agrad) =
+            acq.value_grad(native.mean, native.var, &native.mean_grad, &native.var_grad);
+        let scale = native.mean.abs().max(1.0);
+        assert!(
+            (out.mu[bi] as f64 - native.mean).abs() < 1e-4 * scale,
+            "row {bi} mu: pjrt {} vs native {}",
+            out.mu[bi],
+            native.mean
+        );
+        assert!(
+            (out.svar[bi] as f64 - native.var).abs() < 1e-3 * native.var.max(0.1),
+            "row {bi} svar: pjrt {} vs native {}",
+            out.svar[bi],
+            native.var
+        );
+        assert!(
+            (out.acq[bi] as f64 - aval).abs() < 1e-3 * aval.abs().max(1.0),
+            "row {bi} acq: pjrt {} vs native {aval}",
+            out.acq[bi]
+        );
+        for d in 0..2 {
+            let g = out.gacq[bi * 2 + d] as f64;
+            assert!(
+                (g - agrad[d]).abs() < 2e-3 * agrad[d].abs().max(0.5),
+                "row {bi} gacq[{d}]: pjrt {g} vs native {}",
+                agrad[d]
+            );
+        }
+    }
+    // Outputs exist for all B rows (padding included).
+    assert_eq!(out.mu.len(), spec.b);
+}
+
+#[test]
+fn manifest_covers_default_dimensions() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts/ not built");
+        return;
+    };
+    let manifest = ArtifactManifest::load(&dir).unwrap();
+    for d in [2, 5, 10] {
+        assert!(
+            manifest.select("window_acq", d, 2, 64).is_some(),
+            "missing default artifact for D={d}"
+        );
+    }
+}
