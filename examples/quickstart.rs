@@ -1,5 +1,7 @@
 //! Quickstart: fit a sparse additive Matérn GP, learn the scale by MLE,
-//! and predict with variance + gradients — the 60-second tour of the API.
+//! predict with variance + gradients, then stream further observations
+//! through the *incremental* `observe` path (no refit per point) — the
+//! 60-second tour of the API.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
@@ -54,5 +56,23 @@ fn main() {
     println!("RMSE over the slice: {rmse:.4}");
     println!("M̃-cache: {hits} hits / {misses} misses ({resident} columns resident)");
     assert!(rmse < 0.2, "quickstart accuracy regression");
+
+    // Stream 25 more observations incrementally: each is a window-local KP
+    // patch + a warm-started Algorithm 4 solve — no full refit
+    // (DESIGN.md §FitState).
+    for _ in 0..25 {
+        let q: Vec<f64> = (0..d).map(|_| rng.uniform_in(0.0, 5.0)).collect();
+        gp.observe(&q, truth(&q) + 0.1 * rng.normal());
+    }
+    let out = gp.predict(&[2.5, 2.5, 2.5], false);
+    let (inserted, fallbacks, refreshes) = gp.incremental_stats();
+    println!(
+        "after 25 incremental observes: n={} μ={:+.3} s={:.4} \
+         ({inserted} inserts, {fallbacks} fallbacks, {refreshes} cache refreshes)",
+        gp.n(),
+        out.mean,
+        out.var
+    );
+    assert!(out.var.is_finite() && out.var >= 0.0);
     println!("quickstart OK");
 }

@@ -1,4 +1,4 @@
-//! **End-to-end system driver** (EXPERIMENTS.md §E2E): boots the full
+//! **End-to-end system driver** (DESIGN.md §E2E): boots the full
 //! three-layer stack in one process —
 //!
 //!   L3 rust coordinator (TCP, model registry, dynamic batcher)
@@ -20,6 +20,8 @@ use std::time::Instant;
 
 use addgp::bo::testfns::{schwefel, NoisyObjective};
 use addgp::coordinator::server::{Client, Server};
+use addgp::ensure;
+use addgp::util::error::Result;
 use addgp::util::Rng;
 
 fn percentile(sorted: &[f64], p: f64) -> f64 {
@@ -27,7 +29,7 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[idx]
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let d = 5;
     let server = Server::bind("127.0.0.1:0", true, -500.0, 500.0)?;
     let addr = server.local_addr();
@@ -40,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     let r = c.call(&format!(
         r#"{{"op":"create_model","d":{d},"nu2":1,"omega":0.01,"sigma2":1.0}}"#
     ))?;
-    anyhow::ensure!(r.get("ok").unwrap().as_bool() == Some(true), "create failed: {r}");
+    ensure!(r.get("ok").unwrap().as_bool() == Some(true), "create failed: {r}");
     let model = r.get("model").unwrap().as_usize().unwrap();
 
     // Stream 400 noisy Schwefel observations.
@@ -64,13 +66,13 @@ fn main() -> anyhow::Result<()> {
         xs.join(","),
         ys.join(",")
     ))?;
-    anyhow::ensure!(r.get("ok").unwrap().as_bool() == Some(true));
+    ensure!(r.get("ok").unwrap().as_bool() == Some(true));
     println!("ingested 400 observations in {:.2}s", t0.elapsed().as_secs_f64());
 
     // Fit hyperparameters server-side.
     let t0 = Instant::now();
     let r = c.call(&format!(r#"{{"op":"fit","model":{model},"steps":10}}"#))?;
-    anyhow::ensure!(r.get("ok").unwrap().as_bool() == Some(true));
+    ensure!(r.get("ok").unwrap().as_bool() == Some(true));
     println!("MLE fit (10 Adam steps) in {:.2}s", t0.elapsed().as_secs_f64());
 
     // Batched acquisition queries from 4 concurrent clients.
@@ -138,7 +140,7 @@ fn main() -> anyhow::Result<()> {
             x.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
         );
         let r = c.call(&req)?;
-        anyhow::ensure!(r.get("ok").unwrap().as_bool() == Some(true));
+        ensure!(r.get("ok").unwrap().as_bool() == Some(true));
     }
     println!(
         "20 suggest→observe BO rounds in {:.2}s; best f = {best:.3}",

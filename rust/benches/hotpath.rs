@@ -10,6 +10,7 @@ use addgp::gp::backfit::{BlockVec, GaussSeidel};
 use addgp::gp::dim::DimFactor;
 use addgp::gp::model::{AdditiveGP, AdditiveGpConfig};
 use addgp::kernels::matern::{Matern, Nu};
+use addgp::runtime::xla;
 use addgp::runtime::{ArtifactManifest, WindowBatch, WindowExecutable};
 use addgp::util::timer::bench;
 use addgp::util::Rng;
@@ -71,7 +72,13 @@ fn main() {
     if dir.join("manifest.json").exists() {
         let manifest = ArtifactManifest::load(&dir).unwrap();
         if let Some(spec) = manifest.select("window_acq", d, 2, 64) {
-            let client = xla::PjRtClient::cpu().unwrap();
+            let client = match xla::PjRtClient::cpu() {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("(skipping PJRT bench: client unavailable — {e})");
+                    return;
+                }
+            };
             let exe = WindowExecutable::load(&client, spec).unwrap();
             let mut batch = WindowBatch::zeros(spec, 2.0);
             batch.rows = spec.b;

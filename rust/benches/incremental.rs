@@ -1,0 +1,83 @@
+//! The tentpole bench: **observe-per-point vs refit-per-point** — the cost
+//! of absorbing one new observation into a trained posterior, as the old
+//! code did it (full `fit` + cold Algorithm 4) vs the incremental
+//! `FitState` path (window-local KP patch + banded LU sweep + warm-started
+//! PCG). See DESIGN.md §FitState; the equivalence of the two paths is
+//! enforced by `tests/incremental.rs`.
+//!
+//! ```sh
+//! cargo bench --bench incremental            # n ∈ {1k, 10k}
+//! cargo bench --bench incremental -- --full  # adds n = 100k
+//! ```
+
+use std::time::Instant;
+
+use addgp::gp::model::{AdditiveGP, AdditiveGpConfig};
+use addgp::kernels::matern::Nu;
+use addgp::util::Rng;
+
+fn data(n: usize, d: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let x: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..d).map(|_| rng.uniform_in(0.0, 10.0)).collect()).collect();
+    let y: Vec<f64> =
+        x.iter().map(|r| r.iter().map(|v| v.sin()).sum::<f64>() + 0.1 * rng.normal()).collect();
+    (x, y)
+}
+
+fn cfg() -> AdditiveGpConfig {
+    let mut cfg = AdditiveGpConfig::default();
+    cfg.nu = Nu::ThreeHalves;
+    cfg.omega0 = 1.0;
+    cfg
+}
+
+fn main() {
+    let d = 4;
+    let full = std::env::args().any(|a| a == "--full");
+    let sizes: &[usize] = if full { &[1_000, 10_000, 100_000] } else { &[1_000, 10_000] };
+    println!("# observe-per-point vs refit-per-point (D = {d}, Matérn-3/2)\n");
+    println!("{:>8}  {:>14}  {:>14}  {:>9}", "n", "observe ms/pt", "refit ms/pt", "speedup");
+
+    for &n in sizes {
+        let k = if n >= 100_000 { 4 } else { 12 };
+        let (x, y) = data(n + k, d, n as u64);
+
+        // --- Incremental path: observe + warm posterior per point. -------
+        let mut gp = AdditiveGP::new(cfg(), d);
+        gp.fit(&x[..n], &y[..n]);
+        gp.ensure_posterior();
+        let t0 = Instant::now();
+        for i in 0..k {
+            gp.observe(&x[n + i], y[n + i]);
+            gp.ensure_posterior();
+        }
+        let t_obs = t0.elapsed().as_secs_f64() / k as f64;
+        let (inc, fall, _) = gp.incremental_stats();
+        assert_eq!(fall, 0, "no degenerate fallbacks expected on random data");
+        assert_eq!(inc as usize, k * d);
+
+        // --- Old path: full fit + cold posterior per point. --------------
+        let mut gp2 = AdditiveGP::new(cfg(), d);
+        let mut xs_acc: Vec<Vec<f64>> = x[..n].to_vec();
+        let mut ys_acc: Vec<f64> = y[..n].to_vec();
+        gp2.fit(&xs_acc, &ys_acc);
+        gp2.ensure_posterior();
+        let t0 = Instant::now();
+        for i in 0..k {
+            xs_acc.push(x[n + i].clone());
+            ys_acc.push(y[n + i]);
+            gp2.fit(&xs_acc, &ys_acc);
+            gp2.ensure_posterior();
+        }
+        let t_refit = t0.elapsed().as_secs_f64() / k as f64;
+
+        println!(
+            "{n:>8}  {:>14.3}  {:>14.3}  {:>8.1}×",
+            t_obs * 1e3,
+            t_refit * 1e3,
+            t_refit / t_obs
+        );
+    }
+    println!("\n(equivalence of the two paths: cargo test --test incremental)");
+}

@@ -1,6 +1,14 @@
 //! **Algorithm 1** — the sequential Bayesian-optimization driver, generic
 //! over the GP engine so the sparse GKP model and the dense FGP baseline run
 //! the identical protocol (paper §7.2).
+//!
+//! The sparse engine runs **observe-per-sample**: each new evaluation is
+//! absorbed through `AdditiveGP::observe`'s incremental fit-state update —
+//! `O(log n)`-window KP patching plus an `O(ν²n)` small-constant banded
+//! factor sweep and a warm-started Algorithm 4 solve — and a *full* refit
+//! happens only at the `hyper_every` boundaries where `fit_hypers`
+//! re-learns ω (DESIGN.md §FitState; `benches/incremental.rs` measures the
+//! per-sample win over refit-per-sample).
 
 use crate::baselines::full_gp::FullGP;
 use crate::bo::acquisition::Acquisition;
@@ -22,6 +30,7 @@ pub trait BoEngine {
 }
 
 impl BoEngine for AdditiveGP {
+    /// Incremental: patches the fit state in place (no refit per sample).
     fn observe(&mut self, x: &[f64], y: f64) {
         AdditiveGP::observe(self, x, y);
     }

@@ -13,6 +13,7 @@ use crate::coordinator::protocol::Response;
 use crate::gp::model::{AdditiveGP, AdditiveGpConfig};
 use crate::gp::train::TrainCfg;
 use crate::kernels::matern::Nu;
+use crate::runtime::xla;
 use crate::runtime::{ArtifactManifest, WindowBatch, WindowExecutable};
 use crate::util::Rng;
 
@@ -151,6 +152,8 @@ impl ModelEngine {
         match cmd {
             Command::Stop => return false,
             Command::Observe { x, y, reply } => {
+                // Incremental path: O(log n) window work + banded sweeps per
+                // point — serving no longer pays O(n log n) per ingest.
                 self.gp.observe(&x, y);
                 let _ = reply.send(Response::Ok);
             }
@@ -158,9 +161,9 @@ impl ModelEngine {
                 if xs.len() != ys.len() {
                     let _ = reply.send(Response::Error("xs/ys length mismatch".into()));
                 } else {
-                    for (x, y) in xs.iter().zip(&ys) {
-                        self.gp.observe(x, *y);
-                    }
+                    // Incremental ingest: small batches patch the fit state
+                    // point by point; large ones amortize via one refit.
+                    self.gp.observe_batch(&xs, &ys);
                     let _ = reply.send(Response::Ok);
                 }
             }

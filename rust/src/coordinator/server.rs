@@ -8,10 +8,12 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 
+use crate::anyhow;
 use crate::coordinator::engine::{Command, EngineConfig, ModelEngine};
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::protocol::{Request, Response};
 use crate::kernels::matern::Nu;
+use crate::util::error::Result;
 
 /// Shared server state.
 struct Shared {
@@ -36,7 +38,7 @@ pub struct Server {
 impl Server {
     /// Bind to `addr` (e.g. `127.0.0.1:0`). `use_pjrt=false` skips the PJRT
     /// client entirely (native-only engines).
-    pub fn bind(addr: &str, use_pjrt: bool, lo: f64, hi: f64) -> anyhow::Result<Self> {
+    pub fn bind(addr: &str, use_pjrt: bool, lo: f64, hi: f64) -> Result<Self> {
         let listener = TcpListener::bind(addr)?;
         Ok(Server {
             listener,
@@ -62,7 +64,7 @@ impl Server {
     }
 
     /// Accept-loop. Returns when a client sends `shutdown`.
-    pub fn serve(&self) -> anyhow::Result<()> {
+    pub fn serve(&self) -> Result<()> {
         for stream in self.listener.incoming() {
             if self.shared.shutting_down.load(Ordering::SeqCst) {
                 break;
@@ -212,18 +214,18 @@ pub struct Client {
 }
 
 impl Client {
-    pub fn connect(addr: std::net::SocketAddr) -> anyhow::Result<Self> {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Self> {
         let stream = TcpStream::connect(addr)?;
         let writer = stream.try_clone()?;
         Ok(Client { reader: BufReader::new(stream), writer })
     }
 
     /// Send one JSON line and read one JSON-line reply.
-    pub fn call(&mut self, req: &str) -> anyhow::Result<crate::util::Json> {
+    pub fn call(&mut self, req: &str) -> Result<crate::util::Json> {
         self.writer.write_all(req.as_bytes())?;
         self.writer.write_all(b"\n")?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
-        crate::util::Json::parse(&line).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
+        crate::util::Json::parse(&line).map_err(|e| anyhow!("bad reply: {e}"))
     }
 }

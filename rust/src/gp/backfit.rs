@@ -59,17 +59,42 @@ impl<'a> GaussSeidel<'a> {
     /// Solve `[K^{-1}+σ⁻²SS^T] ṽ = v` — PCG with a symmetric block-GS
     /// preconditioner (the production path).
     pub fn solve(&self, v: &BlockVec) -> (BlockVec, GsStats) {
+        self.solve_from(v, None)
+    }
+
+    /// [`GaussSeidel::solve`] with an optional warm start `x0`: the
+    /// incremental-observe path seeds the iteration with the previous
+    /// solution ṽ (extended by one entry), turning the posterior update into
+    /// a handful of PCG iterations instead of a cold solve (DESIGN.md
+    /// §FitState). Convergence is judged against `‖v‖` exactly as in the
+    /// cold solve, so a warm start changes cost, never accuracy.
+    pub fn solve_from(&self, v: &BlockVec, x0: Option<&BlockVec>) -> (BlockVec, GsStats) {
         let dd = self.dims.len();
         assert_eq!(v.len(), dd);
         let n = self.dims[0].n();
         let vnorm = norm_blocks(v).max(1e-300);
 
-        let mut x: BlockVec = vec![vec![0.0; n]; dd];
-        let mut r = v.clone();
+        let (mut x, mut r) = match x0 {
+            Some(x0) => {
+                assert_eq!(x0.len(), dd);
+                assert_eq!(x0[0].len(), n);
+                let mx = self.apply(x0);
+                let r: BlockVec = v
+                    .iter()
+                    .zip(&mx)
+                    .map(|(vb, mb)| vb.iter().zip(mb).map(|(a, b)| a - b).collect())
+                    .collect();
+                (x0.clone(), r)
+            }
+            None => (vec![vec![0.0; n]; dd], v.clone()),
+        };
+        let mut stats = GsStats { sweeps: 0, rel_residual: norm_blocks(&r) / vnorm };
+        if stats.rel_residual < self.tol {
+            return (x, stats); // warm start already converged
+        }
         let mut z = self.precond(&r);
         let mut p = z.clone();
         let mut rz = dot_blocks(&r, &z);
-        let mut stats = GsStats { sweeps: 0, rel_residual: 1.0 };
         for it in 0..self.max_sweeps {
             let mp = self.apply(&p);
             let pmp = dot_blocks(&p, &mp);
@@ -228,11 +253,20 @@ impl<'a> GaussSeidel<'a> {
     /// Convenience: solve with the *shared* right-hand side `S w / σ²`
     /// (every block gets `w/σ²`) — the `b_Y` path of eq. (12).
     pub fn solve_shared(&self, w: &[f64]) -> (BlockVec, GsStats) {
+        self.solve_shared_from(w, None)
+    }
+
+    /// [`GaussSeidel::solve_shared`] with an optional warm start.
+    pub fn solve_shared_from(
+        &self,
+        w: &[f64],
+        x0: Option<&BlockVec>,
+    ) -> (BlockVec, GsStats) {
         let inv_s2 = 1.0 / self.sigma2_y;
         let v: BlockVec = (0..self.dims.len())
             .map(|_| w.iter().map(|&x| x * inv_s2).collect())
             .collect();
-        self.solve(&v)
+        self.solve_from(&v, x0)
     }
 }
 
@@ -346,6 +380,48 @@ mod tests {
         for d in 0..2 {
             for i in 0..25 {
                 assert!((a[d][i] - b[d][i]).abs() < 1e-5 * scale.max(1.0));
+            }
+        }
+    }
+
+    /// A warm start at the exact solution returns immediately; a perturbed
+    /// warm start converges to the same answer as the cold solve.
+    #[test]
+    fn warm_start_is_exact_and_cheap() {
+        let sigma2 = 0.8;
+        let dims = make_dims(22, 3, Nu::Half, sigma2, 12);
+        let gs = GaussSeidel::new(&dims, sigma2);
+        let mut rng = Rng::new(13);
+        let v: BlockVec = (0..3).map(|_| rng.normal_vec(22)).collect();
+        let (cold, cold_stats) = gs.solve(&v);
+        assert!(cold_stats.rel_residual < 1e-9);
+
+        let (warm, warm_stats) = gs.solve_from(&v, Some(&cold));
+        assert_eq!(warm_stats.sweeps, 0, "exact guess must exit immediately");
+        for d in 0..3 {
+            for i in 0..22 {
+                assert_eq!(warm[d][i], cold[d][i]);
+            }
+        }
+
+        let mut guess = cold.clone();
+        for b in &mut guess {
+            for x in b.iter_mut() {
+                *x += 0.01 * rng.normal();
+            }
+        }
+        let (re, re_stats) = gs.solve_from(&v, Some(&guess));
+        assert!(re_stats.rel_residual < 1e-9);
+        assert!(
+            re_stats.sweeps <= cold_stats.sweeps,
+            "warm {} vs cold {}",
+            re_stats.sweeps,
+            cold_stats.sweeps
+        );
+        let scale = cold.iter().flat_map(|x| x.iter()).fold(0.0f64, |m, &x| m.max(x.abs()));
+        for d in 0..3 {
+            for i in 0..22 {
+                assert!((re[d][i] - cold[d][i]).abs() < 1e-6 * scale.max(1.0));
             }
         }
     }

@@ -27,18 +27,53 @@ pub struct DimFactor {
     /// Lazily-built `2ν`-band of `Φ_d^{-T} A_d^{-1}` (Algorithm 5).
     c_band: Option<Banded>,
     pub sigma2_y: f64,
+    /// Whether `xs` is strictly increasing. Degenerate (duplicate-cluster)
+    /// states disable the incremental path — every insert falls back to a
+    /// full rebuild until a rebuild separates the points again.
+    monotone: bool,
 }
 
 impl DimFactor {
     /// Factorize dimension `d`'s covariance for scattered `points`.
     pub fn new(points: &[f64], kernel: Matern, sigma2_y: f64) -> Self {
         let kp = KpFactorization::new(points, kernel);
-        let t = kp.a.add_scaled(&kp.phi, 1.0 / sigma2_y);
-        let t_lu = t.lu();
-        let phi_lu = kp.phi.lu();
-        let phit_lu = kp.phi.transpose().lu();
-        let a_lu = kp.a.lu();
-        DimFactor { kp, t_lu, phi_lu, phit_lu, a_lu, gkp: None, c_band: None, sigma2_y }
+        let monotone = kp.xs.windows(2).all(|p| p[1] > p[0]);
+        let (t_lu, phi_lu, phit_lu, a_lu) = factor_lus(&kp, sigma2_y);
+        DimFactor {
+            kp,
+            t_lu,
+            phi_lu,
+            phit_lu,
+            a_lu,
+            gkp: None,
+            c_band: None,
+            sigma2_y,
+            monotone,
+        }
+    }
+
+    /// Incrementally absorb one new point (appended in data order):
+    /// `O(2ν+1)` packet re-solves via [`KpFactorization::insert`], then an
+    /// `O(ν²n)` banded LU sweep per factor — no `O(n)` moment-system rebuild
+    /// and no dense work (DESIGN.md §FitState). The lazy GKP and
+    /// band-of-inverse are invalidated and rebuilt on next use.
+    ///
+    /// Returns the sorted insertion position, or `None` when the point
+    /// cannot be inserted incrementally (degenerate duplicate cluster) — the
+    /// caller should rebuild this dimension with [`DimFactor::new`].
+    pub fn insert_point(&mut self, x: f64) -> Option<usize> {
+        if !self.monotone {
+            return None;
+        }
+        let pos = self.kp.insert(x)?;
+        let (t_lu, phi_lu, phit_lu, a_lu) = factor_lus(&self.kp, self.sigma2_y);
+        self.t_lu = t_lu;
+        self.phi_lu = phi_lu;
+        self.phit_lu = phit_lu;
+        self.a_lu = a_lu;
+        self.gkp = None;
+        self.c_band = None;
+        Some(pos)
     }
 
     pub fn n(&self) -> usize {
@@ -117,6 +152,17 @@ impl DimFactor {
     }
 }
 
+/// The four banded LUs every consumer reuses, from one KP factorization —
+/// shared by the fresh build and the incremental insert so both paths stay
+/// factor-for-factor identical.
+fn factor_lus(
+    kp: &KpFactorization,
+    sigma2_y: f64,
+) -> (BandedLU, BandedLU, BandedLU, BandedLU) {
+    let t = kp.a.add_scaled(&kp.phi, 1.0 / sigma2_y);
+    (t.lu(), kp.phi.lu(), kp.phi.transpose().lu(), kp.a.lu())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,6 +204,32 @@ mod tests {
         let r = f.kinv_sorted(&u);
         for i in 0..25 {
             assert!((r[i] + u[i] / 0.5 - w[i]).abs() < 1e-7, "i={i}");
+        }
+    }
+
+    /// `insert_point` produces factors that act identically to a
+    /// from-scratch build on the extended point set.
+    #[test]
+    fn insert_point_matches_fresh_build() {
+        for nu in [Nu::Half, Nu::ThreeHalves] {
+            let mut rng = Rng::new(31);
+            let mut pts = rng.uniform_vec(24, 0.0, 4.0);
+            let kern = Matern::new(nu, 1.1);
+            let mut inc = DimFactor::new(&pts, kern, 0.7);
+            for &x in &[1.234, -0.4, 4.6] {
+                let pos = inc.insert_point(x).expect("distinct point");
+                pts.push(x);
+                let fresh = DimFactor::new(&pts, kern, 0.7);
+                assert_eq!(inc.kp.xs[pos], x);
+                let n = pts.len();
+                let v = rng.normal_vec(n);
+                let (ki, kf) = (inc.k_sorted(&v), fresh.k_sorted(&v));
+                let (gi, gf) = (inc.gs_block_solve_sorted(&v), fresh.gs_block_solve_sorted(&v));
+                for i in 0..n {
+                    assert!((ki[i] - kf[i]).abs() < 1e-9, "{nu:?} K i={i}");
+                    assert!((gi[i] - gf[i]).abs() < 1e-9, "{nu:?} T i={i}");
+                }
+            }
         }
     }
 

@@ -233,7 +233,7 @@ pub fn nll_grad(dims: &mut [DimFactor], sigma2_y: f64, y: &[f64], cfg: &Stochast
     let gs = GaussSeidel::new(dims, sigma2_y);
     let ry = r_matvec(dims, sigma2_y, &gs, y);
     // Probe solves feed a Monte-Carlo trace with O(1/sqrt(Q)) error - a
-    // loose solver tolerance is statistically free (EXPERIMENTS.md Perf).
+    // loose solver tolerance is statistically free (DESIGN.md §Perf).
     let mut gs_probe = GaussSeidel::new(dims, sigma2_y);
     gs_probe.tol = 1e-6;
 

@@ -1,10 +1,15 @@
 //! The sparse additive-GP engine — paper §3 and §5.
 //!
-//! * [`dim`] — per-dimension factorization state (KP, GKP, the banded LUs).
+//! * [`dim`] — per-dimension factorization state (KP, GKP, the banded LUs),
+//!   incrementally updatable via `DimFactor::insert_point`.
 //! * [`backfit`] — block Gauss–Seidel for `[K^{-1}+σ⁻²SS^T]^{-1}v`
-//!   (**Algorithm 4**).
+//!   (**Algorithm 4**), with warm-started PCG (`solve_from`).
 //! * [`posterior`] — posterior mean (12) / variance (13), sparse windows,
-//!   band-of-inverse (via **Algorithm 5**) and the lazy `M̃`-column cache.
+//!   band-of-inverse (via **Algorithm 5**) and the lazy `M̃`-column cache
+//!   with windowed invalidation.
+//! * [`fit_state`] — the [`fit_state::FitState`] layer owning the trained
+//!   factorizations + posterior vectors, with `observe` as a first-class
+//!   incremental operation (DESIGN.md §FitState).
 //! * [`likelihood`] — log-likelihood (14), its gradient (15), power method
 //!   (**Algorithm 6**), Hutchinson trace (**Algorithm 7**) and the stochastic
 //!   log-determinant (**Algorithm 8**).
@@ -13,6 +18,7 @@
 
 pub mod backfit;
 pub mod dim;
+pub mod fit_state;
 pub mod likelihood;
 pub mod model;
 pub mod posterior;
@@ -20,4 +26,5 @@ pub mod train;
 
 pub use backfit::{BlockVec, GaussSeidel};
 pub use dim::DimFactor;
+pub use fit_state::FitState;
 pub use model::{AdditiveGP, AdditiveGpConfig};

@@ -1,11 +1,14 @@
 //! [`AdditiveGP`] — the user-facing façade over the sparse engine: fit,
-//! sequentially observe, learn hyperparameters, and predict mean/variance
-//! (with gradients) at `O(log n)`→`O(1)` per query.
+//! sequentially observe *incrementally* (no refit per point), learn
+//! hyperparameters, and predict mean/variance (with gradients) at
+//! `O(log n)`→`O(1)` per query. The trained state lives in
+//! [`crate::gp::fit_state::FitState`]; this façade adds data bookkeeping,
+//! the `M̃` cache, and hyperparameter training on top.
 
-use crate::gp::backfit::GaussSeidel;
 use crate::gp::dim::DimFactor;
+use crate::gp::fit_state::FitState;
 use crate::gp::likelihood::{self, StochasticCfg};
-use crate::gp::posterior::{self, MTildeCache, Posterior, PredictOut};
+use crate::gp::posterior::{self, MTildeCache, PredictOut};
 use crate::gp::train::{self, TrainCfg};
 use crate::kernels::matern::{Matern, Nu};
 
@@ -49,8 +52,8 @@ pub struct AdditiveGP {
     /// Column-major data: `x_cols[d][i]`.
     x_cols: Vec<Vec<f64>>,
     y: Vec<f64>,
-    dims: Option<Vec<DimFactor>>,
-    post: Option<Posterior>,
+    /// Trained factorizations + posterior (None until `min_points`).
+    state: Option<FitState>,
     cache: MTildeCache,
 }
 
@@ -61,8 +64,7 @@ impl AdditiveGP {
             omegas: vec![cfg.omega0; d],
             x_cols: vec![Vec::new(); d],
             y: Vec::new(),
-            dims: None,
-            post: None,
+            state: None,
             cache: MTildeCache::new(cfg.cache_capacity),
             cfg,
         }
@@ -96,85 +98,117 @@ impl AdditiveGP {
         self.refit();
     }
 
-    /// Append one observation (sequential sampling). Refits the banded
-    /// factorizations (`O(Dn)`) and invalidates the posterior and caches.
+    /// Append one observation (sequential sampling) **incrementally**: once
+    /// the model is active, each dimension patches its KP factorization in
+    /// place (`O(log n)` search + `O(2ν+1)` packet re-solves + an `O(ν²n)`
+    /// banded LU sweep), the `M̃` cache is invalidated only in the `2ν`
+    /// window around the insertion, and the next posterior solve warm-starts
+    /// from the previous ṽ — no full refit (DESIGN.md §FitState).
     pub fn observe(&mut self, x: &[f64], y: f64) {
         assert_eq!(x.len(), self.input_dim());
         for (d, &v) in x.iter().enumerate() {
             self.x_cols[d].push(v);
         }
         self.y.push(y);
-        if self.n() >= self.min_points() {
+        if self.n() < self.min_points() {
+            return;
+        }
+        if self.state.is_none() {
+            self.refit(); // crossing min_points: first full build
+            return;
+        }
+        let state = self.state.as_mut().unwrap();
+        let positions = state.observe(x, &self.x_cols);
+        self.cache.on_insert(&positions, self.cfg.nu.q() + 1);
+    }
+
+    /// Append a batch of observations. Small batches (relative to the
+    /// current data size) go through the incremental path point by point;
+    /// large batches amortize better through one full refit.
+    pub fn observe_batch(&mut self, xs: &[Vec<f64>], ys: &[f64]) {
+        assert_eq!(xs.len(), ys.len());
+        let incremental = self.state.is_some() && xs.len() * 4 < self.n().max(1);
+        if incremental {
+            for (x, &y) in xs.iter().zip(ys) {
+                self.observe(x, y);
+            }
+        } else {
+            for (x, &y) in xs.iter().zip(ys) {
+                assert_eq!(x.len(), self.input_dim());
+                for (d, &v) in x.iter().enumerate() {
+                    self.x_cols[d].push(v);
+                }
+                self.y.push(y);
+            }
             self.refit();
         }
     }
 
-    /// Rebuild per-dimension factorizations with the current hyperparameters.
+    /// Rebuild per-dimension factorizations with the current hyperparameters
+    /// (hyperparameter changes and large batches; the per-point path is
+    /// [`AdditiveGP::observe`]).
     pub fn refit(&mut self) {
+        self.cache.clear();
         if self.n() < self.min_points() {
-            self.dims = None;
-            self.post = None;
+            self.state = None;
             return;
         }
         let sigma2 = self.cfg.sigma2_y;
         let nu = self.cfg.nu;
-        self.dims = Some(
-            self.x_cols
-                .iter()
-                .zip(&self.omegas)
-                .map(|(col, &om)| DimFactor::new(col, Matern::new(nu, om), sigma2))
-                .collect(),
-        );
-        self.post = None;
-        self.cache.clear();
+        let dims: Vec<DimFactor> = self
+            .x_cols
+            .iter()
+            .zip(&self.omegas)
+            .map(|(col, &om)| DimFactor::new(col, Matern::new(nu, om), sigma2))
+            .collect();
+        self.state = Some(FitState::new(
+            dims,
+            sigma2,
+            self.cfg.gs_max_sweeps,
+            self.cfg.gs_tol,
+        ));
     }
 
-    fn gs<'a>(&self, dims: &'a [DimFactor]) -> GaussSeidel<'a> {
-        let mut gs = GaussSeidel::new(dims, self.cfg.sigma2_y);
-        gs.max_sweeps = self.cfg.gs_max_sweeps;
-        gs.tol = self.cfg.gs_tol;
-        gs
-    }
-
-    /// Ensure the posterior state (`b_Y`) exists — one Algorithm 4 solve.
+    /// Ensure the posterior state (`b_Y`) exists — one (warm-started)
+    /// Algorithm 4 solve.
     pub fn ensure_posterior(&mut self) {
-        if self.post.is_some() {
-            return;
-        }
-        let dims = self.dims.as_ref().expect("fit() with enough points first");
-        let gs = self.gs(dims);
-        self.post = Some(posterior::compute_posterior(dims, self.cfg.sigma2_y, &self.y, &gs));
+        let state = self.state.as_mut().expect("fit() with enough points first");
+        state.ensure_posterior(&self.y);
     }
 
     /// Posterior mean at `x` — `O(D log n)` given the posterior.
     pub fn mean(&mut self, x: &[f64]) -> f64 {
         self.ensure_posterior();
-        posterior::mean(self.dims.as_ref().unwrap(), self.post.as_ref().unwrap(), x)
+        let state = self.state.as_ref().unwrap();
+        posterior::mean(state.dims(), state.posterior().unwrap(), x)
     }
 
     /// Posterior mean and variance (plus gradients if requested).
     pub fn predict(&mut self, x: &[f64], want_grad: bool) -> PredictOut {
         self.ensure_posterior();
         let sigma2 = self.cfg.sigma2_y;
-        let dims = self.dims.as_mut().unwrap();
-        let post = self.post.as_ref().unwrap();
+        let state = self.state.as_mut().unwrap();
+        let (dims, post) = state.parts_mut();
         posterior::predict_cached(dims, sigma2, post, &mut self.cache, x, want_grad)
     }
 
     /// Negative log marginal likelihood (stochastic log-det).
     pub fn nll(&self) -> f64 {
-        let dims = self.dims.as_ref().expect("fit first");
-        likelihood::nll(dims, self.cfg.sigma2_y, &self.y, &self.cfg.stochastic)
+        let state = self.state.as_ref().expect("fit first");
+        likelihood::nll(state.dims(), self.cfg.sigma2_y, &self.y, &self.cfg.stochastic)
     }
 
     /// Gradient of the NLL w.r.t. each ω_d (and σ²).
     pub fn nll_grad(&mut self) -> likelihood::NllGrad {
-        let dims = self.dims.as_mut().expect("fit first");
-        likelihood::nll_grad(dims, self.cfg.sigma2_y, &self.y, &self.cfg.stochastic)
+        let sigma2 = self.cfg.sigma2_y;
+        let scfg = self.cfg.stochastic;
+        let state = self.state.as_mut().expect("fit first");
+        likelihood::nll_grad(state.dims_mut(), sigma2, &self.y, &scfg)
     }
 
-    /// Learn the scales by Adam (paper §5.1); updates `self.omegas` and the
-    /// factorizations.
+    /// Learn the scales by Adam (paper §5.1); updates `self.omegas` and
+    /// rebuilds the fit state (full refit — the `hyper_every` boundary of
+    /// the BO loop).
     pub fn optimize_hypers(&mut self, tcfg: &TrainCfg) -> Vec<train::TrainStep> {
         let (omegas, dims, hist) = train::optimize_omegas(
             &self.x_cols,
@@ -186,8 +220,12 @@ impl AdditiveGP {
             &self.cfg.stochastic,
         );
         self.omegas = omegas;
-        self.dims = Some(dims);
-        self.post = None;
+        self.state = Some(FitState::new(
+            dims,
+            self.cfg.sigma2_y,
+            self.cfg.gs_max_sweeps,
+            self.cfg.gs_tol,
+        ));
         self.cache.clear();
         hist
     }
@@ -197,14 +235,23 @@ impl AdditiveGP {
     pub fn gather_windows(&mut self, x: &[f64]) -> posterior::QueryWindows {
         self.ensure_posterior();
         let sigma2 = self.cfg.sigma2_y;
-        let dims = self.dims.as_mut().unwrap();
-        let post = self.post.as_ref().unwrap();
+        let state = self.state.as_mut().unwrap();
+        let (dims, post) = state.parts_mut();
         posterior::gather_windows(dims, sigma2, post, &mut self.cache, x)
     }
 
     /// Cache statistics `(hits, misses, resident columns)`.
     pub fn cache_stats(&self) -> (u64, u64, usize) {
         (self.cache.hits, self.cache.misses, self.cache.len())
+    }
+
+    /// Incremental-path statistics `(incremental inserts, fallback
+    /// rebuilds, stale-column refreshes)` — zero before activation.
+    pub fn incremental_stats(&self) -> (u64, u64, u64) {
+        match &self.state {
+            Some(s) => (s.incremental_inserts, s.fallback_rebuilds, self.cache.refreshes),
+            None => (0, 0, self.cache.refreshes),
+        }
     }
 
     /// Data access for baselines/benchmarks.
@@ -214,7 +261,12 @@ impl AdditiveGP {
 
     /// Immutable access to the factorizations (None before `fit`).
     pub fn dims(&self) -> Option<&[DimFactor]> {
-        self.dims.as_deref()
+        self.state.as_ref().map(|s| s.dims())
+    }
+
+    /// Immutable access to the trained fit state (None before `fit`).
+    pub fn fit_state(&self) -> Option<&FitState> {
+        self.state.as_ref()
     }
 }
 

@@ -8,7 +8,7 @@
 //! are computed on demand with Algorithm 4 and memoized in [`MTildeCache`],
 //! which is what makes small-step acquisition ascent `O(1)` amortized (§6).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use crate::gp::backfit::{BlockVec, GaussSeidel, GsStats};
 use crate::gp::dim::DimFactor;
@@ -24,8 +24,21 @@ pub struct Posterior {
 
 /// Compute the posterior state (`O(n log n)`): one Algorithm 4 solve with the
 /// shared right-hand side `S Y/σ²`, then one banded `Φ^T`-solve per dim.
-pub fn compute_posterior(dims: &[DimFactor], sigma2_y: f64, y: &[f64], gs: &GaussSeidel) -> Posterior {
-    let (tilde, gs_stats) = gs.solve_shared(y);
+/// (The noise variance enters through the solver, which owns `σ_y²`.)
+pub fn compute_posterior(dims: &[DimFactor], y: &[f64], gs: &GaussSeidel) -> Posterior {
+    compute_posterior_warm(dims, y, gs, None).0
+}
+
+/// [`compute_posterior`] with an optional warm start for the Algorithm 4
+/// solve, returning the raw solution ṽ alongside so the caller
+/// (`FitState`) can seed the *next* solve with it.
+pub fn compute_posterior_warm(
+    dims: &[DimFactor],
+    y: &[f64],
+    gs: &GaussSeidel,
+    guess: Option<&BlockVec>,
+) -> (Posterior, BlockVec) {
+    let (tilde, gs_stats) = gs.solve_shared_from(y, guess);
     let b = dims
         .iter()
         .zip(&tilde)
@@ -34,8 +47,7 @@ pub fn compute_posterior(dims: &[DimFactor], sigma2_y: f64, y: &[f64], gs: &Gaus
             dim.phit_lu.solve(&ts)
         })
         .collect();
-    let _ = sigma2_y;
-    Posterior { b, gs_stats }
+    (Posterior { b, gs_stats }, tilde)
 }
 
 /// Posterior mean `μ_n(x*) = Σ_d φ_d(x*_d)·b_d` — `O(D log n)`.
@@ -68,8 +80,13 @@ pub fn mean_grad(dims: &[DimFactor], post: &Posterior, x: &[f64]) -> Vec<f64> {
 #[derive(Default)]
 pub struct MTildeCache {
     cols: HashMap<(u32, u32), Vec<Vec<f64>>>,
+    /// Columns carried across an incremental observe: values predate the
+    /// insertion, so they serve only as PCG warm starts until refreshed.
+    stale: HashSet<(u32, u32)>,
     pub hits: u64,
     pub misses: u64,
+    /// Stale columns recomputed with a warm start after an observe.
+    pub refreshes: u64,
     /// Queries answered by the one-shot single-solve path (see
     /// [`predict_cached`]'s cold-start policy).
     pub single_solves: u64,
@@ -88,7 +105,54 @@ impl MTildeCache {
 
     pub fn clear(&mut self) {
         self.cols.clear();
+        self.stale.clear();
         self.order.clear();
+        self.visits.clear();
+    }
+
+    /// Windowed invalidation after an incremental observe at sorted position
+    /// `positions[d]` in each dimension (KP half-bandwidth `w = ν+1/2`).
+    ///
+    /// Columns whose `2ν`-window overlaps the insertion are *evicted* — their
+    /// Φ-window structure changed, so the old values are a poor basis.
+    /// Every surviving column is re-keyed (sorted indices at or above the
+    /// insertion shift by one), gets a zero entry spliced in at each
+    /// dimension's insertion position, and is marked **stale**: it is served
+    /// again only after an exact warm-started re-solve in
+    /// [`MTildeCache::column`]. Staleness therefore never leaks into
+    /// results — it only converts cold `O(Dn)`-solve misses into a few
+    /// warm PCG iterations.
+    pub fn on_insert(&mut self, positions: &[usize], w: usize) {
+        // Re-keying splices a zero into every dim of every surviving column
+        // (`O(resident·D·n)`). That's a win for the handful of columns a
+        // local acquisition ascent holds, but a near-full cache would make
+        // this dwarf the factor sweep itself — there, dropping everything
+        // and letting columns rebuild on demand is strictly cheaper.
+        const REMAP_MAX_COLS: usize = 64;
+        if self.cols.len() > REMAP_MAX_COLS {
+            self.clear();
+            return;
+        }
+        let reach = (2 * w) as isize;
+        let old: Vec<((u32, u32), Vec<Vec<f64>>)> = self.cols.drain().collect();
+        self.stale.clear();
+        let mut remap: HashMap<(u32, u32), (u32, u32)> = HashMap::new();
+        for ((dcol, j), mut col) in old {
+            let p = positions[dcol as usize];
+            if (j as isize - p as isize).abs() <= reach {
+                continue; // evict: window overlaps the inserted point
+            }
+            let nj = if j as usize >= p { j + 1 } else { j };
+            for (d, v) in col.iter_mut().enumerate() {
+                v.insert(positions[d], 0.0);
+            }
+            self.stale.insert((dcol, nj));
+            remap.insert((dcol, j), (dcol, nj));
+            self.cols.insert((dcol, nj), col);
+        }
+        let order: Vec<(u32, u32)> =
+            self.order.iter().filter_map(|k| remap.get(k).copied()).collect();
+        self.order = order;
         self.visits.clear();
     }
 
@@ -101,11 +165,15 @@ impl MTildeCache {
         prev
     }
 
-    /// How many of the window columns for `(dcol, j)` are resident.
+    /// How many of the window columns for `(dcol, j)` are resident and
+    /// fresh (stale columns still cost a solve, so they don't count).
     fn cached_count(&self, needs: &[(usize, usize)]) -> usize {
         needs
             .iter()
-            .filter(|&&(d, j)| self.cols.contains_key(&(d as u32, j as u32)))
+            .filter(|&&(d, j)| {
+                let key = (d as u32, j as u32);
+                self.cols.contains_key(&key) && !self.stale.contains(&key)
+            })
             .count()
     }
 
@@ -118,6 +186,10 @@ impl MTildeCache {
     }
 
     /// Column `(d', j)` of `M̃` (all `D × n` sorted-coordinate entries).
+    ///
+    /// A stale column (carried across an incremental observe) is re-solved
+    /// before being served, using the stale values as the PCG warm start —
+    /// exact results at a fraction of a cold miss.
     fn column<'c>(
         &'c mut self,
         dims: &[DimFactor],
@@ -126,17 +198,36 @@ impl MTildeCache {
         j: usize,
     ) -> &'c Vec<Vec<f64>> {
         let key = (dcol as u32, j as u32);
-        if self.cols.contains_key(&key) {
+        let resident = self.cols.contains_key(&key);
+        let is_stale = resident && self.stale.contains(&key);
+        if resident && !is_stale {
             self.hits += 1;
         } else {
-            self.misses += 1;
-            if self.capacity > 0 && self.cols.len() >= self.capacity {
-                // Evict the oldest half to amortize.
-                let drop = self.order.len() / 2;
-                for k in self.order.drain(..drop) {
-                    self.cols.remove(&k);
+            if is_stale {
+                self.refreshes += 1;
+            } else {
+                self.misses += 1;
+                if self.capacity > 0 && self.cols.len() >= self.capacity {
+                    // Evict the oldest half to amortize.
+                    let drop = self.order.len() / 2;
+                    for k in self.order.drain(..drop) {
+                        self.cols.remove(&k);
+                        self.stale.remove(&k);
+                    }
                 }
             }
+            // Warm start: recover u from the stale column via u_d = P_d Φ_d^T col_d.
+            let guess: Option<BlockVec> = if is_stale {
+                let colv = self.cols.get(&key).unwrap();
+                Some(
+                    dims.iter()
+                        .zip(colv)
+                        .map(|(dim, cd)| dim.kp.perm.to_original(&dim.kp.phi.matvec_t(cd)))
+                        .collect(),
+                )
+            } else {
+                None
+            };
             let n = dims[0].n();
             // z = P Φ^{-1} e_j  (block d' only), data order.
             let mut e = vec![0.0; n];
@@ -145,15 +236,18 @@ impl MTildeCache {
             let z = dims[dcol].kp.perm.to_original(&z_s);
             let mut rhs: BlockVec = vec![vec![0.0; n]; dims.len()];
             rhs[dcol] = z;
-            let (u, _) = gs.solve(&rhs);
+            let (u, _) = gs.solve_from(&rhs, guess.as_ref());
             // col_d = Φ_d^{-T} (P_d^T u_d), sorted coordinates.
             let col: Vec<Vec<f64>> = dims
                 .iter()
                 .zip(&u)
                 .map(|(dim, ud)| dim.phit_lu.solve(&dim.kp.perm.to_sorted(ud)))
                 .collect();
+            self.stale.remove(&key);
+            if !resident {
+                self.order.push(key);
+            }
             self.cols.insert(key, col);
-            self.order.push(key);
         }
         self.cols.get(&key).unwrap()
     }
@@ -220,7 +314,7 @@ pub fn predict_cached(
 
     // term3 = Σ_{d,d'} φ_d^T M̃_{d,d'} φ_{d'}.
     //
-    // Cold-start policy (perf; EXPERIMENTS.md §Perf): the column cache only
+    // Cold-start policy (perf; DESIGN.md §Perf): the column cache only
     // pays off when a window region is revisited (gradient-ascent steps).
     // On the *first* visit to a window signature with mostly-cold columns we
     // answer with ONE Algorithm 4 solve (`u = M^{-1} P Φ^{-1} φ`), which
@@ -508,7 +602,7 @@ mod tests {
         for (nu, ddim) in [(Nu::Half, 2), (Nu::ThreeHalves, 3)] {
             let (x_cols, kernels, y, dims) = setup(25, ddim, nu, sigma2, 10);
             let gs = GaussSeidel::new(&dims, sigma2);
-            let post = compute_posterior(&dims, sigma2, &y, &gs);
+            let post = compute_posterior(&dims, &y, &gs);
             let oracle = DenseOracle::new(&x_cols, &kernels, sigma2, &y);
             let mut rng = Rng::new(20);
             for _ in 0..8 {
@@ -548,7 +642,7 @@ mod tests {
         let (_xc, _k, y, mut dims) = setup(20, 3, Nu::Half, sigma2, 40);
         let gs_post = {
             let gs = GaussSeidel::new(&dims, sigma2);
-            compute_posterior(&dims, sigma2, &y, &gs)
+            compute_posterior(&dims, &y, &gs)
         };
         let mut cache = MTildeCache::new(0);
         let mut rng = Rng::new(41);
@@ -575,7 +669,7 @@ mod tests {
         let (_xc, _k, y, mut dims) = setup(30, 2, Nu::Half, sigma2, 50);
         let post = {
             let gs = GaussSeidel::new(&dims, sigma2);
-            compute_posterior(&dims, sigma2, &y, &gs)
+            compute_posterior(&dims, &y, &gs)
         };
         let mut cache = MTildeCache::new(0);
         let x = vec![1.5, 2.0];
@@ -600,7 +694,7 @@ mod tests {
         let (_xc, _k, y, mut dims) = setup(24, 2, Nu::ThreeHalves, sigma2, 60);
         let post = {
             let gs = GaussSeidel::new(&dims, sigma2);
-            compute_posterior(&dims, sigma2, &y, &gs)
+            compute_posterior(&dims, &y, &gs)
         };
         let mut cache = MTildeCache::new(0);
         let x = vec![1.7, 2.3];

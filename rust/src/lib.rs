@@ -15,21 +15,26 @@
 //! ## Crate layout
 //!
 //! * [`linalg`] — banded/dense linear-algebra substrate, including the
-//!   selected band-of-inverse (Algorithm 5).
-//! * [`kernels`] — Matérn kernels and the KP / generalized-KP factorizations.
-//! * [`gp`] — the additive-GP engine: back-fitting solver, posterior,
-//!   likelihood + gradients (Algorithms 6–8), MLE training, and the
+//!   selected band-of-inverse (Algorithm 5) and banded row/col insertion.
+//! * [`kernels`] — Matérn kernels and the KP / generalized-KP
+//!   factorizations, incrementally extendable by one point at a time.
+//! * [`gp`] — the additive-GP engine: back-fitting solver (with
+//!   warm-started PCG), posterior, likelihood + gradients (Algorithms
+//!   6–8), MLE training, the incremental [`gp::FitState`] layer, and the
 //!   [`AdditiveGP`] façade.
 //! * [`baselines`] — dense full GP ("FGP"), inducing points ("IP"), and a
 //!   state-space back-fitting baseline (VBEM stand-in).
 //! * [`bo`] — Bayesian optimization: acquisitions with sparse-window
-//!   gradients, the `O(1)`-step searcher, the Algorithm 1 loop, and the
-//!   paper's Schwefel/Rastrigin test functions.
+//!   gradients, the `O(1)`-step searcher, the Algorithm 1 loop
+//!   (observe-per-sample), and the paper's Schwefel/Rastrigin test
+//!   functions.
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
-//!   batched acquisition kernel (`artifacts/*.hlo.txt`).
+//!   batched acquisition kernel (`artifacts/*.hlo.txt`); offline builds use
+//!   the graceful [`runtime::xla`] stub.
 //! * [`coordinator`] — the serving layer: JSON-line protocol, model
-//!   registry, per-model workers with dynamic batching over PJRT.
-//! * [`util`] — offline-build substrates (PRNG, JSON, timing).
+//!   registry, per-model workers with dynamic batching over PJRT and
+//!   incremental `observe`/`observe_batch` ingest.
+//! * [`util`] — offline-build substrates (PRNG, JSON, timing, errors).
 //!
 //! ## Quick start
 //!
@@ -44,6 +49,13 @@
 //! gp.fit(&x, &y);
 //! let out = gp.predict(&[1.0, 1.0], true);
 //! println!("μ = {}, s = {}", out.mean, out.var);
+//!
+//! // Sequential data is absorbed *incrementally* — a window-local KP patch
+//! // plus a warm-started Algorithm 4 solve per point, no refit
+//! // (DESIGN.md §FitState):
+//! gp.observe(&[0.7, 1.8], 0.4);
+//! let out = gp.predict(&[1.0, 1.0], false);
+//! println!("updated s = {}", out.var);
 //! ```
 
 pub mod baselines;

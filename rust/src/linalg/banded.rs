@@ -202,6 +202,31 @@ impl Banded {
         d
     }
 
+    /// Insert a zero row *and* zero column at index `j`, growing the matrix
+    /// to `(n+1) × (n+1)`. `O(n·(kl+ku))` — one `memmove` of the band
+    /// storage.
+    ///
+    /// Because band storage addresses column `j` at the fixed in-row offset
+    /// `j - i + kl`, splicing one zero row-block shifts every later row *and*
+    /// its stored columns together, so rows whose stored window lies entirely
+    /// on one side of `j` keep exactly their old entries. Only rows whose
+    /// window straddles `j` (those with `|i - j| ≤ max(kl, ku)`) end up with
+    /// entries that refer to shifted columns — callers performing an
+    /// incremental update must rewrite that `O(kl+ku)` row window themselves
+    /// (see `KpFactorization::insert`).
+    pub fn insert_row_col(&mut self, j: usize) {
+        assert!(j <= self.n, "insert_row_col({j}) out of range for n={}", self.n);
+        let w = self.kl + self.ku + 1;
+        let at = j * w;
+        let old_len = self.data.len();
+        self.data.resize(old_len + w, 0.0);
+        self.data.copy_within(at..old_len, at + w);
+        for v in &mut self.data[at..at + w] {
+            *v = 0.0;
+        }
+        self.n += 1;
+    }
+
     /// LU-factorize with partial pivoting (row swaps). `O((kl+ku)² n)`.
     pub fn lu(&self) -> BandedLU {
         BandedLU::factor(self)
@@ -322,7 +347,7 @@ impl BandedLU {
 
     /// Solve `A x = b` in place. The inner loops index the band storage
     /// directly (no per-element bounds logic) — this is the `O(n)` primitive
-    /// under every algorithm in the crate, see EXPERIMENTS.md §Perf.
+    /// under every algorithm in the crate, see DESIGN.md §Perf.
     pub fn solve_in_place(&self, x: &mut [f64]) {
         assert_eq!(x.len(), self.n);
         let n = self.n;
@@ -451,6 +476,59 @@ mod tests {
         let (ldd, signd) = m.to_dense().lu_logdet();
         assert!((ld - ldd).abs() < 1e-9);
         assert_eq!(sign, signd);
+    }
+
+    /// Inserting a row/col and rewriting the straddling `O(kl+ku)` window
+    /// (the caller's contract) reproduces a freshly-built matrix exactly.
+    #[test]
+    fn insert_row_col_then_window_rewrite_matches_fresh() {
+        // Per-row values so any index shift is detectable.
+        let row_entries = |i: usize, n: usize, vals: &[f64]| -> Vec<(usize, f64)> {
+            let mut e = Vec::new();
+            if i > 0 {
+                e.push((i - 1, -vals[i]));
+            }
+            e.push((i, 2.0 + vals[i]));
+            if i + 1 < n {
+                e.push((i + 1, 0.5 * vals[i]));
+            }
+            e
+        };
+        let build = |vals: &[f64]| {
+            let n = vals.len();
+            let mut m = Banded::zeros(n, 1, 1);
+            for i in 0..n {
+                for (c, v) in row_entries(i, n, vals) {
+                    m.set(i, c, v);
+                }
+            }
+            m
+        };
+        for j in [0usize, 3, 6] {
+            let vals6 = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+            let mut vals7 = vals6.to_vec();
+            vals7.insert(j, 9.0);
+            let fresh = build(&vals7);
+
+            let mut inc = build(&vals6);
+            inc.insert_row_col(j);
+            assert_eq!(inc.n(), 7);
+            // Rewrite the straddling window |i − j| ≤ max(kl, ku) = 1.
+            for i in j.saturating_sub(1)..=(j + 1).min(6) {
+                let (lo, hi) = inc.row_range(i);
+                for c in lo..hi {
+                    inc.set(i, c, 0.0);
+                }
+                for (c, v) in row_entries(i, 7, &vals7) {
+                    inc.set(i, c, v);
+                }
+            }
+            for i in 0..7 {
+                for c in 0..7 {
+                    assert_eq!(inc.get(i, c), fresh.get(i, c), "j={j} ({i},{c})");
+                }
+            }
+        }
     }
 
     #[test]

@@ -70,6 +70,21 @@ impl Permutation {
     pub fn apply_sort(&self, points: &[f64]) -> Vec<f64> {
         self.to_sorted(points)
     }
+
+    /// Extend the permutation with one new element: the new *original* index
+    /// is `len()` (appended in data order) and it lands at `sorted_pos` in
+    /// sorted order. `O(n)`.
+    pub fn insert(&mut self, sorted_pos: usize) {
+        assert!(sorted_pos <= self.fwd.len());
+        let o = self.fwd.len();
+        self.fwd.insert(sorted_pos, o);
+        for v in self.inv.iter_mut() {
+            if *v >= sorted_pos {
+                *v += 1;
+            }
+        }
+        self.inv.push(sorted_pos);
+    }
 }
 
 /// Binary search: largest `i` with `xs[i] <= x` in a sorted slice, or `None`
@@ -104,6 +119,26 @@ mod tests {
         assert_eq!(p.to_original(&s), pts);
         for o in 0..4 {
             assert_eq!(p.orig(p.sorted_pos(o)), o);
+        }
+    }
+
+    /// Incremental insert matches the argsort of the extended point set.
+    #[test]
+    fn insert_matches_fresh_sort() {
+        let mut pts = vec![3.0, -1.0, 2.0, 0.5];
+        let mut p = Permutation::sorting(&pts);
+        for &x in &[1.5, -2.0, 4.0, 0.0] {
+            let pos = match lower_index(&p.apply_sort(&pts), x) {
+                None => 0,
+                Some(i) => i + 1,
+            };
+            pts.push(x);
+            p.insert(pos);
+            let fresh = Permutation::sorting(&pts);
+            for o in 0..pts.len() {
+                assert_eq!(p.sorted_pos(o), fresh.sorted_pos(o), "x={x} o={o}");
+                assert_eq!(p.orig(p.sorted_pos(o)), o);
+            }
         }
     }
 

@@ -11,7 +11,9 @@
 use addgp::bo::run::{run_bo, BoConfig};
 use addgp::bo::testfns::{self, NoisyObjective};
 use addgp::coordinator::server::Server;
+use addgp::ensure;
 use addgp::gp::model::{AdditiveGP, AdditiveGpConfig};
+use addgp::util::error::Result;
 
 fn arg_value(args: &[String], key: &str) -> Option<String> {
     args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
@@ -21,7 +23,7 @@ fn flag(args: &[String], key: &str) -> bool {
     args.iter().any(|a| a == key)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(|s| s.as_str()) {
         Some("serve") => {
@@ -68,7 +70,7 @@ fn main() -> anyhow::Result<()> {
             }
             let out = gp.predict(&[2.0, 2.0], true);
             println!("selfcheck: μ={:.4} s={:.4} ∇μ={:?}", out.mean, out.var, out.mean_grad);
-            anyhow::ensure!(out.var.is_finite() && out.var >= 0.0);
+            ensure!(out.var.is_finite() && out.var >= 0.0);
             println!("OK");
         }
         _ => {

@@ -4,6 +4,7 @@
 
 pub mod artifacts;
 pub mod window_exec;
+pub mod xla;
 
 pub use artifacts::{ArtifactManifest, ArtifactSpec};
 pub use window_exec::{WindowBatch, WindowExecutable, WindowOutputs};

@@ -4,9 +4,11 @@
 //! Follows the `/opt/xla-example/load_hlo` pattern: HLO *text* interchange,
 //! `return_tuple=True` on the python side, `to_tuple()` on this side.
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::anyhow;
+use crate::ensure;
 use crate::runtime::artifacts::ArtifactSpec;
+use crate::runtime::xla;
+use crate::util::error::{Context, Result};
 
 /// A batch of gathered windows, exactly the L2 model's input signature
 /// (`python/compile/model.py::batch_acq`). Row-major flattened.
@@ -76,7 +78,7 @@ impl WindowExecutable {
         let (b, d, w) = (self.spec.b as i64, self.spec.d as i64, self.spec.w as i64);
         let lit = |data: &[f32], dims: &[i64]| -> Result<xla::Literal> {
             let expect: i64 = dims.iter().product();
-            anyhow::ensure!(
+            ensure!(
                 data.len() as i64 == expect,
                 "shape mismatch: {} vs {:?}",
                 data.len(),
@@ -95,7 +97,7 @@ impl WindowExecutable {
         ];
         let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
         let parts = result.to_tuple()?;
-        anyhow::ensure!(parts.len() == 4, "expected 4 outputs, got {}", parts.len());
+        ensure!(parts.len() == 4, "expected 4 outputs, got {}", parts.len());
         let mut it = parts.into_iter();
         Ok(WindowOutputs {
             mu: it.next().unwrap().to_vec::<f32>()?,

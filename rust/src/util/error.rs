@@ -1,0 +1,121 @@
+//! Minimal `anyhow`-compatible error handling (the offline image ships no
+//! crates, so the few ergonomics the runtime/server layers need are vendored
+//! here): a string-backed [`Error`], a defaulted [`Result`], the [`anyhow!`]
+//! and [`ensure!`] macros, and a [`Context`] trait with
+//! `context`/`with_context`.
+//!
+//! Deliberately *not* implemented: downcasting, backtraces and error chains —
+//! nothing in this crate needs them, and keeping [`Error`] free of a
+//! `std::error::Error` impl is what allows the blanket `From<E>` conversion
+//! (the same trick `anyhow` itself uses).
+
+use std::fmt;
+
+/// A boxed, display-only error value.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `Result` defaulted to [`Error`], as in `anyhow`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::util::error::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Early-return an `Err` when the condition fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(format!($($arg)+)));
+        }
+    };
+}
+
+/// Attach context to a failing `Result`, `anyhow`-style.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(anyhow!("bad {}", 42))
+    }
+
+    fn guarded(v: i32) -> Result<i32> {
+        ensure!(v > 0, "v must be positive, got {v}");
+        Ok(v)
+    }
+
+    #[test]
+    fn macros_and_context() {
+        assert_eq!(fails().unwrap_err().to_string(), "bad 42");
+        assert!(guarded(1).is_ok());
+        assert_eq!(
+            guarded(-1).unwrap_err().to_string(),
+            "v must be positive, got -1"
+        );
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.with_context(|| "while formatting").unwrap_err();
+        assert!(e.to_string().starts_with("while formatting: "));
+    }
+
+    #[test]
+    fn from_std_error() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "boom");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("boom"));
+    }
+}

@@ -1,7 +1,8 @@
 //! Offline-build substrates: the environment ships no general-purpose crates
-//! (no `rand`, `serde_json`, `clap`, `criterion`), so the small pieces this
-//! library needs are implemented here from scratch.
+//! (no `rand`, `serde_json`, `clap`, `criterion`, `anyhow`), so the small
+//! pieces this library needs are implemented here from scratch.
 
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod timer;
