@@ -1,20 +1,43 @@
-//! The tentpole bench: **observe-per-point vs refit-per-point** — the cost
-//! of absorbing one new observation into a trained posterior, as the old
-//! code did it (full `fit` + cold Algorithm 4) vs the incremental
-//! `FitState` path (window-local KP patch + banded LU sweep + warm-started
-//! PCG). See DESIGN.md §FitState; the equivalence of the two paths is
-//! enforced by `tests/incremental.rs`.
+//! The tentpole bench: incremental ingest vs refit, per point *and* per
+//! batch — the cost of absorbing new observations into a trained posterior
+//! (DESIGN.md §FitState). Three comparisons at each `n`:
+//!
+//! * **observe-per-point vs refit-per-point** — one `observe` + warm
+//!   posterior against a full `fit` + cold posterior per new point;
+//! * **observe_batch(m) vs m sequential observes** — one batched insert
+//!   (one splice / window-union re-solve / factor sweep per dimension,
+//!   dimensions sharded across threads) against the old point-by-point loop;
+//! * **observe_batch(m) vs one refit** over the concatenated data — the
+//!   crossover reference.
+//!
+//! The equivalence of all paths is enforced by `tests/incremental.rs`.
 //!
 //! ```sh
-//! cargo bench --bench incremental            # n ∈ {1k, 10k}
-//! cargo bench --bench incremental -- --full  # adds n = 100k
+//! cargo bench --bench incremental              # n ∈ {1k, 10k}
+//! cargo bench --bench incremental -- --full    # adds n = 100k
+//! cargo bench --bench incremental -- --smoke --gate --json BENCH_incremental.json
+//! cargo bench --bench incremental -- --crossover  # batch-size sweep at fixed n
 //! ```
+//!
+//! `--smoke` halves the per-point repetitions (the size list already stops
+//! at the gated n = 10k without `--full`); `--json PATH` writes the
+//! measurements as one JSON object (the CI `bench-smoke` job uploads it as
+//! the repo's perf trajectory);
+//! `--gate` exits non-zero unless, at n = 10k, observe-per-point beats
+//! refit-per-point and `observe_batch(m=64)` beats 64 sequential observes,
+//! both by ≥ 5× — the repo's first perf gate. The JSON is written *before*
+//! the gate verdict so a failing run still uploads its numbers.
 
 use std::time::Instant;
 
-use addgp::gp::model::{AdditiveGP, AdditiveGpConfig};
+use addgp::gp::model::{AdditiveGP, AdditiveGpConfig, BatchPath};
 use addgp::kernels::matern::Nu;
-use addgp::util::Rng;
+use addgp::util::{Json, Rng};
+
+/// Gate thresholds (ISSUE 3 acceptance criteria).
+const GATE_N: usize = 10_000;
+const GATE_MIN_SPEEDUP: f64 = 5.0;
+const BATCH_M: usize = 64;
 
 fn data(n: usize, d: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
     let mut rng = Rng::new(seed);
@@ -32,52 +55,276 @@ fn cfg() -> AdditiveGpConfig {
     cfg
 }
 
-fn main() {
-    let d = 4;
-    let full = std::env::args().any(|a| a == "--full");
-    let sizes: &[usize] = if full { &[1_000, 10_000, 100_000] } else { &[1_000, 10_000] };
-    println!("# observe-per-point vs refit-per-point (D = {d}, Matérn-3/2)\n");
-    println!("{:>8}  {:>14}  {:>14}  {:>9}", "n", "observe ms/pt", "refit ms/pt", "speedup");
+/// (observe s/pt, refit s/pt) absorbing `k` points one at a time at size `n`.
+fn measure_per_point(n: usize, d: usize, k: usize) -> (f64, f64) {
+    let (x, y) = data(n + k, d, n as u64);
 
-    for &n in sizes {
-        let k = if n >= 100_000 { 4 } else { 12 };
-        let (x, y) = data(n + k, d, n as u64);
-
-        // --- Incremental path: observe + warm posterior per point. -------
-        let mut gp = AdditiveGP::new(cfg(), d);
-        gp.fit(&x[..n], &y[..n]);
+    // Incremental path: observe + warm posterior per point.
+    let mut gp = AdditiveGP::new(cfg(), d);
+    gp.fit(&x[..n], &y[..n]);
+    gp.ensure_posterior();
+    let t0 = Instant::now();
+    for i in 0..k {
+        gp.observe(&x[n + i], y[n + i]);
         gp.ensure_posterior();
-        let t0 = Instant::now();
-        for i in 0..k {
-            gp.observe(&x[n + i], y[n + i]);
-            gp.ensure_posterior();
-        }
-        let t_obs = t0.elapsed().as_secs_f64() / k as f64;
-        let (inc, fall, _) = gp.incremental_stats();
-        assert_eq!(fall, 0, "no degenerate fallbacks expected on random data");
-        assert_eq!(inc as usize, k * d);
+    }
+    let t_obs = t0.elapsed().as_secs_f64() / k as f64;
+    let (inc, fall, _) = gp.incremental_stats();
+    assert_eq!(fall, 0, "no degenerate fallbacks expected on random data");
+    assert_eq!(inc as usize, k * d);
 
-        // --- Old path: full fit + cold posterior per point. --------------
-        let mut gp2 = AdditiveGP::new(cfg(), d);
-        let mut xs_acc: Vec<Vec<f64>> = x[..n].to_vec();
-        let mut ys_acc: Vec<f64> = y[..n].to_vec();
+    // Old path: full fit + cold posterior per point.
+    let mut gp2 = AdditiveGP::new(cfg(), d);
+    let mut xs_acc: Vec<Vec<f64>> = x[..n].to_vec();
+    let mut ys_acc: Vec<f64> = y[..n].to_vec();
+    gp2.fit(&xs_acc, &ys_acc);
+    gp2.ensure_posterior();
+    let t0 = Instant::now();
+    for i in 0..k {
+        xs_acc.push(x[n + i].clone());
+        ys_acc.push(y[n + i]);
         gp2.fit(&xs_acc, &ys_acc);
         gp2.ensure_posterior();
-        let t0 = Instant::now();
-        for i in 0..k {
-            xs_acc.push(x[n + i].clone());
-            ys_acc.push(y[n + i]);
-            gp2.fit(&xs_acc, &ys_acc);
-            gp2.ensure_posterior();
-        }
-        let t_refit = t0.elapsed().as_secs_f64() / k as f64;
+    }
+    let t_refit = t0.elapsed().as_secs_f64() / k as f64;
+    (t_obs, t_refit)
+}
 
+/// (batch s, sequential s, refit s) absorbing the same `m` points at size
+/// `n`: one `observe_batch`, vs `m` `observe` calls, vs one refit over the
+/// concatenated data. Every variant ends with a ready posterior. The
+/// sequential leg is skipped (0.0) when `with_sequential` is false — the
+/// crossover sweep only compares batch vs refit, and `m` individual
+/// observes dominate wall-clock at large `m`.
+fn measure_batch(n: usize, d: usize, m: usize, with_sequential: bool) -> (f64, f64, f64) {
+    let (x, y) = data(n + m, d, (n as u64) ^ 0xBA7C);
+    let bxs: Vec<Vec<f64>> = x[n..].to_vec();
+    let bys: Vec<f64> = y[n..].to_vec();
+
+    // One batched incremental insert.
+    let mut gp = AdditiveGP::new(cfg(), d);
+    gp.fit(&x[..n], &y[..n]);
+    gp.ensure_posterior();
+    let t0 = Instant::now();
+    let path = gp.observe_batch(&bxs, &bys);
+    gp.ensure_posterior();
+    let t_batch = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        path,
+        BatchPath::Incremental,
+        "a batch of {m} at n={n} must ride the incremental path"
+    );
+    let (_, fall, _) = gp.incremental_stats();
+    assert_eq!(fall, 0, "no degenerate fallbacks expected on random data");
+
+    // The old loop: m sequential observes.
+    let t_seq = if with_sequential {
+        let mut gp2 = AdditiveGP::new(cfg(), d);
+        gp2.fit(&x[..n], &y[..n]);
+        gp2.ensure_posterior();
+        let t0 = Instant::now();
+        for i in 0..m {
+            gp2.observe(&x[n + i], y[n + i]);
+        }
+        gp2.ensure_posterior();
+        t0.elapsed().as_secs_f64()
+    } else {
+        0.0
+    };
+
+    // One refit over everything (the crossover reference).
+    let mut gp3 = AdditiveGP::new(cfg(), d);
+    let t0 = Instant::now();
+    gp3.fit(&x, &y);
+    gp3.ensure_posterior();
+    let t_refit = t0.elapsed().as_secs_f64();
+
+    (t_batch, t_seq, t_refit)
+}
+
+struct SizeResult {
+    n: usize,
+    observe_s_per_pt: f64,
+    refit_s_per_pt: f64,
+    batch_s: f64,
+    sequential_s: f64,
+    refit_batch_s: f64,
+}
+
+impl SizeResult {
+    fn speedup_per_point(&self) -> f64 {
+        self.refit_s_per_pt / self.observe_s_per_pt
+    }
+
+    fn speedup_batch(&self) -> f64 {
+        self.sequential_s / self.batch_s
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("observe_ms_per_pt", Json::Num(self.observe_s_per_pt * 1e3)),
+            ("refit_ms_per_pt", Json::Num(self.refit_s_per_pt * 1e3)),
+            ("speedup_per_point", Json::Num(self.speedup_per_point())),
+            ("batch_m", Json::Num(BATCH_M as f64)),
+            ("batch_ms", Json::Num(self.batch_s * 1e3)),
+            ("sequential_ms", Json::Num(self.sequential_s * 1e3)),
+            ("refit_batch_ms", Json::Num(self.refit_batch_s * 1e3)),
+            ("speedup_batch", Json::Num(self.speedup_batch())),
+        ])
+    }
+}
+
+struct Gate {
+    name: &'static str,
+    value: f64,
+    threshold: f64,
+}
+
+impl Gate {
+    fn pass(&self) -> bool {
+        self.value >= self.threshold
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.to_string())),
+            ("value", Json::Num(self.value)),
+            ("threshold", Json::Num(self.threshold)),
+            ("pass", Json::Bool(self.pass())),
+        ])
+    }
+}
+
+/// Batch-size sweep at fixed `n`: where does one batched insert stop
+/// beating one refit? (Informs the `m ≤ n` crossover in
+/// `AdditiveGP::observe_batch`; see DESIGN.md §FitState.)
+fn crossover_sweep(d: usize) {
+    let n = 4_000;
+    println!("# batched-insert vs refit crossover sweep (n = {n}, D = {d})\n");
+    println!("{:>8}  {:>12}  {:>12}  {:>16}", "m", "batch ms", "refit ms", "batch/refit");
+    for &m in &[16usize, 64, 256, 1024, 2000, 4000] {
+        let (t_batch, _, t_refit) = measure_batch(n, d, m, false);
         println!(
-            "{n:>8}  {:>14.3}  {:>14.3}  {:>8.1}×",
-            t_obs * 1e3,
+            "{m:>8}  {:>12.2}  {:>12.2}  {:>16.3}",
+            t_batch * 1e3,
             t_refit * 1e3,
-            t_refit / t_obs
+            t_batch / t_refit
         );
     }
-    println!("\n(equivalence of the two paths: cargo test --test incremental)");
+    println!("\n(policy: incremental while m ≤ n; refit beyond — see AdditiveGP::observe_batch)");
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let has = |f: &str| args.iter().any(|a| a == f);
+    let json_path: Option<String> =
+        args.iter().position(|a| a == "--json").and_then(|i| args.get(i + 1)).cloned();
+    let d = 4;
+
+    if has("--crossover") {
+        crossover_sweep(d);
+        return;
+    }
+
+    let full = has("--full");
+    let smoke = has("--smoke");
+    let sizes: &[usize] =
+        if full { &[1_000, 10_000, 100_000] } else { &[1_000, 10_000] };
+
+    println!("# incremental ingest vs refit (D = {d}, Matérn-3/2, batch m = {BATCH_M})\n");
+    println!(
+        "{:>8}  {:>14}  {:>14}  {:>9}  {:>12}  {:>12}  {:>12}  {:>9}",
+        "n",
+        "observe ms/pt",
+        "refit ms/pt",
+        "speedup",
+        "batch ms",
+        "64-seq ms",
+        "refit ms",
+        "speedup"
+    );
+
+    let mut results: Vec<SizeResult> = Vec::new();
+    for &n in sizes {
+        let k = if n >= 100_000 {
+            4
+        } else if smoke {
+            6
+        } else {
+            12
+        };
+        let (t_obs, t_refit) = measure_per_point(n, d, k);
+        let (t_batch, t_seq, t_refit_batch) = measure_batch(n, d, BATCH_M, true);
+        let r = SizeResult {
+            n,
+            observe_s_per_pt: t_obs,
+            refit_s_per_pt: t_refit,
+            batch_s: t_batch,
+            sequential_s: t_seq,
+            refit_batch_s: t_refit_batch,
+        };
+        println!(
+            "{n:>8}  {:>14.3}  {:>14.3}  {:>8.1}×  {:>12.2}  {:>12.2}  {:>12.2}  {:>8.1}×",
+            r.observe_s_per_pt * 1e3,
+            r.refit_s_per_pt * 1e3,
+            r.speedup_per_point(),
+            r.batch_s * 1e3,
+            r.sequential_s * 1e3,
+            r.refit_batch_s * 1e3,
+            r.speedup_batch()
+        );
+        results.push(r);
+    }
+    println!("\n(equivalence of all paths: cargo test --test incremental)");
+
+    // Gates are evaluated at n = 10k (present in every mode's size list).
+    let gates: Vec<Gate> = results
+        .iter()
+        .find(|r| r.n == GATE_N)
+        .map(|r| {
+            vec![
+                Gate {
+                    name: "observe_vs_refit_per_point_at_10k",
+                    value: r.speedup_per_point(),
+                    threshold: GATE_MIN_SPEEDUP,
+                },
+                Gate {
+                    name: "observe_batch_vs_sequential_at_10k",
+                    value: r.speedup_batch(),
+                    threshold: GATE_MIN_SPEEDUP,
+                },
+            ]
+        })
+        .unwrap_or_default();
+
+    if let Some(path) = json_path {
+        let json = Json::obj(vec![
+            ("bench", Json::Str("incremental".to_string())),
+            ("d", Json::Num(d as f64)),
+            ("nu", Json::Str("matern-3/2".to_string())),
+            ("batch_m", Json::Num(BATCH_M as f64)),
+            ("sizes", Json::Arr(results.iter().map(SizeResult::to_json).collect())),
+            ("gates", Json::Arr(gates.iter().map(Gate::to_json).collect())),
+        ]);
+        std::fs::write(&path, format!("{json}\n")).expect("write bench json");
+        println!("wrote {path}");
+    }
+
+    if has("--gate") {
+        assert!(
+            !gates.is_empty(),
+            "--gate needs n = {GATE_N} in the size list"
+        );
+        let mut failed = false;
+        for g in &gates {
+            let verdict = if g.pass() { "PASS" } else { "FAIL" };
+            println!("gate {}: {:.1}× (≥ {:.1}×) {verdict}", g.name, g.value, g.threshold);
+            failed |= !g.pass();
+        }
+        if failed {
+            eprintln!("perf gate failed");
+            std::process::exit(1);
+        }
+    }
 }

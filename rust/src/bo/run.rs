@@ -8,7 +8,9 @@
 //! factor sweep and a warm-started Algorithm 4 solve — and a *full* refit
 //! happens only at the `hyper_every` boundaries where `fit_hypers`
 //! re-learns ω (DESIGN.md §FitState; `benches/incremental.rs` measures the
-//! per-sample win over refit-per-sample).
+//! per-sample win over refit-per-sample). The warm-up design goes through
+//! `BoEngine::observe_batch` as one batch — one splice/sweep/solve per
+//! dimension on the sparse engine, dimensions sharded across threads.
 
 use crate::baselines::full_gp::FullGP;
 use crate::bo::acquisition::Acquisition;
@@ -21,6 +23,14 @@ use crate::util::Rng;
 /// A GP engine usable by the BO loop.
 pub trait BoEngine {
     fn observe(&mut self, x: &[f64], y: f64);
+    /// Absorb a whole batch of evaluations (the warm-up design, parallel
+    /// objective evaluations). Defaults to a per-point loop; engines with a
+    /// cheaper batch path override it.
+    fn observe_batch(&mut self, xs: &[Vec<f64>], ys: &[f64]) {
+        for (x, &y) in xs.iter().zip(ys) {
+            self.observe(x, y);
+        }
+    }
     /// `(μ, s, ∇μ, ∇s)` at `x`.
     fn posterior(&mut self, x: &[f64]) -> (f64, f64, Vec<f64>, Vec<f64>);
     /// Re-learn hyperparameters from the current data.
@@ -33,6 +43,12 @@ impl BoEngine for AdditiveGP {
     /// Incremental: patches the fit state in place (no refit per sample).
     fn observe(&mut self, x: &[f64], y: f64) {
         AdditiveGP::observe(self, x, y);
+    }
+
+    /// Batched incremental ingest: one splice/sweep/solve per dimension for
+    /// the whole batch, dimensions sharded across threads.
+    fn observe_batch(&mut self, xs: &[Vec<f64>], ys: &[f64]) {
+        let _ = AdditiveGP::observe_batch(self, xs, ys);
     }
 
     fn posterior(&mut self, x: &[f64]) -> (f64, f64, Vec<f64>, Vec<f64>) {
@@ -136,7 +152,11 @@ pub fn run_bo<E: BoEngine>(
     let mut samples = Vec::with_capacity(cfg.warmup + cfg.budget);
     let mut model_time = 0.0;
 
-    // Warm-up: uniform random design.
+    // Warm-up: uniform random design, absorbed as ONE batch — the sparse
+    // engine pays a single splice/sweep/solve per dimension for the whole
+    // design instead of per-point work (`BoEngine::observe_batch`).
+    let mut wxs: Vec<Vec<f64>> = Vec::with_capacity(cfg.warmup);
+    let mut wys: Vec<f64> = Vec::with_capacity(cfg.warmup);
     for _ in 0..cfg.warmup {
         let x: Vec<f64> = (0..d).map(|_| rng.uniform_in(cfg.lo, cfg.hi)).collect();
         let y = obj.sample(&x, &mut rng);
@@ -144,11 +164,13 @@ pub fn run_bo<E: BoEngine>(
             best_y = y;
             best_x = x.clone();
         }
-        let t0 = std::time::Instant::now();
-        engine.observe(&x, y);
-        model_time += t0.elapsed().as_secs_f64();
-        samples.push(x);
+        wxs.push(x);
+        wys.push(y);
     }
+    let t0 = std::time::Instant::now();
+    engine.observe_batch(&wxs, &wys);
+    model_time += t0.elapsed().as_secs_f64();
+    samples.extend(wxs);
 
     for it in 0..cfg.budget {
         let t0 = std::time::Instant::now();

@@ -161,10 +161,21 @@ impl ModelEngine {
                 if xs.len() != ys.len() {
                     let _ = reply.send(Response::Error("xs/ys length mismatch".into()));
                 } else {
-                    // Incremental ingest: small batches patch the fit state
-                    // point by point; large ones amortize via one refit.
-                    self.gp.observe_batch(&xs, &ys);
-                    let _ = reply.send(Response::Ok);
+                    // Batched incremental ingest: one splice/sweep/solve per
+                    // dimension for the whole batch, dimensions sharded
+                    // across threads; a refit only at/above the crossover.
+                    let path = self.gp.observe_batch(&xs, &ys);
+                    // Refresh the posterior *before* replying, so a client
+                    // that issues predict right after the reply (or another
+                    // client racing it) sees the post-batch state instead of
+                    // paying the solve inside its own predict.
+                    if self.gp.fit_state().is_some() {
+                        self.gp.ensure_posterior();
+                    }
+                    let _ = reply.send(Response::BatchObserved {
+                        n: self.gp.n(),
+                        path: path.as_str(),
+                    });
                 }
             }
             Command::Fit { steps, reply } => {

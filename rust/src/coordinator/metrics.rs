@@ -71,8 +71,22 @@ pub struct ServerMetrics {
     pub requests: AtomicU64,
     pub errors: AtomicU64,
     pub predict_points: AtomicU64,
+    /// Points ingested through `observe` + `observe_batch`.
+    pub observe_points: AtomicU64,
+    /// `observe_batch` calls served by the batched incremental path.
+    pub batches_incremental: AtomicU64,
+    /// `observe_batch` calls served by a full refit (crossover or first
+    /// activation).
+    pub batches_refit: AtomicU64,
+    /// `observe_batch` calls that only buffered (below `min_points`).
+    pub batches_buffered: AtomicU64,
     pub predict_latency: LatencyHistogram,
     pub suggest_latency: LatencyHistogram,
+    /// `observe` / `observe_batch` round-trip latency. `observe_batch`
+    /// replies *after* the posterior refresh (full ingest cost);
+    /// single-point `observe` stays lazy — its samples cover the factor
+    /// patch only, with the solve deferred to the next predict.
+    pub ingest_latency: LatencyHistogram,
 }
 
 impl ServerMetrics {
@@ -88,14 +102,39 @@ impl ServerMetrics {
         self.predict_points.fetch_add(n as u64, Ordering::Relaxed);
     }
 
+    pub fn add_observe_points(&self, n: usize) {
+        self.observe_points.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Count one `observe_batch` under its ingest path ("incremental",
+    /// "refit", "buffered" — the `BatchPath` wire labels). Unknown labels
+    /// are ignored rather than misfiled, so a future path can't silently
+    /// inflate an existing counter.
+    pub fn count_batch_path(&self, path: &str) {
+        let c = match path {
+            "incremental" => &self.batches_incremental,
+            "refit" => &self.batches_refit,
+            "buffered" => &self.batches_buffered,
+            _ => return,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "requests={} errors={} predict_points={} | predict: {} | suggest: {}",
+            "requests={} errors={} predict_points={} observe_points={} \
+             batches(incremental={} refit={} buffered={}) | predict: {} | \
+             suggest: {} | ingest: {}",
             self.requests.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
             self.predict_points.load(Ordering::Relaxed),
+            self.observe_points.load(Ordering::Relaxed),
+            self.batches_incremental.load(Ordering::Relaxed),
+            self.batches_refit.load(Ordering::Relaxed),
+            self.batches_buffered.load(Ordering::Relaxed),
             self.predict_latency.report(),
-            self.suggest_latency.report()
+            self.suggest_latency.report(),
+            self.ingest_latency.report()
         )
     }
 }
@@ -134,9 +173,18 @@ mod tests {
         m.inc_requests();
         m.inc_errors();
         m.add_predict_points(64);
+        m.add_observe_points(128);
+        m.count_batch_path("incremental");
+        m.count_batch_path("incremental");
+        m.count_batch_path("refit");
+        m.count_batch_path("buffered");
         let r = m.report();
         assert!(r.contains("requests=2"));
         assert!(r.contains("errors=1"));
         assert!(r.contains("predict_points=64"));
+        assert!(r.contains("observe_points=128"));
+        assert!(r.contains("incremental=2"));
+        assert!(r.contains("refit=1"));
+        assert!(r.contains("buffered=1"));
     }
 }

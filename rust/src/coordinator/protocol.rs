@@ -113,6 +113,13 @@ pub enum Response {
     ModelCreated {
         model: u64,
     },
+    /// Acknowledges an `observe_batch` *after* the posterior refresh,
+    /// reporting the post-batch data size and which ingest path ran
+    /// ("incremental", "refit" or "buffered").
+    BatchObserved {
+        n: usize,
+        path: &'static str,
+    },
     Prediction {
         mu: Vec<f64>,
         svar: Vec<f64>,
@@ -152,6 +159,11 @@ impl Response {
             Response::ModelCreated { model } => {
                 pairs.push(("ok", Json::Bool(true)));
                 pairs.push(("model", Json::Num(*model as f64)));
+            }
+            Response::BatchObserved { n, path } => {
+                pairs.push(("ok", Json::Bool(true)));
+                pairs.push(("n", Json::Num(*n as f64)));
+                pairs.push(("path", Json::Str(path.to_string())));
             }
             Response::Prediction { mu, svar, acq, gacq, path } => {
                 pairs.push(("ok", Json::Bool(true)));
@@ -223,6 +235,16 @@ mod tests {
         assert!(Request::parse(r#"{"op":"nope"}"#).is_err());
         assert!(Request::parse("garbage").is_err());
         assert!(Request::parse(r#"{"op":"observe","x":[1],"y":2}"#).is_err());
+    }
+
+    #[test]
+    fn batch_observed_serializes() {
+        let j = Response::BatchObserved { n: 128, path: "incremental" }.to_json(Some(2.0));
+        let v = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("id").unwrap().as_f64(), Some(2.0));
+        assert_eq!(v.get("n").unwrap().as_usize(), Some(128));
+        assert_eq!(v.get("path").unwrap().as_str(), Some("incremental"));
     }
 
     #[test]

@@ -122,8 +122,13 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
     };
     let is_predict = matches!(req, Request::Predict { .. });
     let is_suggest = matches!(req, Request::Suggest { .. });
-    if let Request::Predict { xs, .. } = &req {
-        shared.metrics.add_predict_points(xs.len());
+    let is_ingest =
+        matches!(req, Request::Observe { .. } | Request::ObserveBatch { .. });
+    match &req {
+        Request::Predict { xs, .. } => shared.metrics.add_predict_points(xs.len()),
+        Request::Observe { .. } => shared.metrics.add_observe_points(1),
+        Request::ObserveBatch { ys, .. } => shared.metrics.add_observe_points(ys.len()),
+        _ => {}
     }
     let resp = match req {
         Request::CreateModel { d, nu2, omega, sigma2 } => {
@@ -199,10 +204,15 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
     if matches!(resp, Response::Error(_)) {
         shared.metrics.inc_errors();
     }
+    if let Response::BatchObserved { path, .. } = &resp {
+        shared.metrics.count_batch_path(path);
+    }
     if is_predict {
         shared.metrics.predict_latency.record(t0.elapsed().as_secs_f64());
     } else if is_suggest {
         shared.metrics.suggest_latency.record(t0.elapsed().as_secs_f64());
+    } else if is_ingest {
+        shared.metrics.ingest_latency.record(t0.elapsed().as_secs_f64());
     }
     (resp, id)
 }

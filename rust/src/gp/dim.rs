@@ -76,6 +76,33 @@ impl DimFactor {
         Some(pos)
     }
 
+    /// Batched form of [`DimFactor::insert_point`]: absorb `values` (in data
+    /// order) with **one** union-of-windows KP patch
+    /// ([`KpFactorization::insert_batch`]) and **one** `O(ν²n)` sweep per LU
+    /// factor for the whole batch — the m-fold sweep amortization behind
+    /// `FitState::observe_batch`. Returns each value's final sorted
+    /// position.
+    ///
+    /// Returns `None` with the factor state untouched when the batch hits a
+    /// degenerate duplicate cluster (or the dimension is already
+    /// non-monotone); the caller replays the sequential path for this
+    /// dimension so batch semantics stay bit-identical to per-point
+    /// observes.
+    pub fn insert_points(&mut self, values: &[f64]) -> Option<Vec<usize>> {
+        if !self.monotone {
+            return None;
+        }
+        let positions = self.kp.insert_batch(values)?;
+        let (t_lu, phi_lu, phit_lu, a_lu) = factor_lus(&self.kp, self.sigma2_y);
+        self.t_lu = t_lu;
+        self.phi_lu = phi_lu;
+        self.phit_lu = phit_lu;
+        self.a_lu = a_lu;
+        self.gkp = None;
+        self.c_band = None;
+        Some(positions)
+    }
+
     pub fn n(&self) -> usize {
         self.kp.n()
     }
@@ -229,6 +256,35 @@ mod tests {
                     assert!((ki[i] - kf[i]).abs() < 1e-9, "{nu:?} K i={i}");
                     assert!((gi[i] - gf[i]).abs() < 1e-9, "{nu:?} T i={i}");
                 }
+            }
+        }
+    }
+
+    /// `insert_points` (one sweep per batch) acts identically to a
+    /// from-scratch build on the extended point set.
+    #[test]
+    fn insert_points_matches_fresh_build() {
+        for nu in [Nu::Half, Nu::ThreeHalves] {
+            let mut rng = Rng::new(33);
+            let mut pts = rng.uniform_vec(26, 0.0, 4.0);
+            let kern = Matern::new(nu, 1.05);
+            let mut inc = DimFactor::new(&pts, kern, 0.6);
+            let batch = [1.91, -0.3, 4.4, 2.6, 0.44];
+            let positions = inc.insert_points(&batch).expect("distinct batch");
+            pts.extend_from_slice(&batch);
+            let fresh = DimFactor::new(&pts, kern, 0.6);
+            assert_eq!(positions.len(), batch.len());
+            for (t, &x) in batch.iter().enumerate() {
+                assert_eq!(inc.kp.xs[positions[t]], x);
+            }
+            let n = pts.len();
+            let v = rng.normal_vec(n);
+            let (ki, kf) = (inc.k_sorted(&v), fresh.k_sorted(&v));
+            let (gi, gf) =
+                (inc.gs_block_solve_sorted(&v), fresh.gs_block_solve_sorted(&v));
+            for i in 0..n {
+                assert!((ki[i] - kf[i]).abs() < 1e-9, "{nu:?} K i={i}");
+                assert!((gi[i] - gf[i]).abs() < 1e-9, "{nu:?} T i={i}");
             }
         }
     }

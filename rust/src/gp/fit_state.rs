@@ -4,8 +4,10 @@
 //! [`FitState`] owns everything a trained additive GP carries between
 //! observations: the per-dimension [`DimFactor`] factorizations, the
 //! posterior `b` vectors of eq. (12), and the last Algorithm 4 solution ṽ.
-//! Its defining operation is [`FitState::observe`], which absorbs one new
-//! data point *without* refitting:
+//! Its defining operations are [`FitState::observe`], which absorbs one new
+//! data point *without* refitting, and [`FitState::observe_batch`], which
+//! absorbs `m` points for one sweep/splice/solve each and shards the
+//! per-dimension work across a scoped thread pool. Per observation:
 //!
 //! * each dimension patches its KP factorization in place —
 //!   `O(log n)` position search, `O(2ν+1)` packet re-solves, one band-storage
@@ -29,6 +31,18 @@ use crate::gp::backfit::{BlockVec, GaussSeidel, GsStats};
 use crate::gp::dim::DimFactor;
 use crate::gp::posterior::{self, Posterior};
 use crate::kernels::matern::Matern;
+use crate::util::pool;
+
+/// Result of one [`FitState::observe_batch`].
+pub struct BatchPositions {
+    /// `positions[d][t]` = final sorted position of batch point `t` in
+    /// dimension `d`. Empty for a dimension that went through the
+    /// sequential-replay fallback (its intermediate rebuilds make per-point
+    /// final positions meaningless — callers must invalidate coarsely).
+    pub positions: Vec<Vec<usize>>,
+    /// Whether any dimension fell back to the sequential replay.
+    pub fallback: bool,
+}
 
 /// Trained per-dimension factorizations + updatable posterior vectors.
 pub struct FitState {
@@ -139,6 +153,109 @@ impl FitState {
         positions
     }
 
+    /// Absorb a whole batch of observations (already appended to `x_cols`
+    /// in data order) incrementally, sharding the per-dimension work across
+    /// a scoped thread pool (DESIGN.md §FitState, "Batched inserts &
+    /// dimension sharding").
+    ///
+    /// Per dimension the batch costs **one** band splice, **one**
+    /// union-of-windows KP re-solve, **one** `O(ν²n)` sweep per LU factor
+    /// ([`DimFactor::insert_points`]) — instead of `m` of each — and the
+    /// posterior is invalidated once, so the next
+    /// [`FitState::ensure_posterior`] runs a single warm PCG solve for the
+    /// whole batch. A dimension whose batch hits a degenerate duplicate
+    /// cluster replays the exact sequential [`FitState::observe`] semantics
+    /// for itself (per-point insert, full [`DimFactor::new`] rebuild on
+    /// failure), so batch and sequential ingest stay bit-identical at the
+    /// factor level in every case.
+    pub fn observe_batch(
+        &mut self,
+        xs: &[Vec<f64>],
+        x_cols: &[Vec<f64>],
+    ) -> BatchPositions {
+        let dd = self.dims.len();
+        let m = xs.len();
+        if m == 0 {
+            return BatchPositions { positions: vec![Vec::new(); dd], fallback: false };
+        }
+        assert_eq!(x_cols.len(), dd);
+        let n0 = self.n();
+        assert_eq!(
+            x_cols[0].len(),
+            n0 + m,
+            "push the batch before observe_batch()"
+        );
+        for x in xs {
+            assert_eq!(x.len(), dd);
+        }
+        // Column-major batch values, one independent job per dimension.
+        let vals: Vec<Vec<f64>> =
+            (0..dd).map(|d| xs.iter().map(|x| x[d]).collect()).collect();
+        let sigma2 = self.sigma2_y;
+
+        struct DimOutcome {
+            positions: Vec<usize>,
+            fallback: bool,
+            inserts: u64,
+            rebuilds: u64,
+        }
+        let threads = pool::default_threads().min(dd);
+        let outcomes: Vec<DimOutcome> =
+            pool::par_map_mut(&mut self.dims, threads, |d, dim| {
+                match dim.insert_points(&vals[d]) {
+                    Some(positions) => DimOutcome {
+                        positions,
+                        fallback: false,
+                        inserts: m as u64,
+                        rebuilds: 0,
+                    },
+                    None => {
+                        // Degenerate batch: replay the sequential-observe
+                        // semantics for this dimension only, including the
+                        // mid-stream full rebuilds.
+                        let mut inserts = 0u64;
+                        let mut rebuilds = 0u64;
+                        for (t, &v) in vals[d].iter().enumerate() {
+                            match dim.insert_point(v) {
+                                Some(_) => inserts += 1,
+                                None => {
+                                    rebuilds += 1;
+                                    let kern: Matern = *dim.kernel();
+                                    *dim = DimFactor::new(
+                                        &x_cols[d][..n0 + t + 1],
+                                        kern,
+                                        sigma2,
+                                    );
+                                }
+                            }
+                        }
+                        DimOutcome {
+                            positions: Vec::new(),
+                            fallback: true,
+                            inserts,
+                            rebuilds,
+                        }
+                    }
+                }
+            });
+
+        let mut positions = Vec::with_capacity(dd);
+        let mut fallback = false;
+        for o in outcomes {
+            self.incremental_inserts += o.inserts;
+            self.fallback_rebuilds += o.rebuilds;
+            fallback |= o.fallback;
+            positions.push(o.positions);
+        }
+        if let Some(t) = self.tilde.as_mut() {
+            for td in t.iter_mut() {
+                td.extend(std::iter::repeat(0.0).take(m));
+            }
+        }
+        self.post = None;
+        BatchPositions { positions, fallback }
+    }
+
     /// Ensure the posterior (`b` vectors) exists — one warm-started
     /// Algorithm 4 solve when observations arrived since the last call.
     pub fn ensure_posterior(&mut self, y: &[f64]) {
@@ -236,6 +353,81 @@ mod tests {
         }
         assert_eq!(state.incremental_inserts, 12);
         assert_eq!(state.fallback_rebuilds, 0);
+    }
+
+    /// One `observe_batch` produces the same factors and (warm) posterior
+    /// as the equivalent sequence of `observe` calls.
+    #[test]
+    fn observe_batch_matches_sequential_observes() {
+        let mut rng = Rng::new(71);
+        let sigma2 = 0.9;
+        let mut x_cols: Vec<Vec<f64>> =
+            (0..3).map(|_| rng.uniform_vec(28, 0.0, 5.0)).collect();
+        let mut y: Vec<f64> = (0..28)
+            .map(|i| x_cols[0][i].sin() + x_cols[1][i].cos() + 0.1 * x_cols[2][i])
+            .collect();
+        let mut batched = build_state(&x_cols, Nu::ThreeHalves, 1.0, sigma2);
+        let mut seq = build_state(&x_cols, Nu::ThreeHalves, 1.0, sigma2);
+        batched.ensure_posterior(&y);
+        seq.ensure_posterior(&y);
+
+        let m = 7;
+        let batch: Vec<Vec<f64>> = (0..m)
+            .map(|_| (0..3).map(|_| rng.uniform_in(-0.5, 5.5)).collect::<Vec<f64>>())
+            .collect();
+        // The batched state sees all points at once; the sequential state's
+        // column view must grow point by point (the `observe` contract).
+        let mut x_cols_seq = x_cols.clone();
+        for x in &batch {
+            for (d, &v) in x.iter().enumerate() {
+                x_cols[d].push(v);
+            }
+            y.push(x[0].sin() + x[1].cos() + 0.1 * x[2]);
+        }
+        let out = batched.observe_batch(&batch, &x_cols);
+        assert!(!out.fallback);
+        assert_eq!(out.positions.len(), 3);
+        for x in &batch {
+            for (d, &v) in x.iter().enumerate() {
+                x_cols_seq[d].push(v);
+            }
+            let _ = seq.observe(x, &x_cols_seq);
+        }
+        assert_eq!(batched.incremental_inserts, seq.incremental_inserts);
+        assert_eq!(batched.fallback_rebuilds, 0);
+
+        // Factors bit-identical across the two ingest orders.
+        for d in 0..3 {
+            let (bd, sd) = (&batched.dims[d], &seq.dims[d]);
+            assert_eq!(bd.n(), sd.n());
+            for i in 0..bd.n() {
+                assert_eq!(bd.kp.xs[i], sd.kp.xs[i], "d={d} xs[{i}]");
+                assert_eq!(bd.kp.perm.orig(i), sd.kp.perm.orig(i), "d={d} perm[{i}]");
+                let (lo, hi) = bd.kp.a.row_range(i);
+                for j in lo..hi {
+                    assert_eq!(bd.kp.a.get(i, j), sd.kp.a.get(i, j), "d={d} A[{i},{j}]");
+                }
+            }
+        }
+
+        // Posteriors agree to solver tolerance.
+        batched.ensure_posterior(&y);
+        seq.ensure_posterior(&y);
+        let (bp, sp) = (batched.posterior().unwrap(), seq.posterior().unwrap());
+        for d in 0..3 {
+            let scale = sp.b[d]
+                .iter()
+                .fold(0.0f64, |mx, &v| mx.max(v.abs()))
+                .max(1.0);
+            for i in 0..y.len() {
+                assert!(
+                    (bp.b[d][i] - sp.b[d][i]).abs() < 1e-8 * scale,
+                    "d={d} i={i}: {} vs {}",
+                    bp.b[d][i],
+                    sp.b[d][i]
+                );
+            }
+        }
     }
 
     /// Duplicate-heavy streams route through the per-dimension rebuild

@@ -26,5 +26,5 @@ pub mod train;
 
 pub use backfit::{BlockVec, GaussSeidel};
 pub use dim::DimFactor;
-pub use fit_state::FitState;
-pub use model::{AdditiveGP, AdditiveGpConfig};
+pub use fit_state::{BatchPositions, FitState};
+pub use model::{AdditiveGP, AdditiveGpConfig, BatchPath};

@@ -43,6 +43,33 @@ impl Default for AdditiveGpConfig {
     }
 }
 
+/// Which execution path one [`AdditiveGP::observe_batch`] call took —
+/// reported through the coordinator's `observe_batch` reply and the serving
+/// metrics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchPath {
+    /// No factor work ran: the model has not reached `min_points` yet, or
+    /// the batch was empty.
+    Buffered,
+    /// One batched incremental insert: per dimension one band splice, one
+    /// union-of-windows KP re-solve and one factor sweep, dimensions sharded
+    /// across threads, the M̃ cache invalidated once.
+    Incremental,
+    /// Full refit — first activation, or a batch at/above the crossover.
+    Refit,
+}
+
+impl BatchPath {
+    /// Wire label used by the coordinator reply and metrics.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BatchPath::Buffered => "buffered",
+            BatchPath::Incremental => "incremental",
+            BatchPath::Refit => "refit",
+        }
+    }
+}
+
 /// An additive Matérn GP `y = Σ_d 𝒢_d(x_d) + ε` backed by the sparse
 /// KP representation (paper §3–§6).
 pub struct AdditiveGP {
@@ -122,26 +149,58 @@ impl AdditiveGP {
         self.cache.on_insert(&positions, self.cfg.nu.q() + 1);
     }
 
-    /// Append a batch of observations. Small batches (relative to the
-    /// current data size) go through the incremental path point by point;
-    /// large batches amortize better through one full refit.
-    pub fn observe_batch(&mut self, xs: &[Vec<f64>], ys: &[f64]) {
+    /// Append a batch of observations through the *batched* incremental
+    /// path: per dimension one band splice, one union-of-windows KP
+    /// re-solve, one `O(ν²n)` factor sweep — instead of `m` of each — with
+    /// the dimensions sharded across a scoped thread pool, the M̃ cache
+    /// invalidated once, and one warm posterior solve on the next predict
+    /// ([`crate::gp::fit_state::FitState::observe_batch`]).
+    ///
+    /// Crossover policy (measured by `cargo bench --bench incremental --
+    /// --crossover`; DESIGN.md §FitState "Batched inserts"): because the
+    /// batch pays its `O(n)` costs once rather than once per point, the
+    /// incremental path beats a refit until the batch rivals the existing
+    /// data in size — so the old `m < n/4 → point-by-point, else refit`
+    /// heuristic is replaced by `m ≤ n → one batched insert, else refit`.
+    /// Exactness is unaffected by the choice: both paths agree with a
+    /// from-scratch fit to solver tolerance (`tests/incremental.rs`).
+    pub fn observe_batch(&mut self, xs: &[Vec<f64>], ys: &[f64]) -> BatchPath {
         assert_eq!(xs.len(), ys.len());
-        let incremental = self.state.is_some() && xs.len() * 4 < self.n().max(1);
-        if incremental {
-            for (x, &y) in xs.iter().zip(ys) {
-                self.observe(x, y);
-            }
-        } else {
-            for (x, &y) in xs.iter().zip(ys) {
-                assert_eq!(x.len(), self.input_dim());
-                for (d, &v) in x.iter().enumerate() {
-                    self.x_cols[d].push(v);
-                }
-                self.y.push(y);
-            }
-            self.refit();
+        if xs.is_empty() {
+            // Nothing absorbed — report the no-work path so the per-path
+            // serving counters stay honest.
+            return BatchPath::Buffered;
         }
+        for x in xs {
+            assert_eq!(x.len(), self.input_dim());
+        }
+        let m = xs.len();
+        let n_before = self.n();
+        for (x, &y) in xs.iter().zip(ys) {
+            for (d, &v) in x.iter().enumerate() {
+                self.x_cols[d].push(v);
+            }
+            self.y.push(y);
+        }
+        if self.n() < self.min_points() {
+            return BatchPath::Buffered;
+        }
+        let incremental = self.state.is_some() && m <= n_before;
+        if !incremental {
+            self.refit();
+            return BatchPath::Refit;
+        }
+        let state = self.state.as_mut().unwrap();
+        let out = state.observe_batch(xs, &self.x_cols);
+        if out.fallback {
+            // A sequential-replay dimension rebuilt mid-batch: its final
+            // positions are unknown here, so invalidate coarsely. Columns
+            // rebuild on demand; exactness is untouched.
+            self.cache.clear();
+        } else {
+            self.cache.on_insert_batch(&out.positions, self.cfg.nu.q() + 1);
+        }
+        BatchPath::Incremental
     }
 
     /// Rebuild per-dimension factorizations with the current hyperparameters
@@ -327,6 +386,41 @@ mod tests {
         assert_eq!(gp.n(), 30);
         let out = gp.predict(&[1.0, 1.0], false);
         assert!(out.var.is_finite());
+    }
+
+    /// The batch path chooses buffered → refit → incremental as the model
+    /// grows, and the result always matches a from-scratch fit.
+    #[test]
+    fn observe_batch_paths_and_equivalence() {
+        let (x, y) = toy_data(50, 2, 6);
+        let mut gp = AdditiveGP::new(AdditiveGpConfig::default(), 2);
+        assert_eq!(gp.observe_batch(&x[..3], &y[..3]), BatchPath::Buffered);
+        // Crossing min_points (and m > n before) → one full refit.
+        assert_eq!(gp.observe_batch(&x[3..40], &y[3..40]), BatchPath::Refit);
+        // Small batch on an active model → batched incremental insert.
+        assert_eq!(gp.observe_batch(&x[40..], &y[40..]), BatchPath::Incremental);
+        let (inc, fall, _) = gp.incremental_stats();
+        assert_eq!(inc, 20, "10 points × 2 dims through the batch insert");
+        assert_eq!(fall, 0);
+
+        let mut full = AdditiveGP::new(AdditiveGpConfig::default(), 2);
+        full.fit(&x, &y);
+        for q in [[2.0, 2.5], [0.5, 4.0]] {
+            let a = gp.predict(&q, false);
+            let b = full.predict(&q, false);
+            assert!(
+                (a.mean - b.mean).abs() < 1e-7 * b.mean.abs().max(1.0),
+                "mean {} vs {}",
+                a.mean,
+                b.mean
+            );
+            assert!(
+                (a.var - b.var).abs() < 1e-6 * b.var.max(1e-3),
+                "var {} vs {}",
+                a.var,
+                b.var
+            );
+        }
     }
 
     #[test]

@@ -99,6 +99,16 @@ pub struct MTildeCache {
 }
 
 impl MTildeCache {
+    /// Above this many resident columns an insert-time remap sweep costs
+    /// more than letting columns rebuild on demand — both invalidation
+    /// paths ([`MTildeCache::on_insert`], [`MTildeCache::on_insert_batch`])
+    /// drop everything instead.
+    const REMAP_MAX_COLS: usize = 64;
+    /// Batches larger than this clear rather than remap — the zero-splice
+    /// sweep scales with `m·resident·D·n` and most windows overlap an
+    /// insertion anyway.
+    const REMAP_MAX_BATCH: usize = 16;
+
     pub fn new(capacity: usize) -> Self {
         MTildeCache { capacity, ..Default::default() }
     }
@@ -128,8 +138,7 @@ impl MTildeCache {
         // local acquisition ascent holds, but a near-full cache would make
         // this dwarf the factor sweep itself — there, dropping everything
         // and letting columns rebuild on demand is strictly cheaper.
-        const REMAP_MAX_COLS: usize = 64;
-        if self.cols.len() > REMAP_MAX_COLS {
+        if self.cols.len() > Self::REMAP_MAX_COLS {
             self.clear();
             return;
         }
@@ -149,6 +158,78 @@ impl MTildeCache {
             self.stale.insert((dcol, nj));
             remap.insert((dcol, j), (dcol, nj));
             self.cols.insert((dcol, nj), col);
+        }
+        let order: Vec<(u32, u32)> =
+            self.order.iter().filter_map(|k| remap.get(k).copied()).collect();
+        self.order = order;
+        self.visits.clear();
+    }
+
+    /// Batched form of [`MTildeCache::on_insert`]: one invalidation pass for
+    /// a whole `observe_batch`, instead of one re-key/splice sweep per
+    /// point. `positions[d]` holds dimension `d`'s final sorted insertion
+    /// positions (batch data order).
+    ///
+    /// The exactness story is unchanged — every surviving column is re-keyed
+    /// through the batch index shift, zero-spliced at each dimension's
+    /// insertion positions, and marked stale, so it is served only after an
+    /// exact warm re-solve. Large batches (or near-full caches) drop
+    /// everything instead: with `m` insertions the splice work scales as
+    /// `O(resident·D·(n+m))` while most windows overlap an insertion anyway.
+    pub fn on_insert_batch(&mut self, positions: &[Vec<usize>], w: usize) {
+        let m = positions.first().map(|p| p.len()).unwrap_or(0);
+        if m == 0 {
+            return;
+        }
+        if m == 1 {
+            let pos: Vec<usize> = positions.iter().map(|p| p[0]).collect();
+            self.on_insert(&pos, w);
+            return;
+        }
+        if self.cols.len() > Self::REMAP_MAX_COLS || m > Self::REMAP_MAX_BATCH {
+            self.clear();
+            return;
+        }
+        let sorted: Vec<Vec<usize>> = positions
+            .iter()
+            .map(|p| {
+                let mut q = p.clone();
+                q.sort_unstable();
+                q
+            })
+            .collect();
+        let reach = (2 * w) as isize;
+        let old: Vec<((u32, u32), Vec<Vec<f64>>)> = self.cols.drain().collect();
+        self.stale.clear();
+        let mut remap: HashMap<(u32, u32), (u32, u32)> = HashMap::new();
+        'cols: for ((dcol, j), mut col) in old {
+            // Old sorted index → final coordinate in the column's own dim.
+            let qs = &sorted[dcol as usize];
+            let mut shift = 0usize;
+            for &q in qs {
+                if q <= j as usize + shift {
+                    shift += 1;
+                } else {
+                    break;
+                }
+            }
+            let nj = j as usize + shift;
+            for &q in qs {
+                if (nj as isize - q as isize).abs() <= reach {
+                    continue 'cols; // evict: some insertion hit its window
+                }
+            }
+            // Ascending final positions splice exactly (earlier splices
+            // leave later final indices correct).
+            for (d, v) in col.iter_mut().enumerate() {
+                for &q in &sorted[d] {
+                    v.insert(q, 0.0);
+                }
+            }
+            let key = (dcol, nj as u32);
+            self.stale.insert(key);
+            remap.insert((dcol, j), key);
+            self.cols.insert(key, col);
         }
         let order: Vec<(u32, u32)> =
             self.order.iter().filter_map(|k| remap.get(k).copied()).collect();

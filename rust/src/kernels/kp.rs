@@ -194,24 +194,7 @@ impl KpFactorization {
     pub fn insert(&mut self, x: f64) -> Option<usize> {
         let n = self.n();
         let w = self.w();
-        // Nudge rule mirrors `new()`: coincident coordinates move up by
-        // ~1e-10·span, far below any kernel length scale of interest.
-        let span = (self.xs[n - 1] - self.xs[0]).abs().max(1e-9);
-        let gap = 1e-10 * span;
-        let pos = match lower_index(&self.xs, x) {
-            None => 0,
-            Some(i) => i + 1,
-        };
-        let mut xv = x;
-        if pos > 0 && xv <= self.xs[pos - 1] {
-            xv = self.xs[pos - 1] + gap;
-        }
-        if pos > 0 && xv <= self.xs[pos - 1] {
-            return None; // gap below f64 resolution at this magnitude
-        }
-        if pos < n && xv >= self.xs[pos] {
-            return None; // nudge overshot the successor (duplicate cluster)
-        }
+        let (pos, xv) = place_point(&self.xs, x)?;
         self.xs.insert(pos, xv);
         self.perm.insert(pos);
         self.a.insert_row_col(pos);
@@ -226,6 +209,73 @@ impl KpFactorization {
             self.rebuild_row(i);
         }
         Some(pos)
+    }
+
+    /// Incrementally insert a whole batch of points (appended in *data*
+    /// order), returning each point's final sorted position. The batched
+    /// form of [`KpFactorization::insert`]: one strictly-sequential position
+    /// / nudge simulation (so the result is bit-identical to `k` single
+    /// inserts), then **one** band splice per matrix for all `k` sorted
+    /// positions and one packet re-solve pass over the *union* of the
+    /// insertion windows — rows covered by several windows are rebuilt once,
+    /// not once per point (DESIGN.md §FitState, "Batched inserts").
+    ///
+    /// Returns `None` — with the factorization untouched — when any point of
+    /// the batch cannot be separated from its neighbors by the deterministic
+    /// nudge (degenerate duplicate cluster). The caller decides between a
+    /// full rebuild and a sequential replay; failing *before* mutating is
+    /// what makes that choice safe.
+    pub fn insert_batch(&mut self, values: &[f64]) -> Option<Vec<usize>> {
+        if values.is_empty() {
+            return Some(Vec::new());
+        }
+        if values.len() == 1 {
+            return self.insert(values[0]).map(|p| vec![p]);
+        }
+        let w = self.w();
+        // --- Simulate the sequential inserts (positions + nudges) on a
+        // scratch copy so a mid-batch degenerate failure leaves `self`
+        // untouched. `place_point` is evaluated against the *growing*
+        // array, exactly as repeated `insert` calls would.
+        let mut scratch = self.xs.clone();
+        let mut final_pos: Vec<usize> = Vec::with_capacity(values.len());
+        for &x in values {
+            let (pos, xv) = place_point(&scratch, x)?;
+            scratch.insert(pos, xv);
+            for p in final_pos.iter_mut() {
+                if *p >= pos {
+                    *p += 1;
+                }
+            }
+            final_pos.push(pos);
+        }
+        // --- Commit: one merge / splice per structure.
+        let mut sorted_pos = final_pos.clone();
+        sorted_pos.sort_unstable();
+        self.xs = scratch;
+        self.perm.insert_batch(&final_pos);
+        self.a.insert_rows_cols(&sorted_pos);
+        self.phi.insert_rows_cols(&sorted_pos);
+        let n = self.n();
+        // Rebuild the union of windows [q−w, q+w] (final coordinates). The
+        // per-insertion coverage argument of `insert` applies unchanged: a
+        // row outside every window has no inserted point in its point
+        // window, no straddled band splice, and no boundary/central type
+        // flip, so its stored coefficients are already the from-scratch
+        // values.
+        let mut next = 0usize;
+        for &q in &sorted_pos {
+            let lo = q.saturating_sub(w).max(next);
+            let hi = (q + w).min(n - 1);
+            if lo > hi {
+                continue;
+            }
+            for i in lo..=hi {
+                self.rebuild_row(i);
+            }
+            next = hi + 1;
+        }
+        Some(final_pos)
     }
 
     /// Recompute packet row `i` of `A` and the matching row of `Φ` from the
@@ -283,6 +333,35 @@ impl KpFactorization {
     pub fn logdets(&self) -> (f64, f64) {
         (self.phi.lu().logdet().0, self.a.lu().logdet().0)
     }
+}
+
+/// Insertion slot and (possibly nudged) value for placing `x` into the
+/// strictly-increasing `xs` — the single nudge rule shared by
+/// [`KpFactorization::insert`] and the batch simulation in
+/// [`KpFactorization::insert_batch`], mirroring `new()`'s cascade:
+/// coincident coordinates move up by ~`1e-10·span`, far below any kernel
+/// length scale of interest. `None` when the nudge cannot separate the
+/// point (gap below f64 resolution, or overshooting the successor in a
+/// duplicate cluster).
+fn place_point(xs: &[f64], x: f64) -> Option<(usize, f64)> {
+    let n = xs.len();
+    let span = (xs[n - 1] - xs[0]).abs().max(1e-9);
+    let gap = 1e-10 * span;
+    let pos = match lower_index(xs, x) {
+        None => 0,
+        Some(i) => i + 1,
+    };
+    let mut xv = x;
+    if pos > 0 && xv <= xs[pos - 1] {
+        xv = xs[pos - 1] + gap;
+    }
+    if pos > 0 && xv <= xs[pos - 1] {
+        return None; // gap below f64 resolution at this magnitude
+    }
+    if pos < n && xv >= xs[pos] {
+        return None; // nudge overshot the successor (duplicate cluster)
+    }
+    Some((pos, xv))
 }
 
 /// Build the packet-coefficient matrix `A` (rows = packets) for sorted `xs`
@@ -569,6 +648,77 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    /// `insert_batch` is bit-identical to the equivalent sequence of single
+    /// `insert` calls (positions, permutation, and every packet
+    /// coefficient), across smoothness and with out-of-range points mixed
+    /// in.
+    #[test]
+    fn insert_batch_matches_sequential_inserts_bitwise() {
+        for nu in [Nu::Half, Nu::ThreeHalves, Nu::FiveHalves] {
+            let pts = random_points(22, 0.0, 4.0, 61);
+            let kernel = Matern::new(nu, 1.2);
+            let mut batched = KpFactorization::new(&pts, kernel);
+            let mut seq = KpFactorization::new(&pts, kernel);
+            // Interior, below-range, above-range, adjacent insertions.
+            let batch = [2.17, -0.6, 4.8, 2.18, 0.02, 3.97];
+            let got = batched.insert_batch(&batch).expect("distinct points insert");
+            let mut seq_final: Vec<usize> = Vec::new();
+            for &x in &batch {
+                let pos = seq.insert(x).expect("distinct points insert");
+                for p in seq_final.iter_mut() {
+                    if *p >= pos {
+                        *p += 1;
+                    }
+                }
+                seq_final.push(pos);
+            }
+            assert_eq!(got, seq_final, "{nu:?} final positions");
+            assert_eq!(batched.n(), seq.n());
+            for i in 0..batched.n() {
+                assert_eq!(batched.xs[i], seq.xs[i], "{nu:?} xs[{i}]");
+                assert_eq!(batched.perm.orig(i), seq.perm.orig(i), "{nu:?} perm[{i}]");
+                for j in 0..batched.n() {
+                    assert_eq!(
+                        batched.a.get(i, j),
+                        seq.a.get(i, j),
+                        "{nu:?} A[{i},{j}]"
+                    );
+                    assert_eq!(
+                        batched.phi.get(i, j),
+                        seq.phi.get(i, j),
+                        "{nu:?} Φ[{i},{j}]"
+                    );
+                }
+            }
+        }
+    }
+
+    /// A batch containing an inseparable duplicate fails atomically: the
+    /// factorization is left exactly as it was.
+    #[test]
+    fn insert_batch_degenerate_fails_without_mutating() {
+        let pts: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        let mut f = KpFactorization::new(&pts, Matern::new(Nu::Half, 1.0));
+        let before_xs = f.xs.clone();
+        let before_a = f.a.to_dense();
+        // Two equal values: the second cannot be separated (the first takes
+        // the only nudge slot), so the whole batch must be refused.
+        assert!(f.insert_batch(&[5.0, 5.0]).is_none());
+        assert_eq!(f.xs, before_xs);
+        let after_a = f.a.to_dense();
+        for i in 0..12 {
+            for j in 0..12 {
+                assert_eq!(before_a.get(i, j), after_a.get(i, j));
+            }
+        }
+        // And a clean batch still goes through afterwards.
+        let pos = f.insert_batch(&[3.5, 7.25]).expect("distinct batch inserts");
+        assert_eq!(pos.len(), 2);
+        for w in f.xs.windows(2) {
+            assert!(w[1] > w[0]);
         }
     }
 

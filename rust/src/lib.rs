@@ -56,6 +56,14 @@
 //! gp.observe(&[0.7, 1.8], 0.4);
 //! let out = gp.predict(&[1.0, 1.0], false);
 //! println!("updated s = {}", out.var);
+//!
+//! // Batches are first-class too: one band splice, one window-union KP
+//! // re-solve and one factor sweep per dimension for the whole batch,
+//! // dimensions sharded across threads (§FitState "Batched inserts"):
+//! let new_x = vec![vec![0.3, 0.8], vec![1.9, 1.1], vec![2.2, 0.6]];
+//! let new_y = vec![0.7, -0.2, 0.5];
+//! let path = gp.observe_batch(&new_x, &new_y);
+//! println!("batch path: {}", path.as_str()); // "incremental"
 //! ```
 
 pub mod baselines;

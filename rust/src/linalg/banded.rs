@@ -215,16 +215,56 @@ impl Banded {
     /// incremental update must rewrite that `O(kl+ku)` row window themselves
     /// (see `KpFactorization::insert`).
     pub fn insert_row_col(&mut self, j: usize) {
-        assert!(j <= self.n, "insert_row_col({j}) out of range for n={}", self.n);
-        let w = self.kl + self.ku + 1;
-        let at = j * w;
-        let old_len = self.data.len();
-        self.data.resize(old_len + w, 0.0);
-        self.data.copy_within(at..old_len, at + w);
-        for v in &mut self.data[at..at + w] {
-            *v = 0.0;
+        self.insert_rows_cols(&[j]);
+    }
+
+    /// Insert `k` zero rows *and* zero columns in one pass, growing the
+    /// matrix to `(n+k) × (n+k)`. `positions` are the *final* indices of the
+    /// new zero rows in the grown matrix, strictly increasing (so
+    /// `positions[t] ≤ n + t`). Total cost is `O((n+k)·(kl+ku))` — each
+    /// surviving row block moves exactly once, instead of up to `k` times
+    /// under repeated [`Banded::insert_row_col`] calls.
+    ///
+    /// The caller's contract is the batched form of the single-splice one:
+    /// every row within `max(kl, ku)` of any spliced index must be rewritten
+    /// afterwards (see `KpFactorization::insert_batch`); all other rows keep
+    /// bit-identical entries.
+    pub fn insert_rows_cols(&mut self, positions: &[usize]) {
+        let k = positions.len();
+        if k == 0 {
+            return;
         }
-        self.n += 1;
+        for (t, &q) in positions.iter().enumerate() {
+            assert!(
+                q <= self.n + t,
+                "insert_rows_cols: position {q} out of range for n={} (t={t})",
+                self.n
+            );
+            if t > 0 {
+                assert!(
+                    q > positions[t - 1],
+                    "insert_rows_cols: positions must be strictly increasing"
+                );
+            }
+        }
+        let w = self.kl + self.ku + 1;
+        let old_rows = self.n;
+        self.data.resize((old_rows + k) * w, 0.0);
+        // Walk the insertions back-to-front: old rows in [q_t − t, src_hi)
+        // end up shifted by exactly t+1 slots, so each chunk moves once.
+        let mut src_hi = old_rows;
+        for t in (0..k).rev() {
+            let q = positions[t];
+            let src_lo = q - t; // q ≥ t because positions are strictly increasing
+            if src_hi > src_lo {
+                self.data.copy_within(src_lo * w..src_hi * w, (src_lo + t + 1) * w);
+            }
+            for v in &mut self.data[q * w..(q + 1) * w] {
+                *v = 0.0;
+            }
+            src_hi = src_lo;
+        }
+        self.n = old_rows + k;
     }
 
     /// LU-factorize with partial pivoting (row swaps). `O((kl+ku)² n)`.
@@ -526,6 +566,49 @@ mod tests {
             for i in 0..7 {
                 for c in 0..7 {
                     assert_eq!(inc.get(i, c), fresh.get(i, c), "j={j} ({i},{c})");
+                }
+            }
+        }
+    }
+
+    /// Batched splice == repeated single splices, for front / interior /
+    /// back / adjacent positions.
+    #[test]
+    fn insert_rows_cols_matches_repeated_single_inserts() {
+        let base = tridiag(6, -1.5, 2.0, 0.75);
+        for positions in [
+            vec![0usize, 1],
+            vec![2, 5],
+            vec![0, 3, 8],
+            vec![6, 7],
+            vec![1, 2, 3],
+        ] {
+            let mut batched = base.clone();
+            batched.insert_rows_cols(&positions);
+
+            // Repeated single splices at the same *final* indices: splicing
+            // in ascending order keeps each final index exact.
+            let mut single = base.clone();
+            for &q in &positions {
+                let w = single.kl + single.ku + 1;
+                let at = q * w;
+                let old_len = single.data.len();
+                single.data.resize(old_len + w, 0.0);
+                single.data.copy_within(at..old_len, at + w);
+                for v in &mut single.data[at..at + w] {
+                    *v = 0.0;
+                }
+                single.n += 1;
+            }
+
+            assert_eq!(batched.n(), 6 + positions.len(), "{positions:?}");
+            for i in 0..batched.n() {
+                for j in 0..batched.n() {
+                    assert_eq!(
+                        batched.get(i, j),
+                        single.get(i, j),
+                        "{positions:?} ({i},{j})"
+                    );
                 }
             }
         }

@@ -85,6 +85,47 @@ impl Permutation {
         }
         self.inv.push(sorted_pos);
     }
+
+    /// Extend the permutation with `k` new elements in one `O(n + k)` merge:
+    /// the t-th new element gets original index `len() + t` (appended in
+    /// data order) and lands at sorted position `final_positions[t]` *in the
+    /// grown permutation*. Positions must be distinct (they are final slots,
+    /// so they need not be ordered). Equivalent to the corresponding
+    /// sequence of [`Permutation::insert`] calls, without the `O(n)` `inv`
+    /// rewrite per element.
+    pub fn insert_batch(&mut self, final_positions: &[usize]) {
+        let k = final_positions.len();
+        if k == 0 {
+            return;
+        }
+        let n_old = self.fwd.len();
+        let n_new = n_old + k;
+        let mut slot = vec![usize::MAX; n_new];
+        for (t, &p) in final_positions.iter().enumerate() {
+            assert!(p < n_new, "insert_batch: position {p} out of range {n_new}");
+            assert!(
+                slot[p] == usize::MAX,
+                "insert_batch: duplicate final position {p}"
+            );
+            slot[p] = n_old + t;
+        }
+        let old = std::mem::take(&mut self.fwd);
+        let mut old_iter = old.into_iter();
+        let mut fwd = Vec::with_capacity(n_new);
+        for s in slot {
+            if s != usize::MAX {
+                fwd.push(s);
+            } else {
+                fwd.push(old_iter.next().expect("slot bookkeeping"));
+            }
+        }
+        let mut inv = vec![0usize; n_new];
+        for (s, &o) in fwd.iter().enumerate() {
+            inv[o] = s;
+        }
+        self.fwd = fwd;
+        self.inv = inv;
+    }
 }
 
 /// Binary search: largest `i` with `xs[i] <= x` in a sorted slice, or `None`
@@ -140,6 +181,31 @@ mod tests {
                 assert_eq!(p.orig(p.sorted_pos(o)), o);
             }
         }
+    }
+
+    /// `insert_batch` equals the argsort of the extended point set (and thus
+    /// the equivalent sequence of single inserts).
+    #[test]
+    fn insert_batch_matches_fresh_sort() {
+        let mut pts = vec![3.0, -1.0, 2.0, 0.5, 1.0];
+        let mut p = Permutation::sorting(&pts);
+        let news = [1.5, -2.0, 4.0, 0.7];
+        // Final positions of the new values in the fully-merged sort order.
+        let mut all = pts.clone();
+        all.extend_from_slice(&news);
+        let fresh = Permutation::sorting(&all);
+        let final_positions: Vec<usize> =
+            (0..news.len()).map(|t| fresh.sorted_pos(pts.len() + t)).collect();
+        p.insert_batch(&final_positions);
+        pts = all;
+        assert_eq!(p.len(), pts.len());
+        for o in 0..pts.len() {
+            assert_eq!(p.sorted_pos(o), fresh.sorted_pos(o), "o={o}");
+            assert_eq!(p.orig(p.sorted_pos(o)), o);
+        }
+        // Round-trip still works.
+        let s = p.apply_sort(&pts);
+        assert_eq!(p.to_original(&s), pts);
     }
 
     #[test]

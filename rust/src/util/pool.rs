@@ -1,0 +1,92 @@
+//! A zero-dependency scoped fork-join helper for the per-dimension shards
+//! of the incremental batch path (DESIGN.md §FitState, "Batched inserts &
+//! dimension sharding").
+//!
+//! Back-fitting treats the `D` additive dimensions as independent blocks, so
+//! a batch insert decomposes into `D` embarrassingly parallel jobs (one band
+//! splice + window re-solve + factor sweep each). The offline image ships no
+//! rayon; [`std::thread::scope`] (fork-join with borrowed data, no `'static`
+//! bound) is all that's needed: jobs are coarse — milliseconds at serving
+//! sizes — so per-call spawn cost is noise and a persistent pool would add
+//! state for no measurable win.
+
+/// Number of worker threads the host offers (≥ 1).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every item of `items` (with its index), spreading the items
+/// over at most `max_threads` scoped threads, and return the results in item
+/// order. Falls back to a plain sequential loop when only one thread is
+/// requested or there is at most one item, so callers need no special case.
+///
+/// Items are split into contiguous chunks (one per thread); `f` must be
+/// deterministic per item for results to be independent of the thread count,
+/// which every caller in this crate relies on.
+pub fn par_map_mut<T, R, F>(items: &mut [T], max_threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = max_threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let chunk = (n + threads - 1) / threads;
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let fref = &f;
+    std::thread::scope(|s| {
+        let mut it_rest: &mut [T] = items;
+        let mut out_rest: &mut [Option<R>] = &mut out;
+        let mut base = 0usize;
+        while !it_rest.is_empty() {
+            let take = chunk.min(it_rest.len());
+            let (it_chunk, it_tail) = std::mem::take(&mut it_rest).split_at_mut(take);
+            let (o_chunk, o_tail) = std::mem::take(&mut out_rest).split_at_mut(take);
+            it_rest = it_tail;
+            out_rest = o_tail;
+            let b = base;
+            base += take;
+            s.spawn(move || {
+                for (off, (t, o)) in
+                    it_chunk.iter_mut().zip(o_chunk.iter_mut()).enumerate()
+                {
+                    *o = Some(fref(b + off, t));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order_and_mutates() {
+        for threads in [1usize, 2, 3, 8] {
+            let mut items: Vec<u64> = (0..13).collect();
+            let out = par_map_mut(&mut items, threads, |i, v| {
+                *v += 100;
+                (i as u64) * 2 + *v
+            });
+            assert_eq!(items, (100..113).collect::<Vec<u64>>());
+            let want: Vec<u64> = (0..13u64).map(|i| i * 2 + 100 + i).collect();
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let mut none: Vec<u32> = Vec::new();
+        let out = par_map_mut(&mut none, 4, |_, v| *v);
+        assert!(out.is_empty());
+        let mut one = vec![7u32];
+        let out = par_map_mut(&mut one, 4, |i, v| (i, *v));
+        assert_eq!(out, vec![(0, 7)]);
+    }
+}

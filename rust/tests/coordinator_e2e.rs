@@ -44,6 +44,19 @@ fn full_protocol_roundtrip() {
     );
     let r = c.call(&req).unwrap();
     assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    // The reply lands after the posterior refresh and reports the post-batch
+    // size and ingest path (first batch activates the model → full refit).
+    assert_eq!(r.get("n").unwrap().as_usize(), Some(60), "{r}");
+    assert_eq!(r.get("path").unwrap().as_str(), Some("refit"), "{r}");
+
+    // A small follow-up batch rides the batched incremental path.
+    let req = format!(
+        r#"{{"op":"observe_batch","model":{model},"xs":[[0.5,1.5],[2.5,3.5]],"ys":[1.0,-0.5]}}"#
+    );
+    let r = c.call(&req).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    assert_eq!(r.get("n").unwrap().as_usize(), Some(62), "{r}");
+    assert_eq!(r.get("path").unwrap().as_str(), Some("incremental"), "{r}");
 
     // Predict a small batch with gradients.
     let r = c
@@ -69,7 +82,7 @@ fn full_protocol_roundtrip() {
 
     // Stats.
     let r = c.call(&format!(r#"{{"op":"stats","model":{model}}}"#)).unwrap();
-    assert_eq!(r.get("n").unwrap().as_usize(), Some(60));
+    assert_eq!(r.get("n").unwrap().as_usize(), Some(62));
     assert_eq!(r.get("d").unwrap().as_usize(), Some(2));
 
     // Errors surface cleanly.
