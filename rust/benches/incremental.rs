@@ -19,22 +19,32 @@
 //! cargo bench --bench incremental -- --crossover  # batch-size sweep at fixed n
 //! ```
 //!
+//! A fourth comparison isolates the **factor phase** (ISSUE 4): per-observe
+//! wall-clock split into KP window patch / factor-LU update / warm solve
+//! (`AdditiveGP::patch_timings`), on an *append-heavy* stream (every insert
+//! beyond the current maximum — the prefix-reuse fast path) and a
+//! *uniform-random* stream (mid-matrix inserts), with the patched
+//! `PatchPolicy::Exact` against the `PatchPolicy::Resweep` baseline (the
+//! old unconditional `O(ν²n)` sweep).
+//!
 //! `--smoke` halves the per-point repetitions (the size list already stops
 //! at the gated n = 10k without `--full`); `--json PATH` writes the
 //! measurements as one JSON object (the CI `bench-smoke` job uploads it as
 //! the repo's perf trajectory);
 //! `--gate` exits non-zero unless, at n = 10k, observe-per-point beats
-//! refit-per-point and `observe_batch(m=64)` beats 64 sequential observes,
-//! both by ≥ 5× — the repo's first perf gate. The JSON is written *before*
-//! the gate verdict so a failing run still uploads its numbers.
+//! refit-per-point, `observe_batch(m=64)` beats 64 sequential observes,
+//! *and* the append-path patched factor update beats the full re-sweep —
+//! all by ≥ 5×. The JSON is written *before* the gate verdict so a failing
+//! run still uploads its numbers.
 
 use std::time::Instant;
 
 use addgp::gp::model::{AdditiveGP, AdditiveGpConfig, BatchPath};
 use addgp::kernels::matern::Nu;
+use addgp::linalg::PatchPolicy;
 use addgp::util::{Json, Rng};
 
-/// Gate thresholds (ISSUE 3 acceptance criteria).
+/// Gate thresholds (ISSUE 3 + ISSUE 4 acceptance criteria).
 const GATE_N: usize = 10_000;
 const GATE_MIN_SPEEDUP: f64 = 5.0;
 const BATCH_M: usize = 64;
@@ -142,6 +152,87 @@ fn measure_batch(n: usize, d: usize, m: usize, with_sequential: bool) -> (f64, f
     (t_batch, t_seq, t_refit)
 }
 
+/// Per-observe wall-clock split of one insert workload × patch policy
+/// (ISSUE 4): KP window patch vs factor-LU update vs everything else
+/// (dominated by the warm posterior solve).
+struct FactorSplit {
+    workload: &'static str,
+    policy: &'static str,
+    kp_patch_ms_per_pt: f64,
+    factor_ms_per_pt: f64,
+    solve_ms_per_pt: f64,
+    total_ms_per_pt: f64,
+}
+
+impl FactorSplit {
+    fn to_json(&self, n: usize) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(n as f64)),
+            ("workload", Json::Str(self.workload.to_string())),
+            ("policy", Json::Str(self.policy.to_string())),
+            ("kp_patch_ms_per_pt", Json::Num(self.kp_patch_ms_per_pt)),
+            ("factor_ms_per_pt", Json::Num(self.factor_ms_per_pt)),
+            ("solve_ms_per_pt", Json::Num(self.solve_ms_per_pt)),
+            ("total_ms_per_pt", Json::Num(self.total_ms_per_pt)),
+        ])
+    }
+}
+
+/// Time `k` observes (each followed by a warm posterior) at size `n`,
+/// splitting the per-point cost via `AdditiveGP::patch_timings`. `append`
+/// streams every insert strictly beyond the current maximum (the
+/// prefix-reuse fast path); otherwise inserts land uniformly at random
+/// (mid-matrix windows).
+fn measure_factor_split(
+    n: usize,
+    d: usize,
+    k: usize,
+    append: bool,
+    policy: PatchPolicy,
+) -> FactorSplit {
+    let (x, y) = data(n, d, (n as u64) ^ 0xFAC7);
+    let mut c = cfg();
+    c.patch_policy = policy;
+    let mut gp = AdditiveGP::new(c, d);
+    gp.fit(&x, &y);
+    gp.ensure_posterior();
+    let mut rng = Rng::new(0x5EED ^ n as u64);
+    let points: Vec<Vec<f64>> = (0..k)
+        .map(|i| {
+            if append {
+                (0..d).map(|_| 10.0 + 0.01 * (i + 1) as f64).collect()
+            } else {
+                (0..d).map(|_| rng.uniform_in(0.0, 10.0)).collect()
+            }
+        })
+        .collect();
+    let before = gp.patch_timings();
+    let t0 = Instant::now();
+    for p in &points {
+        let yv: f64 = p.iter().map(|v| v.sin()).sum();
+        gp.observe(p, yv);
+        gp.ensure_posterior();
+    }
+    let total = t0.elapsed().as_secs_f64();
+    let after = gp.patch_timings();
+    let (_, fall, _) = gp.incremental_stats();
+    assert_eq!(fall, 0, "no degenerate fallbacks expected");
+    let kp = after.kp_patch_s - before.kp_patch_s;
+    let fac = after.factor_s - before.factor_s;
+    let kf = k as f64;
+    FactorSplit {
+        workload: if append { "append" } else { "uniform" },
+        policy: match policy {
+            PatchPolicy::Resweep => "resweep",
+            _ => "patched",
+        },
+        kp_patch_ms_per_pt: kp / kf * 1e3,
+        factor_ms_per_pt: fac / kf * 1e3,
+        solve_ms_per_pt: (total - kp - fac).max(0.0) / kf * 1e3,
+        total_ms_per_pt: total / kf * 1e3,
+    }
+}
+
 struct SizeResult {
     n: usize,
     observe_s_per_pt: f64,
@@ -246,6 +337,7 @@ fn main() {
     );
 
     let mut results: Vec<SizeResult> = Vec::new();
+    let mut splits: Vec<(usize, FactorSplit)> = Vec::new();
     for &n in sizes {
         let k = if n >= 100_000 {
             4
@@ -275,11 +367,33 @@ fn main() {
             r.speedup_batch()
         );
         results.push(r);
+        for append in [true, false] {
+            for policy in [PatchPolicy::Exact, PatchPolicy::Resweep] {
+                splits.push((n, measure_factor_split(n, d, k, append, policy)));
+            }
+        }
+    }
+
+    println!("\n# per-observe phase split: KP patch / factor update / warm solve (ms/pt)\n");
+    println!(
+        "{:>8}  {:>8}  {:>8}  {:>10}  {:>10}  {:>10}  {:>10}",
+        "n", "workload", "policy", "kp patch", "factor", "solve", "total"
+    );
+    for (n, s) in &splits {
+        println!(
+            "{n:>8}  {:>8}  {:>8}  {:>10.3}  {:>10.3}  {:>10.3}  {:>10.3}",
+            s.workload,
+            s.policy,
+            s.kp_patch_ms_per_pt,
+            s.factor_ms_per_pt,
+            s.solve_ms_per_pt,
+            s.total_ms_per_pt
+        );
     }
     println!("\n(equivalence of all paths: cargo test --test incremental)");
 
     // Gates are evaluated at n = 10k (present in every mode's size list).
-    let gates: Vec<Gate> = results
+    let mut gates: Vec<Gate> = results
         .iter()
         .find(|r| r.n == GATE_N)
         .map(|r| {
@@ -297,6 +411,23 @@ fn main() {
             ]
         })
         .unwrap_or_default();
+    // ISSUE 4 gate: on the append-heavy stream at n = 10k the patched
+    // factor update must beat the full re-sweep ≥ 5×.
+    let split_at = |workload: &str, policy: &str| {
+        splits
+            .iter()
+            .find(|(n, s)| *n == GATE_N && s.workload == workload && s.policy == policy)
+            .map(|(_, s)| s)
+    };
+    if let (Some(patched), Some(resweep)) =
+        (split_at("append", "patched"), split_at("append", "resweep"))
+    {
+        gates.push(Gate {
+            name: "factor_patch_vs_resweep_append_at_10k",
+            value: resweep.factor_ms_per_pt / patched.factor_ms_per_pt.max(1e-9),
+            threshold: GATE_MIN_SPEEDUP,
+        });
+    }
 
     if let Some(path) = json_path {
         let json = Json::obj(vec![
@@ -305,6 +436,10 @@ fn main() {
             ("nu", Json::Str("matern-3/2".to_string())),
             ("batch_m", Json::Num(BATCH_M as f64)),
             ("sizes", Json::Arr(results.iter().map(SizeResult::to_json).collect())),
+            (
+                "factor_split",
+                Json::Arr(splits.iter().map(|(n, s)| s.to_json(*n)).collect()),
+            ),
             ("gates", Json::Arr(gates.iter().map(Gate::to_json).collect())),
         ]);
         std::fs::write(&path, format!("{json}\n")).expect("write bench json");

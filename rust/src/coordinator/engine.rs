@@ -152,18 +152,30 @@ impl ModelEngine {
         match cmd {
             Command::Stop => return false,
             Command::Observe { x, y, reply } => {
-                // Incremental path: O(log n) window work + banded sweeps per
-                // point — serving no longer pays O(n log n) per ingest.
+                // Incremental path: O(log n) window work + a prefix-reuse
+                // factor patch per point — serving no longer pays O(n log n)
+                // (or even a linear factor sweep) per append ingest. The
+                // patched-vs-resweep delta rides the reply so the
+                // coordinator metrics can watch the crossover.
+                let (p0, r0) = self.gp.factor_stats();
                 self.gp.observe(&x, y);
-                let _ = reply.send(Response::Ok);
+                // saturating: a refit (first activation) replaces the fit
+                // state and resets the cumulative counters.
+                let (p1, r1) = self.gp.factor_stats();
+                let _ = reply.send(Response::Observed {
+                    n: self.gp.n(),
+                    factor_patched: p1.saturating_sub(p0),
+                    factor_resweep: r1.saturating_sub(r0),
+                });
             }
             Command::ObserveBatch { xs, ys, reply } => {
                 if xs.len() != ys.len() {
                     let _ = reply.send(Response::Error("xs/ys length mismatch".into()));
                 } else {
-                    // Batched incremental ingest: one splice/sweep/solve per
+                    // Batched incremental ingest: one splice/patch/solve per
                     // dimension for the whole batch, dimensions sharded
                     // across threads; a refit only at/above the crossover.
+                    let (p0, r0) = self.gp.factor_stats();
                     let path = self.gp.observe_batch(&xs, &ys);
                     // Refresh the posterior *before* replying, so a client
                     // that issues predict right after the reply (or another
@@ -172,9 +184,12 @@ impl ModelEngine {
                     if self.gp.fit_state().is_some() {
                         self.gp.ensure_posterior();
                     }
+                    let (p1, r1) = self.gp.factor_stats();
                     let _ = reply.send(Response::BatchObserved {
                         n: self.gp.n(),
                         path: path.as_str(),
+                        factor_patched: p1.saturating_sub(p0),
+                        factor_resweep: r1.saturating_sub(r0),
                     });
                 }
             }
@@ -202,6 +217,7 @@ impl ModelEngine {
             }
             Command::Stats { reply } => {
                 let (hits, misses, _) = self.gp.cache_stats();
+                let (patches, resweeps) = self.gp.factor_stats();
                 let _ = reply.send(Response::Stats {
                     n: self.gp.n(),
                     d: self.gp.input_dim(),
@@ -210,6 +226,8 @@ impl ModelEngine {
                     cache_misses: misses,
                     pjrt_batches: self.pjrt_batches,
                     native_queries: self.native_queries,
+                    factor_patches: patches,
+                    factor_resweeps: resweeps,
                 });
             }
         }

@@ -80,6 +80,13 @@ pub struct ServerMetrics {
     pub batches_refit: AtomicU64,
     /// `observe_batch` calls that only buffered (below `min_points`).
     pub batches_buffered: AtomicU64,
+    /// Banded-LU factor updates served by the prefix-reuse patch
+    /// (`BandedLU::refactor_from`), summed over `observe`/`observe_batch`
+    /// replies — with `factor_resweeps`, the production view of the
+    /// DESIGN.md "Sublinear LU patching" crossover.
+    pub factor_patches: AtomicU64,
+    /// Factor updates that fell back to the full `O(ν²n)` re-sweep.
+    pub factor_resweeps: AtomicU64,
     pub predict_latency: LatencyHistogram,
     pub suggest_latency: LatencyHistogram,
     /// `observe` / `observe_batch` round-trip latency. `observe_batch`
@@ -120,10 +127,18 @@ impl ServerMetrics {
         c.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Accumulate one ingest reply's patched vs re-swept factor-update
+    /// counts.
+    pub fn add_factor_outcomes(&self, patched: u64, resweeps: u64) {
+        self.factor_patches.fetch_add(patched, Ordering::Relaxed);
+        self.factor_resweeps.fetch_add(resweeps, Ordering::Relaxed);
+    }
+
     pub fn report(&self) -> String {
         format!(
             "requests={} errors={} predict_points={} observe_points={} \
-             batches(incremental={} refit={} buffered={}) | predict: {} | \
+             batches(incremental={} refit={} buffered={}) \
+             factor(patched={} resweep={}) | predict: {} | \
              suggest: {} | ingest: {}",
             self.requests.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
@@ -132,6 +147,8 @@ impl ServerMetrics {
             self.batches_incremental.load(Ordering::Relaxed),
             self.batches_refit.load(Ordering::Relaxed),
             self.batches_buffered.load(Ordering::Relaxed),
+            self.factor_patches.load(Ordering::Relaxed),
+            self.factor_resweeps.load(Ordering::Relaxed),
             self.predict_latency.report(),
             self.suggest_latency.report(),
             self.ingest_latency.report()
@@ -178,6 +195,8 @@ mod tests {
         m.count_batch_path("incremental");
         m.count_batch_path("refit");
         m.count_batch_path("buffered");
+        m.add_factor_outcomes(8, 0);
+        m.add_factor_outcomes(0, 4);
         let r = m.report();
         assert!(r.contains("requests=2"));
         assert!(r.contains("errors=1"));
@@ -186,5 +205,7 @@ mod tests {
         assert!(r.contains("incremental=2"));
         assert!(r.contains("refit=1"));
         assert!(r.contains("buffered=1"));
+        assert!(r.contains("patched=8"));
+        assert!(r.contains("resweep=4"));
     }
 }

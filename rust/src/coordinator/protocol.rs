@@ -113,12 +113,25 @@ pub enum Response {
     ModelCreated {
         model: u64,
     },
+    /// Acknowledges a single-point `observe` (factor patch done, posterior
+    /// still lazy), reporting the post-observe data size and how many of the
+    /// banded-LU factor updates were served by the prefix-reuse patch vs a
+    /// full re-sweep (this call's delta — the production signal for the
+    /// DESIGN.md "Sublinear LU patching" crossover).
+    Observed {
+        n: usize,
+        factor_patched: u64,
+        factor_resweep: u64,
+    },
     /// Acknowledges an `observe_batch` *after* the posterior refresh,
-    /// reporting the post-batch data size and which ingest path ran
-    /// ("incremental", "refit" or "buffered").
+    /// reporting the post-batch data size, which ingest path ran
+    /// ("incremental", "refit" or "buffered"), and this call's patched vs
+    /// re-swept factor-update counts.
     BatchObserved {
         n: usize,
         path: &'static str,
+        factor_patched: u64,
+        factor_resweep: u64,
     },
     Prediction {
         mu: Vec<f64>,
@@ -140,6 +153,10 @@ pub enum Response {
         cache_misses: u64,
         pjrt_batches: u64,
         native_queries: u64,
+        /// Cumulative prefix-reuse LU patches across the model's lifetime.
+        factor_patches: u64,
+        /// Cumulative full LU re-sweeps.
+        factor_resweeps: u64,
     },
 }
 
@@ -160,10 +177,18 @@ impl Response {
                 pairs.push(("ok", Json::Bool(true)));
                 pairs.push(("model", Json::Num(*model as f64)));
             }
-            Response::BatchObserved { n, path } => {
+            Response::Observed { n, factor_patched, factor_resweep } => {
+                pairs.push(("ok", Json::Bool(true)));
+                pairs.push(("n", Json::Num(*n as f64)));
+                pairs.push(("factor_patched", Json::Num(*factor_patched as f64)));
+                pairs.push(("factor_resweep", Json::Num(*factor_resweep as f64)));
+            }
+            Response::BatchObserved { n, path, factor_patched, factor_resweep } => {
                 pairs.push(("ok", Json::Bool(true)));
                 pairs.push(("n", Json::Num(*n as f64)));
                 pairs.push(("path", Json::Str(path.to_string())));
+                pairs.push(("factor_patched", Json::Num(*factor_patched as f64)));
+                pairs.push(("factor_resweep", Json::Num(*factor_resweep as f64)));
             }
             Response::Prediction { mu, svar, acq, gacq, path } => {
                 pairs.push(("ok", Json::Bool(true)));
@@ -188,6 +213,8 @@ impl Response {
                 cache_misses,
                 pjrt_batches,
                 native_queries,
+                factor_patches,
+                factor_resweeps,
             } => {
                 pairs.push(("ok", Json::Bool(true)));
                 pairs.push(("n", Json::Num(*n as f64)));
@@ -197,6 +224,8 @@ impl Response {
                 pairs.push(("cache_misses", Json::Num(*cache_misses as f64)));
                 pairs.push(("pjrt_batches", Json::Num(*pjrt_batches as f64)));
                 pairs.push(("native_queries", Json::Num(*native_queries as f64)));
+                pairs.push(("factor_patches", Json::Num(*factor_patches as f64)));
+                pairs.push(("factor_resweeps", Json::Num(*factor_resweeps as f64)));
             }
         }
         Json::obj(pairs)
@@ -239,12 +268,30 @@ mod tests {
 
     #[test]
     fn batch_observed_serializes() {
-        let j = Response::BatchObserved { n: 128, path: "incremental" }.to_json(Some(2.0));
+        let j = Response::BatchObserved {
+            n: 128,
+            path: "incremental",
+            factor_patched: 12,
+            factor_resweep: 0,
+        }
+        .to_json(Some(2.0));
         let v = Json::parse(&j.to_string()).unwrap();
         assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
         assert_eq!(v.get("id").unwrap().as_f64(), Some(2.0));
         assert_eq!(v.get("n").unwrap().as_usize(), Some(128));
         assert_eq!(v.get("path").unwrap().as_str(), Some("incremental"));
+        assert_eq!(v.get("factor_patched").unwrap().as_usize(), Some(12));
+        assert_eq!(v.get("factor_resweep").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn observed_serializes() {
+        let j = Response::Observed { n: 40, factor_patched: 4, factor_resweep: 0 }.to_json(None);
+        let v = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("n").unwrap().as_usize(), Some(40));
+        assert_eq!(v.get("factor_patched").unwrap().as_usize(), Some(4));
+        assert_eq!(v.get("factor_resweep").unwrap().as_usize(), Some(0));
     }
 
     #[test]

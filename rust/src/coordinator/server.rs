@@ -204,8 +204,15 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
     if matches!(resp, Response::Error(_)) {
         shared.metrics.inc_errors();
     }
-    if let Response::BatchObserved { path, .. } = &resp {
-        shared.metrics.count_batch_path(path);
+    match &resp {
+        Response::BatchObserved { path, factor_patched, factor_resweep, .. } => {
+            shared.metrics.count_batch_path(path);
+            shared.metrics.add_factor_outcomes(*factor_patched, *factor_resweep);
+        }
+        Response::Observed { factor_patched, factor_resweep, .. } => {
+            shared.metrics.add_factor_outcomes(*factor_patched, *factor_resweep);
+        }
+        _ => {}
     }
     if is_predict {
         shared.metrics.predict_latency.record(t0.elapsed().as_secs_f64());

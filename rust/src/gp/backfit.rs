@@ -39,6 +39,23 @@ pub struct GaussSeidel<'a> {
     pub tol: f64,
 }
 
+/// Reusable buffers for the hot solve loops — one set per solve (or per
+/// probe loop), so the per-iteration PCG / preconditioner work runs through
+/// `BandedLU::solve_in_place` and the `_into` matvec/permutation forms
+/// without allocating a single `Vec` (DESIGN.md §Perf).
+pub struct GsScratch {
+    /// Data-order accumulator (`Σ_d` running sums of both SSOR half-sweeps).
+    acc: Vec<f64>,
+    /// Data-order right-hand side under construction.
+    rhs: Vec<f64>,
+    /// Sorted-order staging buffer (solver inputs).
+    sorted: Vec<f64>,
+    /// Sorted-order output buffer (in-place banded solves).
+    sorted2: Vec<f64>,
+    /// Forward half-sweep results `t_d` of the SSOR preconditioner.
+    t: BlockVec,
+}
+
 fn dot_blocks(a: &BlockVec, b: &BlockVec) -> f64 {
     a.iter()
         .zip(b)
@@ -62,23 +79,44 @@ impl<'a> GaussSeidel<'a> {
         self.solve_from(v, None)
     }
 
+    /// Fresh scratch buffers sized for this solver's dimensions. Create one
+    /// per solve — or once per probe loop — and feed it to the `_into`
+    /// methods; the per-iteration work then allocates nothing.
+    pub fn scratch(&self) -> GsScratch {
+        let n = self.dims[0].n();
+        let dd = self.dims.len();
+        GsScratch {
+            acc: vec![0.0; n],
+            rhs: vec![0.0; n],
+            sorted: vec![0.0; n],
+            sorted2: vec![0.0; n],
+            t: vec![vec![0.0; n]; dd],
+        }
+    }
+
     /// [`GaussSeidel::solve`] with an optional warm start `x0`: the
     /// incremental-observe path seeds the iteration with the previous
     /// solution ṽ (extended by one entry), turning the posterior update into
     /// a handful of PCG iterations instead of a cold solve (DESIGN.md
     /// §FitState). Convergence is judged against `‖v‖` exactly as in the
     /// cold solve, so a warm start changes cost, never accuracy.
+    ///
+    /// All per-iteration work (operator + preconditioner applications) runs
+    /// through reused scratch buffers — the only allocations are the
+    /// once-per-solve result/direction vectors.
     pub fn solve_from(&self, v: &BlockVec, x0: Option<&BlockVec>) -> (BlockVec, GsStats) {
         let dd = self.dims.len();
         assert_eq!(v.len(), dd);
         let n = self.dims[0].n();
         let vnorm = norm_blocks(v).max(1e-300);
+        let mut scratch = self.scratch();
 
         let (mut x, mut r) = match x0 {
             Some(x0) => {
                 assert_eq!(x0.len(), dd);
                 assert_eq!(x0[0].len(), n);
-                let mx = self.apply(x0);
+                let mut mx: BlockVec = vec![vec![0.0; n]; dd];
+                self.apply_into(x0, &mut mx, &mut scratch);
                 let r: BlockVec = v
                     .iter()
                     .zip(&mx)
@@ -92,11 +130,13 @@ impl<'a> GaussSeidel<'a> {
         if stats.rel_residual < self.tol {
             return (x, stats); // warm start already converged
         }
-        let mut z = self.precond(&r);
+        let mut z: BlockVec = vec![vec![0.0; n]; dd];
+        self.precond_into(&r, &mut z, &mut scratch);
         let mut p = z.clone();
+        let mut mp: BlockVec = vec![vec![0.0; n]; dd];
         let mut rz = dot_blocks(&r, &z);
         for it in 0..self.max_sweeps {
-            let mp = self.apply(&p);
+            self.apply_into(&p, &mut mp, &mut scratch);
             let pmp = dot_blocks(&p, &mp);
             if pmp <= 0.0 {
                 break; // numerical breakdown; return best effort
@@ -113,7 +153,7 @@ impl<'a> GaussSeidel<'a> {
             if stats.rel_residual < self.tol {
                 break;
             }
-            z = self.precond(&r);
+            self.precond_into(&r, &mut z, &mut scratch);
             let rz_new = dot_blocks(&r, &z);
             let beta = rz_new / rz;
             rz = rz_new;
@@ -163,75 +203,76 @@ impl<'a> GaussSeidel<'a> {
 
     /// Symmetric block-GS (SSOR) preconditioner application
     /// `z = (D+U)^{-1} D (D+L)^{-1} r`, where `D` holds the diagonal blocks
-    /// `K_d^{-1}+σ⁻²I` and `L = U^T` the `σ⁻²I` couplings.
-    fn precond(&self, r: &BlockVec) -> BlockVec {
+    /// `K_d^{-1}+σ⁻²I` and `L = U^T` the `σ⁻²I` couplings. Runs entirely in
+    /// the caller's scratch buffers — zero allocations.
+    fn precond_into(&self, r: &BlockVec, z: &mut BlockVec, s: &mut GsScratch) {
         let dd = self.dims.len();
         let n = self.dims[0].n();
         let inv_s2 = 1.0 / self.sigma2_y;
         // Forward: t_d = D_d^{-1}(r_d − σ⁻² Σ_{d'<d} t_{d'}).
-        let mut t: BlockVec = Vec::with_capacity(dd);
-        let mut acc = vec![0.0; n];
+        s.acc.fill(0.0);
         for d in 0..dd {
             let dim = &self.dims[d];
-            let mut rhs = vec![0.0; n];
             for i in 0..n {
-                rhs[i] = r[d][i] - inv_s2 * acc[i];
+                s.rhs[i] = r[d][i] - inv_s2 * s.acc[i];
             }
-            let rhs_s = dim.kp.perm.to_sorted(&rhs);
-            let u_s = dim.gs_block_solve_sorted(&rhs_s);
-            let u = dim.kp.perm.to_original(&u_s);
+            dim.kp.perm.to_sorted_into(&s.rhs, &mut s.sorted);
+            dim.gs_block_solve_sorted_into(&s.sorted, &mut s.sorted2);
+            dim.kp.perm.to_original_into(&s.sorted2, &mut s.t[d]);
             for i in 0..n {
-                acc[i] += u[i];
+                s.acc[i] += s.t[d][i];
             }
-            t.push(u);
         }
         // Middle: u_d = D_d t_d  (apply the diagonal block).
         // Backward: z_d = D_d^{-1}(u_d − σ⁻² Σ_{d'>d} z_{d'}).
-        let mut z: BlockVec = vec![Vec::new(); dd];
-        let mut acc2 = vec![0.0; n];
+        s.acc.fill(0.0); // now the backward accumulator
         for d in (0..dd).rev() {
             let dim = &self.dims[d];
             // u_d = D_d t_d = K_d^{-1} t_d + σ⁻² t_d
-            let ts = dim.kp.perm.to_sorted(&t[d]);
-            let kinv_t = dim.kinv_sorted(&ts);
-            let kinv_t_o = dim.kp.perm.to_original(&kinv_t);
-            let mut rhs = vec![0.0; n];
+            dim.kp.perm.to_sorted_into(&s.t[d], &mut s.sorted);
+            dim.kinv_sorted_into(&s.sorted, &mut s.sorted2);
+            dim.kp.perm.to_original_into(&s.sorted2, &mut s.rhs);
             for i in 0..n {
-                let u = kinv_t_o[i] + inv_s2 * t[d][i];
-                rhs[i] = u - inv_s2 * acc2[i];
+                let u = s.rhs[i] + inv_s2 * s.t[d][i];
+                s.rhs[i] = u - inv_s2 * s.acc[i];
             }
-            let rhs_s = dim.kp.perm.to_sorted(&rhs);
-            let z_s = dim.gs_block_solve_sorted(&rhs_s);
-            let zd = dim.kp.perm.to_original(&z_s);
+            dim.kp.perm.to_sorted_into(&s.rhs, &mut s.sorted);
+            dim.gs_block_solve_sorted_into(&s.sorted, &mut s.sorted2);
+            dim.kp.perm.to_original_into(&s.sorted2, &mut z[d]);
             for i in 0..n {
-                acc2[i] += zd[i];
+                s.acc[i] += z[d][i];
             }
-            z[d] = zd;
         }
-        z
     }
 
     /// Apply the system operator `M = K^{-1} + σ⁻²SS^T` to a block vector.
     pub fn apply(&self, x: &BlockVec) -> BlockVec {
         let n = self.dims[0].n();
+        let mut out: BlockVec = vec![vec![0.0; n]; self.dims.len()];
+        let mut s = self.scratch();
+        self.apply_into(x, &mut out, &mut s);
+        out
+    }
+
+    /// [`GaussSeidel::apply`] into caller-owned output and scratch — the
+    /// allocation-free form the PCG loop and the stochastic estimators use.
+    pub fn apply_into(&self, x: &BlockVec, out: &mut BlockVec, s: &mut GsScratch) {
+        let n = self.dims[0].n();
         let inv_s2 = 1.0 / self.sigma2_y;
-        let mut sum = vec![0.0; n];
+        s.acc.fill(0.0);
         for b in x {
             for i in 0..n {
-                sum[i] += b[i];
+                s.acc[i] += b[i];
             }
         }
-        let mut out: BlockVec = Vec::with_capacity(self.dims.len());
         for (d, dim) in self.dims.iter().enumerate() {
-            let xs = dim.kp.perm.to_sorted(&x[d]);
-            let kinv = dim.kinv_sorted(&xs);
-            let mut o = dim.kp.perm.to_original(&kinv);
+            dim.kp.perm.to_sorted_into(&x[d], &mut s.sorted);
+            dim.kinv_sorted_into(&s.sorted, &mut s.sorted2);
+            dim.kp.perm.to_original_into(&s.sorted2, &mut out[d]);
             for i in 0..n {
-                o[i] += inv_s2 * sum[i];
+                out[d][i] += inv_s2 * s.acc[i];
             }
-            out.push(o);
         }
-        out
     }
 
     fn residual_norm(&self, v: &BlockVec, tilde: &BlockVec, sum: &[f64]) -> f64 {

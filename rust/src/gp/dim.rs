@@ -2,18 +2,50 @@
 //! banded LU factors every downstream algorithm reuses, and (lazily) the
 //! generalized-KP factorization for gradients.
 
+use std::time::Instant;
+
 use crate::kernels::gkp::GkpFactorization;
 use crate::kernels::kp::KpFactorization;
 use crate::kernels::matern::Matern;
-use crate::linalg::banded::BandedLU;
+use crate::linalg::banded::{BandedLU, PatchOutcome, PatchPolicy, SpliceInfo};
 use crate::linalg::block_tridiag::selected_inverse_band;
 use crate::linalg::Banded;
+
+/// Wall-clock split of the incremental insert path, accumulated per
+/// dimension — lets benches (and operators) separate the `O(log n)` KP
+/// window patch from the factor-LU update (DESIGN.md §FitState, "Sublinear
+/// LU patching").
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PatchTimings {
+    /// Seconds spent in `KpFactorization::insert{,_batch}` (position search,
+    /// band splice, packet re-solves).
+    pub kp_patch_s: f64,
+    /// Seconds spent updating `T`/`Φᵀ` and the four banded LUs
+    /// (`BandedLU::refactor_from` — patched or re-swept).
+    pub factor_s: f64,
+}
+
+impl PatchTimings {
+    /// Elementwise accumulate (used when summing over dimensions).
+    pub fn accumulate(&mut self, other: &PatchTimings) {
+        self.kp_patch_s += other.kp_patch_s;
+        self.factor_s += other.factor_s;
+    }
+}
 
 /// Everything the engine needs about one additive dimension `d`:
 /// `P_d^T K_d P_d = A_d^{-1} Φ_d`, the Gauss–Seidel block matrix
 /// `T_d = A_d + σ⁻²Φ_d`, and LU factors of `Φ_d`, `Φ_d^T`, `T_d`.
 pub struct DimFactor {
     pub kp: KpFactorization,
+    /// `T_d = A_d + σ_y^{-2} Φ_d`, maintained incrementally through inserts
+    /// (band splice + window rewrite) so the LU patch never pays an `O(νn)`
+    /// rebuild. Invariant: bit-identical to
+    /// `kp.a.add_scaled(&kp.phi, 1/σ_y²)`.
+    pub t: Banded,
+    /// `Φ_d^T`, maintained incrementally. Invariant: bit-identical to
+    /// `kp.phi.transpose()`.
+    pub phit: Banded,
     /// LU of `T_d = A_d + σ_y^{-2} Φ_d` (the Algorithm 4 block solve).
     pub t_lu: BandedLU,
     /// LU of `Φ_d`.
@@ -27,6 +59,19 @@ pub struct DimFactor {
     /// Lazily-built `2ν`-band of `Φ_d^{-T} A_d^{-1}` (Algorithm 5).
     c_band: Option<Banded>,
     pub sigma2_y: f64,
+    /// How inserts update the four LUs (DESIGN.md §FitState, "Sublinear LU
+    /// patching"). `Exact` (the default) reuses the elimination prefix and
+    /// stays bit-identical to a from-scratch factorization.
+    pub patch_policy: PatchPolicy,
+    /// LU updates served by the prefix-reuse patch (per factor, so up to 4
+    /// per insert).
+    pub factor_patches: u64,
+    /// LU updates that fell back to the full `O(ν²n)` re-sweep
+    /// ([`PatchPolicy::Resweep`], or an insertion so close to the front that
+    /// no clean resume boundary exists above row 0).
+    pub factor_resweeps: u64,
+    /// Accumulated wall-clock split of the insert path.
+    pub timings: PatchTimings,
     /// Whether `xs` is strictly increasing. Degenerate (duplicate-cluster)
     /// states disable the incremental path — every insert falls back to a
     /// full rebuild until a rebuild separates the points again.
@@ -38,9 +83,16 @@ impl DimFactor {
     pub fn new(points: &[f64], kernel: Matern, sigma2_y: f64) -> Self {
         let kp = KpFactorization::new(points, kernel);
         let monotone = kp.xs.windows(2).all(|p| p[1] > p[0]);
-        let (t_lu, phi_lu, phit_lu, a_lu) = factor_lus(&kp, sigma2_y);
+        let t = kp.a.add_scaled(&kp.phi, 1.0 / sigma2_y);
+        let phit = kp.phi.transpose();
+        let t_lu = t.lu();
+        let phi_lu = kp.phi.lu();
+        let phit_lu = phit.lu();
+        let a_lu = kp.a.lu();
         DimFactor {
             kp,
+            t,
+            phit,
             t_lu,
             phi_lu,
             phit_lu,
@@ -48,15 +100,29 @@ impl DimFactor {
             gkp: None,
             c_band: None,
             sigma2_y,
+            patch_policy: PatchPolicy::Exact,
+            factor_patches: 0,
+            factor_resweeps: 0,
+            timings: PatchTimings::default(),
             monotone,
         }
     }
 
     /// Incrementally absorb one new point (appended in data order):
-    /// `O(2ν+1)` packet re-solves via [`KpFactorization::insert`], then an
-    /// `O(ν²n)` banded LU sweep per factor — no `O(n)` moment-system rebuild
-    /// and no dense work (DESIGN.md §FitState). The lazy GKP and
-    /// band-of-inverse are invalidated and rebuilt on next use.
+    /// `O(2ν+1)` packet re-solves via [`KpFactorization::insert`], then a
+    /// *patched* update of all four banded LUs via
+    /// [`BandedLU::refactor_from`] — the untouched elimination prefix is
+    /// reused verbatim and only rows from the lowest touched row on are
+    /// re-eliminated. For an append-ordered insert (new maximum) that is
+    /// `O(ν²(w+ν))` arithmetic per factor — no `O(ν²n)` sweep; a mid-matrix
+    /// insert re-eliminates `O(n − pos)` rows (with an optional
+    /// tolerance-gated early-exit under [`PatchPolicy::EarlyExit`]), and a
+    /// full re-sweep runs only when no clean resume boundary exists above
+    /// row 0 — the split is counted in [`DimFactor::factor_patches`] /
+    /// [`DimFactor::factor_resweeps`]. Under the default
+    /// [`PatchPolicy::Exact`] every path is bit-identical to a from-scratch
+    /// build. The lazy GKP and band-of-inverse are invalidated and rebuilt
+    /// on next use.
     ///
     /// Returns the sorted insertion position, or `None` when the point
     /// cannot be inserted incrementally (degenerate duplicate cluster) — the
@@ -65,12 +131,12 @@ impl DimFactor {
         if !self.monotone {
             return None;
         }
+        let t0 = Instant::now();
         let pos = self.kp.insert(x)?;
-        let (t_lu, phi_lu, phit_lu, a_lu) = factor_lus(&self.kp, self.sigma2_y);
-        self.t_lu = t_lu;
-        self.phi_lu = phi_lu;
-        self.phit_lu = phit_lu;
-        self.a_lu = a_lu;
+        let t1 = Instant::now();
+        self.patch_factors(&[pos]);
+        self.timings.kp_patch_s += (t1 - t0).as_secs_f64();
+        self.timings.factor_s += t1.elapsed().as_secs_f64();
         self.gkp = None;
         self.c_band = None;
         Some(pos)
@@ -78,10 +144,17 @@ impl DimFactor {
 
     /// Batched form of [`DimFactor::insert_point`]: absorb `values` (in data
     /// order) with **one** union-of-windows KP patch
-    /// ([`KpFactorization::insert_batch`]) and **one** `O(ν²n)` sweep per LU
-    /// factor for the whole batch — the m-fold sweep amortization behind
-    /// `FitState::observe_batch`. Returns each value's final sorted
-    /// position.
+    /// ([`KpFactorization::insert_batch`]) and **one** LU update per factor
+    /// for the whole batch. The factor update is *not* an unconditional
+    /// `O(ν²n)` sweep: [`BandedLU::refactor_from`] reuses the elimination
+    /// prefix `[0, p_min − 2ν)` verbatim and re-eliminates only from the
+    /// lowest touched row, so an append-ordered batch costs
+    /// `O(ν²(m + w + ν))` per factor while a batch spanning the whole index
+    /// range degrades gracefully toward the old full sweep (patched vs
+    /// re-swept updates are counted in [`DimFactor::factor_patches`] /
+    /// [`DimFactor::factor_resweeps`]; a re-sweep triggers only on the
+    /// [`PatchPolicy::Resweep`] kill switch or a batch touching the very
+    /// first rows). Returns each value's final sorted position.
     ///
     /// Returns `None` with the factor state untouched when the batch hits a
     /// degenerate duplicate cluster (or the dimension is already
@@ -92,15 +165,93 @@ impl DimFactor {
         if !self.monotone {
             return None;
         }
+        let t0 = Instant::now();
         let positions = self.kp.insert_batch(values)?;
-        let (t_lu, phi_lu, phit_lu, a_lu) = factor_lus(&self.kp, self.sigma2_y);
-        self.t_lu = t_lu;
-        self.phi_lu = phi_lu;
-        self.phit_lu = phit_lu;
-        self.a_lu = a_lu;
+        let t1 = Instant::now();
+        if !positions.is_empty() {
+            let mut sorted = positions.clone();
+            sorted.sort_unstable();
+            self.patch_factors(&sorted);
+        }
+        self.timings.kp_patch_s += (t1 - t0).as_secs_f64();
+        self.timings.factor_s += t1.elapsed().as_secs_f64();
         self.gkp = None;
         self.c_band = None;
         Some(positions)
+    }
+
+    /// Update `T`, `Φᵀ` and the four banded LUs after the KP factorization
+    /// absorbed inserts at `sorted_positions` (final sorted indices,
+    /// strictly increasing). `T`/`Φᵀ` get one zero row/col splice plus a
+    /// window rewrite from the freshly patched `A`/`Φ` (bit-identical to a
+    /// from-scratch `add_scaled`/`transpose`); each LU is then patched by
+    /// [`BandedLU::refactor_from`] with its own lowest-touched row and
+    /// uniform-shift tail.
+    fn patch_factors(&mut self, sorted_positions: &[usize]) {
+        let w = self.kp.w();
+        let m = sorted_positions.len();
+        let pmin = sorted_positions[0];
+        let pmax = *sorted_positions.last().unwrap();
+        self.t.insert_rows_cols(sorted_positions);
+        self.phit.insert_rows_cols(sorted_positions);
+        let n = self.kp.n();
+        let inv_s2 = 1.0 / self.sigma2_y;
+        {
+            let DimFactor { t, phit, kp, .. } = self;
+            // T rows: the KP rewrite windows [p−w, p+w] (covers the splice
+            // straddle, max(kl, ku) = w).
+            for_union_rows(n, sorted_positions, w, |i| {
+                let (lo, hi) = t.row_range(i);
+                for j in lo..hi {
+                    t.set(i, j, kp.a.get(i, j) + inv_s2 * kp.phi.get(i, j));
+                }
+            });
+            // Φᵀ rows: every Φ column a rewritten Φ row covers,
+            // [p−(2w−1), p+(2w−1)].
+            for_union_rows(n, sorted_positions, 2 * w - 1, |i| {
+                let (lo, hi) = phit.row_range(i);
+                for j in lo..hi {
+                    phit.set(i, j, kp.phi.get(j, i));
+                }
+            });
+        }
+        let policy = self.patch_policy;
+        let tail = |h: usize| {
+            let from = pmax + h + 1;
+            if from < n {
+                Some((from, m))
+            } else {
+                None
+            }
+        };
+        let outcomes = [
+            self.t_lu.refactor_from(
+                &self.t,
+                &SpliceInfo { low: pmin.saturating_sub(w), tail: tail(w) },
+                policy,
+            ),
+            self.phi_lu.refactor_from(
+                &self.kp.phi,
+                &SpliceInfo { low: pmin.saturating_sub(w), tail: tail(w) },
+                policy,
+            ),
+            self.phit_lu.refactor_from(
+                &self.phit,
+                &SpliceInfo { low: pmin.saturating_sub(2 * w - 1), tail: tail(2 * w - 1) },
+                policy,
+            ),
+            self.a_lu.refactor_from(
+                &self.kp.a,
+                &SpliceInfo { low: pmin.saturating_sub(w), tail: tail(w) },
+                policy,
+            ),
+        ];
+        for o in outcomes {
+            match o {
+                PatchOutcome::Patched { .. } => self.factor_patches += 1,
+                PatchOutcome::Resweep => self.factor_resweeps += 1,
+            }
+        }
     }
 
     pub fn n(&self) -> usize {
@@ -113,7 +264,17 @@ impl DimFactor {
 
     /// Apply `K_d^{-1} = Φ_d^{-1} A_d` to a vector in sorted coordinates.
     pub fn kinv_sorted(&self, v: &[f64]) -> Vec<f64> {
-        self.phi_lu.solve(&self.kp.a.matvec(v))
+        let mut out = vec![0.0; v.len()];
+        self.kinv_sorted_into(v, &mut out);
+        out
+    }
+
+    /// [`DimFactor::kinv_sorted`] into a caller-owned buffer: one banded
+    /// matvec plus one in-place banded solve, no allocation (the hot-loop
+    /// form; DESIGN.md §Perf).
+    pub fn kinv_sorted_into(&self, v: &[f64], out: &mut [f64]) {
+        self.kp.a.matvec_into(v, out);
+        self.phi_lu.solve_in_place(out);
     }
 
     /// Apply `K_d = A_d^{-1} Φ_d` to a vector in sorted coordinates.
@@ -124,7 +285,16 @@ impl DimFactor {
     /// Solve the Algorithm 4 block system in sorted coordinates:
     /// `(K_d^{-1} + σ⁻²I) u = w  ⟺  (A_d + σ⁻²Φ_d) u = Φ_d w`.
     pub fn gs_block_solve_sorted(&self, w: &[f64]) -> Vec<f64> {
-        self.t_lu.solve(&self.kp.phi.matvec(w))
+        let mut out = vec![0.0; w.len()];
+        self.gs_block_solve_sorted_into(w, &mut out);
+        out
+    }
+
+    /// [`DimFactor::gs_block_solve_sorted`] into a caller-owned buffer, no
+    /// allocation.
+    pub fn gs_block_solve_sorted_into(&self, w: &[f64], out: &mut [f64]) {
+        self.kp.phi.matvec_into(w, out);
+        self.t_lu.solve_in_place(out);
     }
 
     /// The generalized-KP factorization (built on first use).
@@ -179,15 +349,22 @@ impl DimFactor {
     }
 }
 
-/// The four banded LUs every consumer reuses, from one KP factorization —
-/// shared by the fresh build and the incremental insert so both paths stay
-/// factor-for-factor identical.
-fn factor_lus(
-    kp: &KpFactorization,
-    sigma2_y: f64,
-) -> (BandedLU, BandedLU, BandedLU, BandedLU) {
-    let t = kp.a.add_scaled(&kp.phi, 1.0 / sigma2_y);
-    (t.lu(), kp.phi.lu(), kp.phi.transpose().lu(), kp.a.lu())
+/// Visit each row in the union of the windows `[q−h, q+h]` over the
+/// strictly-increasing `sorted_positions` exactly once (the same coverage
+/// walk as `KpFactorization::insert_batch`).
+fn for_union_rows(n: usize, sorted_positions: &[usize], h: usize, mut f: impl FnMut(usize)) {
+    let mut next = 0usize;
+    for &q in sorted_positions {
+        let lo = q.saturating_sub(h).max(next);
+        let hi = (q + h).min(n - 1);
+        if lo > hi {
+            continue;
+        }
+        for i in lo..=hi {
+            f(i);
+        }
+        next = hi + 1;
+    }
 }
 
 #[cfg(test)]

@@ -11,8 +11,10 @@
 //!
 //! * each dimension patches its KP factorization in place —
 //!   `O(log n)` position search, `O(2ν+1)` packet re-solves, one band-storage
-//!   splice, and an `O(ν²n)` banded LU sweep per factor
-//!   ([`DimFactor::insert_point`]);
+//!   splice, and a prefix-reuse banded-LU patch per factor (`O(ν³)`
+//!   arithmetic for append-ordered inserts; full `O(ν²n)` re-sweeps only
+//!   when the patch preconditions fail — [`DimFactor::insert_point`],
+//!   DESIGN.md §FitState "Sublinear LU patching");
 //! * the stored ṽ is extended by one entry and reused as the PCG warm start
 //!   for the next posterior solve, which then converges in a handful of
 //!   iterations instead of a cold Algorithm 4 run;
@@ -28,9 +30,10 @@
 //! `baselines::full_gp` oracle.
 
 use crate::gp::backfit::{BlockVec, GaussSeidel, GsStats};
-use crate::gp::dim::DimFactor;
+use crate::gp::dim::{DimFactor, PatchTimings};
 use crate::gp::posterior::{self, Posterior};
 use crate::kernels::matern::Matern;
+use crate::linalg::banded::PatchPolicy;
 use crate::util::pool;
 
 /// Result of one [`FitState::observe_batch`].
@@ -58,6 +61,10 @@ pub struct FitState {
     pub incremental_inserts: u64,
     /// Per-dimension full rebuilds forced by degenerate insertions.
     pub fallback_rebuilds: u64,
+    /// How inserts update the banded LU factors (DESIGN.md §FitState,
+    /// "Sublinear LU patching"); applied to every dimension, including
+    /// fallback rebuilds.
+    patch_policy: PatchPolicy,
 }
 
 impl FitState {
@@ -78,7 +85,57 @@ impl FitState {
             gs_tol,
             incremental_inserts: 0,
             fallback_rebuilds: 0,
+            patch_policy: PatchPolicy::Exact,
         }
+    }
+
+    /// Set the factor-patching policy on this state and every dimension
+    /// (future fallback rebuilds inherit it too).
+    pub fn set_patch_policy(&mut self, policy: PatchPolicy) {
+        self.patch_policy = policy;
+        for dim in &mut self.dims {
+            dim.patch_policy = policy;
+        }
+    }
+
+    /// The active factor-patching policy.
+    pub fn patch_policy(&self) -> PatchPolicy {
+        self.patch_policy
+    }
+
+    /// LU updates served by the prefix-reuse patch, summed over dimensions
+    /// (up to 4 per dimension per insert — one per factor).
+    pub fn factor_patches(&self) -> u64 {
+        self.dims.iter().map(|d| d.factor_patches).sum()
+    }
+
+    /// LU updates that fell back to the full `O(ν²n)` re-sweep, summed over
+    /// dimensions.
+    pub fn factor_resweeps(&self) -> u64 {
+        self.dims.iter().map(|d| d.factor_resweeps).sum()
+    }
+
+    /// Accumulated KP-patch vs factor-update wall-clock split, summed over
+    /// dimensions.
+    pub fn patch_timings(&self) -> PatchTimings {
+        let mut out = PatchTimings::default();
+        for d in &self.dims {
+            out.accumulate(&d.timings);
+        }
+        out
+    }
+
+    /// Replace `dim` with a from-scratch rebuild over `pts` (the degenerate
+    /// duplicate-cluster fallback), carrying the policy and the cumulative
+    /// patch counters/timings across so the per-state totals stay monotone.
+    fn rebuild_dim(dim: &mut DimFactor, pts: &[f64], sigma2_y: f64) {
+        let kern: Matern = *dim.kernel();
+        let mut fresh = DimFactor::new(pts, kern, sigma2_y);
+        fresh.patch_policy = dim.patch_policy;
+        fresh.factor_patches = dim.factor_patches;
+        fresh.factor_resweeps = dim.factor_resweeps;
+        fresh.timings = dim.timings;
+        *dim = fresh;
     }
 
     pub fn n(&self) -> usize {
@@ -137,8 +194,7 @@ impl FitState {
                     // Degenerate cluster: rebuild this dimension with the
                     // full nudge cascade (identical to the refit path).
                     self.fallback_rebuilds += 1;
-                    let kern: Matern = *self.dims[d].kernel();
-                    self.dims[d] = DimFactor::new(&x_cols[d], kern, self.sigma2_y);
+                    Self::rebuild_dim(&mut self.dims[d], &x_cols[d], self.sigma2_y);
                     self.dims[d].kp.perm.sorted_pos(n_new - 1)
                 }
             };
@@ -159,7 +215,7 @@ impl FitState {
     /// dimension sharding").
     ///
     /// Per dimension the batch costs **one** band splice, **one**
-    /// union-of-windows KP re-solve, **one** `O(ν²n)` sweep per LU factor
+    /// union-of-windows KP re-solve, **one** prefix-reuse LU patch per factor
     /// ([`DimFactor::insert_points`]) — instead of `m` of each — and the
     /// posterior is invalidated once, so the next
     /// [`FitState::ensure_posterior`] runs a single warm PCG solve for the
@@ -220,12 +276,7 @@ impl FitState {
                                 Some(_) => inserts += 1,
                                 None => {
                                     rebuilds += 1;
-                                    let kern: Matern = *dim.kernel();
-                                    *dim = DimFactor::new(
-                                        &x_cols[d][..n0 + t + 1],
-                                        kern,
-                                        sigma2,
-                                    );
+                                    Self::rebuild_dim(dim, &x_cols[d][..n0 + t + 1], sigma2);
                                 }
                             }
                         }

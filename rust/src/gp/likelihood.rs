@@ -52,12 +52,34 @@ impl Default for StochasticCfg {
 
 /// Apply `R = [Σ_d K_d + σ²I]^{-1}` to an `n`-vector (data order).
 pub fn r_matvec(dims: &[DimFactor], sigma2_y: f64, gs: &GaussSeidel, v: &[f64]) -> Vec<f64> {
+    let mut blocks: BlockVec = vec![vec![0.0; v.len()]; dims.len()];
+    let mut out = vec![0.0; v.len()];
+    r_matvec_into(dims, sigma2_y, gs, v, &mut blocks, &mut out);
+    out
+}
+
+/// [`r_matvec`] with caller-owned buffers — the Hutchinson probe loops
+/// reuse `blocks`/`out` across probes instead of allocating a fresh
+/// `BlockVec` per solve (the per-iteration solver work inside is already
+/// allocation-free through `GaussSeidel`'s scratch; DESIGN.md §Perf).
+pub fn r_matvec_into(
+    dims: &[DimFactor],
+    sigma2_y: f64,
+    gs: &GaussSeidel,
+    v: &[f64],
+    blocks: &mut BlockVec,
+    out: &mut [f64],
+) {
     let n = v.len();
+    assert_eq!(blocks.len(), dims.len());
+    assert_eq!(out.len(), n);
     let inv2 = 1.0 / sigma2_y;
     // S v: every block gets v. Solve [K^{-1}+σ⁻²SSᵀ]u = S v.
-    let blocks: BlockVec = (0..dims.len()).map(|_| v.to_vec()).collect();
-    let (u, _) = gs.solve(&blocks);
-    let mut out = vec![0.0; n];
+    for b in blocks.iter_mut() {
+        b.copy_from_slice(v);
+    }
+    let (u, _) = gs.solve(blocks);
+    out.fill(0.0);
     for b in &u {
         for i in 0..n {
             out[i] += b[i];
@@ -66,7 +88,6 @@ pub fn r_matvec(dims: &[DimFactor], sigma2_y: f64, gs: &GaussSeidel, v: &[f64]) 
     for i in 0..n {
         out[i] = inv2 * v[i] - inv2 * inv2 * out[i];
     }
-    out
 }
 
 /// `Σ_d (log|Φ_d| − log|A_d|) = log|K|` — the banded log-det terms of (14).
@@ -86,10 +107,14 @@ pub fn lambda_max(dims: &[DimFactor], gs: &GaussSeidel, cfg: &StochasticCfg, rng
     let n = dims[0].n();
     let dd = dims.len();
     let mut best = 0.0f64;
+    // One scratch + one iterate buffer for the whole power iteration — the
+    // inner loop allocates nothing.
+    let mut scratch = gs.scratch();
+    let mut w: BlockVec = vec![vec![0.0; n]; dd];
     for _ in 0..cfg.power_restarts.max(1) {
         let mut v: BlockVec = (0..dd).map(|_| rng.rademacher_vec(n)).collect();
         for _ in 0..cfg.power_iters {
-            let mut w = gs.apply(&v);
+            gs.apply_into(&v, &mut w, &mut scratch);
             let norm = w
                 .iter()
                 .flat_map(|b| b.iter())
@@ -102,12 +127,12 @@ pub fn lambda_max(dims: &[DimFactor], gs: &GaussSeidel, cfg: &StochasticCfg, rng
                     *x /= norm;
                 }
             }
-            v = w;
+            std::mem::swap(&mut v, &mut w);
         }
-        let mv = gs.apply(&v);
+        gs.apply_into(&v, &mut w, &mut scratch);
         let num: f64 = v
             .iter()
-            .zip(&mv)
+            .zip(&w)
             .flat_map(|(a, b)| a.iter().zip(b.iter()))
             .map(|(a, b)| a * b)
             .sum();
@@ -131,13 +156,15 @@ pub fn logdet_m_stochastic(dims: &[DimFactor], gs: &GaussSeidel, cfg: &Stochasti
         (4.0 * (n as f64).log2()).ceil() as usize
     };
     let mut gamma = 0.0;
+    let mut scratch = gs.scratch();
+    let mut mu: BlockVec = vec![vec![0.0; n]; dd];
     for _ in 0..cfg.logdet_probes {
         let v0: BlockVec = (0..dd).map(|_| rng.rademacher_vec(n)).collect();
         let mut u = v0.clone();
         let mut acc = 0.0;
         for s in 1..=terms {
             // u ← (I − M/λ) u
-            let mu = gs.apply(&u);
+            gs.apply_into(&u, &mut mu, &mut scratch);
             for (ub, mb) in u.iter_mut().zip(&mu) {
                 for (x, m) in ub.iter_mut().zip(mb) {
                     *x -= m / lam;
@@ -255,13 +282,16 @@ pub fn nll_grad(dims: &mut [DimFactor], sigma2_y: f64, y: &[f64], cfg: &Stochast
     }
     let quad_sigma: f64 = ry.iter().map(|x| x * x).sum();
 
-    // Hutchinson traces with shared probes.
+    // Hutchinson traces with shared probes; the probe solves reuse one set
+    // of RHS/output buffers across the whole loop.
     let mut rng = Rng::new(cfg.seed ^ 0x7eace);
     let mut tr_omega = vec![0.0; dd];
     let mut tr_sigma = 0.0;
+    let mut probe_blocks: BlockVec = vec![vec![0.0; n]; dd];
+    let mut rv = vec![0.0; n];
     for _ in 0..cfg.trace_probes {
         let v = rng.rademacher_vec(n);
-        let rv = r_matvec(dims, sigma2_y, &gs_probe, &v);
+        r_matvec_into(dims, sigma2_y, &gs_probe, &v, &mut probe_blocks, &mut rv);
         tr_sigma += v.iter().zip(&rv).map(|(a, b)| a * b).sum::<f64>();
         for (d, dim) in dims.iter().enumerate() {
             let vs = dim.kp.perm.to_sorted(&v);

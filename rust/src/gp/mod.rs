@@ -24,7 +24,7 @@ pub mod model;
 pub mod posterior;
 pub mod train;
 
-pub use backfit::{BlockVec, GaussSeidel};
-pub use dim::DimFactor;
+pub use backfit::{BlockVec, GaussSeidel, GsScratch};
+pub use dim::{DimFactor, PatchTimings};
 pub use fit_state::{BatchPositions, FitState};
 pub use model::{AdditiveGP, AdditiveGpConfig, BatchPath};

@@ -5,12 +5,13 @@
 //! [`crate::gp::fit_state::FitState`]; this façade adds data bookkeeping,
 //! the `M̃` cache, and hyperparameter training on top.
 
-use crate::gp::dim::DimFactor;
+use crate::gp::dim::{DimFactor, PatchTimings};
 use crate::gp::fit_state::FitState;
 use crate::gp::likelihood::{self, StochasticCfg};
 use crate::gp::posterior::{self, MTildeCache, PredictOut};
 use crate::gp::train::{self, TrainCfg};
 use crate::kernels::matern::{Matern, Nu};
+use crate::linalg::banded::PatchPolicy;
 
 /// Configuration of an additive Matérn GP.
 #[derive(Clone, Copy, Debug)]
@@ -27,6 +28,14 @@ pub struct AdditiveGpConfig {
     pub stochastic: StochasticCfg,
     /// `M̃` cache capacity (columns); 0 = unbounded.
     pub cache_capacity: usize,
+    /// How `observe`/`observe_batch` update the banded LU factors
+    /// (DESIGN.md §FitState, "Sublinear LU patching"). The default
+    /// [`PatchPolicy::Exact`] reuses the elimination prefix and stays
+    /// bit-identical to a full refit; [`PatchPolicy::EarlyExit`] additionally
+    /// truncates mid-matrix sweeps at a tolerance;
+    /// [`PatchPolicy::Resweep`] restores the pre-patch full sweep (kill
+    /// switch / bench baseline).
+    pub patch_policy: PatchPolicy,
 }
 
 impl Default for AdditiveGpConfig {
@@ -39,6 +48,7 @@ impl Default for AdditiveGpConfig {
             gs_tol: 1e-10,
             stochastic: StochasticCfg::default(),
             cache_capacity: 8192,
+            patch_policy: PatchPolicy::Exact,
         }
     }
 }
@@ -127,10 +137,13 @@ impl AdditiveGP {
 
     /// Append one observation (sequential sampling) **incrementally**: once
     /// the model is active, each dimension patches its KP factorization in
-    /// place (`O(log n)` search + `O(2ν+1)` packet re-solves + an `O(ν²n)`
-    /// banded LU sweep), the `M̃` cache is invalidated only in the `2ν`
-    /// window around the insertion, and the next posterior solve warm-starts
-    /// from the previous ṽ — no full refit (DESIGN.md §FitState).
+    /// place (`O(log n)` search + `O(2ν+1)` packet re-solves + a
+    /// prefix-reuse banded-LU patch — `O(ν³)` arithmetic for append-ordered
+    /// points, `O(ν²(n − pos))` for a mid-matrix insert at sorted position
+    /// `pos`), the `M̃` cache is
+    /// invalidated only in the `2ν` window around the insertion, and the
+    /// next posterior solve warm-starts from the previous ṽ — no full refit
+    /// (DESIGN.md §FitState, "Sublinear LU patching").
     pub fn observe(&mut self, x: &[f64], y: f64) {
         assert_eq!(x.len(), self.input_dim());
         for (d, &v) in x.iter().enumerate() {
@@ -151,10 +164,10 @@ impl AdditiveGP {
 
     /// Append a batch of observations through the *batched* incremental
     /// path: per dimension one band splice, one union-of-windows KP
-    /// re-solve, one `O(ν²n)` factor sweep — instead of `m` of each — with
-    /// the dimensions sharded across a scoped thread pool, the M̃ cache
-    /// invalidated once, and one warm posterior solve on the next predict
-    /// ([`crate::gp::fit_state::FitState::observe_batch`]).
+    /// re-solve, one prefix-reuse LU patch per factor — instead of `m` of
+    /// each — with the dimensions sharded across a scoped thread pool, the
+    /// M̃ cache invalidated once, and one warm posterior solve on the next
+    /// predict ([`crate::gp::fit_state::FitState::observe_batch`]).
     ///
     /// Crossover policy (measured by `cargo bench --bench incremental --
     /// --crossover`; DESIGN.md §FitState "Batched inserts"): because the
@@ -220,12 +233,9 @@ impl AdditiveGP {
             .zip(&self.omegas)
             .map(|(col, &om)| DimFactor::new(col, Matern::new(nu, om), sigma2))
             .collect();
-        self.state = Some(FitState::new(
-            dims,
-            sigma2,
-            self.cfg.gs_max_sweeps,
-            self.cfg.gs_tol,
-        ));
+        let mut state = FitState::new(dims, sigma2, self.cfg.gs_max_sweeps, self.cfg.gs_tol);
+        state.set_patch_policy(self.cfg.patch_policy);
+        self.state = Some(state);
     }
 
     /// Ensure the posterior state (`b_Y`) exists — one (warm-started)
@@ -279,12 +289,10 @@ impl AdditiveGP {
             &self.cfg.stochastic,
         );
         self.omegas = omegas;
-        self.state = Some(FitState::new(
-            dims,
-            self.cfg.sigma2_y,
-            self.cfg.gs_max_sweeps,
-            self.cfg.gs_tol,
-        ));
+        let mut state =
+            FitState::new(dims, self.cfg.sigma2_y, self.cfg.gs_max_sweeps, self.cfg.gs_tol);
+        state.set_patch_policy(self.cfg.patch_policy);
+        self.state = Some(state);
         self.cache.clear();
         hist
     }
@@ -310,6 +318,26 @@ impl AdditiveGP {
         match &self.state {
             Some(s) => (s.incremental_inserts, s.fallback_rebuilds, self.cache.refreshes),
             None => (0, 0, self.cache.refreshes),
+        }
+    }
+
+    /// Factor-update statistics `(prefix-reuse patches, full re-sweeps)`,
+    /// counted per banded LU (up to 4 per dimension per insert) — the
+    /// production observability for the DESIGN.md "Sublinear LU patching"
+    /// crossover. Zero before activation.
+    pub fn factor_stats(&self) -> (u64, u64) {
+        match &self.state {
+            Some(s) => (s.factor_patches(), s.factor_resweeps()),
+            None => (0, 0),
+        }
+    }
+
+    /// Accumulated wall-clock split of the incremental insert path (KP
+    /// window patch vs factor update), summed over dimensions.
+    pub fn patch_timings(&self) -> PatchTimings {
+        match &self.state {
+            Some(s) => s.patch_timings(),
+            None => PatchTimings::default(),
         }
     }
 

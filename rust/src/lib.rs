@@ -58,8 +58,10 @@
 //! println!("updated s = {}", out.var);
 //!
 //! // Batches are first-class too: one band splice, one window-union KP
-//! // re-solve and one factor sweep per dimension for the whole batch,
-//! // dimensions sharded across threads (§FitState "Batched inserts"):
+//! // re-solve and one prefix-reuse factor patch per dimension for the
+//! // whole batch — append-ordered ingest never pays a linear LU sweep
+//! // (§FitState "Sublinear LU patching") — with dimensions sharded across
+//! // threads (§FitState "Batched inserts"):
 //! let new_x = vec![vec![0.3, 0.8], vec![1.9, 1.1], vec![2.2, 0.6]];
 //! let new_y = vec![0.7, -0.2, 0.5];
 //! let path = gp.observe_batch(&new_x, &new_y);

@@ -7,6 +7,6 @@ pub mod block_tridiag;
 pub mod dense;
 pub mod perm;
 
-pub use banded::Banded;
+pub use banded::{Banded, BandedLU, PatchOutcome, PatchPolicy, SpliceInfo};
 pub use dense::Dense;
 pub use perm::Permutation;

@@ -52,18 +52,35 @@ impl Permutation {
 
     /// Gather `x` (original order) into sorted order: `y[s] = x[orig(s)]`.
     pub fn to_sorted(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; x.len()];
+        self.to_sorted_into(x, &mut y);
+        y
+    }
+
+    /// [`Permutation::to_sorted`] into a caller-owned buffer — the
+    /// allocation-free form used by the hot solve loops (DESIGN.md §Perf).
+    pub fn to_sorted_into(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.fwd.len());
-        self.fwd.iter().map(|&o| x[o]).collect()
+        assert_eq!(y.len(), self.fwd.len());
+        for (s, &o) in self.fwd.iter().enumerate() {
+            y[s] = x[o];
+        }
     }
 
     /// Scatter `x` (sorted order) back to original order.
     pub fn to_original(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.fwd.len());
         let mut y = vec![0.0; x.len()];
+        self.to_original_into(x, &mut y);
+        y
+    }
+
+    /// [`Permutation::to_original`] into a caller-owned buffer.
+    pub fn to_original_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.fwd.len());
+        assert_eq!(y.len(), self.fwd.len());
         for (s, &o) in self.fwd.iter().enumerate() {
             y[o] = x[s];
         }
-        y
     }
 
     /// The sorted copy of `points` (convenience).

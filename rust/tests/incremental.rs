@@ -16,7 +16,9 @@
 
 use addgp::baselines::full_gp::FullGP;
 use addgp::gp::model::{AdditiveGP, AdditiveGpConfig, BatchPath};
-use addgp::kernels::matern::Nu;
+use addgp::gp::DimFactor;
+use addgp::kernels::matern::{Matern, Nu};
+use addgp::linalg::PatchPolicy;
 use addgp::util::Rng;
 
 fn gp_config(nu: Nu, omega: f64, sigma2: f64) -> AdditiveGpConfig {
@@ -514,6 +516,194 @@ fn prop_observe_batch_duplicates_force_fallback_matches_sequential() {
             a.var,
             c.var
         );
+    }
+}
+
+/// Strictly-increasing jittered 1-d points for the factor-patch property
+/// tests (spacing ≥ 0.07 keeps everything well-conditioned).
+fn jittered_points(count: usize, rng: &mut Rng) -> Vec<f64> {
+    (0..count).map(|i| 0.1 * i as f64 + 0.03 * rng.uniform()).collect()
+}
+
+/// Assert the four banded LUs of `a` and `b` act bit-identically (solves
+/// and log-dets) — the observable form of factor-level bit-equality.
+fn assert_factor_lus_bitwise(a: &DimFactor, b: &DimFactor, label: &str) {
+    let n = a.n();
+    assert_eq!(n, b.n(), "{label}: n");
+    let mut rng = Rng::new(0xB17);
+    let rhs = rng.normal_vec(n);
+    for (name, la, lb) in [
+        ("T", &a.t_lu, &b.t_lu),
+        ("Phi", &a.phi_lu, &b.phi_lu),
+        ("PhiT", &a.phit_lu, &b.phit_lu),
+        ("A", &a.a_lu, &b.a_lu),
+    ] {
+        let xa = la.solve(&rhs);
+        let xb = lb.solve(&rhs);
+        for i in 0..n {
+            assert!(
+                xa[i] == xb[i] || (xa[i].is_nan() && xb[i].is_nan()),
+                "{label} {name} solve[{i}]: {} vs {}",
+                xa[i],
+                xb[i]
+            );
+        }
+        assert_eq!(la.logdet(), lb.logdet(), "{label} {name} logdet");
+    }
+}
+
+/// ISSUE 4 property: `BandedLU::refactor_from` through the `DimFactor`
+/// insert path equals a from-scratch build **bit-for-bit** for
+/// append-ordered batches (every insert beyond the current maximum — the
+/// prefix-reuse fast path, no re-sweeps), across 2ν ∈ {1, 3, 5}.
+#[test]
+fn prop_factor_patch_append_bitwise_across_nu() {
+    for (seed, nu) in [(11u64, Nu::Half), (12, Nu::ThreeHalves), (13, Nu::FiveHalves)] {
+        let mut rng = Rng::new(seed);
+        let pts = jittered_points(60, &mut rng);
+        let kern = Matern::new(nu, 1.1);
+        let mut inc = DimFactor::new(&pts, kern, 0.7);
+        let top = pts.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+
+        // One append batch, then a few single appends.
+        let batch: Vec<f64> = (0..5).map(|t| top + 0.05 * (t + 1) as f64).collect();
+        let positions = inc.insert_points(&batch).expect("append batch inserts");
+        assert_eq!(positions, vec![60, 61, 62, 63, 64], "{nu:?}: end positions");
+        let mut all = pts.clone();
+        all.extend_from_slice(&batch);
+        for t in 0..3 {
+            let x = top + 0.25 + 0.05 * t as f64 + 0.01;
+            inc.insert_point(x).expect("append point inserts");
+            all.push(x);
+        }
+        assert_eq!(inc.factor_resweeps, 0, "{nu:?}: append-ordered inserts must never re-sweep");
+        assert_eq!(inc.factor_patches, 16, "{nu:?}: 4 LUs × (1 batch + 3 points)");
+
+        let fresh = DimFactor::new(&all, kern, 0.7);
+        assert_factor_lus_bitwise(&inc, &fresh, &format!("{nu:?} append"));
+    }
+}
+
+/// Shuffled mid-matrix inserts under the default `Exact` policy stay
+/// bit-identical to a from-scratch build (patched *or* legitimately
+/// re-swept — both are exact), across 2ν ∈ {1, 3, 5}.
+#[test]
+fn prop_factor_patch_shuffled_mid_matrix_exact_bitwise() {
+    for (seed, nu) in [(21u64, Nu::Half), (22, Nu::ThreeHalves), (23, Nu::FiveHalves)] {
+        let mut rng = Rng::new(seed);
+        let pts = jittered_points(50, &mut rng);
+        let kern = Matern::new(nu, 0.9);
+        let mut inc = DimFactor::new(&pts, kern, 0.8);
+        let mut all = pts.clone();
+        // Interior, front, and back inserts, one at a time and as a
+        // shuffled batch.
+        for &x in &[2.52, 0.005, 4.87, 1.11] {
+            inc.insert_point(x).expect("distinct point inserts");
+            all.push(x);
+        }
+        let batch = [3.33, 0.61, 4.44, 0.02];
+        inc.insert_points(&batch).expect("distinct batch inserts");
+        all.extend_from_slice(&batch);
+        assert!(inc.factor_patches > 0, "{nu:?}: interior inserts should patch");
+
+        let fresh = DimFactor::new(&all, kern, 0.8);
+        assert_factor_lus_bitwise(&inc, &fresh, &format!("{nu:?} shuffled"));
+    }
+}
+
+/// The tolerance-gated `EarlyExit` policy stays close to scratch on
+/// shuffled mid-matrix inserts, and flipping the same stream to the exact
+/// fallback reproduces scratch bit-for-bit — the ISSUE 4 fallback
+/// assertion. The per-row match gate is 1e-13; the solve-level bound is
+/// graded with the factor conditioning per ν (ω chosen so cond·ε leaves
+/// ≥ 10× margin — the ≤ 1e-12 *factor-entry* form of the criterion is
+/// asserted directly in the `linalg::banded` unit tests, where the entries
+/// are accessible).
+#[test]
+fn prop_factor_patch_early_exit_within_tol_with_exact_fallback() {
+    for (seed, nu, omega, tol) in [
+        (31u64, Nu::Half, 1.0, 1e-12),
+        (32, Nu::ThreeHalves, 2.5, 1e-10),
+        (33, Nu::FiveHalves, 5.0, 1e-9),
+    ] {
+        let mut rng = Rng::new(seed);
+        let pts = jittered_points(300, &mut rng);
+        let kern = Matern::new(nu, omega);
+        let mut early = DimFactor::new(&pts, kern, 0.9);
+        early.patch_policy = PatchPolicy::EarlyExit { rel_tol: 1e-13 };
+        let mut exact = DimFactor::new(&pts, kern, 0.9);
+        let mut all = pts.clone();
+        let inserts = [7.13, 22.91, 2.46, 15.55, 27.03];
+        for &x in &inserts {
+            early.insert_point(x).expect("distinct point inserts");
+            exact.insert_point(x).expect("distinct point inserts");
+            all.push(x);
+        }
+        let fresh = DimFactor::new(&all, kern, 0.9);
+
+        // Exact fallback: bit-for-bit.
+        assert_factor_lus_bitwise(&exact, &fresh, &format!("{nu:?} exact fallback"));
+
+        // Early-exit: solves through every factor within the graded bound.
+        let n = all.len();
+        let rhs = rng.normal_vec(n);
+        for (name, le, lf) in [
+            ("T", &early.t_lu, &fresh.t_lu),
+            ("Phi", &early.phi_lu, &fresh.phi_lu),
+            ("PhiT", &early.phit_lu, &fresh.phit_lu),
+            ("A", &early.a_lu, &fresh.a_lu),
+        ] {
+            let xe = le.solve(&rhs);
+            let xf = lf.solve(&rhs);
+            let scale = xf.iter().fold(0.0f64, |m, &v| m.max(v.abs())).max(1.0);
+            for i in 0..n {
+                assert!(
+                    (xe[i] - xf[i]).abs() <= tol * scale,
+                    "{nu:?} {name} solve[{i}]: early {} vs scratch {}",
+                    xe[i],
+                    xf[i]
+                );
+            }
+        }
+    }
+}
+
+/// Duplicate-coordinate clusters: a batch with an inseparable duplicate is
+/// refused atomically; nudged single inserts keep the patched factors
+/// bit-identical to a fresh build over the (nudged) point set, across
+/// 2ν ∈ {1, 3, 5}.
+#[test]
+fn prop_factor_patch_duplicate_clusters_stay_exact() {
+    for (seed, nu) in [(41u64, Nu::Half), (42, Nu::ThreeHalves), (43, Nu::FiveHalves)] {
+        let mut rng = Rng::new(seed);
+        let pts = jittered_points(40, &mut rng);
+        let kern = Matern::new(nu, 1.0);
+        let mut inc = DimFactor::new(&pts, kern, 0.6);
+        let dup = pts[17];
+
+        // Inseparable duplicate pair inside a batch: refused pre-mutation.
+        let (p0, r0) = (inc.factor_patches, inc.factor_resweeps);
+        assert!(inc.insert_points(&[dup, dup]).is_none());
+        assert_eq!((inc.factor_patches, inc.factor_resweeps), (p0, r0));
+
+        // Nudged duplicates + clean points through the per-point path.
+        let mut inserted = 0u64;
+        for x in [dup, 1.77, dup, 2.93, dup, dup] {
+            if inc.insert_point(x).is_some() {
+                inserted += 1;
+            }
+        }
+        assert!(inserted >= 3, "{nu:?}: clean points and first nudges insert");
+        assert_eq!(
+            inc.factor_patches + inc.factor_resweeps,
+            (p0 + r0) + 4 * inserted,
+            "{nu:?}: every successful insert updates all four LUs"
+        );
+
+        // The patched factors equal a fresh build over the exact (nudged)
+        // sorted point set.
+        let fresh = DimFactor::new(&inc.kp.xs.clone(), kern, 0.6);
+        assert_factor_lus_bitwise(&inc, &fresh, &format!("{nu:?} duplicates"));
     }
 }
 
