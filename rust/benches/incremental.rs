@@ -27,6 +27,15 @@
 //! `PatchPolicy::Exact` against the `PatchPolicy::Resweep` baseline (the
 //! old unconditional `O(ν²n)` sweep).
 //!
+//! A fifth comparison (ISSUE 5, `--multi-model`) benchmarks the **shared
+//! worker-pool coordinator**: M = 8 models at n = 10k each run an
+//! interleaved observe/predict workload, once through a W-worker
+//! [`Scheduler`] driven by 8 concurrent clients and once through a 1-worker
+//! scheduler one-model-at-a-time (the serialized baseline). The `pool`
+//! section of the JSON carries both times; the gate requires pool
+//! throughput ≥ min(3, 0.75·W)× the serialized baseline — 3× on the
+//! 4-vCPU CI runner, proportionally less on smaller hosts.
+//!
 //! `--smoke` halves the per-point repetitions (the size list already stops
 //! at the gated n = 10k without `--full`); `--json PATH` writes the
 //! measurements as one JSON object (the CI `bench-smoke` job uploads it as
@@ -34,20 +43,27 @@
 //! `--gate` exits non-zero unless, at n = 10k, observe-per-point beats
 //! refit-per-point, `observe_batch(m=64)` beats 64 sequential observes,
 //! *and* the append-path patched factor update beats the full re-sweep —
-//! all by ≥ 5×. The JSON is written *before* the gate verdict so a failing
-//! run still uploads its numbers.
+//! all by ≥ 5× (plus the pool gate when `--multi-model` ran). The JSON is
+//! written *before* the gate verdict so a failing run still uploads its
+//! numbers.
 
 use std::time::Instant;
 
+use addgp::coordinator::protocol::Response;
+use addgp::coordinator::{Command, EngineConfig, Scheduler};
 use addgp::gp::model::{AdditiveGP, AdditiveGpConfig, BatchPath};
 use addgp::kernels::matern::Nu;
 use addgp::linalg::PatchPolicy;
-use addgp::util::{Json, Rng};
+use addgp::util::{pool, Json, Rng};
 
 /// Gate thresholds (ISSUE 3 + ISSUE 4 acceptance criteria).
 const GATE_N: usize = 10_000;
 const GATE_MIN_SPEEDUP: f64 = 5.0;
 const BATCH_M: usize = 64;
+/// Multi-model pool bench shape (ISSUE 5 acceptance criterion).
+const POOL_MODELS: usize = 8;
+const POOL_ROUNDS: usize = 30;
+const POOL_GATE_SPEEDUP: f64 = 3.0;
 
 fn data(n: usize, d: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
     let mut rng = Rng::new(seed);
@@ -287,6 +303,142 @@ impl Gate {
     }
 }
 
+/// One scheduler round-trip (in-process; no TCP so the measurement is pure
+/// pool + engine).
+fn pool_call(
+    sched: &Scheduler,
+    model: u64,
+    make: impl FnOnce(std::sync::mpsc::Sender<Response>) -> Command,
+) -> Response {
+    let (tx, rx) = std::sync::mpsc::channel();
+    sched.dispatch(model, make(tx));
+    rx.recv().expect("scheduler reply")
+}
+
+fn pool_cfg(d: usize) -> EngineConfig {
+    EngineConfig {
+        d,
+        nu: Nu::ThreeHalves,
+        omega0: 1.0,
+        sigma2: 1.0,
+        lo: 0.0,
+        hi: 10.0,
+        use_pjrt: false,
+        seed: 0xBEEF,
+    }
+}
+
+/// Create one model and ingest its n-point base set (refit path).
+fn pool_setup_model(sched: &Scheduler, n: usize, d: usize, mi: usize) -> u64 {
+    let model = sched.create_model(pool_cfg(d));
+    let (x, y) = data(n, d, 0xB00 + mi as u64);
+    match pool_call(sched, model, |reply| Command::ObserveBatch { xs: x, ys: y, reply }) {
+        Response::BatchObserved { n: got, .. } => assert_eq!(got, n),
+        other => panic!("setup failed: {other:?}"),
+    }
+    model
+}
+
+/// The measured per-model workload: `rounds` of one single-point observe
+/// (factor patch, posterior left lazy) followed by one 2-row predict
+/// (snapshot rebuild + window math) — the ingest-overlapping-predict shape
+/// the shared pool exists for.
+fn pool_drive_model(sched: &Scheduler, model: u64, d: usize, mi: usize, rounds: usize) {
+    let mut rng = Rng::new(0xD21 + mi as u64);
+    for _ in 0..rounds {
+        let x: Vec<f64> = (0..d).map(|_| rng.uniform_in(0.0, 10.0)).collect();
+        let yv: f64 = x.iter().map(|v| v.sin()).sum();
+        match pool_call(sched, model, |reply| Command::Observe { x, y: yv, reply }) {
+            Response::Observed { .. } => {}
+            other => panic!("observe failed: {other:?}"),
+        }
+        let probes: Vec<Vec<f64>> = (0..2)
+            .map(|_| (0..d).map(|_| rng.uniform_in(0.0, 10.0)).collect())
+            .collect();
+        match pool_call(sched, model, |reply| Command::Predict {
+            xs: probes,
+            beta: 2.0,
+            grad: false,
+            reply,
+        }) {
+            Response::Prediction { .. } => {}
+            other => panic!("predict failed: {other:?}"),
+        }
+    }
+}
+
+struct PoolBench {
+    n: usize,
+    workers: usize,
+    pool_s: f64,
+    serialized_s: f64,
+}
+
+impl PoolBench {
+    fn speedup(&self) -> f64 {
+        self.serialized_s / self.pool_s.max(1e-9)
+    }
+
+    /// 3× on hosts with ≥ 4 workers (the CI shape); proportionally less on
+    /// smaller hosts where that much parallelism does not exist.
+    fn threshold(&self) -> f64 {
+        POOL_GATE_SPEEDUP.min(0.75 * self.workers as f64)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("models", Json::Num(POOL_MODELS as f64)),
+            ("rounds", Json::Num(POOL_ROUNDS as f64)),
+            ("workers", Json::Num(self.workers as f64)),
+            ("pool_s", Json::Num(self.pool_s)),
+            ("serialized_s", Json::Num(self.serialized_s)),
+            ("speedup", Json::Num(self.speedup())),
+            ("threshold", Json::Num(self.threshold())),
+        ])
+    }
+}
+
+/// ISSUE 5: M models × interleaved observe/predict through the shared pool
+/// (M concurrent clients, W workers) vs the serialized one-model-at-a-time
+/// baseline (1 worker, sequential clients). Setup (ingesting M × n points)
+/// is excluded from both measurements.
+fn measure_multi_model(n: usize, d: usize) -> PoolBench {
+    let workers = POOL_MODELS.min(pool::default_threads());
+
+    let sched = Scheduler::new(workers);
+    let models: Vec<u64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..POOL_MODELS)
+            .map(|mi| {
+                let sched = &sched;
+                s.spawn(move || pool_setup_model(sched, n, d, mi))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("setup client")).collect()
+    });
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for (mi, &model) in models.iter().enumerate() {
+            let sched = &sched;
+            s.spawn(move || pool_drive_model(sched, model, d, mi, POOL_ROUNDS));
+        }
+    });
+    let pool_s = t0.elapsed().as_secs_f64();
+    sched.shutdown();
+
+    let sched1 = Scheduler::new(1);
+    let models1: Vec<u64> =
+        (0..POOL_MODELS).map(|mi| pool_setup_model(&sched1, n, d, mi)).collect();
+    let t0 = Instant::now();
+    for (mi, &model) in models1.iter().enumerate() {
+        pool_drive_model(&sched1, model, d, mi, POOL_ROUNDS);
+    }
+    let serialized_s = t0.elapsed().as_secs_f64();
+    sched1.shutdown();
+
+    PoolBench { n, workers, pool_s, serialized_s }
+}
+
 /// Batch-size sweep at fixed `n`: where does one batched insert stop
 /// beating one refit? (Informs the `m ≤ n` crossover in
 /// `AdditiveGP::observe_batch`; see DESIGN.md §FitState.)
@@ -392,6 +544,31 @@ fn main() {
     }
     println!("\n(equivalence of all paths: cargo test --test incremental)");
 
+    // ISSUE 5: shared worker-pool throughput over M models vs the
+    // serialized one-model-at-a-time baseline.
+    let pool_bench = if has("--multi-model") {
+        let pb = measure_multi_model(GATE_N, d);
+        println!(
+            "\n# multi-model shared pool: {POOL_MODELS} models × {POOL_ROUNDS} \
+             observe+predict rounds at n = {GATE_N} ({} workers)\n",
+            pb.workers
+        );
+        println!(
+            "{:>16}  {:>16}  {:>10}  {:>10}",
+            "pool s", "serialized s", "speedup", "gate ≥"
+        );
+        println!(
+            "{:>16.2}  {:>16.2}  {:>9.2}×  {:>9.2}×",
+            pb.pool_s,
+            pb.serialized_s,
+            pb.speedup(),
+            pb.threshold()
+        );
+        Some(pb)
+    } else {
+        None
+    };
+
     // Gates are evaluated at n = 10k (present in every mode's size list).
     let mut gates: Vec<Gate> = results
         .iter()
@@ -428,6 +605,13 @@ fn main() {
             threshold: GATE_MIN_SPEEDUP,
         });
     }
+    if let Some(pb) = &pool_bench {
+        gates.push(Gate {
+            name: "pool_vs_serialized_multi_model_at_10k",
+            value: pb.speedup(),
+            threshold: pb.threshold(),
+        });
+    }
 
     if let Some(path) = json_path {
         let json = Json::obj(vec![
@@ -439,6 +623,10 @@ fn main() {
             (
                 "factor_split",
                 Json::Arr(splits.iter().map(|(n, s)| s.to_json(*n)).collect()),
+            ),
+            (
+                "pool",
+                pool_bench.as_ref().map(PoolBench::to_json).unwrap_or(Json::Null),
             ),
             ("gates", Json::Arr(gates.iter().map(Gate::to_json).collect())),
         ]);

@@ -1,21 +1,21 @@
-//! Per-model worker: owns the sparse [`AdditiveGP`] and (when an artifact
-//! matches) the compiled PJRT `window_acq` executable. Requests arrive on an
-//! mpsc queue; `Predict` requests are *dynamically batched* — the worker
-//! drains whatever is queued (up to the artifact batch size), gathers
-//! windows in rust (`O(log n)` per query), runs one PJRT execution, and
-//! fans the rows back out to their callers.
+//! Per-model engine state: owns the sparse [`AdditiveGP`] and the command
+//! handlers. Since the shared worker-pool rewrite (DESIGN.md §Coordinator)
+//! the engine no longer runs its own thread or owns PJRT handles: any pool
+//! worker may execute a command against it under the model's mutual
+//! exclusion, and the compiled `window_acq` executable — whose handles are
+//! not `Send` — lives in the thread-local registry of the worker that
+//! compiled it and is *passed in* by the scheduler's worker-affinity predict
+//! jobs ([`crate::coordinator::scheduler`]).
 
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::Sender;
 
 use crate::bo::acquisition::Acquisition;
-use crate::bo::search::{search_next, SearchCfg};
 use crate::coordinator::protocol::Response;
+use crate::gp::fit_state::PosteriorSnapshot;
 use crate::gp::model::{AdditiveGP, AdditiveGpConfig};
 use crate::gp::train::TrainCfg;
 use crate::kernels::matern::Nu;
-use crate::runtime::xla;
-use crate::runtime::{ArtifactManifest, WindowBatch, WindowExecutable};
-use crate::util::Rng;
+use crate::runtime::{WindowBatch, WindowExecutable};
 
 /// Engine construction options.
 #[derive(Clone, Debug)]
@@ -47,7 +47,10 @@ impl Default for EngineConfig {
     }
 }
 
-/// A command sent to the worker. `reply` receives exactly one [`Response`].
+/// A command routed to a model by the scheduler. `reply` receives exactly
+/// one [`Response`]. `Observe`/`ObserveBatch`/`Fit` are *mutating* (per-model
+/// FIFO under mutual exclusion); `Predict`/`Suggest`/`Stats` are *reads*
+/// (served concurrently — see DESIGN.md §Coordinator, "Command classes").
 pub enum Command {
     Observe { x: Vec<f64>, y: f64, reply: Sender<Response> },
     ObserveBatch { xs: Vec<Vec<f64>>, ys: Vec<f64>, reply: Sender<Response> },
@@ -55,188 +58,120 @@ pub enum Command {
     Predict { xs: Vec<Vec<f64>>, beta: f64, grad: bool, reply: Sender<Response> },
     Suggest { beta: f64, reply: Sender<Response> },
     Stats { reply: Sender<Response> },
-    Stop,
 }
 
-/// The worker state. PJRT handles are not `Send`, so the engine (and its
-/// own `PjRtClient`) must be constructed *on the worker thread* — see
-/// [`crate::coordinator::server`].
+impl Command {
+    /// Consume the command, answering its caller with an error (unknown
+    /// model, dead engine, coordinator shutdown).
+    pub fn fail(self, msg: String) {
+        let reply = match self {
+            Command::Observe { reply, .. }
+            | Command::ObserveBatch { reply, .. }
+            | Command::Fit { reply, .. }
+            | Command::Predict { reply, .. }
+            | Command::Suggest { reply, .. }
+            | Command::Stats { reply } => reply,
+        };
+        let _ = reply.send(Response::Error(msg));
+    }
+}
+
+/// The per-model state (pure data — `Send`, shared behind the scheduler's
+/// per-model mutex). PJRT executables are deliberately *not* stored here:
+/// their handles are not `Send`, so they stay in the worker-local registry
+/// of the pool worker that compiled them.
 pub struct ModelEngine {
     pub cfg: EngineConfig,
     gp: AdditiveGP,
-    /// Keeps the client alive for the executable's lifetime.
-    _client: Option<xla::PjRtClient>,
-    exe: Option<WindowExecutable>,
-    rng: Rng,
     pub pjrt_batches: u64,
     pub native_queries: u64,
 }
 
 impl ModelEngine {
-    /// Build the engine, creating a PJRT CPU client and compiling the
-    /// matching `(D, W)` artifact when `cfg.use_pjrt` and one exists.
+    /// Build the native engine state. PJRT compilation happens separately,
+    /// on the pool worker the model is pinned to (see
+    /// [`crate::coordinator::scheduler::Scheduler::create_model`]).
     pub fn new(cfg: EngineConfig) -> Self {
         let mut gpcfg = AdditiveGpConfig::default();
         gpcfg.nu = cfg.nu;
         gpcfg.omega0 = cfg.omega0;
         gpcfg.sigma2_y = cfg.sigma2;
         let gp = AdditiveGP::new(gpcfg, cfg.d);
-        let client = if cfg.use_pjrt { xla::PjRtClient::cpu().ok() } else { None };
-        let exe = client.as_ref().and_then(|cl| {
-            let manifest = ArtifactManifest::load(ArtifactManifest::default_dir()).ok()?;
-            let w = 2 * (cfg.nu.q() + 1); // window width 2ν+1 (even form)
-            let spec = manifest.select("window_acq", cfg.d, w, 64)?;
-            WindowExecutable::load(cl, spec).ok()
-        });
-        ModelEngine {
-            rng: Rng::new(cfg.seed),
-            cfg,
-            gp,
-            _client: client,
-            exe,
-            pjrt_batches: 0,
-            native_queries: 0,
+        ModelEngine { cfg, gp, pjrt_batches: 0, native_queries: 0 }
+    }
+
+    pub fn gp(&self) -> &AdditiveGP {
+        &self.gp
+    }
+
+    /// Absorb one observation. Incremental path: O(log n) window work + a
+    /// prefix-reuse factor patch per point — serving no longer pays
+    /// O(n log n) (or even a linear factor sweep) per append ingest. The
+    /// patched-vs-resweep delta rides the reply so the coordinator metrics
+    /// can watch the crossover.
+    pub fn observe(&mut self, x: &[f64], y: f64) -> Response {
+        if x.len() != self.gp.input_dim() {
+            return Response::Error(format!("expected {}-dim points", self.gp.input_dim()));
+        }
+        let (p0, r0) = self.gp.factor_stats();
+        self.gp.observe(x, y);
+        // saturating: a refit (first activation) replaces the fit state and
+        // resets the cumulative counters.
+        let (p1, r1) = self.gp.factor_stats();
+        Response::Observed {
+            n: self.gp.n(),
+            factor_patched: p1.saturating_sub(p0),
+            factor_resweep: r1.saturating_sub(r0),
         }
     }
 
-    pub fn has_pjrt(&self) -> bool {
-        self.exe.is_some()
-    }
-
-    /// Blocking worker loop: drain the queue, batching Predicts.
-    pub fn run(mut self, rx: Receiver<Command>) {
-        // Pending predict rows: (x, beta, grad, reply, row index base).
-        loop {
-            let cmd = match rx.recv() {
-                Ok(c) => c,
-                Err(_) => return,
-            };
-            match cmd {
-                Command::Stop => return,
-                Command::Predict { xs, beta, grad, reply } => {
-                    // Dynamic batching: opportunistically drain more queued
-                    // Predicts with the same β/grad before executing.
-                    let mut batch: Vec<(Vec<Vec<f64>>, Sender<Response>)> = vec![(xs, reply)];
-                    let mut deferred: Vec<Command> = Vec::new();
-                    while let Ok(next) = rx.try_recv() {
-                        match next {
-                            Command::Predict { xs, beta: b2, grad: g2, reply }
-                                if b2 == beta && g2 == grad =>
-                            {
-                                batch.push((xs, reply))
-                            }
-                            other => {
-                                deferred.push(other);
-                                break;
-                            }
-                        }
-                    }
-                    self.serve_predicts(batch, beta, grad);
-                    for cmd in deferred {
-                        if !self.handle_simple(cmd) {
-                            return;
-                        }
-                    }
-                }
-                other => {
-                    if !self.handle_simple(other) {
-                        return;
-                    }
-                }
-            }
+    /// Absorb a batch: one splice/patch/solve per dimension for the whole
+    /// batch, dimensions sharded across threads; a refit only at/above the
+    /// crossover. Replies *after* the posterior refresh, so a client that
+    /// predicts right after the reply (or another client racing it) sees the
+    /// post-batch state instead of paying the solve inside its own predict.
+    pub fn observe_batch(&mut self, xs: &[Vec<f64>], ys: &[f64]) -> Response {
+        if xs.len() != ys.len() {
+            return Response::Error("xs/ys length mismatch".into());
+        }
+        if xs.iter().any(|x| x.len() != self.gp.input_dim()) {
+            return Response::Error(format!("expected {}-dim points", self.gp.input_dim()));
+        }
+        let (p0, r0) = self.gp.factor_stats();
+        let path = self.gp.observe_batch(xs, ys);
+        if self.gp.fit_state().is_some() {
+            self.gp.ensure_posterior();
+        }
+        let (p1, r1) = self.gp.factor_stats();
+        Response::BatchObserved {
+            n: self.gp.n(),
+            path: path.as_str(),
+            factor_patched: p1.saturating_sub(p0),
+            factor_resweep: r1.saturating_sub(r0),
         }
     }
 
-    /// Handle a non-batchable command; returns `false` on Stop.
-    fn handle_simple(&mut self, cmd: Command) -> bool {
-        match cmd {
-            Command::Stop => return false,
-            Command::Observe { x, y, reply } => {
-                // Incremental path: O(log n) window work + a prefix-reuse
-                // factor patch per point — serving no longer pays O(n log n)
-                // (or even a linear factor sweep) per append ingest. The
-                // patched-vs-resweep delta rides the reply so the
-                // coordinator metrics can watch the crossover.
-                let (p0, r0) = self.gp.factor_stats();
-                self.gp.observe(&x, y);
-                // saturating: a refit (first activation) replaces the fit
-                // state and resets the cumulative counters.
-                let (p1, r1) = self.gp.factor_stats();
-                let _ = reply.send(Response::Observed {
-                    n: self.gp.n(),
-                    factor_patched: p1.saturating_sub(p0),
-                    factor_resweep: r1.saturating_sub(r0),
-                });
-            }
-            Command::ObserveBatch { xs, ys, reply } => {
-                if xs.len() != ys.len() {
-                    let _ = reply.send(Response::Error("xs/ys length mismatch".into()));
-                } else {
-                    // Batched incremental ingest: one splice/patch/solve per
-                    // dimension for the whole batch, dimensions sharded
-                    // across threads; a refit only at/above the crossover.
-                    let (p0, r0) = self.gp.factor_stats();
-                    let path = self.gp.observe_batch(&xs, &ys);
-                    // Refresh the posterior *before* replying, so a client
-                    // that issues predict right after the reply (or another
-                    // client racing it) sees the post-batch state instead of
-                    // paying the solve inside its own predict.
-                    if self.gp.fit_state().is_some() {
-                        self.gp.ensure_posterior();
-                    }
-                    let (p1, r1) = self.gp.factor_stats();
-                    let _ = reply.send(Response::BatchObserved {
-                        n: self.gp.n(),
-                        path: path.as_str(),
-                        factor_patched: p1.saturating_sub(p0),
-                        factor_resweep: r1.saturating_sub(r0),
-                    });
-                }
-            }
-            Command::Fit { steps, reply } => {
-                let tcfg = TrainCfg { steps, ..Default::default() };
-                self.gp.optimize_hypers(&tcfg);
-                let _ = reply.send(Response::Ok);
-            }
-            Command::Predict { xs, beta, grad, reply } => {
-                self.serve_predicts(vec![(xs, reply)], beta, grad);
-            }
-            Command::Suggest { beta, reply } => {
-                let acq = Acquisition::LcbMin { beta };
-                let scfg = SearchCfg::default();
-                let x = search_next(
-                    &mut self.gp,
-                    &acq,
-                    self.cfg.d,
-                    self.cfg.lo,
-                    self.cfg.hi,
-                    &scfg,
-                    &mut self.rng,
-                );
-                let _ = reply.send(Response::Suggestion { x });
-            }
-            Command::Stats { reply } => {
-                let (hits, misses, _) = self.gp.cache_stats();
-                let (patches, resweeps) = self.gp.factor_stats();
-                let _ = reply.send(Response::Stats {
-                    n: self.gp.n(),
-                    d: self.gp.input_dim(),
-                    omegas: self.gp.omegas.clone(),
-                    cache_hits: hits,
-                    cache_misses: misses,
-                    pjrt_batches: self.pjrt_batches,
-                    native_queries: self.native_queries,
-                    factor_patches: patches,
-                    factor_resweeps: resweeps,
-                });
-            }
+    /// Re-learn hyperparameters (full refit — a mutating command).
+    pub fn fit(&mut self, steps: usize) -> Response {
+        if self.gp.n() < self.gp.min_points() {
+            return Response::Error("not enough observations".into());
         }
-        true
+        let tcfg = TrainCfg { steps, ..Default::default() };
+        self.gp.optimize_hypers(&tcfg);
+        Response::Ok
     }
 
-    /// Serve a set of predict requests, through PJRT when possible.
-    fn serve_predicts(
+    /// Build the concurrent-read snapshot, or an error before activation.
+    pub fn read_snapshot(&mut self) -> Result<PosteriorSnapshot, String> {
+        self.gp.read_snapshot().ok_or_else(|| "not enough observations".to_string())
+    }
+
+    /// Serve a set of predict requests sharing one `(β, grad)`, through the
+    /// given PJRT executable when present (the scheduler's dynamic batching
+    /// drains a model's queued predicts into one call).
+    pub fn serve_predicts(
         &mut self,
+        exe: Option<&WindowExecutable>,
         requests: Vec<(Vec<Vec<f64>>, Sender<Response>)>,
         beta: f64,
         grad: bool,
@@ -249,7 +184,7 @@ impl ModelEngine {
             rows.extend(xs.iter().cloned());
         }
         let results = if self.gp.n() >= self.gp.min_points() {
-            self.predict_rows(&rows, beta, grad)
+            self.predict_rows(exe, &rows, beta, grad)
         } else {
             Err("not enough observations".to_string())
         };
@@ -277,10 +212,11 @@ impl ModelEngine {
         }
     }
 
-    /// Evaluate all rows; PJRT path when an executable exists.
+    /// Evaluate all rows; PJRT path when an executable is supplied.
     #[allow(clippy::type_complexity)]
     fn predict_rows(
         &mut self,
+        exe: Option<&WindowExecutable>,
         rows: &[Vec<f64>],
         beta: f64,
         grad: bool,
@@ -291,7 +227,7 @@ impl ModelEngine {
                 return Err(format!("expected {d}-dim points"));
             }
         }
-        if let Some(exe) = &self.exe {
+        if let Some(exe) = exe {
             let spec_b = exe.spec.b;
             let (sd, sw) = (exe.spec.d, exe.spec.w);
             let mut mu = Vec::with_capacity(rows.len());
@@ -368,14 +304,16 @@ impl ModelEngine {
         &mut self.gp
     }
 
-    /// In-process predict used by integration tests.
+    /// In-process predict used by integration tests (native path; pass an
+    /// executable to exercise PJRT).
     #[allow(clippy::type_complexity)]
     pub fn predict_inline(
         &mut self,
+        exe: Option<&WindowExecutable>,
         rows: &[Vec<f64>],
         beta: f64,
         grad: bool,
     ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>, Vec<Vec<f64>>, &'static str), String> {
-        self.predict_rows(rows, beta, grad)
+        self.predict_rows(exe, rows, beta, grad)
     }
 }

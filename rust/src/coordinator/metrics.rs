@@ -1,8 +1,13 @@
-//! Serving metrics: lock-free counters and a log₂-bucketed latency
-//! histogram (p50/p95/p99), exposed through the `stats` op and printed by
-//! the server on shutdown. (No external metrics crate offline.)
+//! Serving metrics: lock-free counters and log₂-bucketed latency
+//! histograms (p50/p95/p99), exposed through the `stats` op and printed by
+//! the server on shutdown. Since the shared worker-pool rewrite the server
+//! keeps both *pool-wide* histograms (all models mixed — the fleet view)
+//! and *per-model* histograms (one [`ModelMetrics`] per model id — the
+//! noisy-neighbour view). (No external metrics crate offline.)
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Log₂-bucketed latency histogram over microseconds: bucket `i` holds
 /// latencies in `[2^i, 2^{i+1})` µs, 0..=31.
@@ -65,6 +70,37 @@ impl LatencyHistogram {
     }
 }
 
+/// Per-model latency histograms, keyed by model id in
+/// [`ServerMetrics::model`]. Same bucketing as the pool-wide histograms, so
+/// a model's line is directly comparable against the fleet line.
+#[derive(Default)]
+pub struct ModelMetrics {
+    pub predict_latency: LatencyHistogram,
+    pub suggest_latency: LatencyHistogram,
+    pub ingest_latency: LatencyHistogram,
+}
+
+impl ModelMetrics {
+    /// One-line report (only non-empty histograms are printed).
+    pub fn report(&self) -> String {
+        let mut parts = Vec::new();
+        if self.predict_latency.count() > 0 {
+            parts.push(format!("predict: {}", self.predict_latency.report()));
+        }
+        if self.suggest_latency.count() > 0 {
+            parts.push(format!("suggest: {}", self.suggest_latency.report()));
+        }
+        if self.ingest_latency.count() > 0 {
+            parts.push(format!("ingest: {}", self.ingest_latency.report()));
+        }
+        if parts.is_empty() {
+            "idle".to_string()
+        } else {
+            parts.join(" | ")
+        }
+    }
+}
+
 /// Per-server request counters.
 #[derive(Default)]
 pub struct ServerMetrics {
@@ -94,6 +130,8 @@ pub struct ServerMetrics {
     /// single-point `observe` stays lazy — its samples cover the factor
     /// patch only, with the solve deferred to the next predict.
     pub ingest_latency: LatencyHistogram,
+    /// Per-model histograms, created on first touch.
+    per_model: Mutex<HashMap<u64, Arc<ModelMetrics>>>,
 }
 
 impl ServerMetrics {
@@ -134,8 +172,15 @@ impl ServerMetrics {
         self.factor_resweeps.fetch_add(resweeps, Ordering::Relaxed);
     }
 
+    /// The per-model histogram set for `id`, created on first touch. The
+    /// returned handle is lock-free to record into.
+    pub fn model(&self, id: u64) -> Arc<ModelMetrics> {
+        let mut map = self.per_model.lock().unwrap();
+        Arc::clone(map.entry(id).or_default())
+    }
+
     pub fn report(&self) -> String {
-        format!(
+        let mut out = format!(
             "requests={} errors={} predict_points={} observe_points={} \
              batches(incremental={} refit={} buffered={}) \
              factor(patched={} resweep={}) | predict: {} | \
@@ -152,7 +197,18 @@ impl ServerMetrics {
             self.predict_latency.report(),
             self.suggest_latency.report(),
             self.ingest_latency.report()
-        )
+        );
+        let models = {
+            let map = self.per_model.lock().unwrap();
+            let mut v: Vec<(u64, Arc<ModelMetrics>)> =
+                map.iter().map(|(k, m)| (*k, Arc::clone(m))).collect();
+            v.sort_by_key(|(k, _)| *k);
+            v
+        };
+        for (id, m) in models {
+            out.push_str(&format!("\n  model {id}: {}", m.report()));
+        }
+        out
     }
 }
 
@@ -207,5 +263,20 @@ mod tests {
         assert!(r.contains("buffered=1"));
         assert!(r.contains("patched=8"));
         assert!(r.contains("resweep=4"));
+    }
+
+    #[test]
+    fn per_model_histograms() {
+        let m = ServerMetrics::default();
+        m.model(2).predict_latency.record(1e-3);
+        m.model(1).ingest_latency.record(2e-3);
+        m.model(2).predict_latency.record(1e-3);
+        let r = m.report();
+        let i1 = r.find("model 1:").expect("model 1 line");
+        let i2 = r.find("model 2:").expect("model 2 line");
+        assert!(i1 < i2, "per-model lines sorted by id:\n{r}");
+        assert!(r.contains("ingest: count=1"), "{r}");
+        assert!(r.contains("predict: count=2"), "{r}");
+        assert_eq!(m.model(3).report(), "idle");
     }
 }

@@ -1,22 +1,31 @@
-//! The L3 serving layer: a threaded BO-as-a-service coordinator.
+//! The L3 serving layer: BO-as-a-service on a **shared worker pool**
+//! (DESIGN.md §Coordinator; quickstart in `coordinator/README.md`).
 //!
 //! * [`protocol`] — the JSON-line wire protocol (create / observe / fit /
-//!   predict / suggest / stats).
-//! * [`engine`] — one worker thread per model, owning the sparse GP and the
-//!   compiled PJRT `window_acq` executable; drains its queue as dynamic
-//!   batches and fans results back out.
+//!   predict / suggest / stats; `stats` carries the `pool_*` fields).
+//! * [`engine`] — per-model state (sparse GP + command handlers); pure
+//!   `Send` data with no thread of its own.
+//! * [`scheduler`] — the work-stealing pool serving *all* models: per-model
+//!   FIFO mutual exclusion for mutating commands, concurrent
+//!   snapshot-backed reads, dynamic predict batching with PJRT
+//!   worker-affinity (executable handles are not `Send`).
 //! * [`server`] — TCP accept loop, one reader thread per connection,
-//!   model registry routing requests to engine queues.
+//!   requests routed into the scheduler; deterministic shutdown joins
+//!   every reader and every pool worker.
+//! * [`metrics`] — pool-wide and per-model latency histograms + counters.
 //!
-//! The offline image has no tokio, so concurrency is std threads + mpsc —
-//! the batching architecture (queue → drain ≤ B → PJRT execute → fan out)
-//! is the same one a tokio version would use.
+//! The offline image has no tokio/rayon, so concurrency is std threads,
+//! mutexes and mpsc — the architecture (registry → per-model queues →
+//! shared pool → batch → fan out) is the same one an async version would
+//! use.
 
 pub mod engine;
 pub mod metrics;
 pub mod protocol;
+pub mod scheduler;
 pub mod server;
 
-pub use engine::{EngineConfig, ModelEngine};
+pub use engine::{Command, EngineConfig, ModelEngine};
 pub use protocol::{Request, Response};
-pub use server::Server;
+pub use scheduler::Scheduler;
+pub use server::{Server, ShutdownStats};

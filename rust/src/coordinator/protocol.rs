@@ -157,6 +157,15 @@ pub enum Response {
         factor_patches: u64,
         /// Cumulative full LU re-sweeps.
         factor_resweeps: u64,
+        /// Shared worker-pool observability (the pool serves *all* models;
+        /// these fields are pool-wide, identical in every model's reply):
+        /// fixed worker count, workers currently running a job (occupancy),
+        /// jobs queued across all per-worker queues, and cumulative
+        /// work-steals.
+        pool_workers: u64,
+        pool_busy: u64,
+        pool_queue_depth: u64,
+        pool_steals: u64,
     },
 }
 
@@ -215,6 +224,10 @@ impl Response {
                 native_queries,
                 factor_patches,
                 factor_resweeps,
+                pool_workers,
+                pool_busy,
+                pool_queue_depth,
+                pool_steals,
             } => {
                 pairs.push(("ok", Json::Bool(true)));
                 pairs.push(("n", Json::Num(*n as f64)));
@@ -226,6 +239,10 @@ impl Response {
                 pairs.push(("native_queries", Json::Num(*native_queries as f64)));
                 pairs.push(("factor_patches", Json::Num(*factor_patches as f64)));
                 pairs.push(("factor_resweeps", Json::Num(*factor_resweeps as f64)));
+                pairs.push(("pool_workers", Json::Num(*pool_workers as f64)));
+                pairs.push(("pool_busy", Json::Num(*pool_busy as f64)));
+                pairs.push(("pool_queue_depth", Json::Num(*pool_queue_depth as f64)));
+                pairs.push(("pool_steals", Json::Num(*pool_steals as f64)));
             }
         }
         Json::obj(pairs)

@@ -1,0 +1,759 @@
+//! The shared worker-pool scheduler: one fixed pool of N workers serves
+//! every model in the process (DESIGN.md §Coordinator).
+//!
+//! Replaces the old one-thread-per-model `ModelEngine::run` loop. Commands
+//! fall into two classes:
+//!
+//! * **Mutating** (`Observe`/`ObserveBatch`/`Fit`) — enqueued on the model's
+//!   FIFO queue and executed under the model's engine mutex by whichever
+//!   worker claims the model's drain job. Per-model ordering and mutual
+//!   exclusion are exact; different models mutate concurrently across the
+//!   pool (cross-model sharding). Each successful mutation bumps the model's
+//!   *generation*, invalidating the read snapshot.
+//!
+//! * **Read** (`Predict`/`Suggest`/`Stats`) — served against an immutable
+//!   [`PosteriorSnapshot`] built lazily once per generation, so reads on one
+//!   model run concurrently with each other and with other models' work, and
+//!   a giant model's ingest overlaps its own predict traffic. Snapshot
+//!   construction is *non-perturbing* (the engine's numeric trajectory stays
+//!   bit-identical to a read-free replay — pinned by the determinism stress
+//!   test in `tests/concurrency.rs`).
+//!
+//! **PJRT affinity**: compiled `window_acq` executables are not `Send`, so
+//! each model's executable lives in a thread-local registry on the pool
+//! worker that compiled it, and that model's predicts are submitted with a
+//! worker-affinity hint ([`WorkerPool::spawn_pinned`]). Dynamic predict
+//! batching is preserved per model: the pinned drain job takes the whole
+//! queued backlog and fans each same-`(β, grad)` run through one executable
+//! call.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+
+use crate::bo::acquisition::Acquisition;
+use crate::bo::run::BoEngine;
+use crate::bo::search::{search_next, SearchCfg};
+use crate::coordinator::engine::{Command, EngineConfig, ModelEngine};
+use crate::coordinator::protocol::Response;
+use crate::gp::fit_state::PosteriorSnapshot;
+use crate::gp::posterior::MTildeCache;
+use crate::runtime::xla;
+use crate::runtime::{ArtifactManifest, WindowExecutable};
+use crate::util::pool::{Job, PoolStats, WorkerPool};
+use crate::util::Rng;
+
+thread_local! {
+    /// Per-worker PJRT registry: model id → (client, executable). Entries
+    /// are created by the pinned build job at `create_model` time and die
+    /// with the worker thread at pool shutdown — handles never migrate.
+    static WORKER_EXES: RefCell<HashMap<u64, ExeEntry>> = RefCell::new(HashMap::new());
+}
+
+struct ExeEntry {
+    /// Keeps the client alive for the executable's lifetime.
+    _client: xla::PjRtClient,
+    exe: WindowExecutable,
+}
+
+/// One queued predict awaiting the model's pinned PJRT drain job.
+struct PredictReq {
+    xs: Vec<Vec<f64>>,
+    beta: f64,
+    grad: bool,
+    reply: Sender<Response>,
+}
+
+/// Per-model scheduling state shared across pool workers.
+struct ModelCell {
+    id: u64,
+    cfg: EngineConfig,
+    engine: Mutex<ModelEngine>,
+    /// FIFO of pending mutating commands.
+    mut_queue: Mutex<VecDeque<Command>>,
+    /// Whether a mutation drain job is scheduled/running (at most one).
+    mut_active: AtomicBool,
+    /// Pending predicts for the PJRT-batched path.
+    predict_queue: Mutex<VecDeque<PredictReq>>,
+    predict_active: AtomicBool,
+    /// Mutation generation; bumped (under the engine lock) by every
+    /// successful mutation. Tags the read snapshot.
+    gen: AtomicU64,
+    snapshot: Mutex<Option<Arc<TaggedSnapshot>>>,
+    /// Pool worker owning this model's PJRT executable (`None` → native
+    /// reads through the snapshot).
+    exe_worker: Option<usize>,
+    /// Set when a command panicked: the engine state is suspect, so every
+    /// later command is refused (the per-model analogue of the old dead
+    /// engine thread).
+    dead: AtomicBool,
+    /// Per-suggest seed sequence (each suggest owns an independent rng).
+    suggest_seq: AtomicU64,
+    /// Rows served by the snapshot (native) read path.
+    native_reads: AtomicU64,
+    /// Cache stats folded in from retired snapshots.
+    read_hits: AtomicU64,
+    read_misses: AtomicU64,
+}
+
+struct TaggedSnapshot {
+    gen: u64,
+    snap: PosteriorSnapshot,
+}
+
+struct SchedInner {
+    pool: WorkerPool,
+    models: Mutex<HashMap<u64, Arc<ModelCell>>>,
+    next_id: AtomicU64,
+}
+
+/// The process-wide scheduler: model registry + shared worker pool.
+#[derive(Clone)]
+pub struct Scheduler {
+    inner: Arc<SchedInner>,
+}
+
+impl Scheduler {
+    /// Spawn a scheduler over `workers.max(1)` pool workers.
+    pub fn new(workers: usize) -> Self {
+        Scheduler {
+            inner: Arc::new(SchedInner {
+                pool: WorkerPool::new(workers),
+                models: Mutex::new(HashMap::new()),
+                next_id: AtomicU64::new(1),
+            }),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.inner.pool.workers()
+    }
+
+    pub fn pool_stats(&self) -> PoolStats {
+        self.inner.pool.stats()
+    }
+
+    /// Register a model. The native engine state is built inline; when
+    /// `cfg.use_pjrt`, the `window_acq` artifact is compiled by a job pinned
+    /// to the model's designated worker (round-robin) and the model's
+    /// predicts keep that affinity for the executable's whole life.
+    pub fn create_model(&self, cfg: EngineConfig) -> u64 {
+        let id = self.inner.next_id.fetch_add(1, Ordering::SeqCst);
+        let engine = ModelEngine::new(cfg.clone());
+        let exe_worker = if cfg.use_pjrt {
+            let w = (id as usize) % self.inner.pool.workers();
+            let (tx, rx) = std::sync::mpsc::channel();
+            let build_cfg = cfg.clone();
+            let submitted = self.inner.pool.spawn_pinned(
+                w,
+                Box::new(move |_me| {
+                    let _ = tx.send(build_worker_exe(id, &build_cfg));
+                }),
+            );
+            if submitted && rx.recv().unwrap_or(false) {
+                Some(w)
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        let cell = Arc::new(ModelCell {
+            id,
+            cfg,
+            engine: Mutex::new(engine),
+            mut_queue: Mutex::new(VecDeque::new()),
+            mut_active: AtomicBool::new(false),
+            predict_queue: Mutex::new(VecDeque::new()),
+            predict_active: AtomicBool::new(false),
+            gen: AtomicU64::new(0),
+            snapshot: Mutex::new(None),
+            exe_worker,
+            dead: AtomicBool::new(false),
+            suggest_seq: AtomicU64::new(0),
+            native_reads: AtomicU64::new(0),
+            read_hits: AtomicU64::new(0),
+            read_misses: AtomicU64::new(0),
+        });
+        self.inner.models.lock().unwrap().insert(id, cell);
+        id
+    }
+
+    pub fn has_model(&self, model: u64) -> bool {
+        self.inner.models.lock().unwrap().contains_key(&model)
+    }
+
+    pub fn model_count(&self) -> usize {
+        self.inner.models.lock().unwrap().len()
+    }
+
+    /// Whether a model's predicts ride the PJRT pinned path.
+    pub fn model_has_pjrt(&self, model: u64) -> bool {
+        self.inner
+            .models
+            .lock()
+            .unwrap()
+            .get(&model)
+            .map(|c| c.exe_worker.is_some())
+            .unwrap_or(false)
+    }
+
+    /// Route one command. The reply channel inside the command receives
+    /// exactly one [`Response`], possibly from a pool worker.
+    pub fn dispatch(&self, model: u64, cmd: Command) {
+        let cell = {
+            let models = self.inner.models.lock().unwrap();
+            models.get(&model).cloned()
+        };
+        let Some(cell) = cell else {
+            cmd.fail(format!("unknown model {model}"));
+            return;
+        };
+        if cell.dead.load(Ordering::SeqCst) {
+            cmd.fail("engine stopped".into());
+            return;
+        }
+        if matches!(
+            cmd,
+            Command::Observe { .. } | Command::ObserveBatch { .. } | Command::Fit { .. }
+        ) {
+            cell.mut_queue.lock().unwrap().push_back(cmd);
+            self.schedule_mutations(cell);
+            return;
+        }
+        match cmd {
+            Command::Predict { xs, beta, grad, reply } => {
+                if cell.exe_worker.is_some() {
+                    cell.predict_queue
+                        .lock()
+                        .unwrap()
+                        .push_back(PredictReq { xs, beta, grad, reply });
+                    self.schedule_predicts(cell);
+                } else {
+                    let c = Arc::clone(&cell);
+                    let job: Job =
+                        Box::new(move |_| serve_native_predict(&c, xs, beta, grad, reply));
+                    // On a shutting-down pool the job (and its reply sender)
+                    // is dropped — the caller sees a disconnect-style error.
+                    let _ = self.inner.pool.spawn(job);
+                }
+            }
+            Command::Suggest { beta, reply } => {
+                let c = Arc::clone(&cell);
+                let job: Job = Box::new(move |_| serve_suggest(&c, beta, reply));
+                let _ = self.inner.pool.spawn(job);
+            }
+            Command::Stats { reply } => {
+                let c = Arc::clone(&cell);
+                let inner = Arc::clone(&self.inner);
+                let job: Job = Box::new(move |_| serve_stats(&c, &inner.pool, reply));
+                let _ = self.inner.pool.spawn(job);
+            }
+            _ => unreachable!("mutating commands are routed to the queue above"),
+        }
+    }
+
+    fn schedule_mutations(&self, cell: Arc<ModelCell>) {
+        if cell.mut_active.swap(true, Ordering::SeqCst) {
+            return; // a drain job already owns the queue
+        }
+        let c = Arc::clone(&cell);
+        let job: Job = Box::new(move |_| drain_mutations(&c));
+        if !self.inner.pool.spawn(job) {
+            cell.mut_active.store(false, Ordering::SeqCst);
+            fail_pending(&cell, "coordinator shutting down");
+        }
+    }
+
+    fn schedule_predicts(&self, cell: Arc<ModelCell>) {
+        if cell.predict_active.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let worker = cell.exe_worker.expect("pjrt predict path requires an exe worker");
+        let c = Arc::clone(&cell);
+        let job: Job = Box::new(move |_| drain_predicts(&c));
+        if !self.inner.pool.spawn_pinned(worker, job) {
+            cell.predict_active.store(false, Ordering::SeqCst);
+            fail_pending(&cell, "coordinator shutting down");
+        }
+    }
+
+    /// Join every pool worker (queued work drains first). Returns the
+    /// number of workers joined; idempotent.
+    pub fn shutdown(&self) -> usize {
+        self.inner.pool.shutdown()
+    }
+}
+
+/// Select and compile the matching `(D, W)` artifact, if any.
+fn load_exe(client: &xla::PjRtClient, cfg: &EngineConfig) -> Option<WindowExecutable> {
+    let manifest = ArtifactManifest::load(ArtifactManifest::default_dir()).ok()?;
+    let w = 2 * (cfg.nu.q() + 1); // window width 2ν+1 (even form)
+    let spec = manifest.select("window_acq", cfg.d, w, 64)?;
+    WindowExecutable::load(client, spec).ok()
+}
+
+/// Compile this model's `window_acq` artifact into the current worker's
+/// thread-local registry. Returns whether an executable is now resident.
+fn build_worker_exe(id: u64, cfg: &EngineConfig) -> bool {
+    let Ok(client) = xla::PjRtClient::cpu() else {
+        return false;
+    };
+    match load_exe(&client, cfg) {
+        Some(exe) => {
+            WORKER_EXES.with(|m| {
+                m.borrow_mut().insert(id, ExeEntry { _client: client, exe })
+            });
+            true
+        }
+        None => false,
+    }
+}
+
+/// Answer every queued command with an error (shutdown / dead engine).
+fn fail_pending(cell: &ModelCell, msg: &str) {
+    let cmds: Vec<Command> = cell.mut_queue.lock().unwrap().drain(..).collect();
+    for c in cmds {
+        c.fail(msg.to_string());
+    }
+    let preds: Vec<PredictReq> = cell.predict_queue.lock().unwrap().drain(..).collect();
+    for p in preds {
+        let _ = p.reply.send(Response::Error(msg.to_string()));
+    }
+}
+
+/// Drain the model's mutation queue FIFO under the engine mutex. At most
+/// one of these runs per model (`mut_active`); the standard
+/// deschedule-and-recheck handshake closes the race with concurrent
+/// submitters.
+fn drain_mutations(cell: &ModelCell) {
+    loop {
+        let next = cell.mut_queue.lock().unwrap().pop_front();
+        let Some(cmd) = next else {
+            cell.mut_active.store(false, Ordering::SeqCst);
+            let again = !cell.mut_queue.lock().unwrap().is_empty();
+            if again && !cell.mut_active.swap(true, Ordering::SeqCst) {
+                continue; // new work arrived during deschedule; reclaim
+            }
+            return;
+        };
+        if cell.dead.load(Ordering::SeqCst) {
+            cmd.fail("engine stopped".into());
+            continue;
+        }
+        #[allow(clippy::type_complexity)]
+        let (reply, run): (Sender<Response>, Box<dyn FnOnce(&mut ModelEngine) -> Response>) =
+            match cmd {
+                Command::Observe { x, y, reply } => {
+                    (reply, Box::new(move |e: &mut ModelEngine| e.observe(&x, y)))
+                }
+                Command::ObserveBatch { xs, ys, reply } => (
+                    reply,
+                    Box::new(move |e: &mut ModelEngine| e.observe_batch(&xs, &ys)),
+                ),
+                Command::Fit { steps, reply } => {
+                    (reply, Box::new(move |e: &mut ModelEngine| e.fit(steps)))
+                }
+                other => {
+                    other.fail("non-mutating command on the mutation queue".into());
+                    continue;
+                }
+            };
+        let mut eng = match cell.engine.lock() {
+            Ok(g) => g,
+            Err(_) => {
+                cell.dead.store(true, Ordering::SeqCst);
+                let _ = reply.send(Response::Error("engine stopped".into()));
+                continue;
+            }
+        };
+        let outcome = catch_unwind(AssertUnwindSafe(|| run(&mut *eng)));
+        match outcome {
+            Ok(resp) => {
+                if !matches!(resp, Response::Error(_)) {
+                    // Invalidate the read snapshot (still holding the engine
+                    // lock, so readers re-checking under it see a stable gen).
+                    cell.gen.fetch_add(1, Ordering::SeqCst);
+                }
+                drop(eng);
+                let _ = reply.send(resp);
+            }
+            Err(_) => {
+                // State is suspect: quarantine the model, keep the worker.
+                cell.dead.store(true, Ordering::SeqCst);
+                drop(eng);
+                let _ = reply
+                    .send(Response::Error("engine panicked; model disabled".into()));
+                fail_pending(cell, "engine stopped");
+            }
+        }
+    }
+}
+
+/// Pinned PJRT drain: take the whole predict backlog, group consecutive
+/// same-`(β, grad)` requests, and serve each group through one executable
+/// call (dynamic batching, preserved per model).
+fn drain_predicts(cell: &ModelCell) {
+    loop {
+        let batch: VecDeque<PredictReq> =
+            std::mem::take(&mut *cell.predict_queue.lock().unwrap());
+        if batch.is_empty() {
+            cell.predict_active.store(false, Ordering::SeqCst);
+            let again = !cell.predict_queue.lock().unwrap().is_empty();
+            if again && !cell.predict_active.swap(true, Ordering::SeqCst) {
+                continue;
+            }
+            return;
+        }
+        if cell.dead.load(Ordering::SeqCst) {
+            for p in batch {
+                let _ = p.reply.send(Response::Error("engine stopped".into()));
+            }
+            continue;
+        }
+        let mut eng = match cell.engine.lock() {
+            Ok(g) => g,
+            Err(_) => {
+                cell.dead.store(true, Ordering::SeqCst);
+                for p in batch {
+                    let _ = p.reply.send(Response::Error("engine stopped".into()));
+                }
+                continue;
+            }
+        };
+        // Same panic containment as `drain_mutations`: a panicking predict
+        // must not latch `predict_active` forever (which would wedge the
+        // model's whole predict path and deadlock shutdown). The engine
+        // guard lives outside the catch, so the mutex is not poisoned; the
+        // panicked group's reply senders are dropped mid-unwind, which
+        // surfaces as a disconnect error at the caller.
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            WORKER_EXES.with(|m| {
+                let exes = m.borrow();
+                let exe = exes.get(&cell.id).map(|e| &e.exe);
+                let mut it = batch.into_iter().peekable();
+                while let Some(first) = it.next() {
+                    let (beta, grad) = (first.beta, first.grad);
+                    let mut group = vec![(first.xs, first.reply)];
+                    while let Some(nx) = it.peek() {
+                        if nx.beta == beta && nx.grad == grad {
+                            let nx = it.next().unwrap();
+                            group.push((nx.xs, nx.reply));
+                        } else {
+                            break;
+                        }
+                    }
+                    eng.serve_predicts(exe, group, beta, grad);
+                }
+            });
+        }));
+        drop(eng);
+        if outcome.is_err() {
+            cell.dead.store(true, Ordering::SeqCst);
+            fail_pending(cell, "engine stopped");
+        }
+    }
+}
+
+/// Fetch (building lazily, once per generation) the model's read snapshot.
+fn read_snapshot(cell: &ModelCell) -> Result<Arc<TaggedSnapshot>, String> {
+    let gen = cell.gen.load(Ordering::SeqCst);
+    if let Some(s) = cell.snapshot.lock().unwrap().as_ref() {
+        if s.gen == gen {
+            return Ok(Arc::clone(s));
+        }
+    }
+    let mut eng = match cell.engine.lock() {
+        Ok(g) => g,
+        Err(_) => {
+            cell.dead.store(true, Ordering::SeqCst);
+            return Err("engine stopped".into());
+        }
+    };
+    // Re-read under the engine lock: mutations bump `gen` while holding it,
+    // so this value is stable for the duration of the build. Another reader
+    // may have built the snapshot while this one waited for the lock.
+    let gen = cell.gen.load(Ordering::SeqCst);
+    if let Some(s) = cell.snapshot.lock().unwrap().as_ref() {
+        if s.gen == gen {
+            return Ok(Arc::clone(s));
+        }
+    }
+    let snap = eng.read_snapshot()?;
+    let tagged = Arc::new(TaggedSnapshot { gen, snap });
+    {
+        // Store while still holding the engine lock (gen cannot advance),
+        // so a freshly-built snapshot can never clobber a newer one. Lock
+        // order engine → snapshot matches `serve_stats`.
+        let mut slot = cell.snapshot.lock().unwrap();
+        if let Some(old) = slot.take() {
+            // Fold the retired snapshot's cache stats into the cell totals
+            // (readers still holding the old Arc keep working; their later
+            // hits are uncounted — observability slack, not correctness).
+            let (h, m) = old.snap.cache_stats();
+            cell.read_hits.fetch_add(h, Ordering::Relaxed);
+            cell.read_misses.fetch_add(m, Ordering::Relaxed);
+        }
+        *slot = Some(Arc::clone(&tagged));
+    }
+    drop(eng);
+    Ok(tagged)
+}
+
+/// Concurrent native predict: one snapshot fetch + read-only window math.
+fn serve_native_predict(
+    cell: &ModelCell,
+    xs: Vec<Vec<f64>>,
+    beta: f64,
+    grad: bool,
+    reply: Sender<Response>,
+) {
+    let tagged = match read_snapshot(cell) {
+        Ok(t) => t,
+        Err(e) => {
+            let _ = reply.send(Response::Error(e));
+            return;
+        }
+    };
+    let d = cell.cfg.d;
+    if xs.iter().any(|r| r.len() != d) {
+        let _ = reply.send(Response::Error(format!("expected {d}-dim points")));
+        return;
+    }
+    let a = Acquisition::LcbMin { beta };
+    let mut mu = Vec::with_capacity(xs.len());
+    let mut svar = Vec::with_capacity(xs.len());
+    let mut acqv = Vec::with_capacity(xs.len());
+    let mut gacq = Vec::with_capacity(xs.len());
+    for x in &xs {
+        let out = tagged.snap.predict(x, grad);
+        let (v, g) = if grad {
+            a.value_grad(out.mean, out.var, &out.mean_grad, &out.var_grad)
+        } else {
+            (a.value(out.mean, out.var), Vec::new())
+        };
+        mu.push(out.mean);
+        svar.push(out.var);
+        acqv.push(v);
+        gacq.push(g);
+    }
+    cell.native_reads.fetch_add(xs.len() as u64, Ordering::Relaxed);
+    let _ = reply.send(Response::Prediction {
+        mu,
+        svar,
+        acq: acqv,
+        gacq: if grad { gacq } else { Vec::new() },
+        path: "native",
+    });
+}
+
+/// Read-only acquisition surface over a snapshot, with a private `M̃` cache
+/// so a long gradient-ascent search never contends with concurrent predicts.
+struct SnapshotEval<'a> {
+    snap: &'a PosteriorSnapshot,
+    cache: MTildeCache,
+}
+
+impl BoEngine for SnapshotEval<'_> {
+    fn observe(&mut self, _x: &[f64], _y: f64) {
+        unreachable!("read-only snapshot surface");
+    }
+
+    fn posterior(&mut self, x: &[f64]) -> (f64, f64, Vec<f64>, Vec<f64>) {
+        let out = self.snap.predict_with_cache(&mut self.cache, x, true);
+        (out.mean, out.var, out.mean_grad, out.var_grad)
+    }
+
+    fn fit_hypers(&mut self) {
+        unreachable!("read-only snapshot surface");
+    }
+
+    fn n(&self) -> usize {
+        self.snap.n()
+    }
+
+    fn name(&self) -> &'static str {
+        "snapshot"
+    }
+}
+
+/// Concurrent suggest: multi-start gradient ascent over the snapshot.
+fn serve_suggest(cell: &ModelCell, beta: f64, reply: Sender<Response>) {
+    let tagged = match read_snapshot(cell) {
+        Ok(t) => t,
+        Err(e) => {
+            let _ = reply.send(Response::Error(e));
+            return;
+        }
+    };
+    let seq = cell.suggest_seq.fetch_add(1, Ordering::SeqCst);
+    let mut rng = Rng::new(cell.cfg.seed ^ 0x9E3779B97F4A7C15u64.wrapping_mul(seq + 1));
+    let cache = tagged.snap.fresh_cache();
+    let mut eval = SnapshotEval { snap: &tagged.snap, cache };
+    let acq = Acquisition::LcbMin { beta };
+    let scfg = SearchCfg::default();
+    let x = search_next(
+        &mut eval,
+        &acq,
+        cell.cfg.d,
+        cell.cfg.lo,
+        cell.cfg.hi,
+        &scfg,
+        &mut rng,
+    );
+    cell.native_reads.fetch_add(1, Ordering::Relaxed);
+    let _ = reply.send(Response::Suggestion { x });
+}
+
+/// Stats: engine counters (brief engine lock) + read-path counters + pool
+/// occupancy/queue-depth/steal observability.
+fn serve_stats(cell: &ModelCell, pool: &WorkerPool, reply: Sender<Response>) {
+    let eng = match cell.engine.lock() {
+        Ok(g) => g,
+        Err(_) => {
+            cell.dead.store(true, Ordering::SeqCst);
+            let _ = reply.send(Response::Error("engine stopped".into()));
+            return;
+        }
+    };
+    let gp = eng.gp();
+    let (hits, misses, _) = gp.cache_stats();
+    let (patches, resweeps) = gp.factor_stats();
+    let (snap_h, snap_m) = {
+        let slot = cell.snapshot.lock().unwrap();
+        slot.as_ref().map(|s| s.snap.cache_stats()).unwrap_or((0, 0))
+    };
+    let ps = pool.stats();
+    let resp = Response::Stats {
+        n: gp.n(),
+        d: gp.input_dim(),
+        omegas: gp.omegas.clone(),
+        cache_hits: hits
+            + cell.read_hits.load(Ordering::Relaxed)
+            + snap_h,
+        cache_misses: misses
+            + cell.read_misses.load(Ordering::Relaxed)
+            + snap_m,
+        pjrt_batches: eng.pjrt_batches,
+        native_queries: eng.native_queries + cell.native_reads.load(Ordering::Relaxed),
+        factor_patches: patches,
+        factor_resweeps: resweeps,
+        pool_workers: ps.workers as u64,
+        pool_busy: ps.running,
+        pool_queue_depth: ps.queued,
+        pool_steals: ps.steals,
+    };
+    drop(eng);
+    let _ = reply.send(resp);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn cfg(d: usize) -> EngineConfig {
+        EngineConfig { d, use_pjrt: false, lo: 0.0, hi: 4.0, seed: 11, ..Default::default() }
+    }
+
+    fn call(
+        sched: &Scheduler,
+        model: u64,
+        make: impl FnOnce(Sender<Response>) -> Command,
+    ) -> Response {
+        let (tx, rx) = channel();
+        sched.dispatch(model, make(tx));
+        rx.recv().expect("reply")
+    }
+
+    #[test]
+    fn mutations_are_fifo_and_reads_concurrent() {
+        let sched = Scheduler::new(3);
+        let m = sched.create_model(cfg(2));
+        assert!(sched.has_model(m));
+        assert!(!sched.has_model(m + 99));
+        let mut rng = Rng::new(3);
+        // Batch-activate, then a few single observes.
+        let xs: Vec<Vec<f64>> = (0..40)
+            .map(|_| vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)])
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x[0].sin() + x[1].cos()).collect();
+        let r = call(&sched, m, |reply| Command::ObserveBatch { xs, ys, reply });
+        match r {
+            Response::BatchObserved { n, .. } => assert_eq!(n, 40),
+            other => panic!("unexpected {other:?}"),
+        }
+        for i in 0..5 {
+            let x = vec![0.1 * i as f64 + 0.05, 3.9 - 0.1 * i as f64];
+            let y = x[0].sin() + x[1].cos();
+            let r = call(&sched, m, |reply| Command::Observe { x, y, reply });
+            match r {
+                Response::Observed { n, .. } => assert_eq!(n, 41 + i),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // Concurrent predicts against the snapshot.
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let sched = sched.clone();
+            handles.push(std::thread::spawn(move || {
+                let probe = vec![vec![1.0 + 0.2 * t as f64, 2.0]];
+                let r = call(&sched, m, |reply| Command::Predict {
+                    xs: probe,
+                    beta: 2.0,
+                    grad: true,
+                    reply,
+                });
+                match r {
+                    Response::Prediction { mu, svar, path, .. } => {
+                        assert_eq!(mu.len(), 1);
+                        assert!(svar[0].is_finite() && svar[0] >= 0.0);
+                        assert_eq!(path, "native");
+                    }
+                    other => panic!("unexpected {other:?}"),
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Stats carries the pool fields.
+        let r = call(&sched, m, |reply| Command::Stats { reply });
+        match r {
+            Response::Stats { n, pool_workers, native_queries, .. } => {
+                assert_eq!(n, 45);
+                assert_eq!(pool_workers, 3);
+                assert!(native_queries >= 4);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(sched.shutdown(), 3);
+        assert_eq!(sched.shutdown(), 0);
+    }
+
+    #[test]
+    fn unknown_model_and_inactive_model_error() {
+        let sched = Scheduler::new(2);
+        let (tx, rx) = channel();
+        sched.dispatch(7, Command::Stats { reply: tx });
+        match rx.recv().unwrap() {
+            Response::Error(e) => assert!(e.contains("unknown model"), "{e}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        let m = sched.create_model(cfg(2));
+        let r = call(&sched, m, |reply| Command::Predict {
+            xs: vec![vec![1.0, 1.0]],
+            beta: 2.0,
+            grad: false,
+            reply,
+        });
+        match r {
+            Response::Error(e) => assert!(e.contains("not enough observations"), "{e}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        sched.shutdown();
+    }
+}

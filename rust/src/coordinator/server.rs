@@ -1,32 +1,54 @@
 //! TCP server: JSON lines in, JSON lines out. One reader thread per
-//! connection; a registry routes requests to per-model engine workers.
+//! connection; requests route into the shared worker-pool [`Scheduler`]
+//! (cross-model sharding — no thread per model).
+//!
+//! Shutdown is deterministic (and asserted by `tests/concurrency.rs`):
+//! `shutdown` stops the accept loop, then [`Server::serve`] closes every
+//! connection socket (unblocking its reader), joins every reader thread,
+//! and finally drains + joins the scheduler's pool workers — in that order,
+//! so an in-flight request can still get its reply from a live pool.
 
-use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
 use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 
 use crate::anyhow;
-use crate::coordinator::engine::{Command, EngineConfig, ModelEngine};
+use crate::coordinator::engine::{Command, EngineConfig};
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::protocol::{Request, Response};
+use crate::coordinator::scheduler::Scheduler;
 use crate::kernels::matern::Nu;
 use crate::util::error::Result;
+use crate::util::pool;
+
+/// What a clean [`Server::serve`] exit joined — the deterministic-shutdown
+/// receipt (no leaked reader threads, no leaked pool workers).
+#[derive(Clone, Copy, Debug)]
+pub struct ShutdownStats {
+    /// Connection reader threads joined at shutdown (readers that finished
+    /// earlier are pruned from the registry as new connections arrive).
+    pub connections_joined: usize,
+    /// Pool workers joined by the scheduler.
+    pub workers_joined: usize,
+}
 
 /// Shared server state.
 struct Shared {
-    engines: Mutex<HashMap<u64, Sender<Command>>>,
-    next_id: AtomicU64,
+    scheduler: Scheduler,
     shutting_down: AtomicBool,
-    /// Engines create their own PJRT clients on their worker threads (the
-    /// xla handles are not Send); this only gates whether they try.
+    /// Whether `create_model` asks the scheduler to compile a PJRT
+    /// executable (pinned to a pool worker; handles are not `Send`).
     use_pjrt: bool,
-    /// Box bounds handed to each engine's `suggest`.
+    /// Box bounds handed to each model's `suggest`.
     lo: f64,
     hi: f64,
     metrics: ServerMetrics,
+    /// Live connections: a socket handle (to force readers off a blocking
+    /// read at shutdown) plus the reader thread's join handle.
+    conns: Mutex<Vec<(TcpStream, JoinHandle<()>)>>,
 }
 
 /// The coordinator server.
@@ -36,20 +58,32 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind to `addr` (e.g. `127.0.0.1:0`). `use_pjrt=false` skips the PJRT
-    /// client entirely (native-only engines).
+    /// Bind to `addr` (e.g. `127.0.0.1:0`) with a pool of
+    /// [`pool::default_threads`] workers. `use_pjrt=false` skips PJRT
+    /// compilation entirely (native-only models).
     pub fn bind(addr: &str, use_pjrt: bool, lo: f64, hi: f64) -> Result<Self> {
+        Self::bind_with(addr, use_pjrt, lo, hi, pool::default_threads())
+    }
+
+    /// [`Server::bind`] with an explicit worker-pool size.
+    pub fn bind_with(
+        addr: &str,
+        use_pjrt: bool,
+        lo: f64,
+        hi: f64,
+        workers: usize,
+    ) -> Result<Self> {
         let listener = TcpListener::bind(addr)?;
         Ok(Server {
             listener,
             shared: Arc::new(Shared {
-                engines: Mutex::new(HashMap::new()),
-                next_id: AtomicU64::new(1),
+                scheduler: Scheduler::new(workers),
                 shutting_down: AtomicBool::new(false),
                 use_pjrt,
                 lo,
                 hi,
                 metrics: ServerMetrics::default(),
+                conns: Mutex::new(Vec::new()),
             }),
         })
     }
@@ -58,28 +92,58 @@ impl Server {
         self.listener.local_addr().unwrap()
     }
 
-    /// One-line serving-metrics report (also printed at shutdown).
+    /// Serving-metrics report — pool-wide counters/histograms plus one line
+    /// per model (also printed at shutdown).
     pub fn metrics_report(&self) -> String {
         self.shared.metrics.report()
     }
 
-    /// Accept-loop. Returns when a client sends `shutdown`.
-    pub fn serve(&self) -> Result<()> {
+    /// Accept-loop. Returns — after joining every connection reader and
+    /// every pool worker — when a client sends `shutdown`.
+    pub fn serve(&self) -> Result<ShutdownStats> {
         for stream in self.listener.incoming() {
             if self.shared.shutting_down.load(Ordering::SeqCst) {
                 break;
             }
-            let stream = stream?;
+            let stream = match stream {
+                Ok(s) => s,
+                // A transient accept failure (ECONNABORTED, EMFILE, …) must
+                // not abort serving — that would skip the deterministic
+                // shutdown drain below and leak every parked reader.
+                Err(_) => {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                    continue;
+                }
+            };
+            let Ok(sock) = stream.try_clone() else { continue };
             let shared = Arc::clone(&self.shared);
-            std::thread::spawn(move || handle_conn(stream, shared));
+            let handle = std::thread::spawn(move || handle_conn(stream, shared));
+            let mut conns = self.shared.conns.lock().unwrap();
+            // Prune finished readers so connection churn doesn't accumulate
+            // cloned fds/handles for the server's whole lifetime.
+            conns.retain(|(_, h)| !h.is_finished());
+            conns.push((sock, handle));
         }
+        // Deterministic drain: close every connection socket (readers
+        // blocked in `read_line` see EOF), join the readers, then join the
+        // pool — in this order an in-flight dispatch still gets its reply.
+        let conns: Vec<(TcpStream, JoinHandle<()>)> =
+            self.shared.conns.lock().unwrap().drain(..).collect();
+        let mut connections_joined = 0;
+        for (sock, _) in &conns {
+            let _ = sock.shutdown(Shutdown::Both);
+        }
+        for (_, handle) in conns {
+            let _ = handle.join();
+            connections_joined += 1;
+        }
+        let workers_joined = self.shared.scheduler.shutdown();
         println!("coordinator metrics: {}", self.shared.metrics.report());
-        Ok(())
+        Ok(ShutdownStats { connections_joined, workers_joined })
     }
 }
 
 fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
-    let peer = stream.peer_addr().ok();
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
@@ -107,7 +171,6 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
             break;
         }
     }
-    let _ = peer;
 }
 
 fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
@@ -130,6 +193,7 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
         Request::ObserveBatch { ys, .. } => shared.metrics.add_observe_points(ys.len()),
         _ => {}
     }
+    let mut routed_model: Option<u64> = None;
     let resp = match req {
         Request::CreateModel { d, nu2, omega, sigma2 } => {
             let nu = match Nu::from_two_nu(nu2) {
@@ -146,19 +210,11 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
                 use_pjrt: shared.use_pjrt,
                 seed: 0xC0FE ^ d as u64,
             };
-            let (tx, rx) = channel();
-            // Construct on the worker thread: PJRT handles are not Send.
-            std::thread::spawn(move || ModelEngine::new(cfg).run(rx));
-            let idx = shared.next_id.fetch_add(1, Ordering::SeqCst);
-            shared.engines.lock().unwrap().insert(idx, tx);
+            let idx = shared.scheduler.create_model(cfg);
             Response::ModelCreated { model: idx }
         }
         Request::Shutdown => {
             shared.shutting_down.store(true, Ordering::SeqCst);
-            let engines = shared.engines.lock().unwrap();
-            for tx in engines.values() {
-                let _ = tx.send(Command::Stop);
-            }
             Response::Ok
         }
         other => {
@@ -171,13 +227,7 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
                 | Request::Stats { model } => *model,
                 _ => unreachable!(),
             };
-            let tx = {
-                let engines = shared.engines.lock().unwrap();
-                engines.get(&model).cloned()
-            };
-            let Some(tx) = tx else {
-                return (Response::Error(format!("unknown model {model}")), id);
-            };
+            routed_model = Some(model);
             let (rtx, rrx) = channel();
             let cmd = match other {
                 Request::Observe { x, y, .. } => Command::Observe { x, y, reply: rtx },
@@ -192,9 +242,7 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
                 Request::Stats { .. } => Command::Stats { reply: rtx },
                 _ => unreachable!(),
             };
-            if tx.send(cmd).is_err() {
-                return (Response::Error("engine stopped".into()), id);
-            }
+            shared.scheduler.dispatch(model, cmd);
             match rrx.recv() {
                 Ok(r) => r,
                 Err(_) => Response::Error("engine dropped reply".into()),
@@ -214,12 +262,29 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
         }
         _ => {}
     }
+    // Pool-wide and per-model latency. Per-model histograms only for
+    // successfully routed ops — errors (above all "unknown model") must not
+    // mint unbounded phantom entries in the per-model map.
+    let elapsed = t0.elapsed().as_secs_f64();
+    let per_model = match &resp {
+        Response::Error(_) => None,
+        _ => routed_model.map(|m| shared.metrics.model(m)),
+    };
     if is_predict {
-        shared.metrics.predict_latency.record(t0.elapsed().as_secs_f64());
+        shared.metrics.predict_latency.record(elapsed);
+        if let Some(m) = &per_model {
+            m.predict_latency.record(elapsed);
+        }
     } else if is_suggest {
-        shared.metrics.suggest_latency.record(t0.elapsed().as_secs_f64());
+        shared.metrics.suggest_latency.record(elapsed);
+        if let Some(m) = &per_model {
+            m.suggest_latency.record(elapsed);
+        }
     } else if is_ingest {
-        shared.metrics.ingest_latency.record(t0.elapsed().as_secs_f64());
+        shared.metrics.ingest_latency.record(elapsed);
+        if let Some(m) = &per_model {
+            m.ingest_latency.record(elapsed);
+        }
     }
     (resp, id)
 }

@@ -36,6 +36,9 @@ impl PatchTimings {
 /// Everything the engine needs about one additive dimension `d`:
 /// `P_d^T K_d P_d = A_d^{-1} Φ_d`, the Gauss–Seidel block matrix
 /// `T_d = A_d + σ⁻²Φ_d`, and LU factors of `Φ_d`, `Φ_d^T`, `T_d`.
+/// `Clone` supports the coordinator's immutable read snapshots
+/// ([`crate::gp::fit_state::PosteriorSnapshot`]).
+#[derive(Clone)]
 pub struct DimFactor {
     pub kp: KpFactorization,
     /// `T_d = A_d + σ_y^{-2} Φ_d`, maintained incrementally through inserts

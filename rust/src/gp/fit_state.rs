@@ -29,9 +29,11 @@
 //! `tests/incremental.rs` against both a full refit and the dense
 //! `baselines::full_gp` oracle.
 
+use std::sync::Mutex;
+
 use crate::gp::backfit::{BlockVec, GaussSeidel, GsStats};
 use crate::gp::dim::{DimFactor, PatchTimings};
-use crate::gp::posterior::{self, Posterior};
+use crate::gp::posterior::{self, MTildeCache, Posterior, PredictOut};
 use crate::kernels::matern::Matern;
 use crate::linalg::banded::PatchPolicy;
 use crate::util::pool;
@@ -322,6 +324,41 @@ impl FitState {
         self.tilde = Some(tilde);
     }
 
+    /// Build an immutable, shareable [`PosteriorSnapshot`] for the
+    /// coordinator's concurrent read path (DESIGN.md §Coordinator,
+    /// "Snapshot semantics").
+    ///
+    /// Deliberately **non-perturbing**: when the posterior is stale the
+    /// solve runs *warm from the stored ṽ but is not written back*, so a
+    /// read arriving at any point between two mutations observes exactly
+    /// the state the mutation stream produced and leaves the engine's
+    /// numeric trajectory bit-identical to a read-free replay — the
+    /// property the multi-model determinism stress test pins. The lazy
+    /// band-of-inverse *is* materialized on `self` (it is a pure function
+    /// of the factors, so building it early changes nothing downstream).
+    pub fn read_snapshot(&mut self, y: &[f64], cache_capacity: usize) -> PosteriorSnapshot {
+        for dim in self.dims.iter_mut() {
+            let _ = dim.c_band();
+        }
+        let post = match &self.post {
+            Some(p) => p.clone(),
+            None => {
+                assert_eq!(y.len(), self.n());
+                let gs = self.solver();
+                let (post, _tilde) =
+                    posterior::compute_posterior_warm(&self.dims, y, &gs, self.tilde.as_ref());
+                post
+            }
+        };
+        PosteriorSnapshot {
+            dims: self.dims.clone(),
+            post,
+            sigma2_y: self.sigma2_y,
+            cache_capacity,
+            cache: Mutex::new(MTildeCache::new(cache_capacity)),
+        }
+    }
+
     /// Stats of the last posterior solve, if one has run.
     pub fn gs_stats(&self) -> Option<GsStats> {
         self.post.as_ref().map(|p| p.gs_stats)
@@ -334,6 +371,77 @@ impl FitState {
         gs.max_sweeps = self.gs_max_sweeps;
         gs.tol = self.gs_tol;
         gs
+    }
+}
+
+/// An immutable, shareable view of a trained model — everything the
+/// concurrent read path (`predict`/`suggest` in the coordinator's shared
+/// worker pool) needs, decoupled from the mutable [`FitState`]:
+///
+/// * cloned per-dimension factorizations with the band-of-inverse already
+///   materialized, so prediction is pure `&`-access
+///   ([`posterior::predict_prebuilt`]);
+/// * the posterior `b` vectors as of the snapshot's generation;
+/// * its own `M̃` column cache behind a [`Mutex`] (columns warm up across
+///   the reads that share this snapshot; the engine's cache is untouched).
+///
+/// Readers on different models never contend; readers on one model contend
+/// only on the column-cache mutex, never with ingest. A fresh snapshot is
+/// built per mutation generation, so the clone cost is paid once per
+/// write, not per read.
+pub struct PosteriorSnapshot {
+    dims: Vec<DimFactor>,
+    post: Posterior,
+    sigma2_y: f64,
+    cache_capacity: usize,
+    cache: Mutex<MTildeCache>,
+}
+
+impl PosteriorSnapshot {
+    pub fn n(&self) -> usize {
+        self.dims[0].n()
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Posterior mean/variance (and gradients) at `x` through the shared
+    /// snapshot cache — the coordinator's native `predict` read path.
+    pub fn predict(&self, x: &[f64], want_grad: bool) -> PredictOut {
+        let mut cache = match self.cache.lock() {
+            Ok(g) => g,
+            // A reader that panicked mid-insert left the cache usable
+            // (worst case: a missing column recomputed later).
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        posterior::predict_prebuilt(&self.dims, self.sigma2_y, &self.post, &mut cache, x, want_grad)
+    }
+
+    /// [`PosteriorSnapshot::predict`] through a caller-owned cache — the
+    /// `suggest` path gives each gradient-ascent search its own cache so a
+    /// long search never blocks concurrent predicts on the shared one.
+    pub fn predict_with_cache(
+        &self,
+        cache: &mut MTildeCache,
+        x: &[f64],
+        want_grad: bool,
+    ) -> PredictOut {
+        posterior::predict_prebuilt(&self.dims, self.sigma2_y, &self.post, cache, x, want_grad)
+    }
+
+    /// An empty cache with this snapshot's configured capacity.
+    pub fn fresh_cache(&self) -> MTildeCache {
+        MTildeCache::new(self.cache_capacity)
+    }
+
+    /// `(hits, misses)` of the shared snapshot cache.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        let cache = match self.cache.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        (cache.hits, cache.misses)
     }
 }
 

@@ -26,5 +26,5 @@ pub mod train;
 
 pub use backfit::{BlockVec, GaussSeidel, GsScratch};
 pub use dim::{DimFactor, PatchTimings};
-pub use fit_state::{BatchPositions, FitState};
+pub use fit_state::{BatchPositions, FitState, PosteriorSnapshot};
 pub use model::{AdditiveGP, AdditiveGpConfig, BatchPath};

@@ -6,7 +6,7 @@
 //! the `M̃` cache, and hyperparameter training on top.
 
 use crate::gp::dim::{DimFactor, PatchTimings};
-use crate::gp::fit_state::FitState;
+use crate::gp::fit_state::{FitState, PosteriorSnapshot};
 use crate::gp::likelihood::{self, StochasticCfg};
 use crate::gp::posterior::{self, MTildeCache, PredictOut};
 use crate::gp::train::{self, TrainCfg};
@@ -341,6 +341,18 @@ impl AdditiveGP {
         }
     }
 
+    /// Build an immutable [`PosteriorSnapshot`] for the coordinator's
+    /// concurrent read path, or `None` before the model is active
+    /// (`n < min_points`). Non-perturbing: a stale posterior is solved warm
+    /// from the stored ṽ *without* writing it back, so reads at arbitrary
+    /// times leave the engine's numeric trajectory bit-identical to a
+    /// read-free replay (see [`FitState::read_snapshot`]).
+    pub fn read_snapshot(&mut self) -> Option<PosteriorSnapshot> {
+        let cap = self.cfg.cache_capacity;
+        let state = self.state.as_mut()?;
+        Some(state.read_snapshot(&self.y, cap))
+    }
+
     /// Data access for baselines/benchmarks.
     pub fn data(&self) -> (&[Vec<f64>], &[f64]) {
         (&self.x_cols, &self.y)
@@ -449,6 +461,43 @@ mod tests {
                 b.var
             );
         }
+    }
+
+    /// The coordinator's read snapshot agrees with the engine's own predict
+    /// path, and building it leaves the engine bit-for-bit untouched (the
+    /// invariant the multi-model determinism stress test relies on).
+    #[test]
+    fn read_snapshot_matches_predict_and_does_not_perturb() {
+        let (x, y) = toy_data(70, 2, 9);
+        let mut gp = AdditiveGP::new(AdditiveGpConfig::default(), 2);
+        gp.fit(&x[..60], &y[..60]);
+        // Incremental observes leave the posterior stale, so the snapshot
+        // has to run its own (non-perturbing) warm solve.
+        for i in 60..70 {
+            gp.observe(&x[i], y[i]);
+        }
+        let probe = [1.3, 2.1];
+        let snap = gp.read_snapshot().unwrap();
+        let a = snap.predict(&probe, true);
+        let snap2 = gp.read_snapshot().unwrap();
+        let b = snap2.predict(&probe, true);
+        assert_eq!(a.mean.to_bits(), b.mean.to_bits(), "snapshot build perturbed the engine");
+        assert_eq!(a.var.to_bits(), b.var.to_bits());
+        let c = gp.predict(&probe, true);
+        assert!(
+            (a.mean - c.mean).abs() < 1e-8 * c.mean.abs().max(1.0),
+            "snapshot mean {} vs engine {}",
+            a.mean,
+            c.mean
+        );
+        assert!(
+            (a.var - c.var).abs() < 1e-6 * c.var.max(1e-6),
+            "snapshot var {} vs engine {}",
+            a.var,
+            c.var
+        );
+        assert_eq!(snap.n(), 70);
+        assert_eq!(snap.input_dim(), 2);
     }
 
     #[test]

@@ -347,7 +347,9 @@ pub struct PredictOut {
 
 /// Posterior variance (and optionally its gradient) at `x`, using the
 /// `M̃`-column cache: `O(1)` amortized when the window columns are cached,
-/// one `O(Dn)` Algorithm 4 solve per uncached column otherwise.
+/// one `O(Dn)` Algorithm 4 solve per uncached column otherwise. Builds the
+/// lazy band-of-inverse on first use, then delegates to
+/// [`predict_prebuilt`].
 pub fn predict_cached(
     dims: &mut [DimFactor],
     sigma2_y: f64,
@@ -356,13 +358,32 @@ pub fn predict_cached(
     x: &[f64],
     want_grad: bool,
 ) -> PredictOut {
+    for dim in dims.iter_mut() {
+        let _ = dim.c_band();
+    }
+    predict_prebuilt(dims, sigma2_y, post, cache, x, want_grad)
+}
+
+/// [`predict_cached`] over *immutable* factorizations — the concurrent
+/// read path of the coordinator's
+/// [`crate::gp::fit_state::PosteriorSnapshot`]. Identical math; the only
+/// difference is that every dimension's band-of-inverse must already be
+/// materialized (panics otherwise — snapshot construction guarantees it).
+pub fn predict_prebuilt(
+    dims: &[DimFactor],
+    sigma2_y: f64,
+    post: &Posterior,
+    cache: &mut MTildeCache,
+    x: &[f64],
+    want_grad: bool,
+) -> PredictOut {
     let ddim = dims.len();
-    // Gather windows (and ensure C bands exist) first.
+    // Gather windows first.
     let mut windows = Vec::with_capacity(ddim);
-    for (d, dim) in dims.iter_mut().enumerate() {
+    for (d, dim) in dims.iter().enumerate() {
         let (start, vals) = dim.kp.phi_window(x[d]);
         let dvals = if want_grad { dim.kp.dphi_window(x[d]).1 } else { Vec::new() };
-        dim.c_band();
+        debug_assert!(dim.has_c_band(), "c_band must be prebuilt");
         windows.push((start, vals, dvals));
         let _ = d;
     }
@@ -376,7 +397,7 @@ pub fn predict_cached(
     for (d, dim) in dims.iter().enumerate() {
         let (start, vals, dvals) = &windows[d];
         term1 += dim.kernel().k(x[d], x[d]);
-        let c = dim.c_band_cached().expect("c_band built above");
+        let c = dim.c_band_cached().expect("c_band prebuilt for predict");
         for (r, &vr) in vals.iter().enumerate() {
             mean_acc += vr * post.b[d][start + r];
             for (s, &vs) in vals.iter().enumerate() {

@@ -32,8 +32,12 @@
 //!   batched acquisition kernel (`artifacts/*.hlo.txt`); offline builds use
 //!   the graceful [`runtime::xla`] stub.
 //! * [`coordinator`] — the serving layer: JSON-line protocol, model
-//!   registry, per-model workers with dynamic batching over PJRT and
-//!   incremental `observe`/`observe_batch` ingest.
+//!   registry, and a **shared work-stealing worker pool** serving every
+//!   model at once — per-model FIFO mutual exclusion for mutating commands,
+//!   concurrent snapshot-backed `predict`/`suggest`/`stats` reads, dynamic
+//!   PJRT predict batching pinned to the worker that compiled the
+//!   executable, and incremental `observe`/`observe_batch` ingest
+//!   (quickstart: `rust/src/coordinator/README.md`).
 //! * [`util`] — offline-build substrates (PRNG, JSON, timing, errors).
 //!
 //! ## Quick start

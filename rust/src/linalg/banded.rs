@@ -510,7 +510,9 @@ fn pivot_sign(piv: &[usize]) -> f64 {
 /// `PIVOT_THRESHOLD`): with row swaps the `U` factor's upper bandwidth grows
 /// to `kl + ku`; `L`'s multipliers stay within `kl`. After a band splice the
 /// factorization can be *patched in place* by [`BandedLU::refactor_from`]
-/// instead of re-swept from scratch.
+/// instead of re-swept from scratch. `Clone` supports the coordinator's
+/// read snapshots ([`crate::gp::fit_state::PosteriorSnapshot`]).
+#[derive(Clone)]
 pub struct BandedLU {
     n: usize,
     kl: usize,

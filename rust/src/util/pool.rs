@@ -1,14 +1,32 @@
-//! A zero-dependency scoped fork-join helper for the per-dimension shards
-//! of the incremental batch path (DESIGN.md §FitState, "Batched inserts &
-//! dimension sharding").
+//! Thread-pool substrates for the two concurrency shapes in this crate
+//! (DESIGN.md §FitState "Batched inserts & dimension sharding" and
+//! §Coordinator "Shared worker pool").
 //!
-//! Back-fitting treats the `D` additive dimensions as independent blocks, so
-//! a batch insert decomposes into `D` embarrassingly parallel jobs (one band
-//! splice + window re-solve + factor sweep each). The offline image ships no
-//! rayon; [`std::thread::scope`] (fork-join with borrowed data, no `'static`
-//! bound) is all that's needed: jobs are coarse — milliseconds at serving
-//! sizes — so per-call spawn cost is noise and a persistent pool would add
-//! state for no measurable win.
+//! * [`par_map_mut`] — a zero-dependency *scoped* fork-join helper for the
+//!   per-dimension shards of the incremental batch path. Back-fitting treats
+//!   the `D` additive dimensions as independent blocks, so a batch insert
+//!   decomposes into `D` embarrassingly parallel jobs (one band splice +
+//!   window re-solve + factor sweep each). Jobs borrow the caller's data, so
+//!   [`std::thread::scope`] is the right tool: no `'static` bound, and the
+//!   jobs are coarse enough (milliseconds at serving sizes) that per-call
+//!   spawn cost is noise.
+//!
+//! * [`WorkerPool`] — the *persistent* generalization that the serving
+//!   coordinator runs on: a fixed set of named workers serving `'static`
+//!   jobs from per-worker queues with work stealing. One pool serves every
+//!   model in the process (cross-model sharding), so a fleet of small models
+//!   shares cores and one giant model overlaps ingest with predict batching.
+//!   Jobs that must run on a specific worker — PJRT executables are pinned
+//!   to the thread that compiled them — are submitted with
+//!   [`WorkerPool::spawn_pinned`] and are never stolen.
+//!
+//! The offline image ships no rayon/tokio; both substrates are std-only.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
 /// Number of worker threads the host offers (≥ 1).
 pub fn default_threads() -> usize {
@@ -62,9 +80,220 @@ where
     out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
 }
 
+/// A job for the persistent pool. The argument is the index of the worker
+/// executing it (0-based) — affinity-sensitive callers use it to key
+/// worker-local state (e.g. the coordinator's per-worker PJRT executables).
+pub type Job = Box<dyn FnOnce(usize) + Send + 'static>;
+
+/// Aggregate pool observability, surfaced through the coordinator's `stats`
+/// op (`pool_*` fields) and the serving-metrics report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Fixed number of workers.
+    pub workers: usize,
+    /// Jobs sitting in queues (pinned + unpinned) right now.
+    pub queued: u64,
+    /// Workers currently executing a job (pool occupancy).
+    pub running: u64,
+    /// Jobs completed over the pool's lifetime.
+    pub executed: u64,
+    /// Unpinned jobs a worker took from another worker's queue.
+    pub steals: u64,
+    /// Jobs that panicked (caught; the worker survives).
+    pub panics: u64,
+}
+
+struct Queues {
+    /// Per-worker pinned jobs; only worker `i` may run `pinned[i]`.
+    pinned: Vec<VecDeque<Job>>,
+    /// Per-worker queues for unpinned jobs; any idle worker may steal.
+    local: Vec<VecDeque<Job>>,
+    /// Round-robin cursor for unpinned submission.
+    next: usize,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    q: Mutex<Queues>,
+    cv: Condvar,
+    running: AtomicU64,
+    executed: AtomicU64,
+    steals: AtomicU64,
+    panics: AtomicU64,
+}
+
+/// A persistent fixed-size worker pool with per-worker queues, work
+/// stealing, worker-affinity submission and deterministic shutdown.
+///
+/// * Unpinned jobs are placed round-robin on the workers' local queues; an
+///   idle worker first drains its own queues, then steals from its peers
+///   (counted in [`PoolStats::steals`]).
+/// * Pinned jobs run only on their target worker — the affinity hint the
+///   coordinator uses to keep PJRT executables on the thread that compiled
+///   them (the handles are not `Send`).
+/// * [`WorkerPool::shutdown`] drains every queued job, then joins all
+///   workers; it is idempotent and also runs on `Drop`.
+/// * A panicking job is caught and counted; the worker survives. Callers
+///   that share state with jobs decide their own quarantine policy (the
+///   coordinator marks the model dead).
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `workers.max(1)` named worker threads.
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let shared = Arc::new(PoolShared {
+            q: Mutex::new(Queues {
+                pinned: (0..workers).map(|_| VecDeque::new()).collect(),
+                local: (0..workers).map(|_| VecDeque::new()).collect(),
+                next: 0,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            running: AtomicU64::new(0),
+            executed: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("addgp-pool-{i}"))
+                    .spawn(move || worker_loop(i, sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles: Mutex::new(handles), workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Submit an unpinned job (any worker may run or steal it). Returns
+    /// `false` — and drops the job — if the pool is shutting down.
+    pub fn spawn(&self, job: Job) -> bool {
+        {
+            let mut q = self.shared.q.lock().unwrap();
+            if q.shutdown {
+                return false;
+            }
+            let slot = q.next % self.workers;
+            q.next = q.next.wrapping_add(1);
+            q.local[slot].push_back(job);
+        }
+        self.shared.cv.notify_all();
+        true
+    }
+
+    /// Submit a job pinned to `worker % workers` (never stolen). Returns
+    /// `false` — and drops the job — if the pool is shutting down.
+    pub fn spawn_pinned(&self, worker: usize, job: Job) -> bool {
+        let w = worker % self.workers;
+        {
+            let mut q = self.shared.q.lock().unwrap();
+            if q.shutdown {
+                return false;
+            }
+            q.pinned[w].push_back(job);
+        }
+        self.shared.cv.notify_all();
+        true
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let queued = {
+            let q = self.shared.q.lock().unwrap();
+            (q.pinned.iter().map(|d| d.len()).sum::<usize>()
+                + q.local.iter().map(|d| d.len()).sum::<usize>()) as u64
+        };
+        PoolStats {
+            workers: self.workers,
+            queued,
+            running: self.shared.running.load(Ordering::Relaxed),
+            executed: self.shared.executed.load(Ordering::Relaxed),
+            steals: self.shared.steals.load(Ordering::Relaxed),
+            panics: self.shared.panics.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop accepting jobs, let the workers drain everything already queued,
+    /// then join them all. Returns the number of workers joined (0 on a
+    /// repeat call — shutdown is idempotent).
+    pub fn shutdown(&self) -> usize {
+        {
+            let mut q = self.shared.q.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        let mut handles = self.handles.lock().unwrap();
+        let mut joined = 0;
+        for h in handles.drain(..) {
+            let _ = h.join();
+            joined += 1;
+        }
+        joined
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(me: usize, sh: Arc<PoolShared>) {
+    loop {
+        let job: Option<Job> = {
+            let mut q = sh.q.lock().unwrap();
+            loop {
+                if let Some(j) = q.pinned[me].pop_front() {
+                    break Some(j);
+                }
+                if let Some(j) = q.local[me].pop_front() {
+                    break Some(j);
+                }
+                // Steal scan, round-robin starting after this worker.
+                let n = q.local.len();
+                let mut stolen = None;
+                for off in 1..n {
+                    let v = (me + off) % n;
+                    if let Some(j) = q.local[v].pop_front() {
+                        stolen = Some(j);
+                        break;
+                    }
+                }
+                if let Some(j) = stolen {
+                    sh.steals.fetch_add(1, Ordering::Relaxed);
+                    break Some(j);
+                }
+                if q.shutdown {
+                    break None;
+                }
+                q = sh.cv.wait(q).unwrap();
+            }
+        };
+        let Some(job) = job else { return };
+        sh.running.fetch_add(1, Ordering::Relaxed);
+        let outcome = catch_unwind(AssertUnwindSafe(|| job(me)));
+        sh.running.fetch_sub(1, Ordering::Relaxed);
+        sh.executed.fetch_add(1, Ordering::Relaxed);
+        if outcome.is_err() {
+            sh.panics.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::mpsc::channel;
 
     #[test]
     fn maps_in_order_and_mutates() {
@@ -88,5 +317,77 @@ mod tests {
         let mut one = vec![7u32];
         let out = par_map_mut(&mut one, 4, |i, v| (i, *v));
         assert_eq!(out, vec![(0, 7)]);
+    }
+
+    #[test]
+    fn pool_runs_all_jobs_and_joins() {
+        let pool = WorkerPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            assert!(pool.spawn(Box::new(move |_| {
+                c.fetch_add(1, Ordering::SeqCst);
+            })));
+        }
+        let joined = pool.shutdown();
+        assert_eq!(joined, 3);
+        // Shutdown drains the queues before joining.
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+        assert_eq!(pool.stats().executed, 50);
+        assert_eq!(pool.shutdown(), 0, "idempotent");
+        assert!(!pool.spawn(Box::new(|_| {})), "rejects jobs after shutdown");
+    }
+
+    #[test]
+    fn pinned_jobs_run_on_their_worker() {
+        let pool = WorkerPool::new(4);
+        let (tx, rx) = channel();
+        for want in [0usize, 1, 2, 3, 2, 1] {
+            let tx = tx.clone();
+            assert!(pool.spawn_pinned(want, Box::new(move |me| {
+                tx.send((want, me)).unwrap();
+            })));
+        }
+        for _ in 0..6 {
+            let (want, got) = rx.recv().unwrap();
+            assert_eq!(want, got, "pinned job ran on the wrong worker");
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn work_stealing_spreads_load() {
+        // Many unpinned jobs with uneven durations: with > 1 worker some
+        // must be stolen once a worker runs dry.
+        let pool = WorkerPool::new(2);
+        let seen: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..40 {
+            let seen = Arc::clone(&seen);
+            pool.spawn(Box::new(move |me| {
+                if i % 7 == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                seen.lock().unwrap().push(me);
+            }));
+        }
+        pool.shutdown();
+        let seen = seen.lock().unwrap();
+        assert_eq!(seen.len(), 40);
+        // Both workers participated (stealing or round-robin placement).
+        assert!(seen.contains(&0) && seen.contains(&1));
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_the_worker() {
+        let pool = WorkerPool::new(1);
+        pool.spawn(Box::new(|_| panic!("job boom")));
+        let (tx, rx) = channel();
+        pool.spawn(Box::new(move |_| {
+            tx.send(7u32).unwrap();
+        }));
+        assert_eq!(rx.recv_timeout(std::time::Duration::from_secs(10)), Ok(7));
+        let stats = pool.stats();
+        assert_eq!(stats.panics, 1);
+        assert_eq!(pool.shutdown(), 1);
     }
 }

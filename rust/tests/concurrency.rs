@@ -1,0 +1,351 @@
+//! Multi-model shared-pool stress tests (ISSUE 5; DESIGN.md §Coordinator).
+//!
+//! * `multi_model_stress_deterministic` — 8 models × 4 concurrent clients,
+//!   interleaved ingest + mid-stream predicts; the final per-model
+//!   posteriors (probed over the wire) must be **bit-identical** to a
+//!   single-threaded, read-free replay of the same per-model mutation
+//!   streams. This pins two properties at once: per-model FIFO mutual
+//!   exclusion (mutation order is exact) and non-perturbing read snapshots
+//!   (concurrent predicts never touch the engine's numeric trajectory).
+//! * `shutdown_joins_all_threads_and_workers` — the deterministic-shutdown
+//!   receipt: `serve()` returns only after joining every connection reader
+//!   and every pool worker, and reports the counts.
+//! * `interleaved_chaos_all_ops` — every op class from every client against
+//!   every model concurrently; replies must be well-formed (this is the
+//!   test the CI ThreadSanitizer leg leans on).
+//!
+//! Everything runs native-only (`use_pjrt = false`) so it passes without
+//! compiled artifacts.
+
+use addgp::coordinator::server::{Client, Server, ShutdownStats};
+use addgp::util::{Json, Rng};
+
+const MODELS: usize = 8;
+const CLIENTS: usize = 4;
+const PROBES: [[f64; 2]; 3] = [[0.7, 2.3], [1.9, 0.4], [3.1, 3.6]];
+
+fn boot(workers: usize) -> (std::net::SocketAddr, std::thread::JoinHandle<ShutdownStats>) {
+    let server = Server::bind_with("127.0.0.1:0", false, 0.0, 4.0, workers).unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.serve().unwrap());
+    (addr, handle)
+}
+
+fn create_models(c: &mut Client, count: usize) -> Vec<u64> {
+    (0..count)
+        .map(|_| {
+            let r = c
+                .call(r#"{"op":"create_model","d":2,"nu2":1,"omega":1.0,"sigma2":1.0}"#)
+                .unwrap();
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+            r.get("model").unwrap().as_f64().unwrap() as u64
+        })
+        .collect()
+}
+
+fn sample_xy(rng: &mut Rng) -> (Vec<f64>, f64) {
+    let x = vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)];
+    let y = x[0].sin() + x[1].cos() + 0.05 * rng.normal();
+    (x, y)
+}
+
+fn observe_req(model: u64, x: &[f64], y: f64) -> String {
+    format!(
+        r#"{{"op":"observe","model":{model},"x":[{}],"y":{y}}}"#,
+        x.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
+    )
+}
+
+fn batch_req(model: u64, rng: &mut Rng, m: usize) -> String {
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for _ in 0..m {
+        let (x, y) = sample_xy(rng);
+        xs.push(format!("[{},{}]", x[0], x[1]));
+        ys.push(y.to_string());
+    }
+    format!(
+        r#"{{"op":"observe_batch","model":{model},"xs":[{}],"ys":[{}]}}"#,
+        xs.join(","),
+        ys.join(",")
+    )
+}
+
+/// One deterministic ingest stage of model `mi`'s mutation stream. The rng
+/// is reseeded per `(mi, stage)`, so any interleaving of stages *across*
+/// models reproduces the identical per-model stream.
+fn ingest_stage(c: &mut Client, model: u64, mi: usize, stage: usize) {
+    let mut rng = Rng::new(0xA11CE + (mi as u64) * 101 + (stage as u64) * 7919);
+    match stage {
+        0 => {
+            let r = c.call(&batch_req(model, &mut rng, 40)).unwrap();
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        }
+        1 => {
+            for _ in 0..6 {
+                let (x, y) = sample_xy(&mut rng);
+                let r = c.call(&observe_req(model, &x, y)).unwrap();
+                assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+            }
+        }
+        2 => {
+            let r = c.call(&batch_req(model, &mut rng, 8)).unwrap();
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        }
+        3 => {
+            for _ in 0..4 {
+                let (x, y) = sample_xy(&mut rng);
+                let r = c.call(&observe_req(model, &x, y)).unwrap();
+                assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+            }
+        }
+        _ => {
+            // Final single observe — opens a fresh snapshot generation so
+            // the probe pass starts from a cold, deterministic cache.
+            let (x, y) = sample_xy(&mut rng);
+            let r = c.call(&observe_req(model, &x, y)).unwrap();
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        }
+    }
+}
+
+/// Points per model after stages 0..=4.
+const FINAL_N: usize = 40 + 6 + 8 + 4 + 1;
+
+/// Probe one model: final observe, then the fixed probe predictions in a
+/// fixed order. Returns the raw reply f64s (mu, svar, acq per probe) plus
+/// the deterministic stats fields.
+fn probe_model(c: &mut Client, model: u64, mi: usize) -> (Vec<u64>, (usize, f64, f64)) {
+    ingest_stage(c, model, mi, 4);
+    let mut bits = Vec::new();
+    for p in &PROBES {
+        let r = c
+            .call(&format!(
+                r#"{{"op":"predict","model":{model},"xs":[[{},{}]],"beta":2.0,"grad":true}}"#,
+                p[0], p[1]
+            ))
+            .unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("path").unwrap().as_str(), Some("native"));
+        for key in ["mu", "svar", "acq"] {
+            for v in r.get(key).unwrap().as_f64_vec().unwrap() {
+                bits.push(v.to_bits());
+            }
+        }
+        for row in r.get("gacq").unwrap().as_arr().unwrap() {
+            for v in row.as_f64_vec().unwrap() {
+                bits.push(v.to_bits());
+            }
+        }
+    }
+    let r = c.call(&format!(r#"{{"op":"stats","model":{model}}}"#)).unwrap();
+    let n = r.get("n").unwrap().as_usize().unwrap();
+    let patches = r.get("factor_patches").unwrap().as_f64().unwrap();
+    let resweeps = r.get("factor_resweeps").unwrap().as_f64().unwrap();
+    (bits, (n, patches, resweeps))
+}
+
+/// Fire-and-check a mid-stream predict: either a prediction or the
+/// well-formed "not enough observations" error (model not active yet).
+fn soft_predict(c: &mut Client, model: u64, x0: f64, x1: f64) {
+    let r = c
+        .call(&format!(
+            r#"{{"op":"predict","model":{model},"xs":[[{x0},{x1}]],"beta":2.0,"grad":false}}"#
+        ))
+        .unwrap();
+    match r.get("ok").unwrap().as_bool() {
+        Some(true) => {
+            let mu = r.get("mu").unwrap().as_f64_vec().unwrap();
+            assert!(mu[0].is_finite(), "{r}");
+        }
+        Some(false) => {
+            let e = r.get("error").unwrap().as_str().unwrap().to_string();
+            assert!(e.contains("not enough observations"), "{r}");
+        }
+        None => panic!("malformed reply {r}"),
+    }
+}
+
+/// The ISSUE 5 acceptance test: ≥ 8 models, ≥ 4 concurrent clients,
+/// posteriors bit-identical to a single-threaded replay per model.
+#[test]
+fn multi_model_stress_deterministic() {
+    // --- Concurrent run: 4 clients, each owning two models' ingest, with
+    // mid-stream predicts against everyone else's models. ---
+    let (addr, server) = boot(4);
+    let models = {
+        let mut c = Client::connect(addr).unwrap();
+        create_models(&mut c, MODELS)
+    };
+    assert_eq!(models.len(), MODELS);
+    let mut clients = Vec::new();
+    for cl in 0..CLIENTS {
+        let models = models.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            for stage in 0..4 {
+                for &mi in &[cl, cl + CLIENTS] {
+                    ingest_stage(&mut c, models[mi], mi, stage);
+                }
+                // Reads against other models, racing their ingest. These
+                // must not perturb anyone's posterior (pinned below).
+                for k in 0..MODELS {
+                    let target = (cl + stage + k) % MODELS;
+                    soft_predict(&mut c, models[target], 1.0 + 0.3 * k as f64 % 3.0, 2.0);
+                }
+            }
+        }));
+    }
+    for h in clients {
+        h.join().unwrap();
+    }
+    // Quiesced: one client probes every model deterministically.
+    let mut c = Client::connect(addr).unwrap();
+    let concurrent: Vec<_> =
+        (0..MODELS).map(|mi| probe_model(&mut c, models[mi], mi)).collect();
+    let _ = c.call(r#"{"op":"shutdown"}"#);
+    let stats = server.join().unwrap();
+    assert!(stats.workers_joined >= 4);
+
+    // --- Replay run: one client, one pool worker, zero mid-stream reads,
+    // same per-model mutation streams. ---
+    let (addr2, server2) = boot(1);
+    let mut c = Client::connect(addr2).unwrap();
+    let models2 = create_models(&mut c, MODELS);
+    for mi in 0..MODELS {
+        for stage in 0..4 {
+            ingest_stage(&mut c, models2[mi], mi, stage);
+        }
+    }
+    let replay: Vec<_> =
+        (0..MODELS).map(|mi| probe_model(&mut c, models2[mi], mi)).collect();
+    let _ = c.call(r#"{"op":"shutdown"}"#);
+    server2.join().unwrap();
+
+    // --- Bit-identical posteriors and deterministic counters. ---
+    for mi in 0..MODELS {
+        let (bits_a, (n_a, p_a, r_a)) = &concurrent[mi];
+        let (bits_b, (n_b, p_b, r_b)) = &replay[mi];
+        assert_eq!(n_a, n_b, "model {mi} size");
+        assert_eq!(*n_a, FINAL_N, "model {mi} ingested everything");
+        assert_eq!(p_a, p_b, "model {mi} factor patch count");
+        assert_eq!(r_a, r_b, "model {mi} factor resweep count");
+        assert_eq!(bits_a.len(), bits_b.len());
+        for (i, (a, b)) in bits_a.iter().zip(bits_b).enumerate() {
+            assert_eq!(
+                a, b,
+                "model {mi} probe value {i}: {} vs {} — concurrent serving \
+                 diverged from the single-threaded replay",
+                f64::from_bits(*a),
+                f64::from_bits(*b)
+            );
+        }
+    }
+}
+
+/// Shutdown must join every connection reader thread and every pool worker
+/// deterministically — the old per-model engine threads and parked readers
+/// leaked here.
+#[test]
+fn shutdown_joins_all_threads_and_workers() {
+    let (addr, server) = boot(3);
+    let mut c0 = Client::connect(addr).unwrap();
+    let models = create_models(&mut c0, 2);
+    // Two more clients with real traffic, left connected (idle) at
+    // shutdown time — their parked readers must still be joined.
+    let mut others = Vec::new();
+    for seed in 0..2u64 {
+        let mut c = Client::connect(addr).unwrap();
+        let mut rng = Rng::new(77 + seed);
+        let r = c.call(&batch_req(models[seed as usize], &mut rng, 30)).unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        soft_predict(&mut c, models[seed as usize], 1.0, 1.0);
+        others.push(c);
+    }
+    let r = c0.call(r#"{"op":"shutdown"}"#).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    let stats = server.join().unwrap();
+    assert_eq!(stats.workers_joined, 3, "every pool worker joined");
+    assert_eq!(stats.connections_joined, 3, "every reader thread joined");
+    drop(others);
+}
+
+/// All op classes from all clients against all models at once; every reply
+/// must be well-formed. (The CI ThreadSanitizer leg runs this under
+/// `-Zsanitizer=thread` to catch data races in the scheduler.)
+#[test]
+fn interleaved_chaos_all_ops() {
+    let (addr, server) = boot(4);
+    let models = {
+        let mut c = Client::connect(addr).unwrap();
+        create_models(&mut c, MODELS)
+    };
+    let mut clients = Vec::new();
+    for cl in 0..CLIENTS as u64 {
+        let models = models.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            let mut rng = Rng::new(0xC405 + cl);
+            // Activate this client's own two models so every model is live
+            // before the mixed traffic (fit/predict on a cold model answers
+            // a clean error, but the chaos should mostly hit live paths).
+            for &mi in &[cl as usize, cl as usize + CLIENTS] {
+                let r = c.call(&batch_req(models[mi], &mut rng, 30)).unwrap();
+                assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+            }
+            for round in 0..12 {
+                let model = models[(rng.uniform_in(0.0, MODELS as f64)) as usize % MODELS];
+                match round % 5 {
+                    0 => {
+                        let r = c.call(&batch_req(model, &mut rng, 12)).unwrap();
+                        assert!(r.get("ok").unwrap().as_bool().is_some(), "{r}");
+                    }
+                    1 => {
+                        let (x, y) = sample_xy(&mut rng);
+                        let r = c.call(&observe_req(model, &x, y)).unwrap();
+                        assert!(r.get("ok").unwrap().as_bool().is_some(), "{r}");
+                    }
+                    2 => soft_predict(&mut c, model, 2.0, 2.0),
+                    3 => {
+                        let r = c
+                            .call(&format!(r#"{{"op":"suggest","model":{model},"beta":2.0}}"#))
+                            .unwrap();
+                        match r.get("ok").unwrap().as_bool() {
+                            Some(true) => {
+                                let x = r.get("x").unwrap().as_f64_vec().unwrap();
+                                assert_eq!(x.len(), 2);
+                                assert!(x.iter().all(|v| (0.0..=4.0).contains(v)), "{r}");
+                            }
+                            Some(false) => {}
+                            None => panic!("malformed {r}"),
+                        }
+                    }
+                    _ => {
+                        let r = c
+                            .call(&format!(r#"{{"op":"stats","model":{model}}}"#))
+                            .unwrap();
+                        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+                        assert!(r.get("pool_workers").unwrap().as_usize().unwrap() >= 1);
+                    }
+                }
+            }
+            // One small hyperparameter fit rides the mutation queue.
+            let model = models[cl as usize % MODELS];
+            let r = c
+                .call(&format!(r#"{{"op":"fit","model":{model},"steps":1}}"#))
+                .unwrap();
+            assert!(r.get("ok").unwrap().as_bool().is_some(), "{r}");
+        }));
+    }
+    for h in clients {
+        h.join().unwrap();
+    }
+    let mut c = Client::connect(addr).unwrap();
+    for (mi, &m) in models.iter().enumerate() {
+        let r = c.call(&format!(r#"{{"op":"stats","model":{m}}}"#)).unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "model {mi}: {r}");
+        let _ = Json::parse(&r.to_string()).unwrap();
+    }
+    let _ = c.call(r#"{"op":"shutdown"}"#);
+    server.join().unwrap();
+}

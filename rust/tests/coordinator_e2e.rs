@@ -80,10 +80,14 @@ fn full_protocol_roundtrip() {
     assert_eq!(x.len(), 2);
     assert!(x.iter().all(|&v| (0.0..=4.0).contains(&v)));
 
-    // Stats.
+    // Stats — per-model counters plus the shared-pool observability fields.
     let r = c.call(&format!(r#"{{"op":"stats","model":{model}}}"#)).unwrap();
     assert_eq!(r.get("n").unwrap().as_usize(), Some(62));
     assert_eq!(r.get("d").unwrap().as_usize(), Some(2));
+    assert!(r.get("pool_workers").unwrap().as_usize().unwrap() >= 1, "{r}");
+    assert!(r.get("pool_queue_depth").unwrap().as_f64().is_some(), "{r}");
+    assert!(r.get("pool_busy").unwrap().as_f64().is_some(), "{r}");
+    assert!(r.get("pool_steals").unwrap().as_f64().is_some(), "{r}");
 
     // Errors surface cleanly.
     let r = c.call(r#"{"op":"predict","model":999,"xs":[[1,1]]}"#).unwrap();
@@ -97,7 +101,7 @@ fn full_protocol_roundtrip() {
 }
 
 #[test]
-fn concurrent_clients_batch_through_one_engine() {
+fn concurrent_clients_share_the_worker_pool() {
     let (addr, _handle) = boot(false);
     let mut c = Client::connect(addr).unwrap();
     let r = c.call(r#"{"op":"create_model","d":2,"nu2":1,"omega":1.0,"sigma2":1.0}"#).unwrap();

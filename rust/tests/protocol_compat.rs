@@ -1,0 +1,196 @@
+//! Wire-format compatibility pins for the coordinator protocol (ISSUE 5).
+//!
+//! Every `Request` variant is parsed from a golden JSON line and every
+//! `Response` variant is serialized and compared against a golden JSON
+//! object (key-set *and* values, order-insensitive via the canonical
+//! `Json::Obj` B-tree), so scheduler refactors cannot silently change what
+//! clients see on the wire. When a field is added deliberately (like the
+//! `pool_*` stats fields in the shared worker-pool rewrite), the golden
+//! here must be updated in the same PR — that is the point.
+
+use addgp::coordinator::protocol::{Request, Response};
+use addgp::util::Json;
+
+/// Serialize `resp` (with optional id echo) and require exact equality with
+/// the golden object — same keys, same values, nothing extra or missing.
+fn pin_response(resp: Response, id: Option<f64>, golden: &str) {
+    let got = resp.to_json(id);
+    let want = Json::parse(golden).expect("golden parses");
+    assert_eq!(got, want, "wire drift:\n got: {got}\nwant: {want}");
+    // And the serialized text round-trips through the parser unchanged.
+    let round = Json::parse(&got.to_string()).unwrap();
+    assert_eq!(round, want);
+}
+
+#[test]
+fn request_create_model() {
+    let (r, id) =
+        Request::parse(r#"{"op":"create_model","d":3,"nu2":3,"omega":0.5,"sigma2":2.0,"id":7}"#)
+            .unwrap();
+    assert_eq!(id, Some(7.0));
+    assert_eq!(r, Request::CreateModel { d: 3, nu2: 3, omega: 0.5, sigma2: 2.0 });
+    // Defaults: nu2=1, omega=1, sigma2=1, no id.
+    let (r, id) = Request::parse(r#"{"op":"create_model","d":5}"#).unwrap();
+    assert_eq!(id, None);
+    assert_eq!(r, Request::CreateModel { d: 5, nu2: 1, omega: 1.0, sigma2: 1.0 });
+}
+
+#[test]
+fn request_observe_and_batch() {
+    let (r, _) =
+        Request::parse(r#"{"op":"observe","model":2,"x":[0.5,-1.25],"y":3.5}"#).unwrap();
+    assert_eq!(r, Request::Observe { model: 2, x: vec![0.5, -1.25], y: 3.5 });
+    let (r, _) = Request::parse(
+        r#"{"op":"observe_batch","model":9,"xs":[[1,2],[3,4]],"ys":[0.5,-0.5]}"#,
+    )
+    .unwrap();
+    assert_eq!(
+        r,
+        Request::ObserveBatch {
+            model: 9,
+            xs: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+            ys: vec![0.5, -0.5],
+        }
+    );
+}
+
+#[test]
+fn request_fit_predict_suggest_stats_shutdown() {
+    let (r, _) = Request::parse(r#"{"op":"fit","model":4,"steps":25}"#).unwrap();
+    assert_eq!(r, Request::Fit { model: 4, steps: 25 });
+    let (r, _) = Request::parse(r#"{"op":"fit","model":4}"#).unwrap();
+    assert_eq!(r, Request::Fit { model: 4, steps: 10 }, "default steps");
+
+    let (r, _) = Request::parse(
+        r#"{"op":"predict","model":3,"xs":[[1,2]],"beta":1.5,"grad":true}"#,
+    )
+    .unwrap();
+    assert_eq!(
+        r,
+        Request::Predict { model: 3, xs: vec![vec![1.0, 2.0]], beta: 1.5, grad: true }
+    );
+    let (r, _) = Request::parse(r#"{"op":"predict","model":3,"xs":[[1,2]]}"#).unwrap();
+    assert_eq!(
+        r,
+        Request::Predict { model: 3, xs: vec![vec![1.0, 2.0]], beta: 2.0, grad: false },
+        "default beta/grad"
+    );
+
+    let (r, _) = Request::parse(r#"{"op":"suggest","model":6,"beta":0.5}"#).unwrap();
+    assert_eq!(r, Request::Suggest { model: 6, beta: 0.5 });
+    let (r, _) = Request::parse(r#"{"op":"suggest","model":6}"#).unwrap();
+    assert_eq!(r, Request::Suggest { model: 6, beta: 2.0 }, "default beta");
+
+    let (r, _) = Request::parse(r#"{"op":"stats","model":1}"#).unwrap();
+    assert_eq!(r, Request::Stats { model: 1 });
+    let (r, _) = Request::parse(r#"{"op":"shutdown"}"#).unwrap();
+    assert_eq!(r, Request::Shutdown);
+}
+
+#[test]
+fn request_errors_are_stable() {
+    assert!(Request::parse("garbage").is_err());
+    assert!(Request::parse(r#"{"d":2}"#).is_err(), "missing op");
+    assert!(Request::parse(r#"{"op":"nope"}"#).is_err(), "unknown op");
+    assert!(Request::parse(r#"{"op":"observe","x":[1],"y":2}"#).is_err(), "missing model");
+    assert!(Request::parse(r#"{"op":"observe","model":1,"y":2}"#).is_err(), "missing x");
+    assert!(Request::parse(r#"{"op":"observe","model":1,"x":[1]}"#).is_err(), "missing y");
+    assert!(
+        Request::parse(r#"{"op":"observe_batch","model":1,"xs":[3],"ys":[1]}"#).is_err(),
+        "bad row"
+    );
+    assert!(Request::parse(r#"{"op":"create_model"}"#).is_err(), "missing d");
+}
+
+#[test]
+fn response_ok_error_created() {
+    pin_response(Response::Ok, None, r#"{"ok":true}"#);
+    pin_response(Response::Ok, Some(3.0), r#"{"id":3,"ok":true}"#);
+    pin_response(
+        Response::Error("boom \"quoted\"".into()),
+        Some(1.0),
+        r#"{"id":1,"ok":false,"error":"boom \"quoted\""}"#,
+    );
+    pin_response(Response::ModelCreated { model: 12 }, None, r#"{"ok":true,"model":12}"#);
+}
+
+#[test]
+fn response_observed_variants() {
+    pin_response(
+        Response::Observed { n: 41, factor_patched: 4, factor_resweep: 0 },
+        Some(9.0),
+        r#"{"id":9,"ok":true,"n":41,"factor_patched":4,"factor_resweep":0}"#,
+    );
+    pin_response(
+        Response::BatchObserved {
+            n: 128,
+            path: "incremental",
+            factor_patched: 12,
+            factor_resweep: 1,
+        },
+        None,
+        r#"{"ok":true,"n":128,"path":"incremental","factor_patched":12,"factor_resweep":1}"#,
+    );
+}
+
+#[test]
+fn response_prediction_and_suggestion() {
+    pin_response(
+        Response::Prediction {
+            mu: vec![1.0, -2.5],
+            svar: vec![0.5, 0.25],
+            acq: vec![0.2, 0.1],
+            gacq: vec![vec![0.1, -0.2], vec![0.3, 0.4]],
+            path: "pjrt",
+        },
+        Some(4.0),
+        r#"{"id":4,"ok":true,"mu":[1,-2.5],"svar":[0.5,0.25],"acq":[0.2,0.1],
+            "gacq":[[0.1,-0.2],[0.3,0.4]],"path":"pjrt"}"#,
+    );
+    pin_response(
+        Response::Prediction {
+            mu: vec![1.0],
+            svar: vec![0.5],
+            acq: vec![0.2],
+            gacq: Vec::new(),
+            path: "native",
+        },
+        None,
+        r#"{"ok":true,"mu":[1],"svar":[0.5],"acq":[0.2],"gacq":[],"path":"native"}"#,
+    );
+    pin_response(
+        Response::Suggestion { x: vec![0.25, 3.75] },
+        None,
+        r#"{"ok":true,"x":[0.25,3.75]}"#,
+    );
+}
+
+/// The full stats surface, including the shared worker-pool fields added by
+/// the scheduler rewrite (`pool_workers`/`pool_busy`/`pool_queue_depth`/
+/// `pool_steals`). Removing or renaming any of these is a breaking wire
+/// change and must fail here.
+#[test]
+fn response_stats_with_pool_fields() {
+    pin_response(
+        Response::Stats {
+            n: 1000,
+            d: 4,
+            omegas: vec![1.0, 0.5, 2.0, 1.5],
+            cache_hits: 10,
+            cache_misses: 3,
+            pjrt_batches: 7,
+            native_queries: 21,
+            factor_patches: 90,
+            factor_resweeps: 2,
+            pool_workers: 8,
+            pool_busy: 3,
+            pool_queue_depth: 5,
+            pool_steals: 17,
+        },
+        Some(2.0),
+        r#"{"id":2,"ok":true,"n":1000,"d":4,"omegas":[1,0.5,2,1.5],
+            "cache_hits":10,"cache_misses":3,"pjrt_batches":7,"native_queries":21,
+            "factor_patches":90,"factor_resweeps":2,
+            "pool_workers":8,"pool_busy":3,"pool_queue_depth":5,"pool_steals":17}"#,
+    );
+}
