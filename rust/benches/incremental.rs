@@ -459,6 +459,15 @@ fn crossover_sweep(d: usize) {
 }
 
 fn main() {
+    // Perf numbers with per-mutation audits enabled are meaningless; the CI
+    // bench-smoke job relies on this to prove release binaries carry no
+    // audit overhead. (Runtime cfg! is fine here — benches are exempt from
+    // the xtask feature-gate lint, which bans it only in rust/src.)
+    assert!(
+        !cfg!(feature = "strict-invariants"),
+        "benches must run without strict-invariants: per-mutation audits \
+         would dominate every measurement"
+    );
     let args: Vec<String> = std::env::args().skip(1).collect();
     let has = |f: &str| args.iter().any(|a| a == f);
     let json_path: Option<String> =

@@ -1,0 +1,134 @@
+//! Structural invariant audits (DESIGN.md §Invariants).
+//!
+//! Every guarantee the crate ships — window-local KP patches, prefix-reuse
+//! LU updates, batch == sequential bit-identity, non-perturbing snapshots —
+//! rests on a handful of *structural invariants* (strictly-increasing
+//! points, bijective permutations, band-storage/shape agreement, queue
+//! accounting, …). The end-to-end equivalence tests catch a broken
+//! invariant long after the mutation that introduced it; the [`Audit`]
+//! trait localizes it to the mutating call.
+//!
+//! Each stateful structure implements [`Audit`] and reports the first
+//! violated invariant as a structured [`AuditError`] naming the structure,
+//! the field, and (when localized) the offending index. Mutating operations
+//! call [`enforce`] on their way out; under the `strict-invariants` cargo
+//! feature that runs the full audit and panics with the violation report,
+//! while without the feature it compiles to nothing — release hot paths are
+//! untouched (the bench smoke gate asserts the feature is off).
+//!
+//! On-demand audits are also reachable over the wire: the coordinator's
+//! `audit` op walks a model's whole structure tree and reports the outcome
+//! through the normal response/metrics path.
+
+use std::fmt;
+
+/// A structured invariant-violation report: which structure broke, which
+/// field/invariant inside it, and where.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AuditError {
+    /// Type name of the violating structure (e.g. `"Banded"`, `"BandedLU"`).
+    pub structure: &'static str,
+    /// The field or named invariant that failed (e.g. `"piv"`, `"xs"`).
+    pub field: &'static str,
+    /// Offending index, when the violation is localized to one entry.
+    pub index: Option<usize>,
+    /// Human-readable detail (the values involved).
+    pub detail: String,
+}
+
+impl AuditError {
+    pub fn new(
+        structure: &'static str,
+        field: &'static str,
+        index: Option<usize>,
+        detail: impl Into<String>,
+    ) -> Self {
+        AuditError { structure, field, index, detail: detail.into() }
+    }
+}
+
+impl fmt::Display for AuditError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}.{}", self.structure, self.field)?;
+        if let Some(i) = self.index {
+            write!(f, "[{i}]")?;
+        }
+        write!(f, ": {}", self.detail)
+    }
+}
+
+impl std::error::Error for AuditError {}
+
+/// A stateful structure whose well-formedness can be checked in full.
+///
+/// `audit` walks every invariant the structure promises (including its
+/// children's, so a [`crate::gp::fit_state::FitState`] audit covers the
+/// banded factors underneath it) and returns the *first* violation found —
+/// structure, field, index — rather than a bare panic deep in a solve.
+pub trait Audit {
+    fn audit(&self) -> Result<(), AuditError>;
+}
+
+/// Post-mutation audit hook. With the `strict-invariants` feature the full
+/// audit runs and a violation panics with `context` (the mutating call) in
+/// the message; without it this is an empty `#[inline(always)]` stub that
+/// the optimizer erases — zero release overhead by construction.
+#[cfg(feature = "strict-invariants")]
+pub fn enforce<T: Audit + ?Sized>(value: &T, context: &str) {
+    if let Err(e) = value.audit() {
+        panic!("strict-invariants: violation after {context}: {e}");
+    }
+}
+
+/// No-feature variant of [`enforce`]: does nothing, inlines to nothing.
+#[cfg(not(feature = "strict-invariants"))]
+#[inline(always)]
+pub fn enforce<T: Audit + ?Sized>(_value: &T, _context: &str) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct AlwaysOk;
+    impl Audit for AlwaysOk {
+        fn audit(&self) -> Result<(), AuditError> {
+            Ok(())
+        }
+    }
+
+    struct AlwaysBad;
+    impl Audit for AlwaysBad {
+        fn audit(&self) -> Result<(), AuditError> {
+            Err(AuditError::new("AlwaysBad", "flag", Some(3), "forced"))
+        }
+    }
+
+    #[test]
+    fn display_names_structure_field_index() {
+        let e = AuditError::new("Banded", "data", Some(7), "non-finite entry");
+        assert_eq!(e.to_string(), "Banded.data[7]: non-finite entry");
+        let e = AuditError::new("FitState", "dims", None, "empty");
+        assert_eq!(e.to_string(), "FitState.dims: empty");
+    }
+
+    #[test]
+    fn enforce_passes_ok_values() {
+        enforce(&AlwaysOk, "test");
+    }
+
+    #[cfg(feature = "strict-invariants")]
+    #[test]
+    fn enforce_panics_on_violation_with_context() {
+        let err = std::panic::catch_unwind(|| enforce(&AlwaysBad, "tests::mutate"))
+            .expect_err("must panic under strict-invariants");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("tests::mutate"), "context missing: {msg}");
+        assert!(msg.contains("AlwaysBad.flag[3]"), "violation missing: {msg}");
+    }
+
+    #[cfg(not(feature = "strict-invariants"))]
+    #[test]
+    fn enforce_is_a_no_op_without_the_feature() {
+        enforce(&AlwaysBad, "tests::mutate"); // must not panic
+    }
+}

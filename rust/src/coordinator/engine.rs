@@ -58,6 +58,9 @@ pub enum Command {
     Predict { xs: Vec<Vec<f64>>, beta: f64, grad: bool, reply: Sender<Response> },
     Suggest { beta: f64, reply: Sender<Response> },
     Stats { reply: Sender<Response> },
+    /// On-demand structural invariant audit (a *read*: briefly locks the
+    /// engine, walks every structure, never mutates).
+    Audit { reply: Sender<Response> },
 }
 
 impl Command {
@@ -70,7 +73,8 @@ impl Command {
             | Command::Fit { reply, .. }
             | Command::Predict { reply, .. }
             | Command::Suggest { reply, .. }
-            | Command::Stats { reply } => reply,
+            | Command::Stats { reply }
+            | Command::Audit { reply } => reply,
         };
         let _ = reply.send(Response::Error(msg));
     }
@@ -164,6 +168,22 @@ impl ModelEngine {
     /// Build the concurrent-read snapshot, or an error before activation.
     pub fn read_snapshot(&mut self) -> Result<PosteriorSnapshot, String> {
         self.gp.read_snapshot().ok_or_else(|| "not enough observations".to_string())
+    }
+
+    /// Walk every stateful structure's invariants
+    /// ([`AdditiveGP::run_audit`]) and report the first violation, if any,
+    /// as `Structure.field[index]: detail`. Valid at any model age —
+    /// before activation only the façade structures are walked.
+    pub fn audit(&self) -> Response {
+        let (structures, result) = self.gp.run_audit();
+        match result {
+            Ok(()) => Response::AuditReport { passed: true, structures, violation: String::new() },
+            Err(e) => Response::AuditReport {
+                passed: false,
+                structures,
+                violation: e.to_string(),
+            },
+        }
     }
 
     /// Serve a set of predict requests sharing one `(β, grad)`, through the

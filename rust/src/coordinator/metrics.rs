@@ -9,6 +9,8 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::coordinator::lock_clean;
+
 /// Log₂-bucketed latency histogram over microseconds: bucket `i` holds
 /// latencies in `[2^i, 2^{i+1})` µs, 0..=31.
 #[derive(Default)]
@@ -175,7 +177,7 @@ impl ServerMetrics {
     /// The per-model histogram set for `id`, created on first touch. The
     /// returned handle is lock-free to record into.
     pub fn model(&self, id: u64) -> Arc<ModelMetrics> {
-        let mut map = self.per_model.lock().unwrap();
+        let mut map = lock_clean(&self.per_model);
         Arc::clone(map.entry(id).or_default())
     }
 
@@ -199,7 +201,9 @@ impl ServerMetrics {
             self.ingest_latency.report()
         );
         let models = {
-            let map = self.per_model.lock().unwrap();
+            let map = lock_clean(&self.per_model);
+            // Sorted by model id right below, so the nondeterministic
+            // HashMap walk never reaches the report. lint: hashmap-order-ok
             let mut v: Vec<(u64, Arc<ModelMetrics>)> =
                 map.iter().map(|(k, m)| (*k, Arc::clone(m))).collect();
             v.sort_by_key(|(k, _)| *k);

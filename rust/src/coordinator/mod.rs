@@ -29,3 +29,16 @@ pub use engine::{Command, EngineConfig, ModelEngine};
 pub use protocol::{Request, Response};
 pub use scheduler::Scheduler;
 pub use server::{Server, ShutdownStats};
+
+/// Lock a mutex, recovering the guard from a poisoned lock. The serving
+/// layer's shared maps and queues stay structurally valid across a payload
+/// panic (each command body is wrapped in `catch_unwind`, and panicked
+/// models are quarantined via their `dead` flag), so the right response to
+/// poison here is to keep serving — not to propagate the panic with
+/// `unwrap()`, which `cargo xtask lint` bans in `coordinator/`.
+pub(crate) fn lock_clean<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}

@@ -43,6 +43,14 @@ pub enum Request {
     Stats {
         model: u64,
     },
+    /// Run the structural invariant audit (`AdditiveGP::run_audit`) on
+    /// demand — every stateful structure in the model walks its own
+    /// invariants and the first violation is reported with its
+    /// structure/field/index coordinates. Served on the concurrent read
+    /// path; works with or without the `strict-invariants` build feature.
+    Audit {
+        model: u64,
+    },
     Shutdown,
 }
 
@@ -98,6 +106,7 @@ impl Request {
                 beta: v.get("beta").and_then(|x| x.as_f64()).unwrap_or(2.0),
             },
             "stats" => Request::Stats { model: model()? },
+            "audit" => Request::Audit { model: model()? },
             "shutdown" => Request::Shutdown,
             other => return Err(format!("unknown op '{other}'")),
         };
@@ -145,6 +154,15 @@ pub enum Response {
     Suggestion {
         x: Vec<f64>,
     },
+    /// Result of an on-demand `audit` request: whether every structural
+    /// invariant held, how many structures were walked, and (on failure)
+    /// the violation rendered as `Structure.field[index]: detail` — empty
+    /// string when the audit passed.
+    AuditReport {
+        passed: bool,
+        structures: u64,
+        violation: String,
+    },
     Stats {
         n: usize,
         d: usize,
@@ -157,6 +175,13 @@ pub enum Response {
         factor_patches: u64,
         /// Cumulative full LU re-sweeps.
         factor_resweeps: u64,
+        /// How many times the `M̃` cache was wholesale-cleared because an
+        /// insert exceeded its remap limits (formerly a *silent* truncation
+        /// path; refit-driven clears are not counted).
+        cache_truncations: u64,
+        /// Batched inserts that fell back to a sequential replay + full
+        /// rebuild in some dimension (the other formerly-silent path).
+        fallback_rebuilds: u64,
         /// Shared worker-pool observability (the pool serves *all* models;
         /// these fields are pool-wide, identical in every model's reply):
         /// fixed worker count, workers currently running a job (occupancy),
@@ -214,6 +239,12 @@ impl Response {
                 pairs.push(("ok", Json::Bool(true)));
                 pairs.push(("x", Json::arr_f64(x)));
             }
+            Response::AuditReport { passed, structures, violation } => {
+                pairs.push(("ok", Json::Bool(true)));
+                pairs.push(("passed", Json::Bool(*passed)));
+                pairs.push(("structures", Json::Num(*structures as f64)));
+                pairs.push(("violation", Json::Str(violation.clone())));
+            }
             Response::Stats {
                 n,
                 d,
@@ -224,6 +255,8 @@ impl Response {
                 native_queries,
                 factor_patches,
                 factor_resweeps,
+                cache_truncations,
+                fallback_rebuilds,
                 pool_workers,
                 pool_busy,
                 pool_queue_depth,
@@ -239,6 +272,8 @@ impl Response {
                 pairs.push(("native_queries", Json::Num(*native_queries as f64)));
                 pairs.push(("factor_patches", Json::Num(*factor_patches as f64)));
                 pairs.push(("factor_resweeps", Json::Num(*factor_resweeps as f64)));
+                pairs.push(("cache_truncations", Json::Num(*cache_truncations as f64)));
+                pairs.push(("fallback_rebuilds", Json::Num(*fallback_rebuilds as f64)));
                 pairs.push(("pool_workers", Json::Num(*pool_workers as f64)));
                 pairs.push(("pool_busy", Json::Num(*pool_busy as f64)));
                 pairs.push(("pool_queue_depth", Json::Num(*pool_queue_depth as f64)));
@@ -309,6 +344,29 @@ mod tests {
         assert_eq!(v.get("n").unwrap().as_usize(), Some(40));
         assert_eq!(v.get("factor_patched").unwrap().as_usize(), Some(4));
         assert_eq!(v.get("factor_resweep").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn audit_parses_and_report_serializes() {
+        let (r, id) = Request::parse(r#"{"op":"audit","model":7,"id":11}"#).unwrap();
+        assert_eq!(id, Some(11.0));
+        assert_eq!(r, Request::Audit { model: 7 });
+        assert!(Request::parse(r#"{"op":"audit"}"#).is_err(), "model is required");
+
+        let j = Response::AuditReport {
+            passed: false,
+            structures: 25,
+            violation: "Banded.data[3]: non-finite entry".to_string(),
+        }
+        .to_json(Some(11.0));
+        let v = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("passed").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("structures").unwrap().as_usize(), Some(25));
+        assert_eq!(
+            v.get("violation").unwrap().as_str(),
+            Some("Banded.data[3]: non-finite entry")
+        );
     }
 
     #[test]

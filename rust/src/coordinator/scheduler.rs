@@ -38,6 +38,7 @@ use crate::bo::acquisition::Acquisition;
 use crate::bo::run::BoEngine;
 use crate::bo::search::{search_next, SearchCfg};
 use crate::coordinator::engine::{Command, EngineConfig, ModelEngine};
+use crate::coordinator::lock_clean;
 use crate::coordinator::protocol::Response;
 use crate::gp::fit_state::PosteriorSnapshot;
 use crate::gp::posterior::MTildeCache;
@@ -178,24 +179,21 @@ impl Scheduler {
             read_hits: AtomicU64::new(0),
             read_misses: AtomicU64::new(0),
         });
-        self.inner.models.lock().unwrap().insert(id, cell);
+        lock_clean(&self.inner.models).insert(id, cell);
         id
     }
 
     pub fn has_model(&self, model: u64) -> bool {
-        self.inner.models.lock().unwrap().contains_key(&model)
+        lock_clean(&self.inner.models).contains_key(&model)
     }
 
     pub fn model_count(&self) -> usize {
-        self.inner.models.lock().unwrap().len()
+        lock_clean(&self.inner.models).len()
     }
 
     /// Whether a model's predicts ride the PJRT pinned path.
     pub fn model_has_pjrt(&self, model: u64) -> bool {
-        self.inner
-            .models
-            .lock()
-            .unwrap()
+        lock_clean(&self.inner.models)
             .get(&model)
             .map(|c| c.exe_worker.is_some())
             .unwrap_or(false)
@@ -205,7 +203,7 @@ impl Scheduler {
     /// exactly one [`Response`], possibly from a pool worker.
     pub fn dispatch(&self, model: u64, cmd: Command) {
         let cell = {
-            let models = self.inner.models.lock().unwrap();
+            let models = lock_clean(&self.inner.models);
             models.get(&model).cloned()
         };
         let Some(cell) = cell else {
@@ -220,16 +218,14 @@ impl Scheduler {
             cmd,
             Command::Observe { .. } | Command::ObserveBatch { .. } | Command::Fit { .. }
         ) {
-            cell.mut_queue.lock().unwrap().push_back(cmd);
+            lock_clean(&cell.mut_queue).push_back(cmd);
             self.schedule_mutations(cell);
             return;
         }
         match cmd {
             Command::Predict { xs, beta, grad, reply } => {
                 if cell.exe_worker.is_some() {
-                    cell.predict_queue
-                        .lock()
-                        .unwrap()
+                    lock_clean(&cell.predict_queue)
                         .push_back(PredictReq { xs, beta, grad, reply });
                     self.schedule_predicts(cell);
                 } else {
@@ -252,6 +248,11 @@ impl Scheduler {
                 let job: Job = Box::new(move |_| serve_stats(&c, &inner.pool, reply));
                 let _ = self.inner.pool.spawn(job);
             }
+            Command::Audit { reply } => {
+                let c = Arc::clone(&cell);
+                let job: Job = Box::new(move |_| serve_audit(&c, reply));
+                let _ = self.inner.pool.spawn(job);
+            }
             _ => unreachable!("mutating commands are routed to the queue above"),
         }
     }
@@ -272,7 +273,13 @@ impl Scheduler {
         if cell.predict_active.swap(true, Ordering::SeqCst) {
             return;
         }
-        let worker = cell.exe_worker.expect("pjrt predict path requires an exe worker");
+        // Only the PJRT path schedules pinned drains, so `exe_worker` is
+        // always set here; fail the queue instead of panicking if not.
+        let Some(worker) = cell.exe_worker else {
+            cell.predict_active.store(false, Ordering::SeqCst);
+            fail_pending(&cell, "pjrt predict path lost its worker");
+            return;
+        };
         let c = Arc::clone(&cell);
         let job: Job = Box::new(move |_| drain_predicts(&c));
         if !self.inner.pool.spawn_pinned(worker, job) {
@@ -315,11 +322,11 @@ fn build_worker_exe(id: u64, cfg: &EngineConfig) -> bool {
 
 /// Answer every queued command with an error (shutdown / dead engine).
 fn fail_pending(cell: &ModelCell, msg: &str) {
-    let cmds: Vec<Command> = cell.mut_queue.lock().unwrap().drain(..).collect();
+    let cmds: Vec<Command> = lock_clean(&cell.mut_queue).drain(..).collect();
     for c in cmds {
         c.fail(msg.to_string());
     }
-    let preds: Vec<PredictReq> = cell.predict_queue.lock().unwrap().drain(..).collect();
+    let preds: Vec<PredictReq> = lock_clean(&cell.predict_queue).drain(..).collect();
     for p in preds {
         let _ = p.reply.send(Response::Error(msg.to_string()));
     }
@@ -331,10 +338,10 @@ fn fail_pending(cell: &ModelCell, msg: &str) {
 /// submitters.
 fn drain_mutations(cell: &ModelCell) {
     loop {
-        let next = cell.mut_queue.lock().unwrap().pop_front();
+        let next = lock_clean(&cell.mut_queue).pop_front();
         let Some(cmd) = next else {
             cell.mut_active.store(false, Ordering::SeqCst);
-            let again = !cell.mut_queue.lock().unwrap().is_empty();
+            let again = !lock_clean(&cell.mut_queue).is_empty();
             if again && !cell.mut_active.swap(true, Ordering::SeqCst) {
                 continue; // new work arrived during deschedule; reclaim
             }
@@ -399,10 +406,10 @@ fn drain_mutations(cell: &ModelCell) {
 fn drain_predicts(cell: &ModelCell) {
     loop {
         let batch: VecDeque<PredictReq> =
-            std::mem::take(&mut *cell.predict_queue.lock().unwrap());
+            std::mem::take(&mut *lock_clean(&cell.predict_queue));
         if batch.is_empty() {
             cell.predict_active.store(false, Ordering::SeqCst);
-            let again = !cell.predict_queue.lock().unwrap().is_empty();
+            let again = !lock_clean(&cell.predict_queue).is_empty();
             if again && !cell.predict_active.swap(true, Ordering::SeqCst) {
                 continue;
             }
@@ -439,12 +446,11 @@ fn drain_predicts(cell: &ModelCell) {
                     let (beta, grad) = (first.beta, first.grad);
                     let mut group = vec![(first.xs, first.reply)];
                     while let Some(nx) = it.peek() {
-                        if nx.beta == beta && nx.grad == grad {
-                            let nx = it.next().unwrap();
-                            group.push((nx.xs, nx.reply));
-                        } else {
+                        if nx.beta != beta || nx.grad != grad {
                             break;
                         }
+                        let Some(nx) = it.next() else { break };
+                        group.push((nx.xs, nx.reply));
                     }
                     eng.serve_predicts(exe, group, beta, grad);
                 }
@@ -461,7 +467,7 @@ fn drain_predicts(cell: &ModelCell) {
 /// Fetch (building lazily, once per generation) the model's read snapshot.
 fn read_snapshot(cell: &ModelCell) -> Result<Arc<TaggedSnapshot>, String> {
     let gen = cell.gen.load(Ordering::SeqCst);
-    if let Some(s) = cell.snapshot.lock().unwrap().as_ref() {
+    if let Some(s) = lock_clean(&cell.snapshot).as_ref() {
         if s.gen == gen {
             return Ok(Arc::clone(s));
         }
@@ -477,7 +483,7 @@ fn read_snapshot(cell: &ModelCell) -> Result<Arc<TaggedSnapshot>, String> {
     // so this value is stable for the duration of the build. Another reader
     // may have built the snapshot while this one waited for the lock.
     let gen = cell.gen.load(Ordering::SeqCst);
-    if let Some(s) = cell.snapshot.lock().unwrap().as_ref() {
+    if let Some(s) = lock_clean(&cell.snapshot).as_ref() {
         if s.gen == gen {
             return Ok(Arc::clone(s));
         }
@@ -488,7 +494,7 @@ fn read_snapshot(cell: &ModelCell) -> Result<Arc<TaggedSnapshot>, String> {
         // Store while still holding the engine lock (gen cannot advance),
         // so a freshly-built snapshot can never clobber a newer one. Lock
         // order engine → snapshot matches `serve_stats`.
-        let mut slot = cell.snapshot.lock().unwrap();
+        let mut slot = lock_clean(&cell.snapshot);
         if let Some(old) = slot.take() {
             // Fold the retired snapshot's cache stats into the cell totals
             // (readers still holding the old Arc keep working; their later
@@ -622,8 +628,10 @@ fn serve_stats(cell: &ModelCell, pool: &WorkerPool, reply: Sender<Response>) {
     let gp = eng.gp();
     let (hits, misses, _) = gp.cache_stats();
     let (patches, resweeps) = gp.factor_stats();
+    let (_, fallbacks, _) = gp.incremental_stats();
+    let truncations = gp.cache_truncations();
     let (snap_h, snap_m) = {
-        let slot = cell.snapshot.lock().unwrap();
+        let slot = lock_clean(&cell.snapshot);
         slot.as_ref().map(|s| s.snap.cache_stats()).unwrap_or((0, 0))
     };
     let ps = pool.stats();
@@ -641,11 +649,31 @@ fn serve_stats(cell: &ModelCell, pool: &WorkerPool, reply: Sender<Response>) {
         native_queries: eng.native_queries + cell.native_reads.load(Ordering::Relaxed),
         factor_patches: patches,
         factor_resweeps: resweeps,
+        cache_truncations: truncations,
+        fallback_rebuilds: fallbacks,
         pool_workers: ps.workers as u64,
         pool_busy: ps.running,
         pool_queue_depth: ps.queued,
         pool_steals: ps.steals,
     };
+    drop(eng);
+    let _ = reply.send(resp);
+}
+
+/// On-demand invariant audit: a *read* job that briefly takes the engine
+/// lock (a consistent view across all structures) and walks
+/// [`crate::gp::model::AdditiveGP::run_audit`]. Never mutates; never bumps
+/// the generation.
+fn serve_audit(cell: &ModelCell, reply: Sender<Response>) {
+    let eng = match cell.engine.lock() {
+        Ok(g) => g,
+        Err(_) => {
+            cell.dead.store(true, Ordering::SeqCst);
+            let _ = reply.send(Response::Error("engine stopped".into()));
+            return;
+        }
+    };
+    let resp = eng.audit();
     drop(eng);
     let _ = reply.send(resp);
 }
@@ -732,6 +760,37 @@ mod tests {
         }
         assert_eq!(sched.shutdown(), 3);
         assert_eq!(sched.shutdown(), 0);
+    }
+
+    /// The `audit` command rides the read path and reports the documented
+    /// deterministic structure counts at every model age.
+    #[test]
+    fn audit_command_reports_structures() {
+        let sched = Scheduler::new(2);
+        let m = sched.create_model(cfg(2));
+        match call(&sched, m, |reply| Command::Audit { reply }) {
+            Response::AuditReport { passed, structures, violation } => {
+                assert!(passed, "inactive model must pass: {violation}");
+                assert_eq!(structures, 2, "façade-only audit before activation");
+                assert!(violation.is_empty());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let mut rng = Rng::new(5);
+        let xs: Vec<Vec<f64>> = (0..40)
+            .map(|_| vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)])
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x[0].sin() + x[1].cos()).collect();
+        let r = call(&sched, m, |reply| Command::ObserveBatch { xs, ys, reply });
+        assert!(matches!(r, Response::BatchObserved { .. }), "unexpected {r:?}");
+        match call(&sched, m, |reply| Command::Audit { reply }) {
+            Response::AuditReport { passed, structures, violation } => {
+                assert!(passed, "active model must pass: {violation}");
+                assert!(structures >= 2 + 1 + 2 * 11, "got {structures}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        sched.shutdown();
     }
 
     #[test]

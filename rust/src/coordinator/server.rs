@@ -17,6 +17,7 @@ use std::thread::JoinHandle;
 
 use crate::anyhow;
 use crate::coordinator::engine::{Command, EngineConfig};
+use crate::coordinator::lock_clean;
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::protocol::{Request, Response};
 use crate::coordinator::scheduler::Scheduler;
@@ -54,6 +55,9 @@ struct Shared {
 /// The coordinator server.
 pub struct Server {
     listener: TcpListener,
+    /// Resolved bind address, captured once at bind time (so `local_addr`
+    /// never has to re-interrogate — and unwrap — the socket).
+    addr: std::net::SocketAddr,
     shared: Arc<Shared>,
 }
 
@@ -74,8 +78,10 @@ impl Server {
         workers: usize,
     ) -> Result<Self> {
         let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
         Ok(Server {
             listener,
+            addr,
             shared: Arc::new(Shared {
                 scheduler: Scheduler::new(workers),
                 shutting_down: AtomicBool::new(false),
@@ -89,7 +95,7 @@ impl Server {
     }
 
     pub fn local_addr(&self) -> std::net::SocketAddr {
-        self.listener.local_addr().unwrap()
+        self.addr
     }
 
     /// Serving-metrics report — pool-wide counters/histograms plus one line
@@ -118,7 +124,7 @@ impl Server {
             let Ok(sock) = stream.try_clone() else { continue };
             let shared = Arc::clone(&self.shared);
             let handle = std::thread::spawn(move || handle_conn(stream, shared));
-            let mut conns = self.shared.conns.lock().unwrap();
+            let mut conns = lock_clean(&self.shared.conns);
             // Prune finished readers so connection churn doesn't accumulate
             // cloned fds/handles for the server's whole lifetime.
             conns.retain(|(_, h)| !h.is_finished());
@@ -128,7 +134,7 @@ impl Server {
         // blocked in `read_line` see EOF), join the readers, then join the
         // pool — in this order an in-flight dispatch still gets its reply.
         let conns: Vec<(TcpStream, JoinHandle<()>)> =
-            self.shared.conns.lock().unwrap().drain(..).collect();
+            lock_clean(&self.shared.conns).drain(..).collect();
         let mut connections_joined = 0;
         for (sock, _) in &conns {
             let _ = sock.shutdown(Shutdown::Both);
@@ -224,7 +230,8 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
                 | Request::Fit { model, .. }
                 | Request::Predict { model, .. }
                 | Request::Suggest { model, .. }
-                | Request::Stats { model } => *model,
+                | Request::Stats { model }
+                | Request::Audit { model } => *model,
                 _ => unreachable!(),
             };
             routed_model = Some(model);
@@ -240,6 +247,7 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
                 }
                 Request::Suggest { beta, .. } => Command::Suggest { beta, reply: rtx },
                 Request::Stats { .. } => Command::Stats { reply: rtx },
+                Request::Audit { .. } => Command::Audit { reply: rtx },
                 _ => unreachable!(),
             };
             shared.scheduler.dispatch(model, cmd);

@@ -208,6 +208,9 @@ impl<'a> GaussSeidel<'a> {
     fn precond_into(&self, r: &BlockVec, z: &mut BlockVec, s: &mut GsScratch) {
         let dd = self.dims.len();
         let n = self.dims[0].n();
+        debug_assert_eq!(r.len(), dd);
+        debug_assert_eq!(z.len(), dd);
+        debug_assert!(s.acc.len() == n && s.rhs.len() == n && s.t.len() == dd);
         let inv_s2 = 1.0 / self.sigma2_y;
         // Forward: t_d = D_d^{-1}(r_d − σ⁻² Σ_{d'<d} t_{d'}).
         s.acc.fill(0.0);
@@ -258,6 +261,9 @@ impl<'a> GaussSeidel<'a> {
     /// allocation-free form the PCG loop and the stochastic estimators use.
     pub fn apply_into(&self, x: &BlockVec, out: &mut BlockVec, s: &mut GsScratch) {
         let n = self.dims[0].n();
+        debug_assert_eq!(x.len(), self.dims.len());
+        debug_assert_eq!(out.len(), self.dims.len());
+        debug_assert!(s.acc.len() == n && s.sorted.len() == n && s.sorted2.len() == n);
         let inv_s2 = 1.0 / self.sigma2_y;
         s.acc.fill(0.0);
         for b in x {

@@ -4,6 +4,7 @@
 
 use std::time::Instant;
 
+use crate::check::{enforce, Audit, AuditError};
 use crate::kernels::gkp::GkpFactorization;
 use crate::kernels::kp::KpFactorization;
 use crate::kernels::matern::Matern;
@@ -142,6 +143,7 @@ impl DimFactor {
         self.timings.factor_s += t1.elapsed().as_secs_f64();
         self.gkp = None;
         self.c_band = None;
+        enforce(self, "DimFactor::insert_point");
         Some(pos)
     }
 
@@ -180,6 +182,7 @@ impl DimFactor {
         self.timings.factor_s += t1.elapsed().as_secs_f64();
         self.gkp = None;
         self.c_band = None;
+        enforce(self, "DimFactor::insert_points");
         Some(positions)
     }
 
@@ -352,6 +355,153 @@ impl DimFactor {
     }
 }
 
+impl Audit for DimFactor {
+    /// Verifies the two *materialization* invariants documented on the
+    /// fields — `T` is **bit-identical** to `A + σ_y^{-2}Φ` over its band and
+    /// `Φᵀ` bit-identical to `Φ` transposed (both maintenance paths compute
+    /// exactly these expressions, so equality is `==`, not a tolerance) —
+    /// plus shape agreement between the four banded LUs and the matrices
+    /// they factor. Child audits (`kp`, each LU) propagate their own
+    /// structure names; failures here name the desynced row.
+    fn audit(&self) -> Result<(), AuditError> {
+        self.kp.audit()?;
+        let n = self.kp.n();
+        let w = self.kp.w();
+        if self.monotone {
+            // The incremental path is only sound over strictly increasing
+            // points; the KP audit alone tolerates the degenerate equal-
+            // adjacent case that sets `monotone = false`.
+            for i in 1..n {
+                if self.kp.xs[i] <= self.kp.xs[i - 1] {
+                    return Err(AuditError::new(
+                        "DimFactor",
+                        "monotone",
+                        Some(i),
+                        format!(
+                            "monotone flag set but xs[{}] = {} ≥ xs[{i}] = {}",
+                            i - 1,
+                            self.kp.xs[i - 1],
+                            self.kp.xs[i]
+                        ),
+                    ));
+                }
+            }
+        }
+        if !(self.sigma2_y.is_finite() && self.sigma2_y > 0.0) {
+            return Err(AuditError::new(
+                "DimFactor",
+                "sigma2_y",
+                None,
+                format!("noise variance {} not positive/finite", self.sigma2_y),
+            ));
+        }
+        self.t.audit()?;
+        if self.t.n() != n || self.t.kl() != w || self.t.ku() != w {
+            return Err(AuditError::new(
+                "DimFactor",
+                "t",
+                None,
+                format!(
+                    "T shape (n={}, kl={}, ku={}) != (n={n}, w={w}, w={w})",
+                    self.t.n(),
+                    self.t.kl(),
+                    self.t.ku()
+                ),
+            ));
+        }
+        self.phit.audit()?;
+        if self.phit.n() != n || self.phit.kl() != w - 1 || self.phit.ku() != w - 1 {
+            return Err(AuditError::new(
+                "DimFactor",
+                "phit",
+                None,
+                format!(
+                    "Φᵀ shape (n={}, kl={}, ku={}) != (n={n}, w−1={}, w−1={})",
+                    self.phit.n(),
+                    self.phit.kl(),
+                    self.phit.ku(),
+                    w - 1,
+                    w - 1
+                ),
+            ));
+        }
+        let inv_s2 = 1.0 / self.sigma2_y;
+        for i in 0..n {
+            let (lo, hi) = self.t.row_range(i);
+            for j in lo..hi {
+                let want = self.kp.a.get(i, j) + inv_s2 * self.kp.phi.get(i, j);
+                if self.t.get(i, j) != want {
+                    return Err(AuditError::new(
+                        "DimFactor",
+                        "t",
+                        Some(i),
+                        format!(
+                            "T[{i},{j}] = {} desynced from A + σ⁻²Φ = {want}",
+                            self.t.get(i, j)
+                        ),
+                    ));
+                }
+            }
+            let (lo, hi) = self.phit.row_range(i);
+            for j in lo..hi {
+                if self.phit.get(i, j) != self.kp.phi.get(j, i) {
+                    return Err(AuditError::new(
+                        "DimFactor",
+                        "phit",
+                        Some(i),
+                        format!(
+                            "Φᵀ[{i},{j}] = {} desynced from Φ[{j},{i}] = {}",
+                            self.phit.get(i, j),
+                            self.kp.phi.get(j, i)
+                        ),
+                    ));
+                }
+            }
+        }
+        for (name, lu) in [
+            ("t_lu", &self.t_lu),
+            ("phi_lu", &self.phi_lu),
+            ("phit_lu", &self.phit_lu),
+            ("a_lu", &self.a_lu),
+        ] {
+            lu.audit()?;
+            if lu.n() != n {
+                return Err(AuditError::new(
+                    "DimFactor",
+                    name,
+                    None,
+                    format!("LU size {} disagrees with n = {n}", lu.n()),
+                ));
+            }
+        }
+        if self.t_lu.kl() != w || self.phi_lu.kl() != w - 1 || self.a_lu.kl() != w {
+            return Err(AuditError::new(
+                "DimFactor",
+                "t_lu",
+                None,
+                format!(
+                    "LU bandwidths (t={}, phi={}, a={}) disagree with w = {w}",
+                    self.t_lu.kl(),
+                    self.phi_lu.kl(),
+                    self.a_lu.kl()
+                ),
+            ));
+        }
+        if let Some(c) = &self.c_band {
+            c.audit()?;
+            if c.n() != n {
+                return Err(AuditError::new(
+                    "DimFactor",
+                    "c_band",
+                    None,
+                    format!("band-of-inverse size {} disagrees with n = {n}", c.n()),
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Visit each row in the union of the windows `[q−h, q+h]` over the
 /// strictly-increasing `sorted_positions` exactly once (the same coverage
 /// walk as `KpFactorization::insert_batch`).
@@ -492,6 +642,32 @@ mod tests {
                 let _ = w;
             }
         }
+    }
+
+    /// Desyncing the incrementally-maintained `T = A + σ⁻²Φ` from its
+    /// defining expression is pinpointed at the desynced row.
+    #[test]
+    fn audit_flags_desynced_t_materialization() {
+        let mut f = factor(25, Nu::ThreeHalves, 1.0, 21);
+        assert!(f.audit().is_ok());
+        let v = f.t.get(9, 9);
+        f.t.set(9, 9, v * 2.0 + 0.125); // any bit flip breaks the == invariant
+        let e = f.audit().unwrap_err();
+        assert_eq!(e.structure, "DimFactor");
+        assert_eq!(e.field, "t");
+        assert_eq!(e.index, Some(9));
+    }
+
+    /// Desyncing the maintained transpose `Φᵀ` is pinpointed likewise.
+    #[test]
+    fn audit_flags_desynced_phit_materialization() {
+        let mut f = factor(25, Nu::Half, 1.0, 22);
+        let v = f.phit.get(4, 4);
+        f.phit.set(4, 4, v * 2.0 + 0.125);
+        let e = f.audit().unwrap_err();
+        assert_eq!(e.structure, "DimFactor");
+        assert_eq!(e.field, "phit");
+        assert_eq!(e.index, Some(4));
     }
 
     /// `φ_d(x*)^T C_d φ_d(x*)` must equal `k_d(x*,X) K_d^{-1} k_d(X,x*)` —

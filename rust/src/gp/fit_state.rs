@@ -31,6 +31,7 @@
 
 use std::sync::Mutex;
 
+use crate::check::{enforce, Audit, AuditError};
 use crate::gp::backfit::{BlockVec, GaussSeidel, GsStats};
 use crate::gp::dim::{DimFactor, PatchTimings};
 use crate::gp::posterior::{self, MTildeCache, Posterior, PredictOut};
@@ -208,6 +209,7 @@ impl FitState {
             }
         }
         self.post = None;
+        enforce(self, "FitState::observe");
         positions
     }
 
@@ -306,6 +308,7 @@ impl FitState {
             }
         }
         self.post = None;
+        enforce(self, "FitState::observe_batch");
         BatchPositions { positions, fallback }
     }
 
@@ -322,6 +325,7 @@ impl FitState {
             posterior::compute_posterior_warm(&self.dims, y, &gs, guess.as_ref());
         self.post = Some(post);
         self.tilde = Some(tilde);
+        enforce(self, "FitState::ensure_posterior");
     }
 
     /// Build an immutable, shareable [`PosteriorSnapshot`] for the
@@ -371,6 +375,88 @@ impl FitState {
         gs.max_sweeps = self.gs_max_sweeps;
         gs.tol = self.gs_tol;
         gs
+    }
+}
+
+impl Audit for FitState {
+    /// Cross-dimension agreement: every dimension holds the same `n` and the
+    /// same noise variance as the state, and the two carried solve artifacts
+    /// (the warm-start ṽ and the posterior `b`) have exactly `D` blocks of
+    /// length `n`. Child [`DimFactor`] audits run first so a deeper break is
+    /// pinpointed at its own structure.
+    fn audit(&self) -> Result<(), AuditError> {
+        if self.dims.is_empty() {
+            return Err(AuditError::new(
+                "FitState",
+                "dims",
+                None,
+                "no dimensions".to_string(),
+            ));
+        }
+        let n = self.dims[0].n();
+        for (d, dim) in self.dims.iter().enumerate() {
+            dim.audit()?;
+            if dim.n() != n {
+                return Err(AuditError::new(
+                    "FitState",
+                    "dims",
+                    Some(d),
+                    format!("dimension holds n = {} but dimension 0 holds {n}", dim.n()),
+                ));
+            }
+            if dim.sigma2_y != self.sigma2_y {
+                return Err(AuditError::new(
+                    "FitState",
+                    "dims",
+                    Some(d),
+                    format!(
+                        "dimension noise {} desynced from state noise {}",
+                        dim.sigma2_y, self.sigma2_y
+                    ),
+                ));
+            }
+        }
+        if let Some(t) = &self.tilde {
+            if t.len() != self.dims.len() {
+                return Err(AuditError::new(
+                    "FitState",
+                    "tilde",
+                    None,
+                    format!("ṽ has {} blocks for {} dimensions", t.len(), self.dims.len()),
+                ));
+            }
+            for (d, td) in t.iter().enumerate() {
+                if td.len() != n {
+                    return Err(AuditError::new(
+                        "FitState",
+                        "tilde",
+                        Some(d),
+                        format!("ṽ block length {} != n = {n}", td.len()),
+                    ));
+                }
+            }
+        }
+        if let Some(p) = &self.post {
+            if p.b.len() != self.dims.len() {
+                return Err(AuditError::new(
+                    "FitState",
+                    "post",
+                    None,
+                    format!("posterior has {} blocks for {} dimensions", p.b.len(), self.dims.len()),
+                ));
+            }
+            for (d, bd) in p.b.iter().enumerate() {
+                if bd.len() != n {
+                    return Err(AuditError::new(
+                        "FitState",
+                        "post",
+                        Some(d),
+                        format!("posterior block length {} != n = {n}", bd.len()),
+                    ));
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -442,6 +528,72 @@ impl PosteriorSnapshot {
             Err(poisoned) => poisoned.into_inner(),
         };
         (cache.hits, cache.misses)
+    }
+}
+
+impl Audit for PosteriorSnapshot {
+    /// The snapshot's construction guarantees beyond [`FitState`]'s: every
+    /// cloned dimension must have its band-of-inverse **already
+    /// materialized** (the `&`-only predict path panics otherwise), the
+    /// posterior blocks must match the snapshot's `n`, and every key in the
+    /// shared column cache must reference a live `(dimension, sorted index)`
+    /// pair — the cache-key vs `n` agreement check.
+    fn audit(&self) -> Result<(), AuditError> {
+        if self.dims.is_empty() {
+            return Err(AuditError::new(
+                "PosteriorSnapshot",
+                "dims",
+                None,
+                "no dimensions".to_string(),
+            ));
+        }
+        let n = self.dims[0].n();
+        for (d, dim) in self.dims.iter().enumerate() {
+            dim.audit()?;
+            if dim.n() != n {
+                return Err(AuditError::new(
+                    "PosteriorSnapshot",
+                    "dims",
+                    Some(d),
+                    format!("dimension holds n = {} but dimension 0 holds {n}", dim.n()),
+                ));
+            }
+            if !dim.has_c_band() {
+                return Err(AuditError::new(
+                    "PosteriorSnapshot",
+                    "dims",
+                    Some(d),
+                    "band-of-inverse not materialized (predict would panic)".to_string(),
+                ));
+            }
+        }
+        if self.post.b.len() != self.dims.len() {
+            return Err(AuditError::new(
+                "PosteriorSnapshot",
+                "post",
+                None,
+                format!(
+                    "posterior has {} blocks for {} dimensions",
+                    self.post.b.len(),
+                    self.dims.len()
+                ),
+            ));
+        }
+        for (d, bd) in self.post.b.iter().enumerate() {
+            if bd.len() != n {
+                return Err(AuditError::new(
+                    "PosteriorSnapshot",
+                    "post",
+                    Some(d),
+                    format!("posterior block length {} != n = {n}", bd.len()),
+                ));
+            }
+        }
+        let cache = match self.cache.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        cache.audit_with(self.dims.len(), n)
     }
 }
 
@@ -587,6 +739,43 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Desyncing the carried warm-start ṽ from the model size is pinpointed
+    /// at the offending block.
+    #[test]
+    fn audit_flags_desynced_tilde_block() {
+        let mut rng = Rng::new(81);
+        let x_cols: Vec<Vec<f64>> = (0..2).map(|_| rng.uniform_vec(20, 0.0, 5.0)).collect();
+        let y: Vec<f64> = (0..20).map(|i| x_cols[0][i].sin()).collect();
+        let mut state = build_state(&x_cols, Nu::Half, 1.0, 1.0);
+        state.ensure_posterior(&y);
+        assert!(state.audit().is_ok());
+        state.tilde.as_mut().unwrap()[1].pop(); // block 1 now one entry short
+        let e = state.audit().unwrap_err();
+        assert_eq!(e.structure, "FitState");
+        assert_eq!(e.field, "tilde");
+        assert_eq!(e.index, Some(1));
+    }
+
+    /// A snapshot audit verifies the prebuilt band-of-inverse guarantee and
+    /// the cache-key/n agreement.
+    #[test]
+    fn snapshot_audit_checks_construction_guarantees() {
+        let mut rng = Rng::new(82);
+        let x_cols: Vec<Vec<f64>> = (0..2).map(|_| rng.uniform_vec(22, 0.0, 5.0)).collect();
+        let y: Vec<f64> = (0..22).map(|i| x_cols[0][i].cos()).collect();
+        let mut state = build_state(&x_cols, Nu::ThreeHalves, 1.0, 0.9);
+        state.ensure_posterior(&y);
+        let mut snap = state.read_snapshot(&y, 0);
+        assert!(snap.audit().is_ok());
+        let _ = snap.predict(&[2.0, 2.5], false);
+        assert!(snap.audit().is_ok(), "a served predict must keep the cache consistent");
+        snap.post.b[0].push(0.0); // posterior block desynced from n
+        let e = snap.audit().unwrap_err();
+        assert_eq!(e.structure, "PosteriorSnapshot");
+        assert_eq!(e.field, "post");
+        assert_eq!(e.index, Some(0));
     }
 
     /// Duplicate-heavy streams route through the per-dimension rebuild

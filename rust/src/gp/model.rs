@@ -5,6 +5,7 @@
 //! [`crate::gp::fit_state::FitState`]; this façade adds data bookkeeping,
 //! the `M̃` cache, and hyperparameter training on top.
 
+use crate::check::{enforce, Audit, AuditError};
 use crate::gp::dim::{DimFactor, PatchTimings};
 use crate::gp::fit_state::{FitState, PosteriorSnapshot};
 use crate::gp::likelihood::{self, StochasticCfg};
@@ -160,6 +161,7 @@ impl AdditiveGP {
         let state = self.state.as_mut().unwrap();
         let positions = state.observe(x, &self.x_cols);
         self.cache.on_insert(&positions, self.cfg.nu.q() + 1);
+        enforce(self, "AdditiveGP::observe");
     }
 
     /// Append a batch of observations through the *batched* incremental
@@ -213,6 +215,7 @@ impl AdditiveGP {
         } else {
             self.cache.on_insert_batch(&out.positions, self.cfg.nu.q() + 1);
         }
+        enforce(self, "AdditiveGP::observe_batch");
         BatchPath::Incremental
     }
 
@@ -236,6 +239,7 @@ impl AdditiveGP {
         let mut state = FitState::new(dims, sigma2, self.cfg.gs_max_sweeps, self.cfg.gs_tol);
         state.set_patch_policy(self.cfg.patch_policy);
         self.state = Some(state);
+        enforce(self, "AdditiveGP::refit");
     }
 
     /// Ensure the posterior state (`b_Y`) exists — one (warm-started)
@@ -294,6 +298,7 @@ impl AdditiveGP {
         state.set_patch_policy(self.cfg.patch_policy);
         self.state = Some(state);
         self.cache.clear();
+        enforce(self, "AdditiveGP::optimize_hypers");
         hist
     }
 
@@ -310,6 +315,15 @@ impl AdditiveGP {
     /// Cache statistics `(hits, misses, resident columns)`.
     pub fn cache_stats(&self) -> (u64, u64, usize) {
         (self.cache.hits, self.cache.misses, self.cache.len())
+    }
+
+    /// How many times the `M̃` cache was wholesale-cleared because an insert
+    /// exceeded its remap limits (too many resident columns, or a batch too
+    /// large to remap) — the formerly *silent* truncation path, surfaced in
+    /// the coordinator's `stats` reply as `cache_truncations`. Refit-driven
+    /// clears are deliberate invalidations and are not counted.
+    pub fn cache_truncations(&self) -> u64 {
+        self.cache.truncation_clears
     }
 
     /// Incremental-path statistics `(incremental inserts, fallback
@@ -366,6 +380,84 @@ impl AdditiveGP {
     /// Immutable access to the trained fit state (None before `fit`).
     pub fn fit_state(&self) -> Option<&FitState> {
         self.state.as_ref()
+    }
+
+    /// On-demand audit entry point (the coordinator's `audit` request):
+    /// walk every stateful structure in the model and return
+    /// `(structures_checked, result)`. The count is deterministic for a
+    /// given model shape: 2 for the façade (data bookkeeping + `M̃` cache),
+    /// and when the model is active 1 for the [`FitState`] plus, per
+    /// dimension, the [`DimFactor`] and its 10 children (KP factorization,
+    /// permutation, the A/Φ/T/Φᵀ bands, and the four banded LUs), plus one
+    /// more for each dimension that has materialized its band-of-inverse.
+    pub fn run_audit(&self) -> (u64, Result<(), AuditError>) {
+        let mut structures = 2u64;
+        if let Some(state) = &self.state {
+            structures += 1;
+            for dim in state.dims() {
+                structures += 11;
+                if dim.has_c_band() {
+                    structures += 1;
+                }
+            }
+        }
+        (structures, self.audit())
+    }
+}
+
+impl Audit for AdditiveGP {
+    fn audit(&self) -> Result<(), AuditError> {
+        let n = self.y.len();
+        let d = self.x_cols.len();
+        if self.omegas.len() != d {
+            return Err(AuditError::new(
+                "AdditiveGP",
+                "omegas",
+                None,
+                format!("{} scales for {d} dimensions", self.omegas.len()),
+            ));
+        }
+        for (dd, &om) in self.omegas.iter().enumerate() {
+            if !(om.is_finite() && om > 0.0) {
+                return Err(AuditError::new(
+                    "AdditiveGP",
+                    "omegas",
+                    Some(dd),
+                    format!("scale {om} not finite-positive"),
+                ));
+            }
+        }
+        for (dd, col) in self.x_cols.iter().enumerate() {
+            if col.len() != n {
+                return Err(AuditError::new(
+                    "AdditiveGP",
+                    "x_cols",
+                    Some(dd),
+                    format!("column holds {} points but y holds {n}", col.len()),
+                ));
+            }
+        }
+        if let Some(state) = &self.state {
+            state.audit()?;
+            if state.dims().len() != d {
+                return Err(AuditError::new(
+                    "AdditiveGP",
+                    "state",
+                    None,
+                    format!("{} trained dimensions for {d} data columns", state.dims().len()),
+                ));
+            }
+            if state.dims()[0].n() != n {
+                return Err(AuditError::new(
+                    "AdditiveGP",
+                    "state",
+                    None,
+                    format!("trained on {} points but {n} observed", state.dims()[0].n()),
+                ));
+            }
+        }
+        self.cache.audit_with(d, n)?;
+        Ok(())
     }
 }
 
@@ -508,6 +600,31 @@ mod tests {
         let near = gp.predict(&x[0], false).var;
         let far = gp.predict(&[50.0, -40.0], false).var;
         assert!(near < far, "near {near} !< far {far}");
+    }
+
+    /// `run_audit` reports the documented deterministic structure count and
+    /// pins corruption to `AdditiveGP.omegas[1]`.
+    #[test]
+    fn run_audit_counts_structures_and_flags_bad_scale() {
+        let (x, y) = toy_data(40, 2, 21);
+        let mut gp = AdditiveGP::new(AdditiveGpConfig::default(), 2);
+        let (count, ok) = gp.run_audit();
+        assert_eq!(count, 2, "inactive model audits only the façade");
+        assert!(ok.is_ok());
+        gp.fit(&x, &y);
+        let (count, ok) = gp.run_audit();
+        assert_eq!(count, 2 + 1 + 2 * 11);
+        assert!(ok.is_ok(), "healthy model: {ok:?}");
+        gp.predict(&[1.0, 1.0], false);
+        let with_c = gp.dims().unwrap().iter().filter(|d| d.has_c_band()).count() as u64;
+        let (count, ok) = gp.run_audit();
+        assert_eq!(count, 2 + 1 + 2 * 11 + with_c);
+        assert!(ok.is_ok());
+        gp.omegas[1] = f64::NAN;
+        let err = gp.run_audit().1.unwrap_err();
+        assert_eq!(err.structure, "AdditiveGP");
+        assert_eq!(err.field, "omegas");
+        assert_eq!(err.index, Some(1));
     }
 
     #[test]

@@ -10,6 +10,7 @@
 
 use std::collections::{HashMap, HashSet};
 
+use crate::check::{Audit, AuditError};
 use crate::gp::backfit::{BlockVec, GaussSeidel, GsStats};
 use crate::gp::dim::DimFactor;
 
@@ -90,6 +91,12 @@ pub struct MTildeCache {
     /// Queries answered by the one-shot single-solve path (see
     /// [`predict_cached`]'s cold-start policy).
     pub single_solves: u64,
+    /// Size-triggered wholesale drops: invalidation passes that *truncated*
+    /// the cache (too many resident columns, or a batch larger than
+    /// [`MTildeCache::REMAP_MAX_BATCH`]) instead of remapping it. Previously
+    /// silent; surfaced through `Response::Stats` so operators can see when
+    /// locality is being thrown away.
+    pub truncation_clears: u64,
     /// Soft cap on resident columns (FIFO-ish eviction by generation).
     pub capacity: usize,
     order: Vec<(u32, u32)>,
@@ -120,6 +127,15 @@ impl MTildeCache {
         self.visits.clear();
     }
 
+    /// [`MTildeCache::clear`], counted as a size-triggered truncation.
+    /// Deliberately *not* called from plain `clear()` so refit-driven full
+    /// rebuilds (where dropping the cache is inherent, not a shortcut) don't
+    /// inflate the counter.
+    fn clear_truncated(&mut self) {
+        self.truncation_clears += 1;
+        self.clear();
+    }
+
     /// Windowed invalidation after an incremental observe at sorted position
     /// `positions[d]` in each dimension (KP half-bandwidth `w = ν+1/2`).
     ///
@@ -139,10 +155,12 @@ impl MTildeCache {
         // this dwarf the factor sweep itself — there, dropping everything
         // and letting columns rebuild on demand is strictly cheaper.
         if self.cols.len() > Self::REMAP_MAX_COLS {
-            self.clear();
+            self.clear_truncated();
             return;
         }
         let reach = (2 * w) as isize;
+        // Column remapping is order-independent (each column re-keys and
+        // splices on its own). lint: hashmap-order-ok
         let old: Vec<((u32, u32), Vec<Vec<f64>>)> = self.cols.drain().collect();
         self.stale.clear();
         let mut remap: HashMap<(u32, u32), (u32, u32)> = HashMap::new();
@@ -187,7 +205,7 @@ impl MTildeCache {
             return;
         }
         if self.cols.len() > Self::REMAP_MAX_COLS || m > Self::REMAP_MAX_BATCH {
-            self.clear();
+            self.clear_truncated();
             return;
         }
         let sorted: Vec<Vec<usize>> = positions
@@ -199,6 +217,8 @@ impl MTildeCache {
             })
             .collect();
         let reach = (2 * w) as isize;
+        // Column remapping is order-independent (see on_insert).
+        // lint: hashmap-order-ok
         let old: Vec<((u32, u32), Vec<Vec<f64>>)> = self.cols.drain().collect();
         self.stale.clear();
         let mut remap: HashMap<(u32, u32), (u32, u32)> = HashMap::new();
@@ -331,6 +351,84 @@ impl MTildeCache {
             self.cols.insert(key, col);
         }
         self.cols.get(&key).unwrap()
+    }
+
+    /// [`Audit`] plus the context the cache cannot know by itself: every key
+    /// must reference a live dimension (`dcol < d`) and sorted index
+    /// (`j < n`), and every resident column must hold `d` blocks of length
+    /// `n`. Called by `PosteriorSnapshot::audit`, which owns that context.
+    pub fn audit_with(&self, d: usize, n: usize) -> Result<(), AuditError> {
+        self.audit()?;
+        for (&(dcol, j), col) in &self.cols {
+            if dcol as usize >= d || j as usize >= n {
+                return Err(AuditError::new(
+                    "MTildeCache",
+                    "cols",
+                    Some(j as usize),
+                    format!("key ({dcol}, {j}) outside model shape D = {d}, n = {n}"),
+                ));
+            }
+            if col.len() != d || col.iter().any(|v| v.len() != n) {
+                return Err(AuditError::new(
+                    "MTildeCache",
+                    "cols",
+                    Some(j as usize),
+                    format!("column ({dcol}, {j}) shape disagrees with D = {d}, n = {n}"),
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Audit for MTildeCache {
+    /// Context-free structural checks: the stale set only marks resident
+    /// columns, and the eviction `order` log is exactly the resident keyset
+    /// (no duplicates, nothing dangling) — `column()`'s amortized eviction
+    /// relies on that bijection.
+    fn audit(&self) -> Result<(), AuditError> {
+        for key in &self.stale {
+            if !self.cols.contains_key(key) {
+                return Err(AuditError::new(
+                    "MTildeCache",
+                    "stale",
+                    Some(key.1 as usize),
+                    format!("stale mark ({}, {}) has no resident column", key.0, key.1),
+                ));
+            }
+        }
+        if self.order.len() != self.cols.len() {
+            return Err(AuditError::new(
+                "MTildeCache",
+                "order",
+                None,
+                format!(
+                    "eviction order tracks {} keys but {} columns are resident",
+                    self.order.len(),
+                    self.cols.len()
+                ),
+            ));
+        }
+        let mut seen: HashSet<(u32, u32)> = HashSet::with_capacity(self.order.len());
+        for (i, key) in self.order.iter().enumerate() {
+            if !seen.insert(*key) {
+                return Err(AuditError::new(
+                    "MTildeCache",
+                    "order",
+                    Some(i),
+                    format!("duplicate eviction entry ({}, {})", key.0, key.1),
+                ));
+            }
+            if !self.cols.contains_key(key) {
+                return Err(AuditError::new(
+                    "MTildeCache",
+                    "order",
+                    Some(i),
+                    format!("eviction entry ({}, {}) has no resident column", key.0, key.1),
+                ));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -788,6 +886,69 @@ mod tests {
         let _ = predict_cached(&mut dims, sigma2, &post, &mut cache, &x3, true);
         assert_eq!(cache.misses, misses_second, "warm step should not miss");
         assert!(cache.hits > 0);
+    }
+
+    /// A stale mark without a resident column breaks the cache's structural
+    /// story and is pinpointed by key.
+    #[test]
+    fn audit_flags_dangling_stale_mark() {
+        let sigma2 = 1.0;
+        let (_xc, _k, y, mut dims) = setup(20, 2, Nu::Half, sigma2, 70);
+        let post = {
+            let gs = GaussSeidel::new(&dims, sigma2);
+            compute_posterior(&dims, &y, &gs)
+        };
+        let mut cache = MTildeCache::new(0);
+        let x = vec![1.5, 2.0];
+        let _ = predict_cached(&mut dims, sigma2, &post, &mut cache, &x, false);
+        let _ = predict_cached(&mut dims, sigma2, &post, &mut cache, &x, false);
+        assert!(cache.audit().is_ok());
+        assert!(cache.audit_with(2, 20).is_ok());
+        // x = [1.5, 2.0] touches mid-array windows only, so the extreme
+        // sorted index 19 is never resident: a guaranteed-dangling mark.
+        assert!(!cache.cols.contains_key(&(0, 19)));
+        cache.stale.insert((0, 19));
+        let e = cache.audit().unwrap_err();
+        assert_eq!(e.structure, "MTildeCache");
+        assert_eq!(e.field, "stale");
+        assert_eq!(e.index, Some(19));
+    }
+
+    /// Keys referencing rows beyond the model's `n` fail the contextual
+    /// audit (the shape check snapshots rely on).
+    #[test]
+    fn audit_with_flags_out_of_range_key() {
+        let sigma2 = 1.0;
+        let (_xc, _k, y, mut dims) = setup(20, 2, Nu::Half, sigma2, 71);
+        let post = {
+            let gs = GaussSeidel::new(&dims, sigma2);
+            compute_posterior(&dims, &y, &gs)
+        };
+        let mut cache = MTildeCache::new(0);
+        let x = vec![1.2, 2.6];
+        let _ = predict_cached(&mut dims, sigma2, &post, &mut cache, &x, false);
+        let _ = predict_cached(&mut dims, sigma2, &post, &mut cache, &x, false);
+        assert!(cache.len() > 0);
+        // Same columns, judged against a *smaller* claimed n: out of range.
+        assert!(cache.audit_with(2, 1).is_err());
+    }
+
+    /// The size-triggered truncation paths count themselves; plain clears
+    /// (refits) do not.
+    #[test]
+    fn truncation_clears_are_counted() {
+        let mut cache = MTildeCache::new(0);
+        cache.clear();
+        assert_eq!(cache.truncation_clears, 0);
+        // A batch wider than REMAP_MAX_BATCH forces the truncating clear
+        // even with nothing resident... except the m==0/resident==0 path
+        // still enters the clear branch. Seed one fake column first.
+        cache.cols.insert((0, 0), vec![vec![0.0; 4]]);
+        cache.order.push((0, 0));
+        let positions = vec![(0..MTildeCache::REMAP_MAX_BATCH + 1).collect::<Vec<usize>>()];
+        cache.on_insert_batch(&positions, 1);
+        assert_eq!(cache.truncation_clears, 1);
+        assert!(cache.is_empty());
     }
 
     #[test]

@@ -20,6 +20,7 @@
 //! `cosh/sinh` row basis, which is far better conditioned when `ω·spacing`
 //! is small.
 
+use crate::check::{enforce, Audit, AuditError};
 use crate::kernels::matern::Matern;
 use crate::linalg::perm::lower_index;
 use crate::linalg::{Banded, Dense, Permutation};
@@ -208,6 +209,7 @@ impl KpFactorization {
         for i in lo..=hi {
             self.rebuild_row(i);
         }
+        enforce(self, "KpFactorization::insert");
         Some(pos)
     }
 
@@ -275,6 +277,7 @@ impl KpFactorization {
             }
             next = hi + 1;
         }
+        enforce(self, "KpFactorization::insert_batch");
         Some(final_pos)
     }
 
@@ -332,6 +335,91 @@ impl KpFactorization {
     /// `log|det Φ|` and `log|det A|` — the banded log-det terms of eq. (14).
     pub fn logdets(&self) -> (f64, f64) {
         (self.phi.lu().logdet().0, self.a.lu().logdet().0)
+    }
+}
+
+impl Audit for KpFactorization {
+    /// The factorization's structural story: sorted points are in
+    /// non-decreasing order and finite (failures name the offending sorted
+    /// index — equal *adjacent* points are tolerated here because a
+    /// degenerate duplicate-cluster rebuild can legitimately produce them;
+    /// [`crate::gp::dim::DimFactor`]'s audit upgrades this to strict
+    /// inequality whenever its `monotone` flag claims the incremental path
+    /// is usable), there are enough of them for the packet construction
+    /// (`n ≥ 2w+1`), the permutation is a valid bijection of the same
+    /// length, and the `A` / `Φ` band matrices have exactly the Theorem-3
+    /// half-bandwidths (`w` and `w−1`) at size `n`. Child audits (`perm`,
+    /// `a`, `phi`) propagate their own structure names.
+    fn audit(&self) -> Result<(), AuditError> {
+        let n = self.xs.len();
+        let w = self.w();
+        if n < 2 * w + 1 {
+            return Err(AuditError::new(
+                "KpFactorization",
+                "xs",
+                None,
+                format!("n = {n} below the packet minimum 2w+1 = {}", 2 * w + 1),
+            ));
+        }
+        for (i, &x) in self.xs.iter().enumerate() {
+            if !x.is_finite() {
+                return Err(AuditError::new(
+                    "KpFactorization",
+                    "xs",
+                    Some(i),
+                    format!("non-finite sorted point {x}"),
+                ));
+            }
+            if i > 0 && x < self.xs[i - 1] {
+                return Err(AuditError::new(
+                    "KpFactorization",
+                    "xs",
+                    Some(i),
+                    format!("sorted order broken: xs[{}] = {} > xs[{i}] = {x}",
+                        i - 1, self.xs[i - 1]),
+                ));
+            }
+        }
+        self.perm.audit()?;
+        if self.perm.len() != n {
+            return Err(AuditError::new(
+                "KpFactorization",
+                "perm",
+                None,
+                format!("permutation length {} != n = {n}", self.perm.len()),
+            ));
+        }
+        self.a.audit()?;
+        if self.a.n() != n || self.a.kl() != w || self.a.ku() != w {
+            return Err(AuditError::new(
+                "KpFactorization",
+                "a",
+                None,
+                format!(
+                    "packet matrix shape (n={}, kl={}, ku={}) != (n={n}, w={w}, w={w})",
+                    self.a.n(),
+                    self.a.kl(),
+                    self.a.ku()
+                ),
+            ));
+        }
+        self.phi.audit()?;
+        if self.phi.n() != n || self.phi.kl() != w - 1 || self.phi.ku() != w - 1 {
+            return Err(AuditError::new(
+                "KpFactorization",
+                "phi",
+                None,
+                format!(
+                    "Gram matrix shape (n={}, kl={}, ku={}) != (n={n}, w−1={}, w−1={})",
+                    self.phi.n(),
+                    self.phi.kl(),
+                    self.phi.ku(),
+                    w - 1,
+                    w - 1
+                ),
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -755,5 +843,31 @@ mod tests {
         for (orig, &p) in pts.iter().enumerate() {
             assert_eq!(f.xs[f.perm.sorted_pos(orig)], p);
         }
+    }
+
+    /// Desynchronizing the sorted-point array (breaking the strict order the
+    /// packet windows rely on) is pinpointed at the offending sorted index.
+    #[test]
+    fn audit_flags_desynced_sorted_points() {
+        let pts = random_points(20, 0.0, 1.0, 78);
+        let mut f = KpFactorization::new(&pts, Matern::new(Nu::ThreeHalves, 1.0));
+        assert!(f.audit().is_ok());
+        f.xs[7] = f.xs[5]; // xs[7] ≤ xs[6]: window ordering is broken
+        let e = f.audit().unwrap_err();
+        assert_eq!(e.structure, "KpFactorization");
+        assert_eq!(e.field, "xs");
+        assert_eq!(e.index, Some(7));
+    }
+
+    /// A child-structure break (the permutation) propagates with the child's
+    /// structure name, so the report still pinpoints the real culprit.
+    #[test]
+    fn audit_propagates_child_structure_names() {
+        let pts = random_points(20, 0.0, 1.0, 79);
+        let mut f = KpFactorization::new(&pts, Matern::new(Nu::Half, 1.0));
+        f.perm = Permutation::identity(3); // wrong length AND detached from xs
+        let e = f.audit().unwrap_err();
+        assert_eq!(e.structure, "KpFactorization");
+        assert_eq!(e.field, "perm");
     }
 }

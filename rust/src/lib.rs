@@ -38,6 +38,14 @@
 //!   PJRT predict batching pinned to the worker that compiled the
 //!   executable, and incremental `observe`/`observe_batch` ingest
 //!   (quickstart: `rust/src/coordinator/README.md`).
+//! * [`check`] — structural invariant audits: every stateful structure
+//!   implements [`check::Audit`] and, under the `strict-invariants` cargo
+//!   feature, re-audits itself after every mutating operation (DESIGN.md
+//!   §Invariants). The feature is on in CI test jobs and **off** in release
+//!   builds, where the hooks compile to nothing. Repo-specific source
+//!   hygiene (unwrap-free coordinator, hot-loop assertion coverage,
+//!   HashMap-iteration determinism, `// SAFETY:` comments) is machine-
+//!   checked by `cargo xtask lint`.
 //! * [`util`] — offline-build substrates (PRNG, JSON, timing, errors).
 //!
 //! ## Quick start
@@ -74,6 +82,7 @@
 
 pub mod baselines;
 pub mod bo;
+pub mod check;
 pub mod coordinator;
 pub mod gp;
 pub mod kernels;

@@ -3,6 +3,8 @@
 //! "banded matrix solver"/"LU decomposition" primitive the paper leans on
 //! throughout Table 1).
 
+use crate::check::{enforce, Audit, AuditError};
+
 /// An `n × n` banded matrix with `kl` sub-diagonals and `ku` super-diagonals.
 ///
 /// Entry `(i, j)` is stored iff `j - i ∈ [-kl, ku]`; reads outside the band
@@ -272,6 +274,7 @@ impl Banded {
             src_hi = src_lo;
         }
         self.n = old_rows + k;
+        enforce(self, "Banded::insert_rows_cols");
     }
 
     /// LU-factorize with threshold partial pivoting (row swaps only past
@@ -542,7 +545,24 @@ impl BandedLU {
         let mut piv = vec![0usize; n];
         eliminate(&mut f, &mut piv, 0, None);
         let sign = pivot_sign(&piv);
-        BandedLU { n, kl, kuf, fac: f, piv, sign }
+        let lu = BandedLU { n, kl, kuf, fac: f, piv, sign };
+        enforce(&lu, "BandedLU::factor");
+        lu
+    }
+
+    /// Matrix size (rows/cols of the factored matrix).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Lower bandwidth of the factored matrix (the `L` multipliers' reach).
+    pub fn kl(&self) -> usize {
+        self.kl
+    }
+
+    /// Upper bandwidth of `U` after pivoting fill-in (`kl + ku`, clipped).
+    pub fn kuf(&self) -> usize {
+        self.kuf
     }
 
     /// Patch this factorization of the *pre-splice* matrix into the
@@ -658,6 +678,7 @@ impl BandedLU {
         self.fac = f;
         self.sign = pivot_sign(&piv);
         self.piv = piv;
+        enforce(self, "BandedLU::refactor_from");
         PatchOutcome::Patched { resumed_at: s, stopped_at: stopped }
     }
 
@@ -723,6 +744,134 @@ impl BandedLU {
             }
         }
         (ld, sign)
+    }
+}
+
+impl Audit for Banded {
+    /// Storage length must match the `n × (kl+ku+1)` band layout, and every
+    /// stored entry must be finite — the raw matrices this type holds
+    /// (A, Φ, T, Φᵀ, Gram blocks) are always finite by construction; NaN/inf
+    /// here means a splice or rebuild wrote garbage. Failures name the row.
+    fn audit(&self) -> Result<(), AuditError> {
+        let want = self.n * (self.kl + self.ku + 1);
+        if self.data.len() != want {
+            return Err(AuditError::new(
+                "Banded",
+                "data",
+                None,
+                format!(
+                    "storage length {} != n*(kl+ku+1) = {}*{} = {}",
+                    self.data.len(),
+                    self.n,
+                    self.kl + self.ku + 1,
+                    want
+                ),
+            ));
+        }
+        for i in 0..self.n {
+            let (lo, hi) = self.row_range(i);
+            for j in lo..hi {
+                let v = self.get(i, j);
+                if !v.is_finite() {
+                    return Err(AuditError::new(
+                        "Banded",
+                        "data",
+                        Some(i),
+                        format!("non-finite entry {v} at ({i}, {j})"),
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Audit for BandedLU {
+    /// Checks the factorization's structural story: the packed factor has the
+    /// `n / kl / kuf` shape the header claims, every pivot row lies inside
+    /// the partial-pivoting window `[k, min(k+kl, n-1)]`, the determinant
+    /// sign matches the recorded swaps, and the stored `L` multipliers obey
+    /// the threshold-pivoting bound `|m| ≤ PIVOT_THRESHOLD` (columns whose
+    /// pivot is zero or non-finite are skipped: elimination legitimately
+    /// leaves raw working values there on singular input, so `fac` is NOT
+    /// required to be finite — that is why this impl does not delegate to
+    /// `Banded::audit` on `fac`).
+    fn audit(&self) -> Result<(), AuditError> {
+        let n = self.n;
+        if self.piv.len() != n {
+            return Err(AuditError::new(
+                "BandedLU",
+                "piv",
+                None,
+                format!("pivot vector length {} != n = {}", self.piv.len(), n),
+            ));
+        }
+        if self.fac.n != n || self.fac.kl != self.kl || self.fac.ku != self.kuf {
+            return Err(AuditError::new(
+                "BandedLU",
+                "fac",
+                None,
+                format!(
+                    "factor shape ({}, kl={}, ku={}) disagrees with header (n={}, kl={}, kuf={})",
+                    self.fac.n, self.fac.kl, self.fac.ku, n, self.kl, self.kuf
+                ),
+            ));
+        }
+        let want = self.fac.n * (self.fac.kl + self.fac.ku + 1);
+        if self.fac.data.len() != want {
+            return Err(AuditError::new(
+                "BandedLU",
+                "fac",
+                None,
+                format!("factor storage length {} != {}", self.fac.data.len(), want),
+            ));
+        }
+        for k in 0..n {
+            let hi = (k + self.kl).min(n - 1);
+            if self.piv[k] < k || self.piv[k] > hi {
+                return Err(AuditError::new(
+                    "BandedLU",
+                    "piv",
+                    Some(k),
+                    format!("pivot row {} outside window [{k}, {hi}]", self.piv[k]),
+                ));
+            }
+        }
+        // Threshold partial pivoting swaps whenever the best sub-diagonal
+        // candidate exceeds PIVOT_THRESHOLD·|diag|, so surviving multipliers
+        // are bounded by the threshold (ε slack for the division rounding).
+        let bound = PIVOT_THRESHOLD * (1.0 + 1e-9);
+        for k in 0..n {
+            let pivot = self.fac.get(k, k);
+            if !pivot.is_finite() || pivot == 0.0 {
+                continue;
+            }
+            let last = (k + self.kl).min(n - 1);
+            for r in (k + 1)..=last {
+                let m = self.fac.get(r, k);
+                if m.is_finite() && m.abs() > bound {
+                    return Err(AuditError::new(
+                        "BandedLU",
+                        "multiplier",
+                        Some(k),
+                        format!("|L[{r}, {k}]| = {} exceeds pivot bound {bound}", m.abs()),
+                    ));
+                }
+            }
+        }
+        if self.sign != pivot_sign(&self.piv) {
+            return Err(AuditError::new(
+                "BandedLU",
+                "sign",
+                None,
+                format!(
+                    "determinant sign {} disagrees with pivot swap parity {}",
+                    self.sign,
+                    pivot_sign(&self.piv)
+                ),
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -1149,5 +1298,59 @@ mod tests {
                 assert!((c.get(i, j) - cd.get(i, j)).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn audit_passes_on_healthy_band_and_lu() {
+        let m = tridiag(12, -1.0, 2.5, -1.0);
+        assert!(m.audit().is_ok());
+        assert!(m.lu().audit().is_ok());
+    }
+
+    /// A clobbered band entry is pinpointed by structure, field and row.
+    #[test]
+    fn audit_flags_clobbered_band_entry() {
+        let mut m = tridiag(8, -1.0, 2.0, -1.0);
+        m.set(3, 4, f64::NAN);
+        let e = m.audit().unwrap_err();
+        assert_eq!(e.structure, "Banded");
+        assert_eq!(e.field, "data");
+        assert_eq!(e.index, Some(3));
+        assert!(e.to_string().contains("Banded.data[3]"), "{e}");
+    }
+
+    /// A pivot row outside the partial-pivoting window is pinpointed by
+    /// elimination step.
+    #[test]
+    fn audit_flags_broken_pivot_permutation() {
+        let m = tridiag(10, -1.0, 2.0, -1.0);
+        let mut lu = m.lu();
+        lu.piv[4] = 9; // far outside [4, 4 + kl]
+        let e = lu.audit().unwrap_err();
+        assert_eq!(e.structure, "BandedLU");
+        assert_eq!(e.field, "piv");
+        assert_eq!(e.index, Some(4));
+    }
+
+    /// An out-of-bound `L` multiplier (impossible under threshold pivoting)
+    /// is pinpointed by column.
+    #[test]
+    fn audit_flags_out_of_bound_multiplier() {
+        let m = tridiag(10, -1.0, 2.0, -1.0);
+        let mut lu = m.lu();
+        lu.fac.set(5, 4, 100.0);
+        let e = lu.audit().unwrap_err();
+        assert_eq!(e.structure, "BandedLU");
+        assert_eq!(e.field, "multiplier");
+        assert_eq!(e.index, Some(4));
+    }
+
+    /// Singular input leaves zero pivots (and raw working values below them);
+    /// the audit must tolerate that — only *structural* breakage is an error.
+    #[test]
+    fn audit_tolerates_singular_factorization() {
+        let m = Banded::zeros(6, 1, 1); // all-zero matrix: every pivot is 0
+        let lu = m.lu();
+        assert!(lu.audit().is_ok());
     }
 }

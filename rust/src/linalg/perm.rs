@@ -1,6 +1,8 @@
 //! Sorting permutations — the `P_d` matrices of the paper, stored as index
 //! vectors instead of explicit matrices.
 
+use crate::check::{enforce, Audit, AuditError};
+
 /// A permutation `π` of `0..n`, representing the matrix `P` with
 /// `P[i, π(i)] = 1`, i.e. `(P^T x)[i] = x[π(i)]` gathers into sorted order
 /// when `π` is the argsort of the points.
@@ -16,7 +18,7 @@ impl Permutation {
     /// Argsort permutation of `points` (increasing). `O(n log n)`.
     pub fn sorting(points: &[f64]) -> Self {
         let mut fwd: Vec<usize> = (0..points.len()).collect();
-        fwd.sort_by(|&a, &b| points[a].partial_cmp(&points[b]).unwrap());
+        fwd.sort_by(|&a, &b| points[a].total_cmp(&points[b]));
         let mut inv = vec![0usize; points.len()];
         for (s, &o) in fwd.iter().enumerate() {
             inv[o] = s;
@@ -101,6 +103,7 @@ impl Permutation {
             }
         }
         self.inv.push(sorted_pos);
+        enforce(self, "Permutation::insert");
     }
 
     /// Extend the permutation with `k` new elements in one `O(n + k)` merge:
@@ -142,6 +145,54 @@ impl Permutation {
         }
         self.fwd = fwd;
         self.inv = inv;
+        enforce(self, "Permutation::insert_batch");
+    }
+}
+
+impl Audit for Permutation {
+    /// A permutation must be a bijection of `0..n` with `inv` the exact
+    /// inverse of `fwd` — both directions are checked so a failure names the
+    /// first sorted position (field `fwd`) or original index (field `inv`)
+    /// where the round trip breaks.
+    fn audit(&self) -> Result<(), AuditError> {
+        let n = self.fwd.len();
+        if self.inv.len() != n {
+            return Err(AuditError::new(
+                "Permutation",
+                "inv",
+                None,
+                format!("inv length {} != fwd length {}", self.inv.len(), n),
+            ));
+        }
+        for (s, &o) in self.fwd.iter().enumerate() {
+            if o >= n {
+                return Err(AuditError::new(
+                    "Permutation",
+                    "fwd",
+                    Some(s),
+                    format!("original index {o} out of range for n = {n}"),
+                ));
+            }
+            if self.inv[o] != s {
+                return Err(AuditError::new(
+                    "Permutation",
+                    "fwd",
+                    Some(s),
+                    format!("inv[fwd[{s}] = {o}] = {} != {s} (not a bijection)", self.inv[o]),
+                ));
+            }
+        }
+        for (o, &s) in self.inv.iter().enumerate() {
+            if s >= n || self.fwd[s] != o {
+                return Err(AuditError::new(
+                    "Permutation",
+                    "inv",
+                    Some(o),
+                    format!("fwd[inv[{o}] = {s}] does not round-trip"),
+                ));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -223,6 +274,28 @@ mod tests {
         // Round-trip still works.
         let s = p.apply_sort(&pts);
         assert_eq!(p.to_original(&s), pts);
+    }
+
+    /// Breaking the bijection is pinpointed at the first bad sorted slot.
+    #[test]
+    fn audit_flags_broken_bijection() {
+        let mut p = Permutation::sorting(&[3.0, -1.0, 2.0, 0.5]);
+        assert!(p.audit().is_ok());
+        p.fwd[1] = p.fwd[2]; // duplicate original index: no longer a bijection
+        let e = p.audit().unwrap_err();
+        assert_eq!(e.structure, "Permutation");
+        assert_eq!(e.field, "fwd");
+        assert!(e.index == Some(1) || e.index == Some(2), "{e}");
+    }
+
+    /// A desynchronized inverse is pinpointed at the original index.
+    #[test]
+    fn audit_flags_desynced_inverse() {
+        let mut p = Permutation::sorting(&[3.0, -1.0, 2.0, 0.5]);
+        p.inv[0] = 99;
+        let e = p.audit().unwrap_err();
+        assert_eq!(e.structure, "Permutation");
+        assert!(e.to_string().contains("Permutation."), "{e}");
     }
 
     #[test]

@@ -20,10 +20,16 @@
 //!   to the thread that compiled them — are submitted with
 //!   [`WorkerPool::spawn_pinned`] and are never stolen.
 //!
-//! The offline image ships no rayon/tokio; both substrates are std-only.
+//! The offline image ships no rayon/tokio; both substrates are std-only —
+//! and deliberately `unsafe`-free: scoped threads plus `split_at_mut` give
+//! the borrow splits that would otherwise tempt raw-pointer chunking (any
+//! future `unsafe` must carry a `// SAFETY:` comment; `cargo xtask lint`
+//! enforces that repo-wide).
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::check::{Audit, AuditError};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -52,7 +58,7 @@ where
     if threads <= 1 || n <= 1 {
         return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
     }
-    let chunk = (n + threads - 1) / threads;
+    let chunk = n.div_ceil(threads);
     let mut out: Vec<Option<R>> = Vec::with_capacity(n);
     out.resize_with(n, || None);
     let fref = &f;
@@ -116,6 +122,10 @@ struct Queues {
 struct PoolShared {
     q: Mutex<Queues>,
     cv: Condvar,
+    /// Jobs accepted into the queues over the pool's lifetime — bumped under
+    /// the queue lock so the audit's accounting identity
+    /// (`enqueued == executed + queued + in-flight`) is exactly checkable.
+    enqueued: AtomicU64,
     running: AtomicU64,
     executed: AtomicU64,
     steals: AtomicU64,
@@ -154,6 +164,7 @@ impl WorkerPool {
                 shutdown: false,
             }),
             cv: Condvar::new(),
+            enqueued: AtomicU64::new(0),
             running: AtomicU64::new(0),
             executed: AtomicU64::new(0),
             steals: AtomicU64::new(0),
@@ -186,6 +197,7 @@ impl WorkerPool {
             let slot = q.next % self.workers;
             q.next = q.next.wrapping_add(1);
             q.local[slot].push_back(job);
+            self.shared.enqueued.fetch_add(1, Ordering::Relaxed);
         }
         self.shared.cv.notify_all();
         true
@@ -201,6 +213,7 @@ impl WorkerPool {
                 return false;
             }
             q.pinned[w].push_back(job);
+            self.shared.enqueued.fetch_add(1, Ordering::Relaxed);
         }
         self.shared.cv.notify_all();
         true
@@ -244,6 +257,76 @@ impl WorkerPool {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         self.shutdown();
+    }
+}
+
+impl Audit for WorkerPool {
+    /// Queue accounting, checked under the queue lock so the counters are a
+    /// consistent snapshot: holding the lock freezes both admissions
+    /// (`enqueued` bumps) and removals (worker pops), leaving only
+    /// completions racing — and those only shrink the in-flight residue.
+    /// The invariants are therefore exact, not heuristics:
+    ///
+    /// * `executed + queued ≤ enqueued` — nothing executes or waits that was
+    ///   never admitted;
+    /// * `enqueued − queued − executed ≤ workers` — at most one popped-but-
+    ///   uncounted job per worker;
+    /// * `running ≤ workers`, and the per-worker queue vectors match the
+    ///   fixed worker count.
+    fn audit(&self) -> Result<(), AuditError> {
+        let q = match self.shared.q.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if q.pinned.len() != self.workers || q.local.len() != self.workers {
+            return Err(AuditError::new(
+                "WorkerPool",
+                "q",
+                None,
+                format!(
+                    "queue vectors (pinned {}, local {}) disagree with {} workers",
+                    q.pinned.len(),
+                    q.local.len(),
+                    self.workers
+                ),
+            ));
+        }
+        let queued = (q.pinned.iter().map(|d| d.len()).sum::<usize>()
+            + q.local.iter().map(|d| d.len()).sum::<usize>()) as u64;
+        let enqueued = self.shared.enqueued.load(Ordering::Relaxed);
+        let executed = self.shared.executed.load(Ordering::Relaxed);
+        if executed + queued > enqueued {
+            return Err(AuditError::new(
+                "WorkerPool",
+                "enqueued",
+                None,
+                format!(
+                    "accounting broken: executed {executed} + queued {queued} > enqueued {enqueued}"
+                ),
+            ));
+        }
+        let in_flight = enqueued - queued - executed;
+        if in_flight > self.workers as u64 {
+            return Err(AuditError::new(
+                "WorkerPool",
+                "enqueued",
+                None,
+                format!(
+                    "{in_flight} in-flight jobs exceed the {} workers that could hold them",
+                    self.workers
+                ),
+            ));
+        }
+        let running = self.shared.running.load(Ordering::Relaxed);
+        if running > self.workers as u64 {
+            return Err(AuditError::new(
+                "WorkerPool",
+                "running",
+                None,
+                format!("{running} running jobs on {} workers", self.workers),
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -375,6 +458,41 @@ mod tests {
         assert_eq!(seen.len(), 40);
         // Both workers participated (stealing or round-robin placement).
         assert!(seen.contains(&0) && seen.contains(&1));
+    }
+
+    /// The queue-accounting audit holds while jobs are in flight and after
+    /// a drain-and-join shutdown.
+    #[test]
+    fn audit_holds_under_load_and_after_shutdown() {
+        let pool = WorkerPool::new(3);
+        for i in 0..60 {
+            pool.spawn(Box::new(move |_| {
+                if i % 9 == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+            }));
+            if i % 10 == 0 {
+                assert!(pool.audit().is_ok(), "audit mid-flight (i={i})");
+            }
+        }
+        pool.shutdown();
+        assert!(pool.audit().is_ok(), "audit after shutdown");
+        assert_eq!(pool.stats().executed, 60);
+    }
+
+    /// Tampering with the admission counter breaks the accounting identity
+    /// and is named as such.
+    #[test]
+    fn audit_flags_broken_queue_accounting() {
+        let pool = WorkerPool::new(2);
+        for _ in 0..10 {
+            pool.spawn(Box::new(|_| {}));
+        }
+        pool.shutdown(); // drains: queued = 0, executed = enqueued = 10
+        pool.shared.enqueued.store(3, Ordering::Relaxed); // executed > enqueued
+        let e = pool.audit().unwrap_err();
+        assert_eq!(e.structure, "WorkerPool");
+        assert_eq!(e.field, "enqueued");
     }
 
     #[test]

@@ -1,0 +1,83 @@
+//! Cross-op structural-audit soak (ISSUE 6, satellite 3): a ~1k-step
+//! random interleaving of `observe`, `observe_batch`, `predict` and
+//! periodic `optimize_hypers`, running the full structure-tree audit after
+//! every step. The per-structure corruption tests (in each module) prove
+//! the audits *can* fire; this test proves the real mutation paths never
+//! make them fire — across buffered → activated → incrementally-patched →
+//! re-trained lifecycles and every interleaving in between.
+//!
+//! Runs identically with and without `--features strict-invariants`; with
+//! the feature on, the in-op `enforce` hooks audit a second time from
+//! inside each mutation, so a violation is attributed to the op that
+//! caused it rather than the op after.
+
+use addgp::gp::model::{AdditiveGP, AdditiveGpConfig};
+use addgp::gp::train::TrainCfg;
+use addgp::kernels::matern::Nu;
+use addgp::util::Rng;
+
+#[test]
+fn random_interleaving_keeps_every_invariant() {
+    let mut cfg = AdditiveGpConfig::default();
+    cfg.nu = Nu::ThreeHalves;
+    cfg.omega0 = 0.9;
+    cfg.sigma2_y = 0.4;
+    let d = 2;
+    let mut gp = AdditiveGP::new(cfg, d);
+    let mut rng = Rng::new(0xA0D17);
+
+    let target = |x: &[f64]| -> f64 { x[0].sin() + (0.7 * x[1]).cos() };
+
+    let mut audits = 0u64;
+    for it in 0..1000usize {
+        if it > 0 && it % 50 == 0 && gp.n() >= gp.min_points() {
+            // Periodic hyperparameter training: refits every factorization.
+            let tcfg = TrainCfg { steps: 2, ..TrainCfg::default() };
+            let _ = gp.optimize_hypers(&tcfg);
+        } else {
+            let roll = rng.uniform_in(0.0, 1.0);
+            if roll < 0.65 {
+                // Single-point incremental insert (window patch / resweep).
+                let x = vec![rng.uniform_in(-2.0, 3.0), rng.uniform_in(-2.0, 3.0)];
+                let y = target(&x) + 0.05 * rng.normal();
+                gp.observe(&x, y);
+            } else if roll < 0.95 {
+                // Batched insert, 1..=4 points (buffered / incremental /
+                // refit path chosen by the model).
+                let k = 1 + (rng.uniform_in(0.0, 4.0) as usize).min(3);
+                let xs: Vec<Vec<f64>> = (0..k)
+                    .map(|_| vec![rng.uniform_in(-2.0, 3.0), rng.uniform_in(-2.0, 3.0)])
+                    .collect();
+                let ys: Vec<f64> =
+                    xs.iter().map(|x| target(x) + 0.05 * rng.normal()).collect();
+                let _ = gp.observe_batch(&xs, &ys);
+            } else if gp.n() >= gp.min_points() {
+                // Read op (active models only — predict requires the
+                // factorizations): exercises the M̃ cache (column
+                // materialization, remapping and truncation) between
+                // mutations.
+                let q = vec![rng.uniform_in(-2.0, 3.0), rng.uniform_in(-2.0, 3.0)];
+                let _ = gp.predict(&q, it % 2 == 0);
+            }
+        }
+        let (structures, verdict) = gp.run_audit();
+        assert!(
+            verdict.is_ok(),
+            "iteration {it}: audit failed after interleaved ops: {:?}",
+            verdict
+        );
+        assert!(structures >= 2, "iteration {it}: walked only {structures} structures");
+        audits += structures;
+    }
+
+    // By now the model is long past activation: the façade (2) plus
+    // FitState (1) plus both per-dimension factor stacks (11 each) must all
+    // have been walked on the final audit.
+    let (structures, verdict) = gp.run_audit();
+    assert!(verdict.is_ok(), "final audit: {verdict:?}");
+    assert!(
+        structures >= 2 + 1 + 2 * 11,
+        "active 2-dim model should walk ≥25 structures, got {structures}"
+    );
+    assert!(audits > 10_000, "audit soak should cover many structure walks");
+}

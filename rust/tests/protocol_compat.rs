@@ -83,6 +83,9 @@ fn request_fit_predict_suggest_stats_shutdown() {
 
     let (r, _) = Request::parse(r#"{"op":"stats","model":1}"#).unwrap();
     assert_eq!(r, Request::Stats { model: 1 });
+    let (r, _) = Request::parse(r#"{"op":"audit","model":5}"#).unwrap();
+    assert_eq!(r, Request::Audit { model: 5 });
+    assert!(Request::parse(r#"{"op":"audit"}"#).is_err(), "audit requires model");
     let (r, _) = Request::parse(r#"{"op":"shutdown"}"#).unwrap();
     assert_eq!(r, Request::Shutdown);
 }
@@ -182,6 +185,8 @@ fn response_stats_with_pool_fields() {
             native_queries: 21,
             factor_patches: 90,
             factor_resweeps: 2,
+            cache_truncations: 1,
+            fallback_rebuilds: 0,
             pool_workers: 8,
             pool_busy: 3,
             pool_queue_depth: 5,
@@ -191,6 +196,29 @@ fn response_stats_with_pool_fields() {
         r#"{"id":2,"ok":true,"n":1000,"d":4,"omegas":[1,0.5,2,1.5],
             "cache_hits":10,"cache_misses":3,"pjrt_batches":7,"native_queries":21,
             "factor_patches":90,"factor_resweeps":2,
+            "cache_truncations":1,"fallback_rebuilds":0,
             "pool_workers":8,"pool_busy":3,"pool_queue_depth":5,"pool_steals":17}"#,
+    );
+}
+
+/// The audit report surface (structural invariant audit, ISSUE 6): the
+/// pass/fail flag, the deterministic walked-structure count, and the
+/// violation rendered as `Structure.field[index]: detail` (empty on pass).
+#[test]
+fn response_audit_report() {
+    pin_response(
+        Response::AuditReport { passed: true, structures: 25, violation: String::new() },
+        Some(6.0),
+        r#"{"id":6,"ok":true,"passed":true,"structures":25,"violation":""}"#,
+    );
+    pin_response(
+        Response::AuditReport {
+            passed: false,
+            structures: 25,
+            violation: "Banded.data[3]: non-finite entry".into(),
+        },
+        None,
+        r#"{"ok":true,"passed":false,"structures":25,
+            "violation":"Banded.data[3]: non-finite entry"}"#,
     );
 }

@@ -1,0 +1,600 @@
+//! Repo-specific static analysis (`cargo xtask lint`) and miri wiring
+//! (`cargo xtask miri`). Zero dependencies: every lint is a line-level
+//! scanner over the source tree, so the gate runs on the offline CI image
+//! with nothing but the stock toolchain.
+//!
+//! Lints (each failure prints a `file:line` finding and fails the run):
+//!
+//! 1. **no-unwrap** — no `.unwrap()` / `.expect(` in non-test
+//!    `rust/src/coordinator/` code. The serving layer must degrade (error
+//!    replies, `lock_clean`, let-else), never panic a pool worker.
+//! 2. **hot-loop-asserts** — the DESIGN.md §Perf hot loops must carry an
+//!    `assert!`/`debug_assert!` when they index slices, making the bounds
+//!    contract explicit (and bounds-check elision auditable).
+//! 3. **hashmap-order** — no `.iter()`/`.keys()`/`.values()`/`.drain(` on a
+//!    `HashMap`/`HashSet`-typed name: nondeterministic iteration order
+//!    feeding arithmetic is the classic run-to-run irreproducibility
+//!    hazard in this codebase. Intentional order-independent sites are
+//!    annotated `// lint: hashmap-order-ok` on the line or within the
+//!    three lines above.
+//! 4. **feature-gate** — `rust/Cargo.toml` declares `strict-invariants`,
+//!    and library code (`rust/src`) gates audits with the *attribute* form
+//!    only; runtime `cfg!(feature = "strict-invariants")` branching is
+//!    banned there so release hot paths carry no residue (benches may use
+//!    it to assert the feature is off).
+//! 5. **unsafe-safety** — any `unsafe` token in the `addgp` crate needs a
+//!    `// SAFETY:` comment within the three preceding lines. The crate is
+//!    currently `unsafe`-free (see `util/pool.rs`); this keeps any future
+//!    exception documented at the point of use.
+//!
+//! The scanners are deliberately string/line-based, not syn-based: they are
+//! auditable in a glance, dependency-free, and err toward *not* flagging
+//! (string and comment contents are stripped before matching).
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("lint") => lint(),
+        Some("miri") => miri(),
+        other => {
+            eprintln!("usage: cargo xtask <lint|miri>  (got {other:?})");
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// The repo root (xtask lives one level below it).
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask sits one level under the repo root")
+        .to_path_buf()
+}
+
+/// Recursively collect `.rs` files, sorted for deterministic reports.
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    let mut paths: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+    paths.sort();
+    for path in paths {
+        if path.is_dir() {
+            rust_files(&path, out);
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+}
+
+fn read_rel(root: &Path, path: &Path) -> (String, String) {
+    let name = path.strip_prefix(root).unwrap_or(path).display().to_string();
+    let src = std::fs::read_to_string(path).unwrap_or_default();
+    (name, src)
+}
+
+/// The code portion of one line: string-literal and char-literal contents
+/// removed, everything from `//` on dropped. Line-level only — multi-line
+/// string bodies can leak through, which errs toward not flagging.
+fn code_only(line: &str) -> String {
+    let b: Vec<char> = line.chars().collect();
+    let mut out = String::new();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c == '"' {
+            out.push('"');
+            i += 1;
+            while i < b.len() {
+                if b[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '"' {
+                    break;
+                }
+                i += 1;
+            }
+            out.push('"');
+            i += 1;
+            continue;
+        }
+        if c == '\'' {
+            // Char literal ('x', '\n') closes with a nearby quote; a
+            // lifetime ('a) never does — fall through for lifetimes.
+            let mut j = i + 1;
+            if j < b.len() && b[j] == '\\' {
+                j += 1;
+                while j < b.len() && b[j] != '\'' {
+                    j += 1;
+                }
+            } else if j < b.len() {
+                j += 1;
+            }
+            if j < b.len() && b[j] == '\'' {
+                out.push_str("' '");
+                i = j + 1;
+                continue;
+            }
+            out.push(c);
+            i += 1;
+            continue;
+        }
+        if c == '/' && i + 1 < b.len() && b[i + 1] == '/' {
+            break;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+/// Mark every line covered by a `#[cfg(test)]`-gated item (the whole
+/// brace-balanced region, or up to the `;` for brace-less items).
+fn test_region_mask(lines: &[&str]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        if !lines[i].trim_start().starts_with("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0usize;
+        let mut opened = false;
+        let mut j = i;
+        while j < lines.len() {
+            mask[j] = true;
+            let code = code_only(lines[j]);
+            for c in code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth = depth.saturating_sub(1),
+                    _ => {}
+                }
+            }
+            if opened && depth == 0 {
+                break;
+            }
+            if !opened && code.contains(';') {
+                break; // brace-less gated item (use/const/…)
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+/// Whether `code` (already string-stripped) actually *indexes* — a `[`
+/// directly after an identifier, `)` or `]` — as opposed to slice types
+/// (`&[f64]`), attributes (`#[...]`) or `vec![...]`.
+fn has_indexing(code: &str) -> bool {
+    let b: Vec<char> = code.chars().collect();
+    for i in 1..b.len() {
+        if b[i] == '[' {
+            let p = b[i - 1];
+            if p.is_alphanumeric() || p == '_' || p == ')' || p == ']' {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Find `word` in `code` at identifier boundaries.
+fn find_word(code: &str, word: &str) -> Option<usize> {
+    let b: Vec<char> = code.chars().collect();
+    let w: Vec<char> = word.chars().collect();
+    if w.is_empty() || b.len() < w.len() {
+        return None;
+    }
+    for i in 0..=(b.len() - w.len()) {
+        if b[i..i + w.len()] != w[..] {
+            continue;
+        }
+        let before_ok = i == 0 || !(b[i - 1].is_alphanumeric() || b[i - 1] == '_');
+        let after = i + w.len();
+        let after_ok = after >= b.len() || !(b[after].is_alphanumeric() || b[after] == '_');
+        if before_ok && after_ok {
+            return Some(i);
+        }
+    }
+    None
+}
+
+/// Lint 1: `.unwrap()` / `.expect(` outside test regions.
+fn scan_no_unwrap(name: &str, src: &str) -> Vec<String> {
+    let lines: Vec<&str> = src.lines().collect();
+    let mask = test_region_mask(&lines);
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        let code = code_only(line);
+        if code.contains(".unwrap()") || code.contains(".expect(") {
+            out.push(format!(
+                "{name}:{}: `.unwrap()`/`.expect(` in coordinator non-test code — \
+                 degrade with lock_clean / let-else / an error reply instead",
+                i + 1
+            ));
+        }
+    }
+    out
+}
+
+/// Lint 2: each named hot-loop fn must pair slice indexing with an assert.
+fn scan_hot_loop(name: &str, src: &str, fns: &[&str]) -> Vec<String> {
+    let lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    for fname in fns {
+        let needle = format!("fn {fname}(");
+        let Some(start) = lines.iter().position(|l| l.contains(&needle)) else {
+            out.push(format!(
+                "{name}: hot-loop fn `{fname}` not found — renamed? update \
+                 xtask's HOT_LOOPS list alongside DESIGN.md §Perf"
+            ));
+            continue;
+        };
+        let mut depth = 0usize;
+        let mut opened = false;
+        let mut body = String::new();
+        for line in lines.iter().skip(start) {
+            let code = code_only(line);
+            for c in code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth = depth.saturating_sub(1),
+                    _ => {}
+                }
+            }
+            body.push_str(&code);
+            body.push('\n');
+            if opened && depth == 0 {
+                break;
+            }
+        }
+        if has_indexing(&body) && !body.contains("assert") {
+            out.push(format!(
+                "{name}:{}: hot loop `{fname}` indexes slices with no \
+                 assert!/debug_assert! bounds contract (DESIGN.md §Perf)",
+                start + 1
+            ));
+        }
+    }
+    out
+}
+
+/// Lint 3: iteration over HashMap/HashSet-typed names without suppression.
+fn scan_hashmap_order(name: &str, src: &str) -> Vec<String> {
+    let lines: Vec<&str> = src.lines().collect();
+    let mask = test_region_mask(&lines);
+    // Pass 1: names declared with a hash-collection type in this file
+    // (let-bindings, struct fields, statics).
+    let mut names: Vec<String> = Vec::new();
+    for line in &lines {
+        let code = code_only(line);
+        let hashy = ["HashMap<", "HashSet<", "HashMap::new", "HashSet::new",
+            "HashMap::with_capacity", "HashSet::with_capacity"]
+            .iter()
+            .any(|p| code.contains(p));
+        if !hashy {
+            continue;
+        }
+        let t = code.trim_start();
+        let decl = if let Some(rest) = t.strip_prefix("let mut ") {
+            Some(rest)
+        } else if let Some(rest) = t.strip_prefix("let ") {
+            Some(rest)
+        } else if t.contains(':') && !t.starts_with("use ") {
+            Some(
+                t.trim_start_matches("pub(crate) ")
+                    .trim_start_matches("pub ")
+                    .trim_start_matches("static ")
+                    .trim_start_matches("mut "),
+            )
+        } else {
+            None
+        };
+        if let Some(rest) = decl {
+            let ident: String = rest
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            if !ident.is_empty() && !names.contains(&ident) {
+                names.push(ident);
+            }
+        }
+    }
+    // Pass 2: order-sensitive method calls on those names.
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        let code = code_only(line);
+        for m in [".iter()", ".keys()", ".values()", ".drain("] {
+            let Some(pos) = code.find(m) else {
+                continue;
+            };
+            let head: Vec<char> = code[..pos].chars().collect();
+            let mut j = head.len();
+            while j > 0 && (head[j - 1].is_alphanumeric() || head[j - 1] == '_') {
+                j -= 1;
+            }
+            let recv: String = head[j..].iter().collect();
+            if recv.is_empty() || !names.iter().any(|n| n == &recv) {
+                continue;
+            }
+            let suppressed = (i.saturating_sub(3)..=i)
+                .any(|k| lines[k].contains("lint: hashmap-order-ok"));
+            if !suppressed {
+                out.push(format!(
+                    "{name}:{}: iteration over HashMap/HashSet `{recv}` is \
+                     order-nondeterministic — sort first, or annotate \
+                     `// lint: hashmap-order-ok` if provably order-independent",
+                    i + 1
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Lint 4: feature declaration + no runtime feature branching in rust/src.
+fn scan_feature_gate(manifest: &str, files: &[(String, String)]) -> Vec<String> {
+    let mut out = Vec::new();
+    if !manifest.contains("strict-invariants") {
+        out.push(
+            "rust/Cargo.toml: missing the `strict-invariants = []` feature declaration"
+                .to_string(),
+        );
+    }
+    for (name, src) in files {
+        let lines: Vec<&str> = src.lines().collect();
+        let mask = test_region_mask(&lines);
+        for (i, line) in lines.iter().enumerate() {
+            if mask[i] {
+                continue;
+            }
+            let code = code_only(line);
+            if code.contains("cfg!(feature = ") && line.contains("strict-invariants") {
+                out.push(format!(
+                    "{name}:{}: runtime `cfg!(feature = \"strict-invariants\")` \
+                     branching in library code — use the attribute form so release \
+                     builds carry no branch",
+                    i + 1
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Lint 5: `unsafe` requires a nearby `// SAFETY:` comment.
+fn scan_unsafe_safety(name: &str, src: &str) -> Vec<String> {
+    let lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        let code = code_only(line);
+        if find_word(&code, "unsafe").is_none() {
+            continue;
+        }
+        let documented =
+            (i.saturating_sub(3)..=i).any(|k| lines[k].contains("SAFETY:"));
+        if !documented {
+            out.push(format!(
+                "{name}:{}: `unsafe` without a `// SAFETY:` comment within the \
+                 three preceding lines",
+                i + 1
+            ));
+        }
+    }
+    out
+}
+
+/// The DESIGN.md §Perf hot loops whose bounds contracts lint 2 enforces.
+/// Keep in sync with the DESIGN.md section — a rename lands here too (the
+/// scanner treats a missing fn as a finding, so drift is loud).
+const HOT_LOOPS: &[(&str, &[&str])] = &[
+    ("rust/src/linalg/banded.rs", &["solve_in_place", "matvec_into"]),
+    ("rust/src/linalg/perm.rs", &["to_sorted_into", "to_original_into"]),
+    ("rust/src/gp/backfit.rs", &["apply_into", "precond_into"]),
+    ("rust/src/gp/dim.rs", &["kinv_sorted_into", "gs_block_solve_sorted_into"]),
+    ("rust/src/gp/likelihood.rs", &["r_matvec_into"]),
+];
+
+fn lint() -> ExitCode {
+    let root = repo_root();
+    let rust = root.join("rust");
+    let mut findings: Vec<String> = Vec::new();
+
+    // 1. Coordinator unwrap ban (every .rs under the directory, mod-tree
+    // member or not — so a stray seeded file is caught too).
+    let mut coord = Vec::new();
+    rust_files(&rust.join("src").join("coordinator"), &mut coord);
+    for path in &coord {
+        let (name, src) = read_rel(&root, path);
+        findings.extend(scan_no_unwrap(&name, &src));
+    }
+
+    // 2. Hot-loop assertion coverage.
+    for &(rel, fns) in HOT_LOOPS {
+        match std::fs::read_to_string(root.join(rel)) {
+            Ok(src) => findings.extend(scan_hot_loop(rel, &src, fns)),
+            Err(e) => findings.push(format!("{rel}: unreadable ({e})")),
+        }
+    }
+
+    // 3 + 4. Library sources: hashmap-order + feature-gate hygiene.
+    let mut src_files = Vec::new();
+    rust_files(&rust.join("src"), &mut src_files);
+    let mut lib_sources: Vec<(String, String)> = Vec::new();
+    for path in &src_files {
+        let (name, src) = read_rel(&root, path);
+        findings.extend(scan_hashmap_order(&name, &src));
+        lib_sources.push((name, src));
+    }
+    let manifest =
+        std::fs::read_to_string(rust.join("Cargo.toml")).unwrap_or_default();
+    findings.extend(scan_feature_gate(&manifest, &lib_sources));
+
+    // 5. SAFETY comments, crate-wide (src + tests + benches + examples).
+    let mut all_rust = Vec::new();
+    rust_files(&rust, &mut all_rust);
+    for path in &all_rust {
+        let (name, src) = read_rel(&root, path);
+        findings.extend(scan_unsafe_safety(&name, &src));
+    }
+
+    if findings.is_empty() {
+        println!("xtask lint: clean ({} files scanned)", all_rust.len());
+        ExitCode::SUCCESS
+    } else {
+        for f in &findings {
+            eprintln!("lint: {f}");
+        }
+        eprintln!("xtask lint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}
+
+/// `cargo xtask miri`: the pointer-heavy unit suites (banded storage,
+/// permutations, KP packet solves) under miri. Nightly-only; CI runs this
+/// in the scheduled job with the miri component installed.
+fn miri() -> ExitCode {
+    for filter in ["linalg::", "kernels::"] {
+        let status = std::process::Command::new("cargo")
+            .args(["+nightly", "miri", "test", "-p", "addgp", "--lib", filter])
+            .current_dir(repo_root())
+            .status();
+        match status {
+            Ok(s) if s.success() => println!("miri: {filter} suites clean"),
+            Ok(s) => {
+                eprintln!("miri: `cargo +nightly miri test --lib {filter}` failed: {s}");
+                return ExitCode::FAILURE;
+            }
+            Err(e) => {
+                eprintln!(
+                    "miri: could not launch cargo ({e}); install nightly with the \
+                     miri component (`rustup +nightly component add miri`)"
+                );
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    ExitCode::SUCCESS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn code_only_strips_strings_and_comments() {
+        assert_eq!(code_only("let x = 1; // .unwrap() here is prose"), "let x = 1; ");
+        let s = code_only(r#"let s = "contains .unwrap() and { braces }";"#);
+        assert!(!s.contains(".unwrap()"), "{s}");
+        assert!(!s.contains('{'), "{s}");
+        let c = code_only("if ch == '{' { depth += 1; }");
+        assert_eq!(c.matches('{').count(), 1, "char literal brace stripped: {c}");
+        // Lifetimes survive untouched.
+        assert_eq!(code_only("fn f<'a>(x: &'a str) {}"), "fn f<'a>(x: &'a str) {}");
+    }
+
+    #[test]
+    fn test_mask_covers_gated_mod_and_braceless_items() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { maybe().unwrap(); }\n}\nfn live2() {}\n";
+        let lines: Vec<&str> = src.lines().collect();
+        let mask = test_region_mask(&lines);
+        assert_eq!(mask, vec![false, true, true, true, true, false]);
+        let src2 = "#[cfg(test)]\nuse foo::bar;\nfn live() {}\n";
+        let lines2: Vec<&str> = src2.lines().collect();
+        assert_eq!(test_region_mask(&lines2), vec![true, true, false]);
+    }
+
+    #[test]
+    fn unwrap_scanner_skips_tests_and_comments() {
+        let clean = "fn serve() {\n    let g = lock_clean(&m);\n    // a comment saying .unwrap() is fine\n}\n#[cfg(test)]\nmod tests {\n    fn t() { maybe().unwrap(); }\n}\n";
+        assert!(scan_no_unwrap("f.rs", clean).is_empty());
+        let bad = "fn serve() {\n    let v = maybe().unwrap();\n}\n";
+        let f = scan_no_unwrap("f.rs", bad);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].starts_with("f.rs:2:"), "{}", f[0]);
+        let bad2 = "fn serve() {\n    let v = maybe().expect(\"x\");\n}\n";
+        assert_eq!(scan_no_unwrap("f.rs", bad2).len(), 1);
+        let or_else = "fn serve() {\n    let v = maybe().unwrap_or(3);\n}\n";
+        assert!(scan_no_unwrap("f.rs", or_else).is_empty(), "unwrap_or is fine");
+    }
+
+    #[test]
+    fn hot_loop_scanner_requires_asserts_only_when_indexing() {
+        let with = "pub fn f(x: &[f64]) {\n    assert_eq!(x.len(), 2);\n    let y = x[0];\n    let _ = y;\n}\n";
+        assert!(scan_hot_loop("f.rs", with, &["f"]).is_empty());
+        let without = "pub fn f(x: &[f64]) {\n    let y = x[0] + x[1];\n    let _ = y;\n}\n";
+        assert_eq!(scan_hot_loop("f.rs", without, &["f"]).len(), 1);
+        let delegating = "pub fn f(x: &[f64], out: &mut [f64]) {\n    helper(x, out);\n}\n";
+        assert!(
+            scan_hot_loop("f.rs", delegating, &["f"]).is_empty(),
+            "slice types alone are not indexing"
+        );
+        let missing = scan_hot_loop("f.rs", with, &["gone"]);
+        assert_eq!(missing.len(), 1, "a renamed-away fn must be loud");
+        assert!(missing[0].contains("not found"));
+    }
+
+    #[test]
+    fn hashmap_scanner_tracks_names_and_suppressions() {
+        let bad = "struct S {\n    cols: HashMap<u64, f64>,\n}\nfn f(s: &S, v: &Vec<u64>) {\n    for x in s.cols.iter() { use_(x); }\n    for y in v.iter() { use_(y); }\n}\n";
+        let f = scan_hashmap_order("f.rs", bad);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].contains("`cols`"), "{}", f[0]);
+        let suppressed = "struct S {\n    cols: HashMap<u64, f64>,\n}\nfn f(s: &S) {\n    // sorted right after. lint: hashmap-order-ok\n    let mut v: Vec<_> = s.cols.iter().collect();\n    v.sort();\n}\n";
+        assert!(scan_hashmap_order("f.rs", suppressed).is_empty());
+        let local = "fn f() {\n    let mut seen = HashSet::new();\n    for k in seen.drain() { use_(k); }\n}\n";
+        assert_eq!(scan_hashmap_order("f.rs", local).len(), 1);
+        let vec_ok = "fn f(order: &Vec<u64>) {\n    for k in order.iter() { use_(k); }\n}\n";
+        assert!(scan_hashmap_order("f.rs", vec_ok).is_empty(), "non-hash names pass");
+    }
+
+    #[test]
+    fn feature_gate_scanner() {
+        let manifest = "[features]\nstrict-invariants = []\n";
+        let attr = vec![(
+            "a.rs".to_string(),
+            "#[cfg(feature = \"strict-invariants\")]\nfn audit_hook() {}\n".to_string(),
+        )];
+        assert!(scan_feature_gate(manifest, &attr).is_empty(), "attribute form allowed");
+        let runtime = vec![(
+            "a.rs".to_string(),
+            "fn f() { if cfg!(feature = \"strict-invariants\") { audit(); } }\n".to_string(),
+        )];
+        assert_eq!(scan_feature_gate(manifest, &runtime).len(), 1);
+        assert_eq!(
+            scan_feature_gate("[features]\nother = []\n", &attr).len(),
+            1,
+            "missing declaration is a finding"
+        );
+    }
+
+    #[test]
+    fn unsafe_scanner_requires_safety_comment() {
+        let bad = "fn f(ptr: *const u8) {\n    let p = unsafe { *ptr };\n    let _ = p;\n}\n";
+        assert_eq!(scan_unsafe_safety("f.rs", bad).len(), 1);
+        let good = "fn f(ptr: *const u8) {\n    // SAFETY: ptr is valid for the call's duration.\n    let p = unsafe { *ptr };\n    let _ = p;\n}\n";
+        assert!(scan_unsafe_safety("f.rs", good).is_empty());
+        let prose = "/// This crate avoids unsafe code entirely.\nfn f() {}\n";
+        assert!(scan_unsafe_safety("f.rs", prose).is_empty(), "doc prose is stripped");
+        let ident = "fn f() { forbid_unsafe_code(); }\n";
+        assert!(scan_unsafe_safety("f.rs", ident).is_empty(), "word boundary respected");
+    }
+}
