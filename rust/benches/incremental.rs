@@ -36,6 +36,19 @@
 //! throughput ≥ min(3, 0.75·W)× the serialized baseline — 3× on the
 //! 4-vCPU CI runner, proportionally less on smaller hosts.
 //!
+//! A sixth comparison benchmarks the **chunked-COW band storage** on a
+//! single-dimension model (so `n` is the band length), at n = 10k *and*
+//! n = 100k — the 100k leg runs even under `--smoke` because sublinearity
+//! only shows at scale. Two measurements feed the `snapshot` and `memmove`
+//! JSON sections and two gates: (a) the steady-state `read_snapshot` build
+//! (a reference bump over clean Arc-shared chunks) against the **linear
+//! deep materialization** of the same eight band ropes into fresh flat
+//! `Vec<f64>`s — the old per-generation clone cost — which must be ≥ 5×
+//! slower at n = 100k; (b) the mean per-observe splice `memmove_bytes`
+//! (from the model's own storage counters, K = 32 interior observes),
+//! which must stay within 3× of the 10k figure plus one straddled-chunk
+//! allowance per band (`O(ν·chunk)`, not `O(nν)`).
+//!
 //! `--smoke` halves the per-point repetitions (the size list already stops
 //! at the gated n = 10k without `--full`); `--json PATH` writes the
 //! measurements as one JSON object (the CI `bench-smoke` job uploads it as
@@ -43,17 +56,18 @@
 //! `--gate` exits non-zero unless, at n = 10k, observe-per-point beats
 //! refit-per-point, `observe_batch(m=64)` beats 64 sequential observes,
 //! *and* the append-path patched factor update beats the full re-sweep —
-//! all by ≥ 5× (plus the pool gate when `--multi-model` ran). The JSON is
-//! written *before* the gate verdict so a failing run still uploads its
-//! numbers.
+//! all by ≥ 5× (plus the pool gate when `--multi-model` ran, and the two
+//! storage gates above, always). The JSON is written *before* the gate
+//! verdict so a failing run still uploads its numbers.
 
 use std::time::Instant;
 
 use addgp::coordinator::protocol::Response;
 use addgp::coordinator::{Command, EngineConfig, Scheduler};
 use addgp::gp::model::{AdditiveGP, AdditiveGpConfig, BatchPath};
+use addgp::gp::DimFactor;
 use addgp::kernels::matern::Nu;
-use addgp::linalg::PatchPolicy;
+use addgp::linalg::{Banded, PatchPolicy, MAX_CHUNK_ROWS};
 use addgp::util::{pool, Json, Rng};
 
 /// Gate thresholds (ISSUE 3 + ISSUE 4 acceptance criteria).
@@ -64,6 +78,12 @@ const BATCH_M: usize = 64;
 const POOL_MODELS: usize = 8;
 const POOL_ROUNDS: usize = 30;
 const POOL_GATE_SPEEDUP: f64 = 3.0;
+/// Chunked-COW storage bench shape: sizes (the 100k leg runs even under
+/// `--smoke`), the large-n gate point, and the interior-observe sample
+/// count behind the mean per-observe `memmove_bytes`.
+const STORAGE_SIZES: [usize; 2] = [10_000, 100_000];
+const STORAGE_GATE_N: usize = 100_000;
+const STORAGE_OBS_K: usize = 32;
 
 fn data(n: usize, d: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
     let mut rng = Rng::new(seed);
@@ -439,6 +459,128 @@ fn measure_multi_model(n: usize, d: usize) -> PoolBench {
     PoolBench { n, workers, pool_s, serialized_s }
 }
 
+/// Every band rope one `DimFactor` holds — the storage surface a posterior
+/// snapshot used to deep-copy per generation.
+fn band_ropes(dim: &DimFactor) -> [&Banded; 8] {
+    [
+        &dim.kp.a,
+        &dim.kp.phi,
+        &dim.t,
+        &dim.phit,
+        dim.t_lu.fac_band(),
+        dim.phi_lu.fac_band(),
+        dim.phit_lu.fac_band(),
+        dim.a_lu.fac_band(),
+    ]
+}
+
+/// Deep-materialize every band rope into a fresh flat `Vec<f64>` — the old
+/// per-generation snapshot cost (one `O(n·ν)` copy per band), timed as the
+/// baseline the reference-bump build is gated against. Returns the bytes
+/// copied.
+fn deep_flat_materialization(gp: &AdditiveGP) -> usize {
+    let mut bytes = 0usize;
+    if let Some(dims) = gp.dims() {
+        for dim in dims {
+            for band in band_ropes(dim) {
+                let flat = band.to_flat();
+                bytes += flat.len() * std::mem::size_of::<f64>();
+                std::hint::black_box(&flat);
+            }
+        }
+    }
+    bytes
+}
+
+/// Widest packed band row across the model's ropes (bytes) — sizes the
+/// one-straddled-chunk allowance in the memmove gate.
+fn widest_band_row_bytes(gp: &AdditiveGP) -> usize {
+    let mut w = 1usize;
+    if let Some(dims) = gp.dims() {
+        for dim in dims {
+            for band in band_ropes(dim) {
+                w = w.max(band.kl() + band.ku() + 1);
+            }
+        }
+    }
+    w * std::mem::size_of::<f64>()
+}
+
+struct StorageBench {
+    n: usize,
+    snap_build_s: f64,
+    deep_copy_s: f64,
+    deep_copy_bytes: usize,
+    memmove_per_obs: f64,
+    band_row_bytes: usize,
+}
+
+impl StorageBench {
+    fn snapshot_speedup(&self) -> f64 {
+        self.deep_copy_s / self.snap_build_s.max(1e-9)
+    }
+
+    fn to_snapshot_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("snapshot_build_ms", Json::Num(self.snap_build_s * 1e3)),
+            ("deep_copy_ms", Json::Num(self.deep_copy_s * 1e3)),
+            ("deep_copy_bytes", Json::Num(self.deep_copy_bytes as f64)),
+            ("speedup", Json::Num(self.snapshot_speedup())),
+        ])
+    }
+
+    fn to_memmove_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("observes", Json::Num(STORAGE_OBS_K as f64)),
+            ("memmove_bytes_per_observe", Json::Num(self.memmove_per_obs)),
+            ("band_row_bytes", Json::Num(self.band_row_bytes as f64)),
+        ])
+    }
+}
+
+/// Chunked-COW storage measurements on a single-dimension model (so `n` is
+/// the band length): the steady-state `read_snapshot` build (reference
+/// bump) vs the linear deep materialization it replaced, and the mean
+/// per-observe splice `memmove_bytes` over `STORAGE_OBS_K` interior
+/// inserts, read from the model's own storage counters.
+fn measure_storage(n: usize) -> StorageBench {
+    let d = 1;
+    let (x, y) = data(n, d, (n as u64) ^ 0xC02);
+    let mut gp = AdditiveGP::new(cfg(), d);
+    gp.fit(&x, &y);
+    gp.ensure_posterior();
+
+    // First build pays one-off materializations (C-band cache); the
+    // steady-state build — what every read generation costs — is the
+    // second one.
+    let warm = gp.read_snapshot().expect("fitted model");
+    drop(warm);
+    let t0 = Instant::now();
+    let snap = gp.read_snapshot().expect("fitted model");
+    let snap_build_s = t0.elapsed().as_secs_f64();
+    drop(snap);
+
+    let t0 = Instant::now();
+    let deep_copy_bytes = deep_flat_materialization(&gp);
+    let deep_copy_s = t0.elapsed().as_secs_f64();
+
+    let band_row_bytes = widest_band_row_bytes(&gp);
+    let mut rng = Rng::new(0x5711 ^ n as u64);
+    let (m0, _, _) = gp.storage_stats();
+    for _ in 0..STORAGE_OBS_K {
+        let xv = rng.uniform_in(0.0, 10.0);
+        gp.observe(&[xv], xv.sin());
+    }
+    let (m1, _, _) = gp.storage_stats();
+    let (_, fall, _) = gp.incremental_stats();
+    assert_eq!(fall, 0, "no degenerate fallbacks expected on random data");
+    let memmove_per_obs = (m1 - m0) as f64 / STORAGE_OBS_K as f64;
+
+    StorageBench { n, snap_build_s, deep_copy_s, deep_copy_bytes, memmove_per_obs, band_row_bytes }
+}
+
 /// Batch-size sweep at fixed `n`: where does one batched insert stop
 /// beating one refit? (Informs the `m ≤ n` crossover in
 /// `AdditiveGP::observe_batch`; see DESIGN.md §FitState.)
@@ -578,6 +720,27 @@ fn main() {
         None
     };
 
+    // Chunked-COW storage: snapshot build vs deep materialization, plus
+    // splice memmove locality. Both sizes run in every mode — sublinearity
+    // only shows at the 100k leg.
+    let storage: Vec<StorageBench> =
+        STORAGE_SIZES.iter().map(|&n| measure_storage(n)).collect();
+    println!("\n# chunked-COW storage: snapshot build vs deep materialization (d = 1)\n");
+    println!(
+        "{:>8}  {:>14}  {:>14}  {:>9}  {:>20}",
+        "n", "snapshot ms", "deep-copy ms", "speedup", "memmove B/observe"
+    );
+    for s in &storage {
+        println!(
+            "{:>8}  {:>14.4}  {:>14.3}  {:>8.1}×  {:>20.0}",
+            s.n,
+            s.snap_build_s * 1e3,
+            s.deep_copy_s * 1e3,
+            s.snapshot_speedup(),
+            s.memmove_per_obs
+        );
+    }
+
     // Gates are evaluated at n = 10k (present in every mode's size list).
     let mut gates: Vec<Gate> = results
         .iter()
@@ -621,6 +784,26 @@ fn main() {
             threshold: pb.threshold(),
         });
     }
+    // Chunked-COW storage gates: the reference-bump snapshot build must
+    // beat the linear deep materialization ≥ 5× at n = 100k, and the
+    // per-observe splice memmove at 100k must stay within 3× of the 10k
+    // figure plus one straddled max-size chunk per band rope (8 ropes) —
+    // O(ν·chunk), not O(nν). The second gate is a bounded *ratio* so its
+    // pass condition still reads `value ≥ threshold`.
+    let storage_at = |n: usize| storage.iter().find(|s| s.n == n);
+    if let (Some(s10), Some(s100)) = (storage_at(GATE_N), storage_at(STORAGE_GATE_N)) {
+        gates.push(Gate {
+            name: "snapshot_build_vs_deep_copy_at_100k",
+            value: s100.snapshot_speedup(),
+            threshold: GATE_MIN_SPEEDUP,
+        });
+        let slack = (8 * MAX_CHUNK_ROWS * s100.band_row_bytes) as f64;
+        gates.push(Gate {
+            name: "memmove_locality_100k_vs_10k",
+            value: (3.0 * s10.memmove_per_obs + slack) / s100.memmove_per_obs.max(1.0),
+            threshold: 1.0,
+        });
+    }
 
     if let Some(path) = json_path {
         let json = Json::obj(vec![
@@ -636,6 +819,14 @@ fn main() {
             (
                 "pool",
                 pool_bench.as_ref().map(PoolBench::to_json).unwrap_or(Json::Null),
+            ),
+            (
+                "snapshot",
+                Json::Arr(storage.iter().map(StorageBench::to_snapshot_json).collect()),
+            ),
+            (
+                "memmove",
+                Json::Arr(storage.iter().map(StorageBench::to_memmove_json).collect()),
             ),
             ("gates", Json::Arr(gates.iter().map(Gate::to_json).collect())),
         ]);

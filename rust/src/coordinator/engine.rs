@@ -254,6 +254,24 @@ impl ModelEngine {
             let mut svar = Vec::with_capacity(rows.len());
             let mut acq = Vec::with_capacity(rows.len());
             let mut gacq = Vec::with_capacity(rows.len());
+            // Double-buffered dispatch: chunk g executes on the device
+            // while chunk g+1's windows are gathered on the host; the
+            // blocking host sync (`wait`) runs only once the next batch is
+            // fully staged. An error on either side drops the in-flight
+            // handle and propagates — the caller's native fallback and
+            // error paths are unchanged.
+            let mut pending: Option<(usize, crate::runtime::PendingWindow)> = None;
+            let mut drain = |rows_in_flight: usize,
+                             out: &crate::runtime::WindowOutputs| {
+                for bi in 0..rows_in_flight {
+                    mu.push(out.mu[bi] as f64);
+                    svar.push(out.svar[bi] as f64);
+                    acq.push(out.acq[bi] as f64);
+                    gacq.push(
+                        (0..sd).map(|di| out.gacq[bi * sd + di] as f64).collect(),
+                    );
+                }
+            };
             for chunk in rows.chunks(spec_b) {
                 let mut batch = WindowBatch::zeros(&exe.spec, beta as f32);
                 batch.rows = chunk.len();
@@ -284,16 +302,18 @@ impl ModelEngine {
                     }
                     batch.kdiag[bi] = qw.kdiag as f32;
                 }
-                let out = exe.execute(&batch).map_err(|e| e.to_string())?;
-                self.pjrt_batches += 1;
-                for bi in 0..chunk.len() {
-                    mu.push(out.mu[bi] as f64);
-                    svar.push(out.svar[bi] as f64);
-                    acq.push(out.acq[bi] as f64);
-                    gacq.push(
-                        (0..sd).map(|di| out.gacq[bi * sd + di] as f64).collect(),
-                    );
+                if let Some((rows_in_flight, p)) = pending.take() {
+                    let out = p.wait().map_err(|e| e.to_string())?;
+                    self.pjrt_batches += 1;
+                    drain(rows_in_flight, &out);
                 }
+                let p = exe.submit(&batch).map_err(|e| e.to_string())?;
+                pending = Some((chunk.len(), p));
+            }
+            if let Some((rows_in_flight, p)) = pending.take() {
+                let out = p.wait().map_err(|e| e.to_string())?;
+                self.pjrt_batches += 1;
+                drain(rows_in_flight, &out);
             }
             return Ok((mu, svar, acq, gacq, "pjrt"));
         }

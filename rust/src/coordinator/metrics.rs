@@ -132,8 +132,19 @@ pub struct ServerMetrics {
     /// single-point `observe` stays lazy — its samples cover the factor
     /// patch only, with the solve deferred to the next predict.
     pub ingest_latency: LatencyHistogram,
+    /// Cumulative chunked-band-storage counters across all models (DESIGN.md
+    /// "Chunked COW band storage"): bytes shifted by mid-matrix splices,
+    /// chunks deep-copied by copy-on-write, and chunks handed to snapshots
+    /// by reference.
+    pub storage_memmove_bytes: AtomicU64,
+    pub storage_chunks_copied: AtomicU64,
+    pub storage_chunks_shared: AtomicU64,
     /// Per-model histograms, created on first touch.
     per_model: Mutex<HashMap<u64, Arc<ModelMetrics>>>,
+    /// Last-seen cumulative `(memmove_bytes, chunks_copied, chunks_shared)`
+    /// per model, so repeated `stats` replies fold into the totals as
+    /// deltas rather than re-adding the whole lifetime counter.
+    storage_seen: Mutex<HashMap<u64, (u64, u64, u64)>>,
 }
 
 impl ServerMetrics {
@@ -174,6 +185,25 @@ impl ServerMetrics {
         self.factor_resweeps.fetch_add(resweeps, Ordering::Relaxed);
     }
 
+    /// Fold one model's cumulative storage counters (from a `stats` reply)
+    /// into the server-wide totals. Only the delta since the model's last
+    /// report is added; a counter that went *backwards* (model re-created
+    /// under the same id) contributes nothing until it catches back up.
+    pub fn record_storage_stats(&self, model: u64, memmove: u64, copied: u64, shared: u64) {
+        let (dm, dc, ds) = {
+            let mut seen = lock_clean(&self.storage_seen);
+            let prev = seen.insert(model, (memmove, copied, shared)).unwrap_or((0, 0, 0));
+            (
+                memmove.saturating_sub(prev.0),
+                copied.saturating_sub(prev.1),
+                shared.saturating_sub(prev.2),
+            )
+        };
+        self.storage_memmove_bytes.fetch_add(dm, Ordering::Relaxed);
+        self.storage_chunks_copied.fetch_add(dc, Ordering::Relaxed);
+        self.storage_chunks_shared.fetch_add(ds, Ordering::Relaxed);
+    }
+
     /// The per-model histogram set for `id`, created on first touch. The
     /// returned handle is lock-free to record into.
     pub fn model(&self, id: u64) -> Arc<ModelMetrics> {
@@ -185,8 +215,9 @@ impl ServerMetrics {
         let mut out = format!(
             "requests={} errors={} predict_points={} observe_points={} \
              batches(incremental={} refit={} buffered={}) \
-             factor(patched={} resweep={}) | predict: {} | \
-             suggest: {} | ingest: {}",
+             factor(patched={} resweep={}) \
+             storage(memmove_bytes={} chunks_copied={} chunks_shared={}) | \
+             predict: {} | suggest: {} | ingest: {}",
             self.requests.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
             self.predict_points.load(Ordering::Relaxed),
@@ -196,6 +227,9 @@ impl ServerMetrics {
             self.batches_buffered.load(Ordering::Relaxed),
             self.factor_patches.load(Ordering::Relaxed),
             self.factor_resweeps.load(Ordering::Relaxed),
+            self.storage_memmove_bytes.load(Ordering::Relaxed),
+            self.storage_chunks_copied.load(Ordering::Relaxed),
+            self.storage_chunks_shared.load(Ordering::Relaxed),
             self.predict_latency.report(),
             self.suggest_latency.report(),
             self.ingest_latency.report()
@@ -257,6 +291,13 @@ mod tests {
         m.count_batch_path("buffered");
         m.add_factor_outcomes(8, 0);
         m.add_factor_outcomes(0, 4);
+        // Cumulative per-model storage counters fold in as deltas: the
+        // second report of model 9 adds only its growth, and a counter
+        // that regressed (model re-created) adds nothing.
+        m.record_storage_stats(9, 1000, 3, 20);
+        m.record_storage_stats(9, 1500, 5, 26);
+        m.record_storage_stats(4, 100, 1, 2);
+        m.record_storage_stats(4, 50, 0, 1);
         let r = m.report();
         assert!(r.contains("requests=2"));
         assert!(r.contains("errors=1"));
@@ -267,6 +308,9 @@ mod tests {
         assert!(r.contains("buffered=1"));
         assert!(r.contains("patched=8"));
         assert!(r.contains("resweep=4"));
+        assert!(r.contains("memmove_bytes=1600"), "{r}");
+        assert!(r.contains("chunks_copied=6"), "{r}");
+        assert!(r.contains("chunks_shared=28"), "{r}");
     }
 
     #[test]

@@ -191,6 +191,14 @@ pub enum Response {
         pool_busy: u64,
         pool_queue_depth: u64,
         pool_steals: u64,
+        /// Chunked COW band-storage observability (DESIGN.md "Chunked COW
+        /// band storage"): cumulative bytes shifted by mid-matrix band
+        /// splices (appends move none), chunks deep-copied by
+        /// copy-on-write, and chunks handed to posterior snapshots by
+        /// reference instead of deep copy.
+        memmove_bytes: u64,
+        chunks_copied: u64,
+        chunks_shared: u64,
     },
 }
 
@@ -261,6 +269,9 @@ impl Response {
                 pool_busy,
                 pool_queue_depth,
                 pool_steals,
+                memmove_bytes,
+                chunks_copied,
+                chunks_shared,
             } => {
                 pairs.push(("ok", Json::Bool(true)));
                 pairs.push(("n", Json::Num(*n as f64)));
@@ -278,6 +289,9 @@ impl Response {
                 pairs.push(("pool_busy", Json::Num(*pool_busy as f64)));
                 pairs.push(("pool_queue_depth", Json::Num(*pool_queue_depth as f64)));
                 pairs.push(("pool_steals", Json::Num(*pool_steals as f64)));
+                pairs.push(("memmove_bytes", Json::Num(*memmove_bytes as f64)));
+                pairs.push(("chunks_copied", Json::Num(*chunks_copied as f64)));
+                pairs.push(("chunks_shared", Json::Num(*chunks_shared as f64)));
             }
         }
         Json::obj(pairs)

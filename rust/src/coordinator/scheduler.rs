@@ -630,6 +630,7 @@ fn serve_stats(cell: &ModelCell, pool: &WorkerPool, reply: Sender<Response>) {
     let (patches, resweeps) = gp.factor_stats();
     let (_, fallbacks, _) = gp.incremental_stats();
     let truncations = gp.cache_truncations();
+    let (memmove, copied, shared) = gp.storage_stats();
     let (snap_h, snap_m) = {
         let slot = lock_clean(&cell.snapshot);
         slot.as_ref().map(|s| s.snap.cache_stats()).unwrap_or((0, 0))
@@ -655,6 +656,9 @@ fn serve_stats(cell: &ModelCell, pool: &WorkerPool, reply: Sender<Response>) {
         pool_busy: ps.running,
         pool_queue_depth: ps.queued,
         pool_steals: ps.steals,
+        memmove_bytes: memmove,
+        chunks_copied: copied,
+        chunks_shared: shared,
     };
     drop(eng);
     let _ = reply.send(resp);
@@ -748,13 +752,17 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        // Stats carries the pool fields.
+        // Stats carries the pool fields and the COW storage counters (the
+        // predicts above forced a snapshot build → chunks were shared; the
+        // 5 mid-matrix observes after activation moved splice bytes).
         let r = call(&sched, m, |reply| Command::Stats { reply });
         match r {
-            Response::Stats { n, pool_workers, native_queries, .. } => {
+            Response::Stats { n, pool_workers, native_queries, memmove_bytes, chunks_shared, .. } => {
                 assert_eq!(n, 45);
                 assert_eq!(pool_workers, 3);
                 assert!(native_queries >= 4);
+                assert!(chunks_shared > 0, "snapshot build must share chunks");
+                assert!(memmove_bytes > 0, "mid-matrix splices must account moved bytes");
             }
             other => panic!("unexpected {other:?}"),
         }

@@ -268,6 +268,19 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
         Response::Observed { factor_patched, factor_resweep, .. } => {
             shared.metrics.add_factor_outcomes(*factor_patched, *factor_resweep);
         }
+        Response::Stats { memmove_bytes, chunks_copied, chunks_shared, .. } => {
+            // The reply carries the model's *cumulative* storage counters;
+            // the metrics layer folds in only the delta since the model's
+            // last report.
+            if let Some(m) = routed_model {
+                shared.metrics.record_storage_stats(
+                    m,
+                    *memmove_bytes,
+                    *chunks_copied,
+                    *chunks_shared,
+                );
+            }
+        }
         _ => {}
     }
     // Pool-wide and per-model latency. Per-model histograms only for

@@ -2,6 +2,7 @@
 //! banded LU factors every downstream algorithm reuses, and (lazily) the
 //! generalized-KP factorization for gradients.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::check::{enforce, Audit, AuditError};
@@ -10,7 +11,7 @@ use crate::kernels::kp::KpFactorization;
 use crate::kernels::matern::Matern;
 use crate::linalg::banded::{BandedLU, PatchOutcome, PatchPolicy, SpliceInfo};
 use crate::linalg::block_tridiag::selected_inverse_band;
-use crate::linalg::Banded;
+use crate::linalg::{Banded, StorageStats};
 
 /// Wall-clock split of the incremental insert path, accumulated per
 /// dimension — lets benches (and operators) separate the `O(log n)` KP
@@ -59,7 +60,9 @@ pub struct DimFactor {
     /// LU of `A_d` (log-det term of eq. 14 and `K_d`-matvecs).
     pub a_lu: BandedLU,
     /// Lazily-built generalized KP (Algorithm 3) for `∂_ω K_d`.
-    gkp: Option<GkpFactorization>,
+    /// `Arc`-shared: immutable once built (inserts reset it to `None`), so
+    /// snapshot clones bump a reference instead of deep-copying its bands.
+    gkp: Option<Arc<GkpFactorization>>,
     /// Lazily-built `2ν`-band of `Φ_d^{-T} A_d^{-1}` (Algorithm 5).
     c_band: Option<Banded>,
     pub sigma2_y: f64,
@@ -174,6 +177,7 @@ impl DimFactor {
         let positions = self.kp.insert_batch(values)?;
         let t1 = Instant::now();
         if !positions.is_empty() {
+            // lint: cow-ok (Vec<usize> of batch positions, not band storage)
             let mut sorted = positions.clone();
             sorted.sort_unstable();
             self.patch_factors(&sorted);
@@ -306,9 +310,10 @@ impl DimFactor {
     /// The generalized-KP factorization (built on first use).
     pub fn gkp(&mut self) -> &GkpFactorization {
         if self.gkp.is_none() {
-            self.gkp = Some(GkpFactorization::new_sorted(&self.kp.xs, *self.kernel()));
+            self.gkp =
+                Some(Arc::new(GkpFactorization::new_sorted(&self.kp.xs, *self.kernel())));
         }
-        self.gkp.as_ref().unwrap()
+        self.gkp.as_deref().unwrap()
     }
 
     /// The central band of `C_d = Φ_d^{-T} A_d^{-1}` (paper Algorithm 5;
@@ -323,6 +328,7 @@ impl DimFactor {
         if self.c_band.is_none() {
             let h = self.kp.a.matmul(&self.kp.phi.transpose());
             // Symmetrize against round-off before inverting.
+            // lint: cow-ok (reference-bump clone; writes below COW per chunk)
             let mut hs = h.clone();
             for i in 0..hs.n() {
                 let (lo, hi) = hs.row_range(i);
@@ -351,7 +357,55 @@ impl DimFactor {
 
     /// Immutable access to the generalized-KP factorization if already built.
     pub fn gkp_cached(&self) -> Option<&GkpFactorization> {
-        self.gkp.as_ref()
+        self.gkp.as_deref()
+    }
+
+    /// Summed storage counters over every band rope this dimension owns:
+    /// the raw `A`/`Φ`, the maintained `T`/`Φᵀ`, the four packed LU
+    /// factors, and the lazy band-of-inverse when built.
+    pub fn storage_stats(&self) -> StorageStats {
+        let mut s = StorageStats::default();
+        s.accumulate(self.kp.a.storage_stats());
+        s.accumulate(self.kp.phi.storage_stats());
+        s.accumulate(self.t.storage_stats());
+        s.accumulate(self.phit.storage_stats());
+        s.accumulate(self.t_lu.storage_stats());
+        s.accumulate(self.phi_lu.storage_stats());
+        s.accumulate(self.phit_lu.storage_stats());
+        s.accumulate(self.a_lu.storage_stats());
+        if let Some(c) = &self.c_band {
+            s.accumulate(c.storage_stats());
+        }
+        s
+    }
+
+    /// Settle every band rope before a snapshot clone (see
+    /// [`Banded::mark_storage_clean`]): clears the dirty flags so the clone
+    /// is a pure reference bump. Returns summed `(dirtied, total)` chunk
+    /// counts — `total − dirtied` chunks are shared with the previous
+    /// generation unchanged.
+    pub fn mark_storage_clean(&mut self) -> (u64, u64) {
+        let mut dirtied = 0u64;
+        let mut total = 0u64;
+        for (d, t) in [
+            self.kp.a.mark_storage_clean(),
+            self.kp.phi.mark_storage_clean(),
+            self.t.mark_storage_clean(),
+            self.phit.mark_storage_clean(),
+            self.t_lu.mark_storage_clean(),
+            self.phi_lu.mark_storage_clean(),
+            self.phit_lu.mark_storage_clean(),
+            self.a_lu.mark_storage_clean(),
+        ] {
+            dirtied += d;
+            total += t;
+        }
+        if let Some(c) = self.c_band.as_mut() {
+            let (d, t) = c.mark_storage_clean();
+            dirtied += d;
+            total += t;
+        }
+        (dirtied, total)
     }
 }
 

@@ -29,7 +29,7 @@
 //! `tests/incremental.rs` against both a full refit and the dense
 //! `baselines::full_gp` oracle.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::check::{enforce, Audit, AuditError};
 use crate::gp::backfit::{BlockVec, GaussSeidel, GsStats};
@@ -37,6 +37,7 @@ use crate::gp::dim::{DimFactor, PatchTimings};
 use crate::gp::posterior::{self, MTildeCache, Posterior, PredictOut};
 use crate::kernels::matern::Matern;
 use crate::linalg::banded::PatchPolicy;
+use crate::linalg::StorageStats;
 use crate::util::pool;
 
 /// Result of one [`FitState::observe_batch`].
@@ -53,7 +54,7 @@ pub struct BatchPositions {
 /// Trained per-dimension factorizations + updatable posterior vectors.
 pub struct FitState {
     dims: Vec<DimFactor>,
-    post: Option<Posterior>,
+    post: Option<Arc<Posterior>>,
     /// Last Algorithm 4 solution ṽ (data order) — the next solve's warm
     /// start.
     tilde: Option<BlockVec>,
@@ -68,6 +69,9 @@ pub struct FitState {
     /// "Sublinear LU patching"); applied to every dimension, including
     /// fallback rebuilds.
     patch_policy: PatchPolicy,
+    /// Cumulative count of band-storage chunks handed to snapshots by
+    /// reference (Arc bump) rather than deep copy.
+    snapshot_chunks_shared: u64,
 }
 
 impl FitState {
@@ -89,6 +93,7 @@ impl FitState {
             incremental_inserts: 0,
             fallback_rebuilds: 0,
             patch_policy: PatchPolicy::Exact,
+            snapshot_chunks_shared: 0,
         }
     }
 
@@ -160,7 +165,7 @@ impl FitState {
     /// The posterior, if [`FitState::ensure_posterior`] has run since the
     /// last observation.
     pub fn posterior(&self) -> Option<&Posterior> {
-        self.post.as_ref()
+        self.post.as_deref()
     }
 
     /// Split borrow for the cached-predict path: mutable factorizations
@@ -169,7 +174,7 @@ impl FitState {
     pub fn parts_mut(&mut self) -> (&mut [DimFactor], &Posterior) {
         (
             &mut self.dims,
-            self.post.as_ref().expect("ensure_posterior() before parts_mut()"),
+            self.post.as_deref().expect("ensure_posterior() before parts_mut()"),
         )
     }
 
@@ -323,7 +328,7 @@ impl FitState {
         let gs = self.solver();
         let (post, tilde) =
             posterior::compute_posterior_warm(&self.dims, y, &gs, guess.as_ref());
-        self.post = Some(post);
+        self.post = Some(Arc::new(post));
         self.tilde = Some(tilde);
         enforce(self, "FitState::ensure_posterior");
     }
@@ -340,27 +345,52 @@ impl FitState {
     /// property the multi-model determinism stress test pins. The lazy
     /// band-of-inverse *is* materialized on `self` (it is a pure function
     /// of the factors, so building it early changes nothing downstream).
+    ///
+    /// The build itself is a **reference bump**: every band rope is settled
+    /// (`mark_storage_clean`) so the `dims` clone below Arc-shares all of
+    /// its chunks, and the posterior travels as a shared `Arc`. Chunks the
+    /// engine dirties after this call are deep-copied on first write, so a
+    /// snapshot generation costs O(dirtied chunks), not O(Dnν).
     pub fn read_snapshot(&mut self, y: &[f64], cache_capacity: usize) -> PosteriorSnapshot {
         for dim in self.dims.iter_mut() {
             let _ = dim.c_band();
         }
         let post = match &self.post {
-            Some(p) => p.clone(),
+            Some(p) => Arc::clone(p),
             None => {
                 assert_eq!(y.len(), self.n());
                 let gs = self.solver();
                 let (post, _tilde) =
                     posterior::compute_posterior_warm(&self.dims, y, &gs, self.tilde.as_ref());
-                post
+                Arc::new(post)
             }
         };
+        let mut shared = 0u64;
+        for dim in self.dims.iter_mut() {
+            let (_dirtied, total) = dim.mark_storage_clean();
+            shared += total;
+        }
+        self.snapshot_chunks_shared += shared;
         PosteriorSnapshot {
+            // lint: cow-ok (reference-bump clone: chunks settled above)
             dims: self.dims.clone(),
             post,
             sigma2_y: self.sigma2_y,
             cache_capacity,
             cache: Mutex::new(MTildeCache::new(cache_capacity)),
         }
+    }
+
+    /// Cumulative band-storage counters, summed over dimensions:
+    /// `(memmove_bytes, chunks_copied, chunks_shared)` — bytes shifted by
+    /// mid-matrix splices, chunks deep-copied by copy-on-write, and chunks
+    /// handed to snapshots by reference.
+    pub fn storage_stats(&self) -> (u64, u64, u64) {
+        let mut s = StorageStats::default();
+        for d in &self.dims {
+            s.accumulate(d.storage_stats());
+        }
+        (s.memmove_bytes, s.chunks_copied, self.snapshot_chunks_shared)
     }
 
     /// Stats of the last posterior solve, if one has run.
@@ -473,11 +503,13 @@ impl Audit for FitState {
 ///
 /// Readers on different models never contend; readers on one model contend
 /// only on the column-cache mutex, never with ingest. A fresh snapshot is
-/// built per mutation generation, so the clone cost is paid once per
-/// write, not per read.
+/// built per mutation generation; since band chunks are copy-on-write
+/// ropes and the posterior travels as an `Arc`, that per-write cost is a
+/// reference bump plus deep copies of only the chunks dirtied since the
+/// previous generation.
 pub struct PosteriorSnapshot {
     dims: Vec<DimFactor>,
-    post: Posterior,
+    post: Arc<Posterior>,
     sigma2_y: f64,
     cache_capacity: usize,
     cache: Mutex<MTildeCache>,
@@ -602,6 +634,7 @@ mod tests {
     use super::*;
     use crate::kernels::matern::{Matern, Nu};
     use crate::util::Rng;
+    use std::sync::Arc;
 
     fn build_state(
         x_cols: &[Vec<f64>],
@@ -771,7 +804,7 @@ mod tests {
         assert!(snap.audit().is_ok());
         let _ = snap.predict(&[2.0, 2.5], false);
         assert!(snap.audit().is_ok(), "a served predict must keep the cache consistent");
-        snap.post.b[0].push(0.0); // posterior block desynced from n
+        Arc::make_mut(&mut snap.post).b[0].push(0.0); // posterior block desynced from n
         let e = snap.audit().unwrap_err();
         assert_eq!(e.structure, "PosteriorSnapshot");
         assert_eq!(e.field, "post");

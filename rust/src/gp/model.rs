@@ -346,6 +346,18 @@ impl AdditiveGP {
         }
     }
 
+    /// Band-storage statistics `(memmove_bytes, chunks_copied,
+    /// chunks_shared)` — bytes shifted by mid-matrix splices, chunks
+    /// deep-copied by copy-on-write, and chunks handed to snapshots by
+    /// reference (DESIGN.md "Chunked COW band storage"). Zero before
+    /// activation.
+    pub fn storage_stats(&self) -> (u64, u64, u64) {
+        match &self.state {
+            Some(s) => s.storage_stats(),
+            None => (0, 0, 0),
+        }
+    }
+
     /// Accumulated wall-clock split of the incremental insert path (KP
     /// window patch vs factor update), summed over dimensions.
     pub fn patch_timings(&self) -> PatchTimings {

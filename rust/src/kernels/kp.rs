@@ -239,6 +239,7 @@ impl KpFactorization {
         // scratch copy so a mid-batch degenerate failure leaves `self`
         // untouched. `place_point` is evaluated against the *growing*
         // array, exactly as repeated `insert` calls would.
+        // lint: cow-ok (scratch Vec<f64> of sorted inputs, not band storage)
         let mut scratch = self.xs.clone();
         let mut final_pos: Vec<usize> = Vec::with_capacity(values.len());
         for &x in values {
@@ -252,6 +253,7 @@ impl KpFactorization {
             final_pos.push(pos);
         }
         // --- Commit: one merge / splice per structure.
+        // lint: cow-ok (Vec<usize> of batch positions, not band storage)
         let mut sorted_pos = final_pos.clone();
         sorted_pos.sort_unstable();
         self.xs = scratch;

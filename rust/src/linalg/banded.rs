@@ -3,26 +3,32 @@
 //! "banded matrix solver"/"LU decomposition" primitive the paper leans on
 //! throughout Table 1).
 
+use std::sync::Arc;
+
 use crate::check::{enforce, Audit, AuditError};
+use crate::linalg::chunks::{ChunkedRows, RowCursor, StorageStats};
 
 /// An `n × n` banded matrix with `kl` sub-diagonals and `ku` super-diagonals.
 ///
 /// Entry `(i, j)` is stored iff `j - i ∈ [-kl, ku]`; reads outside the band
-/// return `0.0`, writes outside the band panic. Storage is row-major band
-/// layout: row `i` occupies `data[i*(kl+ku+1) ..]` with column `j` at offset
-/// `j - i + kl`.
+/// return `0.0`, writes outside the band panic. The logical layout is
+/// row-major band storage — row `i` is a `kl+ku+1`-wide slice with column
+/// `j` at in-row offset `j - i + kl` — physically held in a chunked
+/// copy-on-write rope ([`ChunkedRows`]): appends touch only the tail chunk,
+/// splices rewrite only straddled chunks, and `clone` is a reference bump
+/// (see DESIGN.md §"Chunked COW band storage").
 #[derive(Clone, Debug)]
 pub struct Banded {
     n: usize,
     kl: usize,
     ku: usize,
-    data: Vec<f64>,
+    store: ChunkedRows,
 }
 
 impl Banded {
     /// Zero matrix of size `n` with bandwidths `kl` (lower), `ku` (upper).
     pub fn zeros(n: usize, kl: usize, ku: usize) -> Self {
-        Banded { n, kl, ku, data: vec![0.0; n * (kl + ku + 1)] }
+        Banded { n, kl, ku, store: ChunkedRows::zeros(kl + ku + 1, n) }
     }
 
     /// Identity matrix stored with the given bandwidths.
@@ -46,22 +52,43 @@ impl Banded {
         self.ku
     }
 
-    #[inline]
-    fn idx(&self, i: usize, j: usize) -> usize {
-        i * (self.kl + self.ku + 1) + (j + self.kl - i)
-    }
-
     /// `true` iff `(i, j)` lies inside the stored band.
     #[inline]
     pub fn in_band(&self, i: usize, j: usize) -> bool {
         j + self.kl >= i && j <= i + self.ku && i < self.n && j < self.n
     }
 
+    /// Row `i` of the band storage as a `kl+ku+1`-wide slice (column `j` at
+    /// in-row offset `j - i + kl`).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        self.store.row(i)
+    }
+
+    /// Mutable row `i` — copy-on-write: a chunk shared with a snapshot is
+    /// deep-copied first.
+    #[inline]
+    fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        self.store.row_mut(i)
+    }
+
+    /// Chunk cursor for amortized-O(1) row lookup in sequential sweeps.
+    #[inline]
+    pub fn row_cursor(&self) -> RowCursor {
+        self.store.cursor()
+    }
+
+    /// Row `i` through a cursor (see [`ChunkedRows::row_at`]).
+    #[inline]
+    pub fn row_at<'a>(&'a self, cur: &mut RowCursor, i: usize) -> &'a [f64] {
+        self.store.row_at(cur, i)
+    }
+
     /// Read entry `(i, j)`; zero outside the band.
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> f64 {
         if self.in_band(i, j) {
-            self.data[self.idx(i, j)]
+            self.store.row(i)[j + self.kl - i]
         } else {
             0.0
         }
@@ -77,16 +104,16 @@ impl Banded {
             self.ku,
             self.n
         );
-        let idx = self.idx(i, j);
-        self.data[idx] = v;
+        let off = j + self.kl - i;
+        self.store.row_mut(i)[off] = v;
     }
 
     /// Add `v` to entry `(i, j)`. Panics outside the band.
     #[inline]
     pub fn add(&mut self, i: usize, j: usize, v: f64) {
         assert!(self.in_band(i, j), "add({i},{j}) outside band");
-        let idx = self.idx(i, j);
-        self.data[idx] += v;
+        let off = j + self.kl - i;
+        self.store.row_mut(i)[off] += v;
     }
 
     /// Column range `[lo, hi)` of stored entries in row `i`.
@@ -107,10 +134,8 @@ impl Banded {
     pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.n);
         assert_eq!(y.len(), self.n);
-        let w = self.kl + self.ku + 1;
-        for i in 0..self.n {
+        for (i, row) in self.store.iter_rows().enumerate() {
             let (lo, hi) = self.row_range(i);
-            let row = &self.data[i * w..(i + 1) * w];
             let mut acc = 0.0;
             for j in lo..hi {
                 acc += row[j + self.kl - i] * x[j];
@@ -123,10 +148,8 @@ impl Banded {
     pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.n);
         let mut y = vec![0.0; self.n];
-        let w = self.kl + self.ku + 1;
-        for i in 0..self.n {
+        for (i, row) in self.store.iter_rows().enumerate() {
             let (lo, hi) = self.row_range(i);
-            let row = &self.data[i * w..(i + 1) * w];
             let xi = x[i];
             if xi != 0.0 {
                 for j in lo..hi {
@@ -192,11 +215,9 @@ impl Banded {
         out
     }
 
-    /// Scale all entries in place.
+    /// Scale all entries in place (copy-on-write unshares every chunk).
     pub fn scale(&mut self, alpha: f64) {
-        for v in &mut self.data {
-            *v *= alpha;
-        }
+        self.store.map_in_place(|v| *v *= alpha);
     }
 
     /// Densify (for tests / tiny problems).
@@ -212,8 +233,9 @@ impl Banded {
     }
 
     /// Insert a zero row *and* zero column at index `j`, growing the matrix
-    /// to `(n+1) × (n+1)`. `O(n·(kl+ku))` — one `memmove` of the band
-    /// storage.
+    /// to `(n+1) × (n+1)`. Only the row-block chunks the splice straddles
+    /// are rewritten — `O((kl+ku)·CHUNK)` bytes moved, independent of `n`;
+    /// an append moves nothing.
     ///
     /// Because band storage addresses column `j` at the fixed in-row offset
     /// `j - i + kl`, splicing one zero row-block shifts every later row *and*
@@ -230,9 +252,10 @@ impl Banded {
     /// Insert `k` zero rows *and* zero columns in one pass, growing the
     /// matrix to `(n+k) × (n+k)`. `positions` are the *final* indices of the
     /// new zero rows in the grown matrix, strictly increasing (so
-    /// `positions[t] ≤ n + t`). Total cost is `O((n+k)·(kl+ku))` — each
-    /// surviving row block moves exactly once, instead of up to `k` times
-    /// under repeated [`Banded::insert_row_col`] calls.
+    /// `positions[t] ≤ n + t`). Only the chunks an insertion straddles are
+    /// rewritten; every other row-block chunk keeps its buffer verbatim
+    /// (structural sharing with outstanding snapshots survives), so the
+    /// bytes moved are `O(k·(kl+ku)·CHUNK)` rather than `O((n+k)·(kl+ku))`.
     ///
     /// The caller's contract is the batched form of the single-splice one:
     /// every row within `max(kl, ku)` of any spliced index must be rewritten
@@ -256,24 +279,8 @@ impl Banded {
                 );
             }
         }
-        let w = self.kl + self.ku + 1;
-        let old_rows = self.n;
-        self.data.resize((old_rows + k) * w, 0.0);
-        // Walk the insertions back-to-front: old rows in [q_t − t, src_hi)
-        // end up shifted by exactly t+1 slots, so each chunk moves once.
-        let mut src_hi = old_rows;
-        for t in (0..k).rev() {
-            let q = positions[t];
-            let src_lo = q - t; // q ≥ t because positions are strictly increasing
-            if src_hi > src_lo {
-                self.data.copy_within(src_lo * w..src_hi * w, (src_lo + t + 1) * w);
-            }
-            for v in &mut self.data[q * w..(q + 1) * w] {
-                *v = 0.0;
-            }
-            src_hi = src_lo;
-        }
-        self.n = old_rows + k;
+        self.store.insert_zero_rows(positions);
+        self.n += k;
         enforce(self, "Banded::insert_rows_cols");
     }
 
@@ -290,7 +297,39 @@ impl Banded {
 
     /// Frobenius norm.
     pub fn fro_norm(&self) -> f64 {
-        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+        self.store
+            .iter_rows()
+            .map(|row| row.iter().map(|v| v * v).sum::<f64>())
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Storage counters of the backing rope (cumulative `memmove_bytes`,
+    /// `chunks_copied`, plus the current chunk count).
+    pub fn storage_stats(&self) -> StorageStats {
+        self.store.stats()
+    }
+
+    /// Clear the rope's dirty flags (see [`ChunkedRows::mark_clean`]),
+    /// returning `(dirtied, total)` chunk counts. Snapshot builders call
+    /// this immediately before cloning so the clone is a pure reference
+    /// bump.
+    pub fn mark_storage_clean(&mut self) -> (u64, u64) {
+        self.store.mark_clean()
+    }
+
+    /// The flat row-major band layout this rope replaced — test-only
+    /// equivalence surface (the COW lint bans production use).
+    pub fn to_flat(&self) -> Vec<f64> {
+        // lint: cow-ok (definition site: materialization is the point)
+        self.store.to_flat()
+    }
+
+    /// A new matrix reusing factor rows `[0, keep)` of `src` (whole chunks
+    /// `Arc`-shared — `src` must be storage-clean, see
+    /// [`ChunkedRows::from_prefix`]) padded with zero rows to `n_new`.
+    fn from_prefix(src: &Banded, keep: usize, n_new: usize) -> Banded {
+        Banded { n: n_new, kl: src.kl, ku: src.ku, store: src.store.from_prefix(keep, n_new) }
     }
 
     /// Maximum absolute entry strictly outside the `(kl', ku')` band — used
@@ -388,9 +427,8 @@ impl TailExit<'_> {
         if self.old_piv[old_k] + self.shift != piv_k {
             return false;
         }
-        let w = f.kl + f.ku + 1;
-        let new_row = &f.data[k * w..(k + 1) * w];
-        let old_row = &self.old_fac.data[old_k * w..(old_k + 1) * w];
+        let new_row = f.row(k);
+        let old_row = self.old_fac.row(old_k);
         let mut scale = 0.0f64;
         for &v in old_row {
             scale = scale.max(v.abs());
@@ -482,11 +520,9 @@ fn eliminate(f: &mut Banded, piv: &mut [usize], from: usize, tail: Option<TailEx
                 if matched > kl {
                     // Splice in the old factor tail verbatim (rows k+1.. are
                     // still mid-elimination and are fully overwritten).
-                    let w = kl + kuf + 1;
                     for r in (k + 1)..n {
                         let old_r = r - t.shift;
-                        f.data[r * w..(r + 1) * w]
-                            .copy_from_slice(&t.old_fac.data[old_r * w..(old_r + 1) * w]);
+                        f.row_mut(r).copy_from_slice(t.old_fac.row(old_r));
                         piv[r] = t.old_piv[old_r] + t.shift;
                     }
                     return k + 1;
@@ -524,8 +560,10 @@ pub struct BandedLU {
     /// `U` (including diagonal) in band storage with bandwidths `(0, kuf)`
     /// plus the `L` multipliers in the sub-diagonal part `(kl, 0)`.
     fac: Banded,
-    /// `piv[k]` = row swapped with row `k` at step `k`.
-    piv: Vec<usize>,
+    /// `piv[k]` = row swapped with row `k` at step `k`. `Arc`-shared so a
+    /// snapshot clone bumps a reference instead of copying `O(n)` indices;
+    /// both factoring paths build a fresh vector and re-wrap it.
+    piv: Arc<Vec<usize>>,
     sign: f64,
 }
 
@@ -545,7 +583,7 @@ impl BandedLU {
         let mut piv = vec![0usize; n];
         eliminate(&mut f, &mut piv, 0, None);
         let sign = pivot_sign(&piv);
-        let lu = BandedLU { n, kl, kuf, fac: f, piv, sign };
+        let lu = BandedLU { n, kl, kuf, fac: f, piv: Arc::new(piv), sign };
         enforce(&lu, "BandedLU::factor");
         lu
     }
@@ -563,6 +601,23 @@ impl BandedLU {
     /// Upper bandwidth of `U` after pivoting fill-in (`kl + ku`, clipped).
     pub fn kuf(&self) -> usize {
         self.kuf
+    }
+
+    /// The packed factor band (read-only) — exposed for storage diagnostics
+    /// and the bench's deep-materialization baseline.
+    pub fn fac_band(&self) -> &Banded {
+        &self.fac
+    }
+
+    /// Storage counters of the packed factor's rope.
+    pub fn storage_stats(&self) -> StorageStats {
+        self.fac.storage_stats()
+    }
+
+    /// Clear the packed factor's dirty flags (snapshot-build protocol; see
+    /// [`Banded::mark_storage_clean`]).
+    pub fn mark_storage_clean(&mut self) -> (u64, u64) {
+        self.fac.mark_storage_clean()
     }
 
     /// Patch this factorization of the *pre-splice* matrix into the
@@ -625,13 +680,13 @@ impl BandedLU {
             *self = BandedLU::factor(a);
             return PatchOutcome::Resweep;
         }
-        let w = kl + kuf + 1;
-        // Reused prefix: factor rows [0, s) verbatim (no memset of the
-        // prefix region — for appends the copy IS almost the whole cost).
-        let mut data = Vec::with_capacity(n_new * w);
-        data.extend_from_slice(&self.fac.data[..s * w]);
-        data.resize(n_new * w, 0.0);
-        let mut f = Banded { n: n_new, kl, ku: kuf, data };
+        // Reused prefix: factor rows [0, s) verbatim, whole chunks shared
+        // by reference (under the flat layout the prefix copy WAS almost
+        // the whole cost of an append patch). Sharing requires the source
+        // chunks clean — settle them first (chunk dirt is bookkeeping, not
+        // numerics, so this cannot perturb the factorization).
+        let _ = self.fac.mark_storage_clean();
+        let mut f = Banded::from_prefix(&self.fac, s, n_new);
         // Raw rows of the new matrix from s on.
         for r in s..n_new {
             let (lo, hi) = a.row_range(r);
@@ -665,7 +720,7 @@ impl BandedLU {
             {
                 Some(TailExit {
                     old_fac: &self.fac,
-                    old_piv: &self.piv,
+                    old_piv: &self.piv[..],
                     tail_from: tail_from.max(s),
                     shift,
                     rel_tol,
@@ -677,7 +732,7 @@ impl BandedLU {
         self.n = n_new;
         self.fac = f;
         self.sign = pivot_sign(&piv);
-        self.piv = piv;
+        self.piv = Arc::new(piv);
         enforce(self, "BandedLU::refactor_from");
         PatchOutcome::Patched { resumed_at: s, stopped_at: stopped }
     }
@@ -696,16 +751,17 @@ impl BandedLU {
         x
     }
 
-    /// Solve `A x = b` in place. The inner loops index the band storage
-    /// directly (no per-element bounds logic) — this is the `O(n)` primitive
-    /// under every algorithm in the crate, see DESIGN.md §Perf.
+    /// Solve `A x = b` in place. The inner loops walk the band rows through
+    /// a chunk cursor (amortized O(1) per row, no per-element bounds logic)
+    /// — this is the `O(n)` primitive under every algorithm in the crate,
+    /// see DESIGN.md §Perf.
     pub fn solve_in_place(&self, x: &mut [f64]) {
         assert_eq!(x.len(), self.n);
         let n = self.n;
-        let w = self.kl + self.kuf + 1;
-        let data = &self.fac.data;
         let kl = self.kl;
-        // Forward: apply P and L^{-1}. fac[r, k] = data[r*w + k + kl - r].
+        let mut cur = self.fac.row_cursor();
+        // Forward: apply P and L^{-1}. fac[r, k] sits at in-row offset
+        // k + kl - r of row r.
         for k in 0..n {
             let p = self.piv[k];
             if p != k {
@@ -715,15 +771,16 @@ impl BandedLU {
             let xk = x[k];
             if xk != 0.0 {
                 for r in (k + 1)..=last {
-                    x[r] -= data[r * w + k + kl - r] * xk;
+                    x[r] -= self.fac.row_at(&mut cur, r)[k + kl - r] * xk;
                 }
             }
         }
-        // Backward: U x = y. Row k of U is contiguous: fac[k, j] =
-        // data[k*w + kl + (j-k)] for j = k..k+kuf.
+        // Backward: U x = y. Row k of U is contiguous from in-row offset kl:
+        // fac[k, j] sits at kl + (j - k) for j = k..k+kuf.
         for k in (0..n).rev() {
             let hi = (k + self.kuf + 1).min(n);
-            let row = &data[k * w + kl..k * w + kl + (hi - k)];
+            let rk = self.fac.row_at(&mut cur, k);
+            let row = &rk[kl..kl + (hi - k)];
             let mut acc = x[k];
             for (off, &f) in row.iter().enumerate().skip(1) {
                 acc -= f * x[k + off];
@@ -748,26 +805,29 @@ impl BandedLU {
 }
 
 impl Audit for Banded {
-    /// Storage length must match the `n × (kl+ku+1)` band layout, and every
-    /// stored entry must be finite — the raw matrices this type holds
-    /// (A, Φ, T, Φᵀ, Gram blocks) are always finite by construction; NaN/inf
-    /// here means a splice or rebuild wrote garbage. Failures name the row.
+    /// The backing rope must hold exactly `n` rows of width `kl+ku+1` and
+    /// satisfy the chunk-table invariants (chunk sizes, starts table,
+    /// `Arc` sharing only on clean chunks — see [`ChunkedRows`]'s audit),
+    /// and every stored entry must be finite — the raw matrices this type
+    /// holds (A, Φ, T, Φᵀ, Gram blocks) are always finite by construction;
+    /// NaN/inf here means a splice or rebuild wrote garbage. Failures name
+    /// the row.
     fn audit(&self) -> Result<(), AuditError> {
-        let want = self.n * (self.kl + self.ku + 1);
-        if self.data.len() != want {
+        if self.store.n_rows() != self.n || self.store.width() != self.kl + self.ku + 1 {
             return Err(AuditError::new(
                 "Banded",
                 "data",
                 None,
                 format!(
-                    "storage length {} != n*(kl+ku+1) = {}*{} = {}",
-                    self.data.len(),
+                    "storage shape {} rows × {} != n × (kl+ku+1) = {} × {}",
+                    self.store.n_rows(),
+                    self.store.width(),
                     self.n,
                     self.kl + self.ku + 1,
-                    want
                 ),
             ));
         }
+        self.store.audit()?;
         for i in 0..self.n {
             let (lo, hi) = self.row_range(i);
             for j in lo..hi {
@@ -817,15 +877,25 @@ impl Audit for BandedLU {
                 ),
             ));
         }
-        let want = self.fac.n * (self.fac.kl + self.fac.ku + 1);
-        if self.fac.data.len() != want {
+        if self.fac.store.n_rows() != self.fac.n
+            || self.fac.store.width() != self.fac.kl + self.fac.ku + 1
+        {
             return Err(AuditError::new(
                 "BandedLU",
                 "fac",
                 None,
-                format!("factor storage length {} != {}", self.fac.data.len(), want),
+                format!(
+                    "factor storage shape {} rows × {} != {} × {}",
+                    self.fac.store.n_rows(),
+                    self.fac.store.width(),
+                    self.fac.n,
+                    self.fac.kl + self.fac.ku + 1,
+                ),
             ));
         }
+        // Chunk-table invariants of the factor's rope (finiteness is
+        // deliberately NOT required here — see the impl docs).
+        self.fac.store.audit()?;
         for k in 0..n {
             let hi = (k + self.kl).min(n - 1);
             if self.piv[k] < k || self.piv[k] > hi {
@@ -1063,31 +1133,27 @@ mod tests {
             let mut batched = base.clone();
             batched.insert_rows_cols(&positions);
 
-            // Repeated single splices at the same *final* indices: splicing
-            // in ascending order keeps each final index exact.
-            let mut single = base.clone();
+            // Flat-layout oracle: repeated single splices at the same *final*
+            // indices on a plain Vec in the row-major band layout (splicing
+            // in ascending order keeps each final index exact). Comparing
+            // via `to_flat` also pins chunked == flat byte layout.
+            let w = base.kl() + base.ku() + 1;
+            let mut flat = base.to_flat();
+            let mut n_single = base.n();
             for &q in &positions {
-                let w = single.kl + single.ku + 1;
                 let at = q * w;
-                let old_len = single.data.len();
-                single.data.resize(old_len + w, 0.0);
-                single.data.copy_within(at..old_len, at + w);
-                for v in &mut single.data[at..at + w] {
+                let old_len = flat.len();
+                flat.resize(old_len + w, 0.0);
+                flat.copy_within(at..old_len, at + w);
+                for v in &mut flat[at..at + w] {
                     *v = 0.0;
                 }
-                single.n += 1;
+                n_single += 1;
             }
 
             assert_eq!(batched.n(), 6 + positions.len(), "{positions:?}");
-            for i in 0..batched.n() {
-                for j in 0..batched.n() {
-                    assert_eq!(
-                        batched.get(i, j),
-                        single.get(i, j),
-                        "{positions:?} ({i},{j})"
-                    );
-                }
-            }
+            assert_eq!(batched.n(), n_single, "{positions:?}");
+            assert_eq!(batched.to_flat(), flat, "{positions:?}");
         }
     }
 
@@ -1116,14 +1182,15 @@ mod tests {
 
     fn assert_lu_bitwise_equal(a: &BandedLU, b: &BandedLU, label: &str) {
         assert_eq!(a.n, b.n, "{label}: n");
-        assert_eq!(a.piv, b.piv, "{label}: piv");
+        assert_eq!(a.piv[..], b.piv[..], "{label}: piv");
         assert_eq!(a.sign, b.sign, "{label}: sign");
-        assert_eq!(a.fac.data.len(), b.fac.data.len(), "{label}: fac len");
-        for (idx, (x, y)) in a.fac.data.iter().zip(&b.fac.data).enumerate() {
-            assert!(
-                x == y || (x.is_nan() && y.is_nan()),
-                "{label}: fac[{idx}] {x} vs {y}"
-            );
+        for r in 0..a.n {
+            for (o, (x, y)) in a.fac.row(r).iter().zip(b.fac.row(r)).enumerate() {
+                assert!(
+                    x == y || (x.is_nan() && y.is_nan()),
+                    "{label}: fac row {r} off {o}: {x} vs {y}"
+                );
+            }
         }
     }
 
@@ -1252,10 +1319,9 @@ mod tests {
             let scratch = fresh_mat.lu();
             // Factor entries: ≤ 1e-12 relative per row — the ISSUE criterion
             // in its directly-assertable form.
-            let stride = early.kl + early.kuf + 1;
             for r in 0..early.n {
-                let er = &early.fac.data[r * stride..(r + 1) * stride];
-                let sr = &scratch.fac.data[r * stride..(r + 1) * stride];
+                let er = early.fac.row(r);
+                let sr = scratch.fac.row(r);
                 let scale = sr.iter().fold(0.0f64, |m, &v| m.max(v.abs())).max(1e-300);
                 for (o, (x, y)) in er.iter().zip(sr).enumerate() {
                     assert!(
@@ -1325,7 +1391,7 @@ mod tests {
     fn audit_flags_broken_pivot_permutation() {
         let m = tridiag(10, -1.0, 2.0, -1.0);
         let mut lu = m.lu();
-        lu.piv[4] = 9; // far outside [4, 4 + kl]
+        Arc::make_mut(&mut lu.piv)[4] = 9; // far outside [4, 4 + kl]
         let e = lu.audit().unwrap_err();
         assert_eq!(e.structure, "BandedLU");
         assert_eq!(e.field, "piv");

@@ -1,0 +1,765 @@
+//! Chunked copy-on-write row storage for band matrices (DESIGN.md
+//! §"Chunked COW band storage").
+//!
+//! [`ChunkedRows`] replaces the flat `Vec<f64>` behind [`crate::linalg::Banded`]
+//! with a rope of row-block chunks, each an `Arc<Vec<f64>>`:
+//!
+//! * an **append** touches only the unsealed tail chunk (a chunk is sealed
+//!   once it reaches [`CHUNK_ROWS`] rows — appends then start a fresh chunk),
+//!   so no existing byte moves;
+//! * a **mid-matrix splice** rewrites only the chunks an insertion straddles;
+//!   every other chunk keeps its buffer verbatim — structural sharing with
+//!   outstanding snapshots survives the splice;
+//! * a **clone** is a reference bump: clean chunks are `Arc`-shared, and a
+//!   later write copies the touched chunk on demand (`chunks_copied` counts
+//!   those), so a [`crate::gp::fit_state::PosteriorSnapshot`] build costs
+//!   `O(chunks)` pointer bumps instead of an `O(nν)` deep copy per band.
+//!
+//! The **dirty** flag tracks chunks written since the last
+//! [`ChunkedRows::mark_clean`] and carries the central aliasing invariant:
+//! a dirty chunk is always uniquely owned (`Arc` strong count 1), because
+//! the only way to write a shared chunk is the COW path, which unshares it
+//! first. Snapshot builders call `mark_clean` and then `clone`; audits
+//! (`strict-invariants`) verify the invariant plus the chunk-table shape.
+//!
+//! Everything here is pure layout: the logical row-major contents are
+//! bit-identical to the flat storage they replace ([`ChunkedRows::to_flat`]
+//! reconstructs it exactly — the equivalence surface `tests/incremental.rs`
+//! pins across random observe/splice/snapshot interleavings).
+
+use std::sync::Arc;
+
+use crate::check::{Audit, AuditError};
+
+/// Target rows per chunk. Appends grow the tail chunk to this size before
+/// starting a new one; splice rebuilds re-split at this size. The value
+/// trades splice cost (`O(CHUNK_ROWS · ν)` bytes shifted per straddled
+/// chunk) against per-row lookup/bump overhead (`O(n / CHUNK_ROWS)` chunk
+/// handles per matrix); 64 rows keeps a ν = 5/2 band's chunk near 4 KiB.
+pub const CHUNK_ROWS: usize = 64;
+
+/// Hard upper bound on a chunk's rows. A splice may grow a straddled chunk
+/// past [`CHUNK_ROWS`]; once it would exceed this bound the rebuild splits
+/// it. (Truncated partial chunks from [`ChunkedRows::from_prefix`] may be
+/// arbitrarily small — only the upper bound is invariant.)
+pub const MAX_CHUNK_ROWS: usize = 2 * CHUNK_ROWS;
+
+/// Cumulative storage counters surfaced through `Response::Stats`
+/// (`memmove_bytes`, `chunks_copied`) plus the current chunk count used for
+/// the per-snapshot `chunks_shared` tally.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StorageStats {
+    /// Bytes of pre-existing rows shifted inside chunks by splices
+    /// ([`ChunkedRows::insert_zero_rows`]); appends contribute zero.
+    pub memmove_bytes: u64,
+    /// Chunks deep-copied by the copy-on-write path (a write hitting a
+    /// chunk shared with a snapshot).
+    pub chunks_copied: u64,
+    /// Current number of chunks in the rope.
+    pub chunks: u64,
+}
+
+impl StorageStats {
+    /// Elementwise accumulate (summing over a structure's ropes).
+    pub fn accumulate(&mut self, other: StorageStats) {
+        self.memmove_bytes += other.memmove_bytes;
+        self.chunks_copied += other.chunks_copied;
+        self.chunks += other.chunks;
+    }
+}
+
+/// Amortized-O(1) chunk lookup state for loops whose row index moves mostly
+/// sequentially (the banded solve walks rows forward then backward) — pass
+/// to [`ChunkedRows::row_at`] instead of paying a binary search per row.
+#[derive(Clone, Copy, Debug)]
+pub struct RowCursor {
+    ci: usize,
+}
+
+/// A rope of `Arc`-shared row-block chunks holding `n_rows` rows of
+/// `width` contiguous `f64`s each. See the module docs for the COW / dirty
+/// lifecycle.
+#[derive(Debug)]
+pub struct ChunkedRows {
+    width: usize,
+    n_rows: usize,
+    chunks: Vec<Arc<Vec<f64>>>,
+    /// Prefix row indices: `starts[c]` is the first row of chunk `c`;
+    /// `starts.len() == chunks.len() + 1` with `starts[0] == 0` and
+    /// `starts[last] == n_rows`.
+    starts: Vec<usize>,
+    /// `dirty[c]`: chunk `c` was written since the last `mark_clean`.
+    /// Invariant: a dirty chunk is uniquely owned.
+    dirty: Vec<bool>,
+    memmove_bytes: u64,
+    chunks_copied: u64,
+}
+
+impl Clone for ChunkedRows {
+    /// Reference-bump clone: clean chunks are `Arc`-shared; dirty chunks
+    /// (uniquely owned by invariant) are deep-copied so `dirty ⇒ unique`
+    /// holds on *both* sides afterwards. Snapshot builders call
+    /// [`ChunkedRows::mark_clean`] first, making this a pure pointer bump.
+    fn clone(&self) -> Self {
+        let chunks = self
+            .chunks
+            .iter()
+            .zip(&self.dirty)
+            .map(|(c, &d)| if d { Arc::new(Vec::clone(c)) } else { Arc::clone(c) })
+            .collect();
+        ChunkedRows {
+            width: self.width,
+            n_rows: self.n_rows,
+            chunks,
+            starts: self.starts.clone(),
+            dirty: vec![false; self.dirty.len()],
+            memmove_bytes: self.memmove_bytes,
+            chunks_copied: self.chunks_copied,
+        }
+    }
+}
+
+impl ChunkedRows {
+    /// `n_rows` zero rows of `width` values each, chunked at
+    /// [`CHUNK_ROWS`]. Fresh chunks start dirty (no snapshot has seen them).
+    pub fn zeros(width: usize, n_rows: usize) -> Self {
+        assert!(width > 0, "ChunkedRows requires a positive row width");
+        let mut s = ChunkedRows {
+            width,
+            n_rows: 0,
+            chunks: Vec::new(),
+            starts: vec![0],
+            dirty: Vec::new(),
+            memmove_bytes: 0,
+            chunks_copied: 0,
+        };
+        s.append_zero_rows(n_rows);
+        s
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Cumulative counters plus the current chunk count.
+    pub fn stats(&self) -> StorageStats {
+        StorageStats {
+            memmove_bytes: self.memmove_bytes,
+            chunks_copied: self.chunks_copied,
+            chunks: self.chunks.len() as u64,
+        }
+    }
+
+    /// Clear every dirty flag, returning `(dirtied, total)` chunk counts.
+    /// Called by snapshot builders immediately before cloning: the clone is
+    /// then a pure reference bump, and the chunks a later engine write
+    /// touches are copied on demand (counted in `chunks_copied`).
+    pub fn mark_clean(&mut self) -> (u64, u64) {
+        let mut dirtied = 0u64;
+        for d in &mut self.dirty {
+            if *d {
+                dirtied += 1;
+            }
+            *d = false;
+        }
+        (dirtied, self.chunks.len() as u64)
+    }
+
+    /// Index of the chunk holding row `i`.
+    #[inline]
+    fn chunk_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.n_rows, "row {i} out of {} rows", self.n_rows);
+        self.starts[1..].partition_point(|&s| s <= i)
+    }
+
+    /// Row `i` as a `width`-length slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        let c = self.chunk_of(i);
+        let off = (i - self.starts[c]) * self.width;
+        &self.chunks[c][off..off + self.width]
+    }
+
+    /// Row `i` for writing, copy-on-write: a chunk shared with a snapshot
+    /// is deep-copied first; the chunk is marked dirty either way.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        let c = self.chunk_of(i);
+        let off = (i - self.starts[c]) * self.width;
+        let w = self.width;
+        let buf = self.make_unique(c);
+        &mut buf[off..off + w]
+    }
+
+    /// Make chunk `c` uniquely owned (deep-copying if shared) and dirty.
+    fn make_unique(&mut self, c: usize) -> &mut Vec<f64> {
+        if Arc::strong_count(&self.chunks[c]) > 1 {
+            self.chunks_copied += 1;
+        }
+        self.dirty[c] = true;
+        Arc::make_mut(&mut self.chunks[c])
+    }
+
+    /// A fresh cursor for [`ChunkedRows::row_at`].
+    pub fn cursor(&self) -> RowCursor {
+        RowCursor { ci: 0 }
+    }
+
+    /// Row `i` through a cursor: the chunk index is found by walking from
+    /// the cursor's last chunk, so mostly-sequential access (ascending or
+    /// descending) costs amortized O(1) per row instead of a binary search.
+    #[inline]
+    pub fn row_at<'a>(&'a self, cur: &mut RowCursor, i: usize) -> &'a [f64] {
+        debug_assert!(i < self.n_rows, "row {i} out of {} rows", self.n_rows);
+        let mut ci = cur.ci;
+        if ci >= self.chunks.len() {
+            ci = self.chunks.len() - 1;
+        }
+        while i < self.starts[ci] {
+            ci -= 1;
+        }
+        while i >= self.starts[ci + 1] {
+            ci += 1;
+        }
+        cur.ci = ci;
+        let off = (i - self.starts[ci]) * self.width;
+        &self.chunks[ci][off..off + self.width]
+    }
+
+    /// All rows in order as `width`-length slices, walked chunk-sequentially
+    /// (no per-row lookup) — the hot-loop iteration form.
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[f64]> {
+        let w = self.width;
+        self.chunks.iter().flat_map(move |c| c.chunks_exact(w))
+    }
+
+    /// Apply `f` to every stored value in place. Every chunk is unshared
+    /// (COW) and marked dirty.
+    pub fn map_in_place(&mut self, mut f: impl FnMut(&mut f64)) {
+        for c in 0..self.chunks.len() {
+            for v in self.make_unique(c).iter_mut() {
+                f(v);
+            }
+        }
+    }
+
+    /// Append `m` zero rows. Only the unsealed tail chunk is touched: it
+    /// grows until it holds [`CHUNK_ROWS`] rows, then fresh chunks are
+    /// pushed. No existing row moves (`memmove_bytes` is untouched).
+    pub fn append_zero_rows(&mut self, m: usize) {
+        if m == 0 {
+            return;
+        }
+        let w = self.width;
+        let mut left = m;
+        if let Some(last) = self.chunks.last() {
+            let rows = last.len() / w;
+            if rows < CHUNK_ROWS {
+                let take = left.min(CHUNK_ROWS - rows);
+                let li = self.chunks.len() - 1;
+                let buf = self.make_unique(li);
+                buf.resize((rows + take) * w, 0.0);
+                if let Some(top) = self.starts.last_mut() {
+                    *top += take;
+                }
+                left -= take;
+            }
+        }
+        while left > 0 {
+            let take = left.min(CHUNK_ROWS);
+            self.chunks.push(Arc::new(vec![0.0; take * w]));
+            self.dirty.push(true);
+            let top = self.starts[self.starts.len() - 1];
+            self.starts.push(top + take);
+            left -= take;
+        }
+        self.n_rows += m;
+    }
+
+    /// Splice `k` zero rows at the given **final** indices (strictly
+    /// increasing, `positions[t] ≤ n_rows + t` — the
+    /// [`crate::linalg::Banded::insert_rows_cols`] contract). Only chunks an
+    /// insertion lands in are rewritten (COW); all other chunks keep their
+    /// buffers verbatim, so structural sharing with snapshots survives.
+    /// Trailing insertions at the very end route through
+    /// [`ChunkedRows::append_zero_rows`] and move nothing.
+    ///
+    /// `memmove_bytes` accounts the bytes of pre-existing rows displaced
+    /// within each rewritten chunk — bounded by `O(MAX_CHUNK_ROWS · width)`
+    /// per straddled chunk, independent of `n_rows`.
+    pub fn insert_zero_rows(&mut self, positions: &[usize]) {
+        let k = positions.len();
+        if k == 0 {
+            return;
+        }
+        let w = self.width;
+        let n_old = self.n_rows;
+        // Original-coordinate insertion points: final index p_t means
+        // "before original row p_t − t" (non-decreasing, ≤ n_old).
+        let orig: Vec<usize> =
+            positions.iter().enumerate().map(|(t, &p)| p - t).collect();
+        debug_assert!(orig.windows(2).all(|p| p[0] <= p[1]));
+        debug_assert!(orig.last().is_none_or(|&o| o <= n_old));
+
+        let n_chunks = self.chunks.len();
+        let mut new_chunks: Vec<Arc<Vec<f64>>> = Vec::with_capacity(n_chunks + 1);
+        let mut new_dirty: Vec<bool> = Vec::with_capacity(n_chunks + 1);
+        let mut t = 0usize;
+        for c in 0..n_chunks {
+            let s0 = self.starts[c];
+            let s1 = self.starts[c + 1];
+            let t0 = t;
+            while t < k && orig[t] < s1 {
+                t += 1;
+            }
+            if t == t0 {
+                // No insertion lands here: the buffer survives verbatim.
+                new_chunks.push(Arc::clone(&self.chunks[c]));
+                new_dirty.push(self.dirty[c]);
+                continue;
+            }
+            // Rebuild this chunk with the zero rows spliced in.
+            let ins = &orig[t0..t];
+            let old = &self.chunks[c];
+            let rows_old = s1 - s0;
+            let mut v = Vec::with_capacity((rows_old + ins.len()) * w);
+            let mut pos = s0;
+            for &o in ins {
+                v.extend_from_slice(&old[(pos - s0) * w..(o - s0) * w]);
+                v.resize(v.len() + w, 0.0);
+                pos = o;
+            }
+            v.extend_from_slice(&old[(pos - s0) * w..]);
+            // Pre-existing rows at or past the first insertion point all
+            // shifted within this chunk.
+            self.memmove_bytes +=
+                ((s1 - ins[0]) * w * std::mem::size_of::<f64>()) as u64;
+            split_push(&mut new_chunks, &mut new_dirty, v, w);
+        }
+        self.chunks = new_chunks;
+        self.dirty = new_dirty;
+        self.rebuild_starts();
+        // Remaining insertions sit at the very end (orig == n_old).
+        self.append_zero_rows(k - t);
+    }
+
+    /// A new rope reusing rows `[0, keep)` of `self` plus `new_rows − keep`
+    /// fresh zero rows: whole chunks below `keep` are `Arc`-shared (their
+    /// bytes are settled prefix both sides agree on — the caller must
+    /// [`ChunkedRows::mark_clean`] `self` first so sharing keeps the
+    /// `dirty ⇒ unique` invariant), a chunk straddling `keep` is deep-copied
+    /// truncated. Cumulative counters carry over so per-structure stats
+    /// survive a factor patch replacing its storage.
+    pub fn from_prefix(&self, keep: usize, new_rows: usize) -> ChunkedRows {
+        assert!(keep <= self.n_rows && keep <= new_rows);
+        let w = self.width;
+        let mut out = ChunkedRows {
+            width: w,
+            n_rows: 0,
+            chunks: Vec::new(),
+            starts: vec![0],
+            dirty: Vec::new(),
+            memmove_bytes: self.memmove_bytes,
+            chunks_copied: self.chunks_copied,
+        };
+        for c in 0..self.chunks.len() {
+            let s0 = self.starts[c];
+            let s1 = self.starts[c + 1];
+            if s1 <= keep {
+                debug_assert!(!self.dirty[c], "from_prefix on a dirty source chunk");
+                out.chunks.push(Arc::clone(&self.chunks[c]));
+                out.dirty.push(false);
+                out.starts.push(s1);
+                out.n_rows = s1;
+            } else {
+                if s0 < keep {
+                    out.chunks.push(Arc::new(self.chunks[c][..(keep - s0) * w].to_vec()));
+                    out.dirty.push(true);
+                    out.starts.push(keep);
+                    out.n_rows = keep;
+                }
+                break;
+            }
+        }
+        out.append_zero_rows(new_rows - keep);
+        out
+    }
+
+    /// Concatenate all rows into the flat row-major band layout this rope
+    /// replaced — the chunked == flat equivalence surface for property
+    /// tests. Deliberately an O(nν) copy; production code must not call it
+    /// (the `cargo xtask lint` COW scanner enforces that).
+    pub fn to_flat(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(self.n_rows * self.width);
+        for c in &self.chunks {
+            v.extend_from_slice(c);
+        }
+        v
+    }
+
+    fn rebuild_starts(&mut self) {
+        let w = self.width;
+        self.starts.clear();
+        self.starts.push(0);
+        let mut acc = 0usize;
+        for c in &self.chunks {
+            acc += c.len() / w;
+            self.starts.push(acc);
+        }
+        self.n_rows = acc;
+    }
+}
+
+/// Push a rebuilt buffer as one chunk, or split it into [`CHUNK_ROWS`]-row
+/// pieces once it would exceed [`MAX_CHUNK_ROWS`]. Every pushed chunk is
+/// freshly owned, hence dirty.
+fn split_push(
+    chunks: &mut Vec<Arc<Vec<f64>>>,
+    dirty: &mut Vec<bool>,
+    v: Vec<f64>,
+    w: usize,
+) {
+    let rows = v.len() / w;
+    if rows <= MAX_CHUNK_ROWS {
+        chunks.push(Arc::new(v));
+        dirty.push(true);
+        return;
+    }
+    let mut done = 0usize;
+    while done < rows {
+        let take = (rows - done).min(CHUNK_ROWS);
+        chunks.push(Arc::new(v[done * w..(done + take) * w].to_vec()));
+        dirty.push(true);
+        done += take;
+    }
+}
+
+impl Audit for ChunkedRows {
+    /// Chunk-table invariants: the `starts` prefix table is strictly
+    /// increasing from 0 to `n_rows` and consistent with every chunk's
+    /// buffer length, no chunk exceeds [`MAX_CHUNK_ROWS`] rows (or is
+    /// empty), the dirty table is parallel to the chunk table, and — the
+    /// aliasing invariant the COW path relies on — every dirty chunk is
+    /// uniquely owned (`Arc` sharing only on clean chunks).
+    fn audit(&self) -> Result<(), AuditError> {
+        if self.width == 0 {
+            return Err(AuditError::new(
+                "ChunkedRows",
+                "width",
+                None,
+                "zero row width".to_string(),
+            ));
+        }
+        if self.starts.len() != self.chunks.len() + 1 || self.starts[0] != 0 {
+            return Err(AuditError::new(
+                "ChunkedRows",
+                "starts",
+                None,
+                format!(
+                    "starts table length {} inconsistent with {} chunks (first = {})",
+                    self.starts.len(),
+                    self.chunks.len(),
+                    self.starts[0]
+                ),
+            ));
+        }
+        if self.dirty.len() != self.chunks.len() {
+            return Err(AuditError::new(
+                "ChunkedRows",
+                "dirty",
+                None,
+                format!(
+                    "dirty table length {} != {} chunks",
+                    self.dirty.len(),
+                    self.chunks.len()
+                ),
+            ));
+        }
+        for c in 0..self.chunks.len() {
+            let s0 = self.starts[c];
+            let s1 = self.starts[c + 1];
+            if s1 <= s0 {
+                return Err(AuditError::new(
+                    "ChunkedRows",
+                    "starts",
+                    Some(c),
+                    format!("starts not strictly increasing: {s0} -> {s1}"),
+                ));
+            }
+            let rows = s1 - s0;
+            if rows > MAX_CHUNK_ROWS {
+                return Err(AuditError::new(
+                    "ChunkedRows",
+                    "chunks",
+                    Some(c),
+                    format!("chunk holds {rows} rows > MAX_CHUNK_ROWS = {MAX_CHUNK_ROWS}"),
+                ));
+            }
+            if self.chunks[c].len() != rows * self.width {
+                return Err(AuditError::new(
+                    "ChunkedRows",
+                    "chunks",
+                    Some(c),
+                    format!(
+                        "chunk buffer length {} != {rows} rows × width {}",
+                        self.chunks[c].len(),
+                        self.width
+                    ),
+                ));
+            }
+            if self.dirty[c] && Arc::strong_count(&self.chunks[c]) != 1 {
+                return Err(AuditError::new(
+                    "ChunkedRows",
+                    "dirty",
+                    Some(c),
+                    format!(
+                        "dirty chunk shared ({} owners) — COW invariant broken",
+                        Arc::strong_count(&self.chunks[c])
+                    ),
+                ));
+            }
+        }
+        if self.starts[self.chunks.len()] != self.n_rows {
+            return Err(AuditError::new(
+                "ChunkedRows",
+                "starts",
+                None,
+                format!(
+                    "starts table ends at {} but n_rows = {}",
+                    self.starts[self.chunks.len()],
+                    self.n_rows
+                ),
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic rope with row i holding [i·w, i·w+1, ...).
+    fn ramp(width: usize, rows: usize) -> ChunkedRows {
+        let mut r = ChunkedRows::zeros(width, rows);
+        for i in 0..rows {
+            for (o, v) in r.row_mut(i).iter_mut().enumerate() {
+                *v = (i * width + o) as f64;
+            }
+        }
+        r
+    }
+
+    fn flat_ramp(width: usize, rows: usize) -> Vec<f64> {
+        (0..rows * width).map(|x| x as f64).collect()
+    }
+
+    #[test]
+    fn zeros_rows_and_lookup_roundtrip() {
+        for rows in [0usize, 1, CHUNK_ROWS - 1, CHUNK_ROWS, CHUNK_ROWS + 1, 300] {
+            let r = ramp(3, rows);
+            assert_eq!(r.n_rows(), rows);
+            assert!(r.audit().is_ok(), "rows={rows}");
+            assert_eq!(r.to_flat(), flat_ramp(3, rows), "rows={rows}");
+            let mut cur = r.cursor();
+            for i in (0..rows).rev() {
+                assert_eq!(r.row(i)[0], (i * 3) as f64);
+                assert_eq!(r.row_at(&mut cur, i)[2], (i * 3 + 2) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn append_fills_tail_then_seals() {
+        let mut r = ramp(2, CHUNK_ROWS - 1);
+        assert_eq!(r.num_chunks(), 1);
+        // Appending exactly one row fills the tail chunk to the seal point.
+        r.append_zero_rows(1);
+        assert_eq!(r.num_chunks(), 1);
+        assert_eq!(r.n_rows(), CHUNK_ROWS);
+        // The next append must open a fresh chunk, not grow the sealed one.
+        r.append_zero_rows(1);
+        assert_eq!(r.num_chunks(), 2);
+        assert_eq!(r.n_rows(), CHUNK_ROWS + 1);
+        assert_eq!(r.stats().memmove_bytes, 0, "appends never move rows");
+        assert!(r.audit().is_ok());
+        let mut want = flat_ramp(2, CHUNK_ROWS - 1);
+        want.extend_from_slice(&[0.0; 4]);
+        assert_eq!(r.to_flat(), want);
+    }
+
+    #[test]
+    fn splice_matches_flat_reference_and_touches_one_chunk() {
+        let rows = 3 * CHUNK_ROWS;
+        let w = 2;
+        let r0 = ramp(w, rows);
+        // Insert two rows into the middle chunk and one at the very front of
+        // the last chunk — a splice straddling a chunk seam.
+        for positions in [
+            vec![CHUNK_ROWS + 5],
+            vec![CHUNK_ROWS, CHUNK_ROWS + 1],
+            vec![2 * CHUNK_ROWS],
+            vec![0],
+            vec![rows, rows + 1], // pure appends
+        ] {
+            let mut r = r0.clone();
+            let before = r.stats();
+            r.insert_zero_rows(&positions);
+            assert!(r.audit().is_ok(), "{positions:?}");
+            // Flat reference: splice into a plain Vec.
+            let mut flat = flat_ramp(w, rows);
+            for &p in &positions {
+                flat.splice(p * w..p * w, std::iter::repeat_n(0.0, w));
+            }
+            assert_eq!(r.to_flat(), flat, "{positions:?}");
+            let delta = r.stats().memmove_bytes - before.memmove_bytes;
+            if positions[0] >= rows {
+                assert_eq!(delta, 0, "append splice must not move rows");
+            } else {
+                assert!(
+                    delta as usize <= MAX_CHUNK_ROWS * w * 8 * positions.len(),
+                    "{positions:?}: moved {delta} bytes"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn splice_preserves_untouched_chunk_buffers() {
+        let rows = 4 * CHUNK_ROWS;
+        let mut r = ramp(2, rows);
+        let snap = {
+            r.mark_clean();
+            r.clone()
+        };
+        // Splice into chunk 1: chunks 0, 2, 3 must still share buffers with
+        // the snapshot (structural sharing), chunk 1 must not.
+        r.insert_zero_rows(&[CHUNK_ROWS + 3]);
+        let copied_before = r.stats().chunks_copied;
+        // Writing a shared chunk COWs it exactly once.
+        r.row_mut(0)[0] = -1.0;
+        assert_eq!(r.stats().chunks_copied, copied_before + 1);
+        r.row_mut(1)[0] = -2.0;
+        assert_eq!(r.stats().chunks_copied, copied_before + 1, "second write is free");
+        // The snapshot still reads the original bytes.
+        assert_eq!(snap.row(0)[0], 0.0);
+        assert_eq!(snap.row(CHUNK_ROWS + 3)[0], ((CHUNK_ROWS + 3) * 2) as f64);
+        assert!(r.audit().is_ok());
+        assert!(snap.audit().is_ok());
+    }
+
+    #[test]
+    fn clone_of_dirty_rope_deep_copies_dirty_chunks_only() {
+        let mut r = ramp(2, 3 * CHUNK_ROWS);
+        r.mark_clean();
+        r.row_mut(5)[0] = 42.0; // dirty chunk 0 (unique, so no COW copy)
+        let c = r.clone();
+        // Both sides satisfy dirty ⇒ unique.
+        assert!(r.audit().is_ok());
+        assert!(c.audit().is_ok());
+        assert_eq!(c.row(5)[0], 42.0);
+        // Writing the original's clean chunks now COWs (shared with clone)…
+        let copied = r.stats().chunks_copied;
+        r.row_mut(2 * CHUNK_ROWS)[0] = 7.0;
+        assert_eq!(r.stats().chunks_copied, copied + 1);
+        // …but its dirty chunk stayed unique: writing it is free.
+        r.row_mut(5)[1] = 8.0;
+        assert_eq!(r.stats().chunks_copied, copied + 1);
+        assert_eq!(c.row(2 * CHUNK_ROWS)[0], ((2 * CHUNK_ROWS) * 2) as f64);
+    }
+
+    #[test]
+    fn mark_clean_counts_and_clears() {
+        let mut r = ramp(1, 2 * CHUNK_ROWS);
+        let (d, total) = r.mark_clean();
+        assert_eq!((d, total), (2, 2), "fresh chunks start dirty");
+        let (d, _) = r.mark_clean();
+        assert_eq!(d, 0);
+        r.row_mut(0)[0] = 1.0;
+        let (d, _) = r.mark_clean();
+        assert_eq!(d, 1);
+    }
+
+    #[test]
+    fn from_prefix_shares_whole_chunks_and_truncates_straddler() {
+        let rows = 3 * CHUNK_ROWS + 10;
+        let mut r = ramp(2, rows);
+        r.mark_clean();
+        let keep = CHUNK_ROWS + 7; // chunk 0 whole, chunk 1 truncated
+        let p = r.from_prefix(keep, rows + 5);
+        assert!(p.audit().is_ok());
+        assert_eq!(p.n_rows(), rows + 5);
+        let flat = p.to_flat();
+        let want = flat_ramp(2, keep);
+        assert_eq!(&flat[..keep * 2], &want[..], "prefix rows preserved");
+        assert!(flat[keep * 2..].iter().all(|&v| v == 0.0), "tail zeroed");
+        // Chunk 0 is shared with the source (3 would mean an extra owner).
+        assert_eq!(Arc::strong_count(&p.chunks[0]), 2);
+        // The truncated straddler is freshly owned.
+        assert_eq!(Arc::strong_count(&p.chunks[1]), 1);
+        // Counters carried over.
+        assert_eq!(p.stats().memmove_bytes, r.stats().memmove_bytes);
+        assert_eq!(p.stats().chunks_copied, r.stats().chunks_copied);
+    }
+
+    #[test]
+    fn from_prefix_keep_zero_rows_of_source() {
+        let mut r = ramp(3, 10);
+        r.mark_clean();
+        let p = r.from_prefix(10, 12);
+        assert_eq!(p.n_rows(), 12);
+        assert!(p.audit().is_ok());
+        assert_eq!(&p.to_flat()[..30], &flat_ramp(3, 10)[..]);
+    }
+
+    #[test]
+    fn map_in_place_unshares_everything() {
+        let mut r = ramp(2, 2 * CHUNK_ROWS);
+        r.mark_clean();
+        let snap = r.clone();
+        r.map_in_place(|v| *v *= 2.0);
+        assert!(r.audit().is_ok());
+        assert_eq!(r.stats().chunks_copied, 2);
+        assert_eq!(snap.row(1)[0], 2.0, "snapshot unscathed");
+        assert_eq!(r.row(1)[0], 4.0);
+    }
+
+    #[test]
+    fn audit_flags_shared_dirty_chunk() {
+        let mut r = ramp(1, 4);
+        // Manufacture the broken state directly: dirty while shared.
+        let extra = Arc::clone(&r.chunks[0]);
+        r.dirty[0] = true;
+        let e = r.audit().unwrap_err();
+        assert_eq!(e.structure, "ChunkedRows");
+        assert_eq!(e.field, "dirty");
+        assert_eq!(e.index, Some(0));
+        drop(extra);
+        assert!(r.audit().is_ok());
+    }
+
+    #[test]
+    fn audit_flags_inconsistent_starts_table() {
+        let mut r = ramp(2, CHUNK_ROWS + 4);
+        r.starts[1] += 1;
+        let e = r.audit().unwrap_err();
+        assert_eq!(e.structure, "ChunkedRows");
+    }
+
+    #[test]
+    fn cursor_handles_random_jumps() {
+        let r = ramp(1, 5 * CHUNK_ROWS);
+        let mut cur = r.cursor();
+        for &i in &[0usize, 4 * CHUNK_ROWS, 1, 5 * CHUNK_ROWS - 1, CHUNK_ROWS, 2] {
+            assert_eq!(r.row_at(&mut cur, i)[0], i as f64);
+        }
+    }
+}

@@ -4,9 +4,11 @@
 
 pub mod banded;
 pub mod block_tridiag;
+pub mod chunks;
 pub mod dense;
 pub mod perm;
 
 pub use banded::{Banded, BandedLU, PatchOutcome, PatchPolicy, SpliceInfo};
+pub use chunks::{ChunkedRows, RowCursor, StorageStats, CHUNK_ROWS, MAX_CHUNK_ROWS};
 pub use dense::Dense;
 pub use perm::Permutation;

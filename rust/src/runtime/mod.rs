@@ -7,4 +7,4 @@ pub mod window_exec;
 pub mod xla;
 
 pub use artifacts::{ArtifactManifest, ArtifactSpec};
-pub use window_exec::{WindowBatch, WindowExecutable, WindowOutputs};
+pub use window_exec::{PendingWindow, WindowBatch, WindowExecutable, WindowOutputs};

@@ -73,8 +73,12 @@ impl WindowExecutable {
         Ok(WindowExecutable { spec: spec.clone(), exe })
     }
 
-    /// Execute one batch. `batch` tensors must match the spec's shapes.
-    pub fn execute(&self, batch: &WindowBatch) -> Result<WindowOutputs> {
+    /// Dispatch one batch without waiting for the result. PJRT's `execute`
+    /// enqueues the computation and returns device buffers immediately; the
+    /// blocking host sync happens in [`PendingWindow::wait`]. This split
+    /// lets the caller double-buffer: stage the *next* batch's window
+    /// gathers on the host while this one executes on the device.
+    pub fn submit(&self, batch: &WindowBatch) -> Result<PendingWindow> {
         let (b, d, w) = (self.spec.b as i64, self.spec.d as i64, self.spec.w as i64);
         let lit = |data: &[f32], dims: &[i64]| -> Result<xla::Literal> {
             let expect: i64 = dims.iter().product();
@@ -95,8 +99,34 @@ impl WindowExecutable {
             lit(&batch.kdiag, &[b])?,
             xla::Literal::scalar(batch.beta),
         ];
-        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
+        let mut outer = self.exe.execute::<xla::Literal>(&args)?;
+        ensure!(
+            !outer.is_empty() && !outer[0].is_empty(),
+            "executable returned no result buffers"
+        );
+        Ok(PendingWindow { result: outer.swap_remove(0).swap_remove(0) })
+    }
+
+    /// Execute one batch synchronously (`submit` + `wait`). `batch` tensors
+    /// must match the spec's shapes.
+    pub fn execute(&self, batch: &WindowBatch) -> Result<WindowOutputs> {
+        self.submit(batch)?.wait()
+    }
+}
+
+/// An in-flight [`WindowExecutable::submit`] dispatch. Dropping it without
+/// calling [`PendingWindow::wait`] abandons the result (the device work may
+/// still run to completion) — the clean fallback when a later submit in the
+/// same predict fails.
+pub struct PendingWindow {
+    result: xla::Literal,
+}
+
+impl PendingWindow {
+    /// Block on the device → host transfer and unpack the output tuple.
+    pub fn wait(self) -> Result<WindowOutputs> {
+        let host = self.result.to_literal_sync()?;
+        let parts = host.to_tuple()?;
         ensure!(parts.len() == 4, "expected 4 outputs, got {}", parts.len());
         let mut it = parts.into_iter();
         Ok(WindowOutputs {

@@ -170,8 +170,10 @@ fn response_prediction_and_suggestion() {
 
 /// The full stats surface, including the shared worker-pool fields added by
 /// the scheduler rewrite (`pool_workers`/`pool_busy`/`pool_queue_depth`/
-/// `pool_steals`). Removing or renaming any of these is a breaking wire
-/// change and must fail here.
+/// `pool_steals`) and the chunked-COW band-storage counters
+/// (`memmove_bytes`/`chunks_copied`/`chunks_shared` — additive, so old
+/// clients keep parsing). Removing or renaming any of these is a breaking
+/// wire change and must fail here.
 #[test]
 fn response_stats_with_pool_fields() {
     pin_response(
@@ -191,13 +193,17 @@ fn response_stats_with_pool_fields() {
             pool_busy: 3,
             pool_queue_depth: 5,
             pool_steals: 17,
+            memmove_bytes: 4096,
+            chunks_copied: 6,
+            chunks_shared: 44,
         },
         Some(2.0),
         r#"{"id":2,"ok":true,"n":1000,"d":4,"omegas":[1,0.5,2,1.5],
             "cache_hits":10,"cache_misses":3,"pjrt_batches":7,"native_queries":21,
             "factor_patches":90,"factor_resweeps":2,
             "cache_truncations":1,"fallback_rebuilds":0,
-            "pool_workers":8,"pool_busy":3,"pool_queue_depth":5,"pool_steals":17}"#,
+            "pool_workers":8,"pool_busy":3,"pool_queue_depth":5,"pool_steals":17,
+            "memmove_bytes":4096,"chunks_copied":6,"chunks_shared":44}"#,
     );
 }
 

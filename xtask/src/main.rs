@@ -26,6 +26,15 @@
 //!    `// SAFETY:` comment within the three preceding lines. The crate is
 //!    currently `unsafe`-free (see `util/pool.rs`); this keeps any future
 //!    exception documented at the point of use.
+//! 6. **cow-discipline** — the band-heavy modules (`linalg/banded.rs`,
+//!    `gp/dim.rs`, `gp/fit_state.rs`, `kernels/kp.rs`) hold their bands in
+//!    the chunked copy-on-write rope (`linalg/chunks.rs`): non-test code
+//!    there must not call raw `copy_within` (splices go through
+//!    `ChunkedRows` so memmove accounting and chunk sharing hold), and
+//!    every `.clone()` needs a `// lint: cow-ok (<why>)` annotation within
+//!    the three lines above stating why the clone is a reference bump or
+//!    not band data. `.to_flat()` — the flat-materialization escape hatch —
+//!    needs the same annotation anywhere in non-test `rust/src` code.
 //!
 //! The scanners are deliberately string/line-based, not syn-based: they are
 //! auditable in a glance, dependency-free, and err toward *not* flagging
@@ -402,6 +411,63 @@ fn scan_unsafe_safety(name: &str, src: &str) -> Vec<String> {
     out
 }
 
+/// Lint 6: copy-on-write discipline for the chunked band storage. In a
+/// band module, raw `copy_within` and unannotated `.clone()` are findings;
+/// `.to_flat()` is a finding in any non-test library code. Suppression:
+/// `// lint: cow-ok (<why>)` on the line or within the three lines above.
+fn scan_cow(name: &str, src: &str, band_module: bool) -> Vec<String> {
+    let lines: Vec<&str> = src.lines().collect();
+    let mask = test_region_mask(&lines);
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        let code = code_only(line);
+        let suppressed =
+            (i.saturating_sub(3)..=i).any(|k| lines[k].contains("lint: cow-ok"));
+        if suppressed {
+            continue;
+        }
+        if band_module && code.contains("copy_within(") {
+            out.push(format!(
+                "{name}:{}: raw `copy_within` on band storage — splice through \
+                 `ChunkedRows` so chunk sharing and memmove accounting hold \
+                 (or annotate `// lint: cow-ok (<why>)`)",
+                i + 1
+            ));
+        }
+        if band_module && code.contains(".clone(") {
+            out.push(format!(
+                "{name}:{}: `.clone()` in a band-storage module — a deep copy \
+                 here defeats the COW chunk sharing; annotate \
+                 `// lint: cow-ok (<why>)` if it is a reference bump or not \
+                 band data",
+                i + 1
+            ));
+        }
+        if code.contains(".to_flat(") {
+            out.push(format!(
+                "{name}:{}: `.to_flat()` in library code — the flat \
+                 materialization is the test-only equivalence surface; \
+                 annotate `// lint: cow-ok (<why>)` if production really \
+                 needs it",
+                i + 1
+            ));
+        }
+    }
+    out
+}
+
+/// The band-storage modules lint 6 polices (`linalg/chunks.rs` itself is
+/// exempt: it *implements* the COW mechanics).
+const BAND_MODULES: &[&str] = &[
+    "rust/src/linalg/banded.rs",
+    "rust/src/gp/dim.rs",
+    "rust/src/gp/fit_state.rs",
+    "rust/src/kernels/kp.rs",
+];
+
 /// The DESIGN.md §Perf hot loops whose bounds contracts lint 2 enforces.
 /// Keep in sync with the DESIGN.md section — a rename lands here too (the
 /// scanner treats a missing fn as a finding, so drift is loud).
@@ -435,13 +501,18 @@ fn lint() -> ExitCode {
         }
     }
 
-    // 3 + 4. Library sources: hashmap-order + feature-gate hygiene.
+    // 3 + 4 + 6. Library sources: hashmap-order + feature-gate hygiene +
+    // COW band-storage discipline.
     let mut src_files = Vec::new();
     rust_files(&rust.join("src"), &mut src_files);
     let mut lib_sources: Vec<(String, String)> = Vec::new();
     for path in &src_files {
         let (name, src) = read_rel(&root, path);
         findings.extend(scan_hashmap_order(&name, &src));
+        if name != "rust/src/linalg/chunks.rs" {
+            let band = BAND_MODULES.contains(&name.as_str());
+            findings.extend(scan_cow(&name, &src, band));
+        }
         lib_sources.push((name, src));
     }
     let manifest =
@@ -584,6 +655,27 @@ mod tests {
             1,
             "missing declaration is a finding"
         );
+    }
+
+    #[test]
+    fn cow_scanner_polices_band_modules() {
+        let bad = "fn splice(&mut self) {\n    self.data.copy_within(4..8, 7);\n    let c = self.fac.clone();\n    let _ = c;\n}\n";
+        let f = scan_cow("rust/src/linalg/banded.rs", bad, true);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f[0].contains("copy_within"), "{}", f[0]);
+        assert!(f[1].contains(".clone()"), "{}", f[1]);
+        let annotated = "fn snap(&self) -> Dims {\n    // lint: cow-ok (reference-bump clone; chunks settled)\n    self.dims.clone()\n}\n";
+        assert!(scan_cow("rust/src/gp/fit_state.rs", annotated, true).is_empty());
+        let in_test = "#[cfg(test)]\nmod tests {\n    fn t(b: &Banded) { let _ = b.clone(); let _ = b.to_flat(); }\n}\n";
+        assert!(scan_cow("rust/src/linalg/banded.rs", in_test, true).is_empty());
+        let prose = "/// Never call .clone() or copy_within on band storage.\nfn f() {}\n";
+        assert!(scan_cow("rust/src/gp/dim.rs", prose, true).is_empty(), "comments stripped");
+        // to_flat is policed even outside the band modules…
+        let flat = "fn f(b: &Banded) -> Vec<f64> {\n    b.to_flat()\n}\n";
+        assert_eq!(scan_cow("rust/src/gp/posterior.rs", flat, false).len(), 1);
+        // …while clone/copy_within are not.
+        let clone_elsewhere = "fn f(v: &Vec<f64>) -> Vec<f64> {\n    v.clone()\n}\n";
+        assert!(scan_cow("rust/src/gp/posterior.rs", clone_elsewhere, false).is_empty());
     }
 
     #[test]
