@@ -17,6 +17,7 @@
 //! cargo bench --bench incremental -- --full    # adds n = 100k
 //! cargo bench --bench incremental -- --smoke --gate --json BENCH_incremental.json
 //! cargo bench --bench incremental -- --crossover  # batch-size sweep at fixed n
+//! cargo bench --bench incremental -- --rolling    # sliding-window tick bench
 //! ```
 //!
 //! A fourth comparison isolates the **factor phase** (ISSUE 4): per-observe
@@ -49,6 +50,16 @@
 //! which must stay within 3× of the 10k figure plus one straddled-chunk
 //! allowance per band (`O(ν·chunk)`, not `O(nν)`).
 //!
+//! A seventh comparison (ISSUE 8, `--rolling`) benchmarks the
+//! **sliding-window tick** at fixed n ∈ {10k, 100k} (10k only under
+//! `--smoke` — the refit baseline alone would dominate the smoke budget):
+//! one `observe` + one oldest-row `forget_index` + warm posterior — the
+//! steady-state cost of the coordinator's `RollingWindow` mode, driven at
+//! model level so the measurement is pure mutation + downdate — against
+//! evicting by refit (rotate the window's flat data and rebuild the model
+//! from scratch each tick). The `rolling` JSON section carries both times;
+//! the gate requires the tick ≥ 5× faster than evict-by-refit at n = 10k.
+//!
 //! `--smoke` halves the per-point repetitions (the size list already stops
 //! at the gated n = 10k without `--full`); `--json PATH` writes the
 //! measurements as one JSON object (the CI `bench-smoke` job uploads it as
@@ -56,8 +67,9 @@
 //! `--gate` exits non-zero unless, at n = 10k, observe-per-point beats
 //! refit-per-point, `observe_batch(m=64)` beats 64 sequential observes,
 //! *and* the append-path patched factor update beats the full re-sweep —
-//! all by ≥ 5× (plus the pool gate when `--multi-model` ran, and the two
-//! storage gates above, always). The JSON is written *before* the gate
+//! all by ≥ 5× (plus the pool gate when `--multi-model` ran, the
+//! rolling-tick gate when `--rolling` ran, and the two storage gates
+//! above, always). The JSON is written *before* the gate
 //! verdict so a failing run still uploads its numbers.
 
 use std::time::Instant;
@@ -186,6 +198,77 @@ fn measure_batch(n: usize, d: usize, m: usize, with_sequential: bool) -> (f64, f
     let t_refit = t0.elapsed().as_secs_f64();
 
     (t_batch, t_seq, t_refit)
+}
+
+struct RollingBench {
+    n: usize,
+    tick_s: f64,
+    refit_s: f64,
+}
+
+impl RollingBench {
+    fn speedup(&self) -> f64 {
+        self.refit_s / self.tick_s.max(1e-9)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("tick_ms", Json::Num(self.tick_s * 1e3)),
+            ("evict_by_refit_ms", Json::Num(self.refit_s * 1e3)),
+            ("speedup", Json::Num(self.speedup())),
+        ])
+    }
+}
+
+/// Steady-state sliding-window tick at fixed `n` (ISSUE 8): one `observe`
+/// of the arriving point, one `forget_index(0)` of the oldest row (rows
+/// are stored in arrival order, so the coordinator's `enforce_window`
+/// eviction is always a prefix drop) and a warm posterior, vs the
+/// evict-by-refit baseline — rotate the flat data and rebuild the model
+/// with a full `fit` + cold posterior each tick.
+fn measure_rolling(n: usize, d: usize, k: usize) -> RollingBench {
+    let (x, y) = data(n + k, d, (n as u64) ^ 0x2011);
+
+    // Incremental window: the model holds exactly n rows across ticks.
+    let mut gp = AdditiveGP::new(cfg(), d);
+    gp.fit(&x[..n], &y[..n]);
+    gp.ensure_posterior();
+    let rem0 = gp.incremental_removes();
+    let t0 = Instant::now();
+    for i in 0..k {
+        gp.observe(&x[n + i], y[n + i]);
+        gp.forget_index(0);
+        gp.ensure_posterior();
+    }
+    let tick_s = t0.elapsed().as_secs_f64() / k as f64;
+    assert_eq!(gp.n(), n, "window must hold its size across ticks");
+    let (_, fall, _) = gp.incremental_stats();
+    assert_eq!(fall, 0, "no degenerate fallbacks expected on random data");
+    assert_eq!(
+        (gp.incremental_removes() - rem0) as usize,
+        k * d,
+        "every eviction must ride the incremental downdate path"
+    );
+
+    // Evict-by-refit baseline: same stream, full rebuild per tick.
+    let mut xs_acc: Vec<Vec<f64>> = x[..n].to_vec();
+    let mut ys_acc: Vec<f64> = y[..n].to_vec();
+    let mut gp2 = AdditiveGP::new(cfg(), d);
+    gp2.fit(&xs_acc, &ys_acc);
+    gp2.ensure_posterior();
+    let t0 = Instant::now();
+    for i in 0..k {
+        xs_acc.remove(0);
+        ys_acc.remove(0);
+        xs_acc.push(x[n + i].clone());
+        ys_acc.push(y[n + i]);
+        gp2.fit(&xs_acc, &ys_acc);
+        gp2.ensure_posterior();
+    }
+    let refit_s = t0.elapsed().as_secs_f64() / k as f64;
+
+    RollingBench { n, tick_s, refit_s }
 }
 
 /// Per-observe wall-clock split of one insert workload × patch policy
@@ -720,6 +803,38 @@ fn main() {
         None
     };
 
+    // ISSUE 8: steady-state sliding-window tick (observe + oldest-row
+    // forget + warm posterior) at fixed n vs evicting by refit. The 100k
+    // leg is skipped under --smoke — the refit baseline alone would blow
+    // the smoke budget; the gate's n = 10k leg always runs.
+    let mut rolling: Vec<RollingBench> = Vec::new();
+    if has("--rolling") {
+        let rsizes: &[usize] = if smoke { &[10_000] } else { &[10_000, 100_000] };
+        println!("\n# rolling window: steady-state tick vs evict-by-refit (fixed n)\n");
+        println!(
+            "{:>8}  {:>14}  {:>18}  {:>9}",
+            "n", "tick ms", "evict-refit ms", "speedup"
+        );
+        for &n in rsizes {
+            let k = if n >= 100_000 {
+                4
+            } else if smoke {
+                6
+            } else {
+                12
+            };
+            let r = measure_rolling(n, d, k);
+            println!(
+                "{:>8}  {:>14.3}  {:>18.3}  {:>8.1}×",
+                r.n,
+                r.tick_s * 1e3,
+                r.refit_s * 1e3,
+                r.speedup()
+            );
+            rolling.push(r);
+        }
+    }
+
     // Chunked-COW storage: snapshot build vs deep materialization, plus
     // splice memmove locality. Both sizes run in every mode — sublinearity
     // only shows at the 100k leg.
@@ -784,6 +899,15 @@ fn main() {
             threshold: pb.threshold(),
         });
     }
+    // ISSUE 8 gate: at n = 10k the rolling-window tick must beat the
+    // evict-by-refit baseline ≥ 5×.
+    if let Some(rb) = rolling.iter().find(|r| r.n == GATE_N) {
+        gates.push(Gate {
+            name: "rolling_tick_vs_evict_by_refit_at_10k",
+            value: rb.speedup(),
+            threshold: GATE_MIN_SPEEDUP,
+        });
+    }
     // Chunked-COW storage gates: the reference-bump snapshot build must
     // beat the linear deep materialization ≥ 5× at n = 100k, and the
     // per-observe splice memmove at 100k must stay within 3× of the 10k
@@ -819,6 +943,10 @@ fn main() {
             (
                 "pool",
                 pool_bench.as_ref().map(PoolBench::to_json).unwrap_or(Json::Null),
+            ),
+            (
+                "rolling",
+                Json::Arr(rolling.iter().map(RollingBench::to_json).collect()),
             ),
             (
                 "snapshot",

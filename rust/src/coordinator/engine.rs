@@ -48,12 +48,19 @@ impl Default for EngineConfig {
 }
 
 /// A command routed to a model by the scheduler. `reply` receives exactly
-/// one [`Response`]. `Observe`/`ObserveBatch`/`Fit` are *mutating* (per-model
-/// FIFO under mutual exclusion); `Predict`/`Suggest`/`Stats` are *reads*
-/// (served concurrently — see DESIGN.md §Coordinator, "Command classes").
+/// one [`Response`]. `Observe`/`ObserveBatch`/`Forget`/`ForgetBatch`/
+/// `RollingWindow`/`Fit` are *mutating* (per-model FIFO under mutual
+/// exclusion); `Predict`/`Suggest`/`Stats` are *reads* (served concurrently —
+/// see DESIGN.md §Coordinator, "Command classes").
 pub enum Command {
     Observe { x: Vec<f64>, y: f64, reply: Sender<Response> },
     ObserveBatch { xs: Vec<Vec<f64>>, ys: Vec<f64>, reply: Sender<Response> },
+    /// Release the latest observation matching `x` by value (protocol v2).
+    Forget { x: Vec<f64>, reply: Sender<Response> },
+    /// Release a batch of observations by value (protocol v2).
+    ForgetBatch { xs: Vec<Vec<f64>>, reply: Sender<Response> },
+    /// Configure (or, with `max_n = 0`, disable) the sliding-window policy.
+    RollingWindow { max_n: usize, max_age: Option<u64>, reply: Sender<Response> },
     Fit { steps: usize, reply: Sender<Response> },
     Predict { xs: Vec<Vec<f64>>, beta: f64, grad: bool, reply: Sender<Response> },
     Suggest { beta: f64, reply: Sender<Response> },
@@ -70,6 +77,9 @@ impl Command {
         let reply = match self {
             Command::Observe { reply, .. }
             | Command::ObserveBatch { reply, .. }
+            | Command::Forget { reply, .. }
+            | Command::ForgetBatch { reply, .. }
+            | Command::RollingWindow { reply, .. }
             | Command::Fit { reply, .. }
             | Command::Predict { reply, .. }
             | Command::Suggest { reply, .. }
@@ -78,6 +88,17 @@ impl Command {
         };
         let _ = reply.send(Response::Error(msg));
     }
+}
+
+/// Sliding-window policy: after each ingest the engine evicts oldest-first
+/// until at most `max_n` observations remain and (when `max_age` is set)
+/// none is older than `max_age` ingest ticks. Evictions never shrink the
+/// model below its activation minimum — a window configured tighter than
+/// `min_points` floats there until arrivals resume.
+#[derive(Clone, Copy, Debug)]
+pub struct RollingCfg {
+    pub max_n: usize,
+    pub max_age: Option<u64>,
 }
 
 /// The per-model state (pure data — `Send`, shared behind the scheduler's
@@ -89,6 +110,17 @@ pub struct ModelEngine {
     gp: AdditiveGP,
     pub pjrt_batches: u64,
     pub native_queries: u64,
+    /// Active sliding-window policy (None = keep everything).
+    rolling: Option<RollingCfg>,
+    /// Ingest tick of each live observation, data order (parallel to the
+    /// model's rows; stays nondecreasing because ingest only appends).
+    /// Only commands keep this in sync — tests poking `gp_mut()` directly
+    /// bypass it.
+    arrival: Vec<u64>,
+    /// Monotone ingest clock: one tick per observed point.
+    ingest_ticks: u64,
+    /// Observations evicted by the rolling-window policy (lifetime total).
+    pub window_evictions: u64,
 }
 
 impl ModelEngine {
@@ -101,7 +133,16 @@ impl ModelEngine {
         gpcfg.omega0 = cfg.omega0;
         gpcfg.sigma2_y = cfg.sigma2;
         let gp = AdditiveGP::new(gpcfg, cfg.d);
-        ModelEngine { cfg, gp, pjrt_batches: 0, native_queries: 0 }
+        ModelEngine {
+            cfg,
+            gp,
+            pjrt_batches: 0,
+            native_queries: 0,
+            rolling: None,
+            arrival: Vec::new(),
+            ingest_ticks: 0,
+            window_evictions: 0,
+        }
     }
 
     pub fn gp(&self) -> &AdditiveGP {
@@ -119,6 +160,9 @@ impl ModelEngine {
         }
         let (p0, r0) = self.gp.factor_stats();
         self.gp.observe(x, y);
+        self.ingest_ticks += 1;
+        self.arrival.push(self.ingest_ticks);
+        self.enforce_window();
         // saturating: a refit (first activation) replaces the fit state and
         // resets the cumulative counters.
         let (p1, r1) = self.gp.factor_stats();
@@ -143,6 +187,11 @@ impl ModelEngine {
         }
         let (p0, r0) = self.gp.factor_stats();
         let path = self.gp.observe_batch(xs, ys);
+        for _ in 0..xs.len() {
+            self.ingest_ticks += 1;
+            self.arrival.push(self.ingest_ticks);
+        }
+        self.enforce_window();
         if self.gp.fit_state().is_some() {
             self.gp.ensure_posterior();
         }
@@ -153,6 +202,124 @@ impl ModelEngine {
             factor_patched: p1.saturating_sub(p0),
             factor_resweep: r1.saturating_sub(r0),
         }
+    }
+
+    /// Release the latest observation equal to `x` by value — the protocol
+    /// v2 `forget` op. Matching nothing is not an error: the reply reports
+    /// `removed: 0` so idempotent retraction scripts stay simple.
+    pub fn forget(&mut self, x: &[f64]) -> Response {
+        if x.len() != self.gp.input_dim() {
+            return Response::Error(format!("expected {}-dim points", self.gp.input_dim()));
+        }
+        let (p0, r0) = self.gp.factor_stats();
+        // Resolve the index here (latest match, same rule as the facade) so
+        // the arrival clock can be spliced at the same spot.
+        let hit = {
+            let (cols, _) = self.gp.data();
+            let n = cols.first().map(|c| c.len()).unwrap_or(0);
+            (0..n)
+                .rev()
+                .find(|&i| x.iter().enumerate().all(|(d, &v)| cols[d][i] == v))
+        };
+        let removed = if let Some(i) = hit {
+            self.gp.forget_index(i);
+            self.arrival.remove(i);
+            1
+        } else {
+            0
+        };
+        let (p1, r1) = self.gp.factor_stats();
+        Response::Forgotten {
+            n: self.gp.n(),
+            removed,
+            factor_patched: p1.saturating_sub(p0),
+            factor_resweep: r1.saturating_sub(r0),
+        }
+    }
+
+    /// Release a batch of observations by value — the protocol v2
+    /// `forget_batch` op. Each row retires the latest still-unclaimed
+    /// matching observation; rows that match nothing are skipped and the
+    /// reply's `removed` reports how many were actually released.
+    pub fn forget_batch(&mut self, xs: &[Vec<f64>]) -> Response {
+        if xs.iter().any(|x| x.len() != self.gp.input_dim()) {
+            return Response::Error(format!("expected {}-dim points", self.gp.input_dim()));
+        }
+        let (p0, r0) = self.gp.factor_stats();
+        let (cols, _) = self.gp.data();
+        let n = cols.first().map(|c| c.len()).unwrap_or(0);
+        let mut claimed = vec![false; n];
+        let mut indices: Vec<usize> = Vec::new();
+        for x in xs {
+            let hit = (0..n).rev().find(|&i| {
+                !claimed[i] && x.iter().enumerate().all(|(d, &v)| cols[d][i] == v)
+            });
+            if let Some(i) = hit {
+                claimed[i] = true;
+                indices.push(i);
+            }
+        }
+        indices.sort_unstable();
+        let removed = indices.len();
+        if removed > 0 {
+            self.gp.forget_batch(&indices);
+            for &i in indices.iter().rev() {
+                self.arrival.remove(i);
+            }
+        }
+        let (p1, r1) = self.gp.factor_stats();
+        Response::Forgotten {
+            n: self.gp.n(),
+            removed,
+            factor_patched: p1.saturating_sub(p0),
+            factor_resweep: r1.saturating_sub(r0),
+        }
+    }
+
+    /// Configure (or disable, with `max_n = 0`) the sliding-window policy
+    /// and apply it immediately — the protocol v2 `rolling_window` op.
+    pub fn rolling_window(&mut self, max_n: usize, max_age: Option<u64>) -> Response {
+        if max_n == 0 {
+            self.rolling = None;
+            return Response::Ok;
+        }
+        self.rolling = Some(RollingCfg { max_n, max_age });
+        self.enforce_window();
+        Response::Ok
+    }
+
+    /// Current occupancy of the sliding window (= live observations).
+    pub fn window_occupancy(&self) -> usize {
+        self.gp.n()
+    }
+
+    /// Evict oldest-first until the rolling-window policy is satisfied,
+    /// never shrinking the model below `min_points` (a tighter window
+    /// floats at the activation minimum). Data order is arrival order —
+    /// ingest only appends — so "oldest" is always a prefix and one
+    /// batched union-window downdate retires it.
+    fn enforce_window(&mut self) -> usize {
+        let Some(rc) = self.rolling else { return 0 };
+        let n = self.gp.n();
+        let mut k = n.saturating_sub(rc.max_n);
+        if let Some(age) = rc.max_age {
+            let now = self.ingest_ticks;
+            while k < n && now.saturating_sub(self.arrival[k]) > age {
+                k += 1;
+            }
+        }
+        let floor = self.gp.min_points();
+        if n.saturating_sub(k) < floor {
+            k = n.saturating_sub(floor);
+        }
+        if k == 0 {
+            return 0;
+        }
+        let indices: Vec<usize> = (0..k).collect();
+        self.gp.forget_batch(&indices);
+        self.arrival.drain(..k);
+        self.window_evictions += k as u64;
+        k
     }
 
     /// Re-learn hyperparameters (full refit — a mutating command).

@@ -111,6 +111,12 @@ pub struct ServerMetrics {
     pub predict_points: AtomicU64,
     /// Points ingested through `observe` + `observe_batch`.
     pub observe_points: AtomicU64,
+    /// Points released through `forget` + `forget_batch` (client-driven
+    /// retractions; rolling-window evictions are counted separately).
+    pub points_forgotten: AtomicU64,
+    /// Rolling-window evictions across all models, folded in as deltas from
+    /// each model's cumulative `stats` counter.
+    pub window_evictions: AtomicU64,
     /// `observe_batch` calls served by the batched incremental path.
     pub batches_incremental: AtomicU64,
     /// `observe_batch` calls served by a full refit (crossover or first
@@ -145,6 +151,9 @@ pub struct ServerMetrics {
     /// per model, so repeated `stats` replies fold into the totals as
     /// deltas rather than re-adding the whole lifetime counter.
     storage_seen: Mutex<HashMap<u64, (u64, u64, u64)>>,
+    /// Last-seen cumulative window-eviction count per model (same delta
+    /// discipline as `storage_seen`).
+    window_seen: Mutex<HashMap<u64, u64>>,
 }
 
 impl ServerMetrics {
@@ -162,6 +171,21 @@ impl ServerMetrics {
 
     pub fn add_observe_points(&self, n: usize) {
         self.observe_points.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_forgotten_points(&self, n: usize) {
+        self.points_forgotten.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Fold one model's cumulative window-eviction counter (from a `stats`
+    /// reply) into the server-wide total, as a delta since its last report.
+    pub fn record_window_evictions(&self, model: u64, evictions: u64) {
+        let delta = {
+            let mut seen = lock_clean(&self.window_seen);
+            let prev = seen.insert(model, evictions).unwrap_or(0);
+            evictions.saturating_sub(prev)
+        };
+        self.window_evictions.fetch_add(delta, Ordering::Relaxed);
     }
 
     /// Count one `observe_batch` under its ingest path ("incremental",
@@ -214,6 +238,7 @@ impl ServerMetrics {
     pub fn report(&self) -> String {
         let mut out = format!(
             "requests={} errors={} predict_points={} observe_points={} \
+             forgotten_points={} window_evictions={} \
              batches(incremental={} refit={} buffered={}) \
              factor(patched={} resweep={}) \
              storage(memmove_bytes={} chunks_copied={} chunks_shared={}) | \
@@ -222,6 +247,8 @@ impl ServerMetrics {
             self.errors.load(Ordering::Relaxed),
             self.predict_points.load(Ordering::Relaxed),
             self.observe_points.load(Ordering::Relaxed),
+            self.points_forgotten.load(Ordering::Relaxed),
+            self.window_evictions.load(Ordering::Relaxed),
             self.batches_incremental.load(Ordering::Relaxed),
             self.batches_refit.load(Ordering::Relaxed),
             self.batches_buffered.load(Ordering::Relaxed),
@@ -291,6 +318,13 @@ mod tests {
         m.count_batch_path("buffered");
         m.add_factor_outcomes(8, 0);
         m.add_factor_outcomes(0, 4);
+        m.add_forgotten_points(3);
+        // Window evictions fold in as deltas from each model's cumulative
+        // counter; a regressed counter (model re-created) adds nothing.
+        m.record_window_evictions(9, 10);
+        m.record_window_evictions(9, 15);
+        m.record_window_evictions(4, 7);
+        m.record_window_evictions(4, 2);
         // Cumulative per-model storage counters fold in as deltas: the
         // second report of model 9 adds only its growth, and a counter
         // that regressed (model re-created) adds nothing.
@@ -308,6 +342,8 @@ mod tests {
         assert!(r.contains("buffered=1"));
         assert!(r.contains("patched=8"));
         assert!(r.contains("resweep=4"));
+        assert!(r.contains("forgotten_points=3"), "{r}");
+        assert!(r.contains("window_evictions=22"), "{r}");
         assert!(r.contains("memmove_bytes=1600"), "{r}");
         assert!(r.contains("chunks_copied=6"), "{r}");
         assert!(r.contains("chunks_shared=28"), "{r}");

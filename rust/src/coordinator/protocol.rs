@@ -3,8 +3,26 @@
 //! One JSON object per line in both directions. Requests carry an `op` and
 //! (except `create_model`) a `model` id; responses always carry `ok` and
 //! echo the request's `id` when present.
+//!
+//! ## Versioning
+//!
+//! Requests may declare a protocol version in an explicit `v` field. A
+//! missing `v` means **v1** — the pre-forget wire format, kept parseable
+//! forever so existing clients never break (`tests/protocol_compat.rs`
+//! pins both paths). The sliding-window ops (`forget`, `forget_batch`,
+//! `rolling_window`) were introduced in **v2**: a frame naming one of them
+//! under a declared `v: 1` is rejected with a structured error rather than
+//! silently accepted, and any `v` above [`PROTOCOL_VERSION`] is rejected
+//! outright so future clients fail loudly against old servers.
 
 use crate::util::Json;
+
+/// Highest protocol version this server speaks. History:
+/// * **1** — create/observe/fit/predict/suggest/stats/audit/shutdown.
+/// * **2** — adds `forget`, `forget_batch`, `rolling_window`, the
+///   `Forgotten` response, and the `window_evictions`/`window_occupancy`
+///   stats fields.
+pub const PROTOCOL_VERSION: u64 = 2;
 
 /// A parsed client request.
 #[derive(Clone, Debug, PartialEq)]
@@ -40,6 +58,27 @@ pub enum Request {
         model: u64,
         beta: f64,
     },
+    /// Release the most recent observation whose coordinates equal `x`
+    /// (v2; the deletion mirror of `observe`).
+    Forget {
+        model: u64,
+        x: Vec<f64>,
+    },
+    /// Release a batch of observations by value (v2; one union-window
+    /// downdate per dimension, the mirror of `observe_batch`).
+    ForgetBatch {
+        model: u64,
+        xs: Vec<Vec<f64>>,
+    },
+    /// Put the model into sliding-window mode (v2): after each ingest the
+    /// engine evicts oldest-first until at most `max_n` observations remain
+    /// and (when `max_age` is set) none is older than `max_age` ingest
+    /// ticks. `max_n = 0` switches rolling mode off.
+    RollingWindow {
+        model: u64,
+        max_n: usize,
+        max_age: Option<u64>,
+    },
     Stats {
         model: u64,
     },
@@ -60,6 +99,26 @@ impl Request {
         let v = Json::parse(line)?;
         let id = v.get("id").and_then(|x| x.as_f64());
         let op = v.get("op").and_then(|x| x.as_str()).ok_or("missing op")?;
+        // Explicit protocol version; a missing `v` is the legacy v1 wire
+        // format (pinned compatible forever).
+        let version = match v.get("v") {
+            None => 1,
+            Some(x) => x
+                .as_f64()
+                .filter(|f| f.fract() == 0.0 && *f >= 1.0)
+                .map(|f| f as u64)
+                .ok_or("bad protocol version 'v'")?,
+        };
+        if version > PROTOCOL_VERSION {
+            return Err(format!(
+                "unsupported protocol version {version} (server speaks <= {PROTOCOL_VERSION})"
+            ));
+        }
+        if matches!(op, "forget" | "forget_batch" | "rolling_window") && version < 2 {
+            return Err(format!(
+                "op '{op}' requires protocol v2 (request declared v{version})"
+            ));
+        }
         let model = || -> Result<u64, String> {
             v.get("model")
                 .and_then(|x| x.as_f64())
@@ -104,6 +163,19 @@ impl Request {
             "suggest" => Request::Suggest {
                 model: model()?,
                 beta: v.get("beta").and_then(|x| x.as_f64()).unwrap_or(2.0),
+            },
+            "forget" => Request::Forget {
+                model: model()?,
+                x: v.get("x").and_then(|x| x.as_f64_vec()).ok_or("missing x")?,
+            },
+            "forget_batch" => Request::ForgetBatch {
+                model: model()?,
+                xs: xs_field("xs")?,
+            },
+            "rolling_window" => Request::RollingWindow {
+                model: model()?,
+                max_n: v.get("max_n").and_then(|x| x.as_usize()).ok_or("missing max_n")?,
+                max_age: v.get("max_age").and_then(|x| x.as_usize()).map(|x| x as u64),
             },
             "stats" => Request::Stats { model: model()? },
             "audit" => Request::Audit { model: model()? },
@@ -154,6 +226,16 @@ pub enum Response {
     Suggestion {
         x: Vec<f64>,
     },
+    /// Acknowledges a `forget`/`forget_batch` (v2): post-forget data size,
+    /// how many observations were actually released (a by-value forget that
+    /// matches nothing removes zero), and this call's patched vs re-swept
+    /// factor-update counts — the downdate mirror of `Observed`.
+    Forgotten {
+        n: usize,
+        removed: usize,
+        factor_patched: u64,
+        factor_resweep: u64,
+    },
     /// Result of an on-demand `audit` request: whether every structural
     /// invariant held, how many structures were walked, and (on failure)
     /// the violation rendered as `Structure.field[index]: detail` — empty
@@ -199,6 +281,14 @@ pub enum Response {
         memmove_bytes: u64,
         chunks_copied: u64,
         chunks_shared: u64,
+        /// Sliding-window observability (v2): observations evicted by the
+        /// rolling-window policy over the model's lifetime, and how many
+        /// observations currently sit in the window (equals `n`; reported
+        /// separately so dashboards can chart occupancy against the
+        /// configured `max_n` without conflating it with non-rolling
+        /// models).
+        window_evictions: u64,
+        window_occupancy: u64,
     },
 }
 
@@ -247,6 +337,13 @@ impl Response {
                 pairs.push(("ok", Json::Bool(true)));
                 pairs.push(("x", Json::arr_f64(x)));
             }
+            Response::Forgotten { n, removed, factor_patched, factor_resweep } => {
+                pairs.push(("ok", Json::Bool(true)));
+                pairs.push(("n", Json::Num(*n as f64)));
+                pairs.push(("removed", Json::Num(*removed as f64)));
+                pairs.push(("factor_patched", Json::Num(*factor_patched as f64)));
+                pairs.push(("factor_resweep", Json::Num(*factor_resweep as f64)));
+            }
             Response::AuditReport { passed, structures, violation } => {
                 pairs.push(("ok", Json::Bool(true)));
                 pairs.push(("passed", Json::Bool(*passed)));
@@ -272,6 +369,8 @@ impl Response {
                 memmove_bytes,
                 chunks_copied,
                 chunks_shared,
+                window_evictions,
+                window_occupancy,
             } => {
                 pairs.push(("ok", Json::Bool(true)));
                 pairs.push(("n", Json::Num(*n as f64)));
@@ -292,6 +391,8 @@ impl Response {
                 pairs.push(("memmove_bytes", Json::Num(*memmove_bytes as f64)));
                 pairs.push(("chunks_copied", Json::Num(*chunks_copied as f64)));
                 pairs.push(("chunks_shared", Json::Num(*chunks_shared as f64)));
+                pairs.push(("window_evictions", Json::Num(*window_evictions as f64)));
+                pairs.push(("window_occupancy", Json::Num(*window_occupancy as f64)));
             }
         }
         Json::obj(pairs)
@@ -330,6 +431,68 @@ mod tests {
         assert!(Request::parse(r#"{"op":"nope"}"#).is_err());
         assert!(Request::parse("garbage").is_err());
         assert!(Request::parse(r#"{"op":"observe","x":[1],"y":2}"#).is_err());
+    }
+
+    #[test]
+    fn version_gates_v2_ops() {
+        // Legacy frames (no `v`) keep parsing as v1.
+        assert!(Request::parse(r#"{"op":"stats","model":1}"#).is_ok());
+        // v1 ops still parse under an explicit v2 declaration.
+        assert!(Request::parse(r#"{"op":"stats","model":1,"v":2}"#).is_ok());
+        // v2 ops require the declaration...
+        let e = Request::parse(r#"{"op":"forget","model":1,"x":[1.0]}"#).unwrap_err();
+        assert!(e.contains("requires protocol v2"), "got: {e}");
+        let e =
+            Request::parse(r#"{"op":"rolling_window","model":1,"max_n":10,"v":1}"#).unwrap_err();
+        assert!(e.contains("requires protocol v2"), "got: {e}");
+        // ...and future versions are rejected loudly.
+        let e = Request::parse(r#"{"op":"stats","model":1,"v":3}"#).unwrap_err();
+        assert!(e.contains("unsupported protocol version 3"), "got: {e}");
+        assert!(Request::parse(r#"{"op":"stats","model":1,"v":0}"#).is_err());
+        assert!(Request::parse(r#"{"op":"stats","model":1,"v":1.5}"#).is_err());
+    }
+
+    #[test]
+    fn forget_and_rolling_window_parse() {
+        let (r, id) =
+            Request::parse(r#"{"op":"forget","model":4,"x":[1.5,2.0],"v":2,"id":3}"#).unwrap();
+        assert_eq!(id, Some(3.0));
+        assert_eq!(r, Request::Forget { model: 4, x: vec![1.5, 2.0] });
+        let (r, _) =
+            Request::parse(r#"{"op":"forget_batch","model":4,"xs":[[1,2],[3,4]],"v":2}"#).unwrap();
+        assert_eq!(
+            r,
+            Request::ForgetBatch { model: 4, xs: vec![vec![1.0, 2.0], vec![3.0, 4.0]] }
+        );
+        let (r, _) = Request::parse(
+            r#"{"op":"rolling_window","model":4,"max_n":256,"max_age":50,"v":2}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            Request::RollingWindow { model: 4, max_n: 256, max_age: Some(50) }
+        );
+        let (r, _) =
+            Request::parse(r#"{"op":"rolling_window","model":4,"max_n":0,"v":2}"#).unwrap();
+        assert_eq!(r, Request::RollingWindow { model: 4, max_n: 0, max_age: None });
+        assert!(Request::parse(r#"{"op":"forget","model":4,"v":2}"#).is_err(), "x required");
+        assert!(
+            Request::parse(r#"{"op":"rolling_window","model":4,"v":2}"#).is_err(),
+            "max_n required"
+        );
+    }
+
+    #[test]
+    fn forgotten_serializes() {
+        let j = Response::Forgotten { n: 99, removed: 1, factor_patched: 8, factor_resweep: 0 }
+            .to_json(Some(6.0));
+        let v = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("id").unwrap().as_f64(), Some(6.0));
+        assert_eq!(v.get("n").unwrap().as_usize(), Some(99));
+        assert_eq!(v.get("removed").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("factor_patched").unwrap().as_usize(), Some(8));
+        assert_eq!(v.get("factor_resweep").unwrap().as_usize(), Some(0));
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! Replaces the old one-thread-per-model `ModelEngine::run` loop. Commands
 //! fall into two classes:
 //!
-//! * **Mutating** (`Observe`/`ObserveBatch`/`Fit`) — enqueued on the model's
+//! * **Mutating** (`Observe`/`ObserveBatch`/`Forget`/`ForgetBatch`/
+//!   `RollingWindow`/`Fit`) — enqueued on the model's
 //!   FIFO queue and executed under the model's engine mutex by whichever
 //!   worker claims the model's drain job. Per-model ordering and mutual
 //!   exclusion are exact; different models mutate concurrently across the
@@ -216,7 +217,12 @@ impl Scheduler {
         }
         if matches!(
             cmd,
-            Command::Observe { .. } | Command::ObserveBatch { .. } | Command::Fit { .. }
+            Command::Observe { .. }
+                | Command::ObserveBatch { .. }
+                | Command::Forget { .. }
+                | Command::ForgetBatch { .. }
+                | Command::RollingWindow { .. }
+                | Command::Fit { .. }
         ) {
             lock_clean(&cell.mut_queue).push_back(cmd);
             self.schedule_mutations(cell);
@@ -360,6 +366,16 @@ fn drain_mutations(cell: &ModelCell) {
                 Command::ObserveBatch { xs, ys, reply } => (
                     reply,
                     Box::new(move |e: &mut ModelEngine| e.observe_batch(&xs, &ys)),
+                ),
+                Command::Forget { x, reply } => {
+                    (reply, Box::new(move |e: &mut ModelEngine| e.forget(&x)))
+                }
+                Command::ForgetBatch { xs, reply } => {
+                    (reply, Box::new(move |e: &mut ModelEngine| e.forget_batch(&xs)))
+                }
+                Command::RollingWindow { max_n, max_age, reply } => (
+                    reply,
+                    Box::new(move |e: &mut ModelEngine| e.rolling_window(max_n, max_age)),
                 ),
                 Command::Fit { steps, reply } => {
                     (reply, Box::new(move |e: &mut ModelEngine| e.fit(steps)))
@@ -659,6 +675,8 @@ fn serve_stats(cell: &ModelCell, pool: &WorkerPool, reply: Sender<Response>) {
         memmove_bytes: memmove,
         chunks_copied: copied,
         chunks_shared: shared,
+        window_evictions: eng.window_evictions,
+        window_occupancy: eng.window_occupancy() as u64,
     };
     drop(eng);
     let _ = reply.send(resp);
@@ -795,6 +813,64 @@ mod tests {
             Response::AuditReport { passed, structures, violation } => {
                 assert!(passed, "active model must pass: {violation}");
                 assert!(structures >= 2 + 1 + 2 * 11, "got {structures}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        sched.shutdown();
+    }
+
+    /// The v2 mutating commands ride the same FIFO: enabling a rolling
+    /// window evicts the oldest overflow immediately, later observes hold
+    /// occupancy at the cap, and forget-by-value retires exactly one row —
+    /// all visible through the Stats window counters.
+    #[test]
+    fn rolling_window_evicts_and_forget_removes() {
+        let sched = Scheduler::new(2);
+        let m = sched.create_model(cfg(2));
+        let mut rng = Rng::new(9);
+        let xs: Vec<Vec<f64>> = (0..40)
+            .map(|_| vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)])
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x[0].sin() + x[1].cos()).collect();
+        let r = call(&sched, m, |reply| Command::ObserveBatch { xs, ys, reply });
+        assert!(matches!(r, Response::BatchObserved { n: 40, .. }), "unexpected {r:?}");
+        // Enabling a 30-point window evicts the 10 oldest immediately.
+        let r = call(&sched, m, |reply| Command::RollingWindow {
+            max_n: 30,
+            max_age: None,
+            reply,
+        });
+        assert!(matches!(r, Response::Ok), "unexpected {r:?}");
+        // A fresh observe holds occupancy at the cap (insert + evict oldest).
+        let x = vec![1.25, 2.5];
+        let y = x[0].sin() + x[1].cos();
+        let r = call(&sched, m, |reply| Command::Observe { x, y, reply });
+        match r {
+            Response::Observed { n, .. } => assert_eq!(n, 30, "window must hold the cap"),
+            other => panic!("unexpected {other:?}"),
+        }
+        // Forget-by-value retires exactly the point observed above; a second
+        // attempt matches nothing (idempotent retraction).
+        let r = call(&sched, m, |reply| Command::Forget { x: vec![1.25, 2.5], reply });
+        match r {
+            Response::Forgotten { n, removed, .. } => {
+                assert_eq!((n, removed), (29, 1));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let r = call(&sched, m, |reply| Command::Forget { x: vec![1.25, 2.5], reply });
+        match r {
+            Response::Forgotten { n, removed, .. } => {
+                assert_eq!((n, removed), (29, 0));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let r = call(&sched, m, |reply| Command::Stats { reply });
+        match r {
+            Response::Stats { n, window_evictions, window_occupancy, .. } => {
+                assert_eq!(n, 29);
+                assert_eq!(window_evictions, 11, "10 at enable + 1 per-observe");
+                assert_eq!(window_occupancy, 29);
             }
             other => panic!("unexpected {other:?}"),
         }

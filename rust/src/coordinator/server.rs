@@ -227,6 +227,9 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
             let model = match &other {
                 Request::Observe { model, .. }
                 | Request::ObserveBatch { model, .. }
+                | Request::Forget { model, .. }
+                | Request::ForgetBatch { model, .. }
+                | Request::RollingWindow { model, .. }
                 | Request::Fit { model, .. }
                 | Request::Predict { model, .. }
                 | Request::Suggest { model, .. }
@@ -240,6 +243,11 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
                 Request::Observe { x, y, .. } => Command::Observe { x, y, reply: rtx },
                 Request::ObserveBatch { xs, ys, .. } => {
                     Command::ObserveBatch { xs, ys, reply: rtx }
+                }
+                Request::Forget { x, .. } => Command::Forget { x, reply: rtx },
+                Request::ForgetBatch { xs, .. } => Command::ForgetBatch { xs, reply: rtx },
+                Request::RollingWindow { max_n, max_age, .. } => {
+                    Command::RollingWindow { max_n, max_age, reply: rtx }
                 }
                 Request::Fit { steps, .. } => Command::Fit { steps, reply: rtx },
                 Request::Predict { xs, beta, grad, .. } => {
@@ -268,7 +276,13 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
         Response::Observed { factor_patched, factor_resweep, .. } => {
             shared.metrics.add_factor_outcomes(*factor_patched, *factor_resweep);
         }
-        Response::Stats { memmove_bytes, chunks_copied, chunks_shared, .. } => {
+        Response::Forgotten { removed, factor_patched, factor_resweep, .. } => {
+            shared.metrics.add_forgotten_points(*removed);
+            shared.metrics.add_factor_outcomes(*factor_patched, *factor_resweep);
+        }
+        Response::Stats {
+            memmove_bytes, chunks_copied, chunks_shared, window_evictions, ..
+        } => {
             // The reply carries the model's *cumulative* storage counters;
             // the metrics layer folds in only the delta since the model's
             // last report.
@@ -279,6 +293,7 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
                     *chunks_copied,
                     *chunks_shared,
                 );
+                shared.metrics.record_window_evictions(m, *window_evictions);
             }
         }
         _ => {}

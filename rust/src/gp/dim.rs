@@ -190,6 +190,135 @@ impl DimFactor {
         Some(positions)
     }
 
+    /// Incrementally release the point at sorted position `pos` — the
+    /// deletion mirror of [`DimFactor::insert_point`], behind
+    /// `FitState::forget` (DESIGN.md §FitState, "Downdates & rolling
+    /// windows"): `O(2ν+1)` packet re-solves via
+    /// [`KpFactorization::remove`], then a patched update of all four
+    /// banded LUs from the lowest removed row via
+    /// [`BandedLU::refactor_from`]. The tail of a removal shifts *up*, which
+    /// the early-exit's downward-shift replay cannot describe, so the
+    /// splice carries no tail — under [`PatchPolicy::EarlyExit`] a removal
+    /// simply re-eliminates to the end (i.e. behaves like
+    /// [`PatchPolicy::Exact`], staying bit-identical to a from-scratch
+    /// build). The lazy GKP and band-of-inverse are invalidated.
+    ///
+    /// Returns the removed point's *original* (data-order) index, or `None`
+    /// when the dimension is degenerate (non-monotone) — the caller rebuilds
+    /// from the compacted data instead. Panics if the removal would drop `n`
+    /// below the packet minimum `2w+1`; the caller deactivates first.
+    pub fn remove_point(&mut self, pos: usize) -> Option<usize> {
+        if !self.monotone {
+            return None;
+        }
+        let t0 = Instant::now();
+        let orig = self.kp.remove(pos);
+        let t1 = Instant::now();
+        self.unpatch_factors(&[pos]);
+        self.timings.kp_patch_s += (t1 - t0).as_secs_f64();
+        self.timings.factor_s += t1.elapsed().as_secs_f64();
+        self.gkp = None;
+        self.c_band = None;
+        enforce(self, "DimFactor::remove_point");
+        Some(orig)
+    }
+
+    /// Batched form of [`DimFactor::remove_point`]: release the points at
+    /// `sorted_positions` (current sorted indices, strictly increasing) with
+    /// **one** union-of-windows KP patch ([`KpFactorization::remove_batch`])
+    /// and **one** LU update per factor for the whole batch. Returns the
+    /// removed points' *original* indices (pre-compaction, in the order of
+    /// `sorted_positions`), or `None` when the dimension is degenerate.
+    pub fn remove_points(&mut self, sorted_positions: &[usize]) -> Option<Vec<usize>> {
+        if !self.monotone {
+            return None;
+        }
+        if sorted_positions.is_empty() {
+            return Some(Vec::new());
+        }
+        let t0 = Instant::now();
+        let origs = self.kp.remove_batch(sorted_positions);
+        let t1 = Instant::now();
+        self.unpatch_factors(sorted_positions);
+        self.timings.kp_patch_s += (t1 - t0).as_secs_f64();
+        self.timings.factor_s += t1.elapsed().as_secs_f64();
+        self.gkp = None;
+        self.c_band = None;
+        enforce(self, "DimFactor::remove_points");
+        Some(origs)
+    }
+
+    /// Update `T`, `Φᵀ` and the four banded LUs after the KP factorization
+    /// released the points at `sorted_positions` (pre-removal sorted
+    /// indices, strictly increasing) — the deletion mirror of
+    /// [`DimFactor::patch_factors`]. `T`/`Φᵀ` get one band deletion plus a
+    /// window rewrite from the freshly patched `A`/`Φ` (bit-identical to a
+    /// from-scratch `add_scaled`/`transpose`); each LU is then patched from
+    /// its lowest touched row. `SpliceInfo.tail` stays `None`: a removal
+    /// shifts the tail *up*, outside the early-exit's downward-shift replay,
+    /// so every policy re-eliminates `[low − kl, n)` exactly.
+    fn unpatch_factors(&mut self, sorted_positions: &[usize]) {
+        let w = self.kp.w();
+        let pmin = sorted_positions[0];
+        self.t.remove_rows_cols(sorted_positions);
+        self.phit.remove_rows_cols(sorted_positions);
+        let n = self.kp.n();
+        let inv_s2 = 1.0 / self.sigma2_y;
+        // Post-removal coordinates where the gaps closed: position t of the
+        // batch lost t earlier neighbors. (Adjacent removals can collapse to
+        // equal coordinates; the union walk tolerates that.)
+        let post: Vec<usize> =
+            sorted_positions.iter().enumerate().map(|(t, &q)| q - t).collect();
+        {
+            let DimFactor { t, phit, kp, .. } = self;
+            // T rows: the KP rewrite windows [q′−w, q′+w] (covers the band
+            // deletion straddle, max(kl, ku) = w).
+            for_union_rows(n, &post, w, |i| {
+                let (lo, hi) = t.row_range(i);
+                for j in lo..hi {
+                    t.set(i, j, kp.a.get(i, j) + inv_s2 * kp.phi.get(i, j));
+                }
+            });
+            // Φᵀ rows: every Φ column a rewritten Φ row covers,
+            // [q′−(2w−1), q′+(2w−1)].
+            for_union_rows(n, &post, 2 * w - 1, |i| {
+                let (lo, hi) = phit.row_range(i);
+                for j in lo..hi {
+                    phit.set(i, j, kp.phi.get(j, i));
+                }
+            });
+        }
+        let policy = self.patch_policy;
+        let outcomes = [
+            self.t_lu.refactor_from(
+                &self.t,
+                &SpliceInfo { low: pmin.saturating_sub(w), tail: None },
+                policy,
+            ),
+            self.phi_lu.refactor_from(
+                &self.kp.phi,
+                &SpliceInfo { low: pmin.saturating_sub(w), tail: None },
+                policy,
+            ),
+            self.phit_lu.refactor_from(
+                &self.phit,
+                &SpliceInfo { low: pmin.saturating_sub(2 * w - 1), tail: None },
+                policy,
+            ),
+            self.a_lu.refactor_from(
+                &self.kp.a,
+                &SpliceInfo { low: pmin.saturating_sub(w), tail: None },
+                policy,
+            ),
+        ];
+        for o in outcomes {
+            match o {
+                PatchOutcome::Patched { .. } => self.factor_patches += 1,
+                PatchOutcome::Resweep => self.factor_resweeps += 1,
+            }
+        }
+    }
+
     /// Update `T`, `Φᵀ` and the four banded LUs after the KP factorization
     /// absorbed inserts at `sorted_positions` (final sorted indices,
     /// strictly increasing). `T`/`Φᵀ` get one zero row/col splice plus a
@@ -670,6 +799,102 @@ mod tests {
                 assert!((ki[i] - kf[i]).abs() < 1e-9, "{nu:?} K i={i}");
                 assert!((gi[i] - gf[i]).abs() < 1e-9, "{nu:?} T i={i}");
             }
+        }
+    }
+
+    /// `remove_point` produces factors that act identically to a
+    /// from-scratch build on the compacted point set — and an
+    /// `insert_point` + `remove_point` round trip is bit-identical to never
+    /// inserting (all four LUs included) under the default `Exact` policy.
+    #[test]
+    fn remove_point_matches_fresh_build() {
+        for nu in [Nu::Half, Nu::ThreeHalves] {
+            let mut rng = Rng::new(41);
+            let mut pts = rng.uniform_vec(24, 0.0, 4.0);
+            let kern = Matern::new(nu, 1.1);
+            let mut inc = DimFactor::new(&pts, kern, 0.7);
+            for &pos in &[11usize, 0, 20, 1] {
+                let orig = inc.remove_point(pos).expect("monotone dim removes");
+                pts.remove(orig);
+                let fresh = DimFactor::new(&pts, kern, 0.7);
+                let n = pts.len();
+                let v = rng.normal_vec(n);
+                let (ki, kf) = (inc.k_sorted(&v), fresh.k_sorted(&v));
+                let (gi, gf) =
+                    (inc.gs_block_solve_sorted(&v), fresh.gs_block_solve_sorted(&v));
+                for i in 0..n {
+                    assert!((ki[i] - kf[i]).abs() < 1e-9, "{nu:?} K i={i}");
+                    assert!((gi[i] - gf[i]).abs() < 1e-9, "{nu:?} T i={i}");
+                }
+            }
+        }
+    }
+
+    /// Factor-level half of the forget property: insert then remove of the
+    /// same point leaves every maintained band AND all four packed LU
+    /// factors bit-identical to the untouched state (`PatchPolicy::Exact`).
+    #[test]
+    fn insert_then_remove_restores_factors_bitwise() {
+        for nu in [Nu::Half, Nu::ThreeHalves] {
+            let mut rng = Rng::new(43);
+            let pts = rng.uniform_vec(26, 0.0, 4.0);
+            let kern = Matern::new(nu, 0.9);
+            let base = DimFactor::new(&pts, kern, 0.6);
+            for &x in &[1.77, -0.2, 4.5] {
+                // lint: cow-ok (test clone of the whole factor state)
+                let mut f = base.clone();
+                let pos = f.insert_point(x).expect("distinct point");
+                f.remove_point(pos).expect("monotone dim removes");
+                assert_eq!(f.n(), base.n());
+                let n = f.n();
+                let bands = |d: &DimFactor| {
+                    [
+                        d.kp.a.to_flat(),
+                        d.kp.phi.to_flat(),
+                        d.t.to_flat(),
+                        d.phit.to_flat(),
+                        d.t_lu.fac_band().to_flat(),
+                        d.phi_lu.fac_band().to_flat(),
+                        d.phit_lu.fac_band().to_flat(),
+                        d.a_lu.fac_band().to_flat(),
+                    ]
+                };
+                for (bi, (got, want)) in
+                    bands(&f).iter().zip(bands(&base).iter()).enumerate()
+                {
+                    assert_eq!(got, want, "{nu:?} x={x} band #{bi} diverged (n={n})");
+                }
+            }
+        }
+    }
+
+    /// `remove_points` (one sweep per batch) equals the corresponding
+    /// descending sequence of single `remove_point` calls bit-for-bit.
+    #[test]
+    fn remove_points_matches_sequential_removes() {
+        for nu in [Nu::Half, Nu::ThreeHalves] {
+            let mut rng = Rng::new(47);
+            let pts = rng.uniform_vec(28, 0.0, 4.0);
+            let kern = Matern::new(nu, 1.0);
+            let mut batched = DimFactor::new(&pts, kern, 0.5);
+            let mut seq = DimFactor::new(&pts, kern, 0.5);
+            let positions = [2usize, 9, 10, 27];
+            batched.remove_points(&positions).expect("monotone dim removes");
+            for &p in positions.iter().rev() {
+                seq.remove_point(p).expect("monotone dim removes");
+            }
+            assert_eq!(batched.n(), seq.n());
+            assert_eq!(batched.t.to_flat(), seq.t.to_flat(), "{nu:?} T");
+            assert_eq!(
+                batched.t_lu.fac_band().to_flat(),
+                seq.t_lu.fac_band().to_flat(),
+                "{nu:?} T LU"
+            );
+            assert_eq!(
+                batched.phit_lu.fac_band().to_flat(),
+                seq.phit_lu.fac_band().to_flat(),
+                "{nu:?} Φᵀ LU"
+            );
         }
     }
 

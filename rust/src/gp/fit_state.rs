@@ -51,6 +51,44 @@ pub struct BatchPositions {
     pub fallback: bool,
 }
 
+/// One state mutation — the single vocabulary every ingest/forget path
+/// speaks (DESIGN.md §FitState, "Downdates & rolling windows"). All
+/// mutation plumbing flows through [`FitState::apply`]; `observe`,
+/// `observe_batch`, `forget` and `forget_batch` are thin wrappers over
+/// these variants, so layers above (model, BO engine, coordinator) never
+/// touch per-dimension insert/remove machinery directly — the xtask
+/// `mutation plumbing` lint enforces exactly that.
+///
+/// Data-order contract (mirrors the old `observe` contract):
+/// * insertions — the caller has already **pushed** the new rows onto
+///   `x_cols`;
+/// * removals — the caller has already **compacted** `x_cols` (and its `y`),
+///   and `index`/`indices` are *pre-removal* data-order indices.
+#[derive(Clone, Copy, Debug)]
+pub enum Mutation<'a> {
+    /// Absorb one observation; `x` is the new point's coordinates.
+    Insert { x: &'a [f64] },
+    /// Absorb `m` observations in one sweep/splice/solve per dimension.
+    InsertBatch { xs: &'a [Vec<f64>] },
+    /// Release the observation at data-order `index`.
+    Remove { index: usize },
+    /// Release the observations at strictly increasing data-order `indices`.
+    RemoveBatch { indices: &'a [usize] },
+}
+
+/// What a [`FitState::apply`] did, in cache-invalidation vocabulary.
+pub struct MutationOutcome {
+    /// `positions[d][t]` = sorted position of mutated point `t` in dimension
+    /// `d` — *final post-insert* positions for insertions, *pre-removal*
+    /// positions for removals (exactly what [`MTildeCache::on_insert_batch`]
+    /// / [`MTildeCache::on_remove_batch`] consume). Empty for a dimension
+    /// that went through a fallback rebuild mid-batch.
+    pub positions: Vec<Vec<usize>>,
+    /// Whether any dimension fell back to a full rebuild; callers must then
+    /// invalidate caches coarsely.
+    pub fallback: bool,
+}
+
 /// Trained per-dimension factorizations + updatable posterior vectors.
 pub struct FitState {
     dims: Vec<DimFactor>,
@@ -63,7 +101,9 @@ pub struct FitState {
     pub gs_tol: f64,
     /// Observations absorbed through the incremental path.
     pub incremental_inserts: u64,
-    /// Per-dimension full rebuilds forced by degenerate insertions.
+    /// Observations released through the incremental downdate path.
+    pub incremental_removes: u64,
+    /// Per-dimension full rebuilds forced by degenerate mutations.
     pub fallback_rebuilds: u64,
     /// How inserts update the banded LU factors (DESIGN.md §FitState,
     /// "Sublinear LU patching"); applied to every dimension, including
@@ -91,6 +131,7 @@ impl FitState {
             gs_max_sweeps,
             gs_tol,
             incremental_inserts: 0,
+            incremental_removes: 0,
             fallback_rebuilds: 0,
             patch_policy: PatchPolicy::Exact,
             snapshot_chunks_shared: 0,
@@ -178,50 +219,48 @@ impl FitState {
         )
     }
 
+    /// Apply one [`Mutation`] — the **sole** entry point for changing the
+    /// trained state's point set. Inserts absorb observations
+    /// incrementally (KP patch + prefix-reuse LU patch + warm-start growth);
+    /// removals run the exact mirror downdate ([`DimFactor::remove_point`] /
+    /// [`DimFactor::remove_points`]), shrinking the stored ṽ at the removed
+    /// data indices so `observe(x)` followed by `forget` of that point is
+    /// bit-identical (under [`PatchPolicy::Exact`]) to never observing it.
+    ///
+    /// The posterior is invalidated in every case; removals panic if they
+    /// would drop `n` below the packet minimum `2w + 1` (callers deactivate
+    /// the incremental state instead — see `AdditiveGP::forget`).
+    pub fn apply(&mut self, mutation: Mutation<'_>, x_cols: &[Vec<f64>]) -> MutationOutcome {
+        assert_eq!(x_cols.len(), self.dims.len());
+        let out = match mutation {
+            Mutation::Insert { x } => self.insert_one(x, x_cols),
+            Mutation::InsertBatch { xs } => self.insert_many(xs, x_cols),
+            Mutation::Remove { index } => self.remove_one(index, x_cols),
+            Mutation::RemoveBatch { indices } => self.remove_many(indices, x_cols),
+        };
+        self.post = None;
+        enforce(self, "FitState::apply");
+        out
+    }
+
     /// Absorb one observation (already appended to `x_cols` in data order)
     /// incrementally. Returns each dimension's sorted insertion position —
     /// the cache layer needs them for windowed invalidation.
     ///
-    /// The posterior is invalidated (recomputed warm on next
-    /// [`FitState::ensure_posterior`]); the stored ṽ survives, extended by a
+    /// Thin wrapper over [`FitState::apply`] with [`Mutation::Insert`]; the
+    /// posterior is invalidated (recomputed warm on next
+    /// [`FitState::ensure_posterior`]), the stored ṽ survives, extended by a
     /// zero entry for the new point.
     pub fn observe(&mut self, x: &[f64], x_cols: &[Vec<f64>]) -> Vec<usize> {
-        let dd = self.dims.len();
-        assert_eq!(x.len(), dd);
-        assert_eq!(x_cols.len(), dd);
-        let n_new = self.n() + 1;
-        assert_eq!(x_cols[0].len(), n_new, "push the new point before observe()");
-        let mut positions = Vec::with_capacity(dd);
-        for d in 0..dd {
-            let pos = match self.dims[d].insert_point(x[d]) {
-                Some(pos) => {
-                    self.incremental_inserts += 1;
-                    pos
-                }
-                None => {
-                    // Degenerate cluster: rebuild this dimension with the
-                    // full nudge cascade (identical to the refit path).
-                    self.fallback_rebuilds += 1;
-                    Self::rebuild_dim(&mut self.dims[d], &x_cols[d], self.sigma2_y);
-                    self.dims[d].kp.perm.sorted_pos(n_new - 1)
-                }
-            };
-            positions.push(pos);
-        }
-        if let Some(t) = self.tilde.as_mut() {
-            for td in t.iter_mut() {
-                td.push(0.0);
-            }
-        }
-        self.post = None;
-        enforce(self, "FitState::observe");
-        positions
+        let out = self.apply(Mutation::Insert { x }, x_cols);
+        out.positions.iter().map(|p| p[0]).collect()
     }
 
     /// Absorb a whole batch of observations (already appended to `x_cols`
     /// in data order) incrementally, sharding the per-dimension work across
     /// a scoped thread pool (DESIGN.md §FitState, "Batched inserts &
-    /// dimension sharding").
+    /// dimension sharding"). Thin wrapper over [`FitState::apply`] with
+    /// [`Mutation::InsertBatch`].
     ///
     /// Per dimension the batch costs **one** band splice, **one**
     /// union-of-windows KP re-solve, **one** prefix-reuse LU patch per factor
@@ -238,12 +277,72 @@ impl FitState {
         xs: &[Vec<f64>],
         x_cols: &[Vec<f64>],
     ) -> BatchPositions {
+        let out = self.apply(Mutation::InsertBatch { xs }, x_cols);
+        BatchPositions { positions: out.positions, fallback: out.fallback }
+    }
+
+    /// Release the observation at data-order `index` (`x_cols` already
+    /// compacted) — the sliding-window downdate. Returns each dimension's
+    /// *pre-removal* sorted position, the cache layer's windowed-invalidation
+    /// vocabulary ([`MTildeCache::on_remove`]). Thin wrapper over
+    /// [`FitState::apply`] with [`Mutation::Remove`].
+    pub fn forget(&mut self, index: usize, x_cols: &[Vec<f64>]) -> Vec<usize> {
+        let out = self.apply(Mutation::Remove { index }, x_cols);
+        out.positions.iter().map(|p| p[0]).collect()
+    }
+
+    /// Release a whole batch of observations at strictly increasing
+    /// data-order `indices` (`x_cols` already compacted), one union-window
+    /// downdate per dimension. Thin wrapper over [`FitState::apply`] with
+    /// [`Mutation::RemoveBatch`]; positions in the result are *pre-removal*
+    /// sorted positions in batch order.
+    pub fn forget_batch(
+        &mut self,
+        indices: &[usize],
+        x_cols: &[Vec<f64>],
+    ) -> BatchPositions {
+        let out = self.apply(Mutation::RemoveBatch { indices }, x_cols);
+        BatchPositions { positions: out.positions, fallback: out.fallback }
+    }
+
+    fn insert_one(&mut self, x: &[f64], x_cols: &[Vec<f64>]) -> MutationOutcome {
+        let dd = self.dims.len();
+        assert_eq!(x.len(), dd);
+        let n_new = self.n() + 1;
+        assert_eq!(x_cols[0].len(), n_new, "push the new point before observe()");
+        let mut positions = Vec::with_capacity(dd);
+        let mut fallback = false;
+        for d in 0..dd {
+            let pos = match self.dims[d].insert_point(x[d]) {
+                Some(pos) => {
+                    self.incremental_inserts += 1;
+                    pos
+                }
+                None => {
+                    // Degenerate cluster: rebuild this dimension with the
+                    // full nudge cascade (identical to the refit path).
+                    self.fallback_rebuilds += 1;
+                    fallback = true;
+                    Self::rebuild_dim(&mut self.dims[d], &x_cols[d], self.sigma2_y);
+                    self.dims[d].kp.perm.sorted_pos(n_new - 1)
+                }
+            };
+            positions.push(vec![pos]);
+        }
+        if let Some(t) = self.tilde.as_mut() {
+            for td in t.iter_mut() {
+                td.push(0.0);
+            }
+        }
+        MutationOutcome { positions, fallback }
+    }
+
+    fn insert_many(&mut self, xs: &[Vec<f64>], x_cols: &[Vec<f64>]) -> MutationOutcome {
         let dd = self.dims.len();
         let m = xs.len();
         if m == 0 {
-            return BatchPositions { positions: vec![Vec::new(); dd], fallback: false };
+            return MutationOutcome { positions: vec![Vec::new(); dd], fallback: false };
         }
-        assert_eq!(x_cols.len(), dd);
         let n0 = self.n();
         assert_eq!(
             x_cols[0].len(),
@@ -312,9 +411,131 @@ impl FitState {
                 td.extend(std::iter::repeat(0.0).take(m));
             }
         }
-        self.post = None;
-        enforce(self, "FitState::observe_batch");
-        BatchPositions { positions, fallback }
+        MutationOutcome { positions, fallback }
+    }
+
+    fn remove_one(&mut self, index: usize, x_cols: &[Vec<f64>]) -> MutationOutcome {
+        let dd = self.dims.len();
+        let n_old = self.n();
+        assert!(index < n_old, "forget index {index} out of range (n = {n_old})");
+        assert_eq!(x_cols[0].len(), n_old - 1, "compact the data before forget()");
+        self.assert_above_packet_minimum(n_old - 1);
+        let mut positions = Vec::with_capacity(dd);
+        let mut fallback = false;
+        for d in 0..dd {
+            let pos = self.dims[d].kp.perm.sorted_pos(index);
+            match self.dims[d].remove_point(pos) {
+                Some(orig) => {
+                    debug_assert_eq!(orig, index);
+                    self.incremental_removes += 1;
+                }
+                None => {
+                    // Degenerate dimension: rebuild from the compacted data
+                    // (identical to the refit path).
+                    self.fallback_rebuilds += 1;
+                    fallback = true;
+                    Self::rebuild_dim(&mut self.dims[d], &x_cols[d], self.sigma2_y);
+                }
+            }
+            positions.push(vec![pos]);
+        }
+        if let Some(t) = self.tilde.as_mut() {
+            for td in t.iter_mut() {
+                td.remove(index);
+            }
+        }
+        MutationOutcome { positions, fallback }
+    }
+
+    fn remove_many(&mut self, indices: &[usize], x_cols: &[Vec<f64>]) -> MutationOutcome {
+        let dd = self.dims.len();
+        let m = indices.len();
+        if m == 0 {
+            return MutationOutcome { positions: vec![Vec::new(); dd], fallback: false };
+        }
+        let n_old = self.n();
+        assert!(
+            indices.windows(2).all(|p| p[0] < p[1]),
+            "forget_batch indices must be strictly increasing"
+        );
+        assert!(indices[m - 1] < n_old, "forget index out of range (n = {n_old})");
+        assert_eq!(x_cols[0].len(), n_old - m, "compact the data before forget_batch()");
+        self.assert_above_packet_minimum(n_old - m);
+        // Per-dim pre-removal sorted positions: batch order for the outcome,
+        // ascending for the per-dimension union-window downdate.
+        let batch_pos: Vec<Vec<usize>> = (0..dd)
+            .map(|d| indices.iter().map(|&i| self.dims[d].kp.perm.sorted_pos(i)).collect())
+            .collect();
+        let sorted_pos: Vec<Vec<usize>> = batch_pos
+            .iter()
+            .map(|p| {
+                // lint: cow-ok (Vec<usize> of batch positions, not band storage)
+                let mut q = p.clone();
+                q.sort_unstable();
+                q
+            })
+            .collect();
+        let sigma2 = self.sigma2_y;
+
+        struct DimOutcome {
+            fallback: bool,
+            removes: u64,
+            rebuilds: u64,
+        }
+        let threads = pool::default_threads().min(dd);
+        let outcomes: Vec<DimOutcome> =
+            pool::par_map_mut(&mut self.dims, threads, |d, dim| {
+                match dim.remove_points(&sorted_pos[d]) {
+                    Some(origs) => {
+                        debug_assert_eq!(
+                            {
+                                let mut o = origs;
+                                o.sort_unstable();
+                                o
+                            },
+                            indices
+                        );
+                        DimOutcome { fallback: false, removes: m as u64, rebuilds: 0 }
+                    }
+                    None => {
+                        // Degenerate dimension: rebuild from the compacted
+                        // data (identical to the refit path).
+                        Self::rebuild_dim(dim, &x_cols[d], sigma2);
+                        DimOutcome { fallback: true, removes: 0, rebuilds: 1 }
+                    }
+                }
+            });
+
+        let mut positions = Vec::with_capacity(dd);
+        let mut fallback = false;
+        for (d, o) in outcomes.into_iter().enumerate() {
+            self.incremental_removes += o.removes;
+            self.fallback_rebuilds += o.rebuilds;
+            fallback |= o.fallback;
+            // lint: cow-ok (Vec<usize> of batch positions, not band storage)
+            positions.push(if o.fallback { Vec::new() } else { batch_pos[d].clone() });
+        }
+        if let Some(t) = self.tilde.as_mut() {
+            for td in t.iter_mut() {
+                for &i in indices.iter().rev() {
+                    td.remove(i);
+                }
+            }
+        }
+        MutationOutcome { positions, fallback }
+    }
+
+    /// Removals must leave every dimension at or above its KP packet
+    /// minimum `2w + 1`; callers that want to shrink further deactivate the
+    /// incremental state instead of forgetting through it.
+    fn assert_above_packet_minimum(&self, n_new: usize) {
+        for dim in &self.dims {
+            assert!(
+                n_new >= 2 * dim.kp.w() + 1,
+                "forget would shrink n below the packet minimum {} (deactivate instead)",
+                2 * dim.kp.w() + 1
+            );
+        }
     }
 
     /// Ensure the posterior (`b` vectors) exists — one warm-started
@@ -809,6 +1030,120 @@ mod tests {
         assert_eq!(e.structure, "PosteriorSnapshot");
         assert_eq!(e.field, "post");
         assert_eq!(e.index, Some(0));
+    }
+
+    fn drop_rows(cols: &[Vec<f64>], gone: &[usize]) -> Vec<Vec<f64>> {
+        cols.iter()
+            .map(|c| {
+                c.iter()
+                    .enumerate()
+                    .filter(|(i, _)| !gone.contains(i))
+                    .map(|(_, &v)| v)
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// The tentpole property at the state level: `observe(x)` followed by
+    /// `forget` of that point is **bit-identical** to never observing it —
+    /// factors, carried warm-start ṽ, and the next posterior solve all
+    /// restore exactly (default `PatchPolicy::Exact`).
+    #[test]
+    fn observe_then_forget_is_bit_identical_to_never_observing() {
+        let mut rng = Rng::new(91);
+        let sigma2 = 0.8;
+        let x_cols: Vec<Vec<f64>> =
+            (0..2).map(|_| rng.uniform_vec(26, 0.0, 5.0)).collect();
+        let y: Vec<f64> =
+            (0..26).map(|i| x_cols[0][i].sin() + x_cols[1][i].cos()).collect();
+        let mut state = build_state(&x_cols, Nu::ThreeHalves, 1.0, sigma2);
+        state.ensure_posterior(&y);
+        let mut control = build_state(&x_cols, Nu::ThreeHalves, 1.0, sigma2);
+        control.ensure_posterior(&y);
+
+        // Round trip: push → observe → compact → forget.
+        let x = vec![2.31, 1.07];
+        let mut grown = x_cols.clone();
+        for (d, &v) in x.iter().enumerate() {
+            grown[d].push(v);
+        }
+        let _ = state.observe(&x, &grown);
+        let removed_pos = state.forget(26, &x_cols);
+        assert_eq!(removed_pos.len(), 2);
+        assert_eq!(state.n(), 26);
+        assert_eq!(state.incremental_removes, 2);
+
+        // Factor level: every maintained band and LU bitwise equal.
+        for d in 0..2 {
+            let (sd, cd) = (&state.dims[d], &control.dims[d]);
+            assert_eq!(sd.kp.xs, cd.kp.xs, "d={d} xs");
+            assert_eq!(sd.kp.a.to_flat(), cd.kp.a.to_flat(), "d={d} A");
+            assert_eq!(sd.kp.phi.to_flat(), cd.kp.phi.to_flat(), "d={d} Φ");
+            assert_eq!(sd.t.to_flat(), cd.t.to_flat(), "d={d} T");
+            assert_eq!(
+                sd.t_lu.fac_band().to_flat(),
+                cd.t_lu.fac_band().to_flat(),
+                "d={d} T LU"
+            );
+            assert_eq!(
+                sd.phit_lu.fac_band().to_flat(),
+                cd.phit_lu.fac_band().to_flat(),
+                "d={d} Φᵀ LU"
+            );
+        }
+        // The carried warm start is restored exactly (the pushed zero left
+        // with the forgotten point), so the next posterior solve runs the
+        // identical warm PCG trajectory.
+        assert_eq!(state.tilde, control.tilde);
+        state.ensure_posterior(&y);
+        control.post = None;
+        control.ensure_posterior(&y);
+        let (sp, cp) = (state.posterior().unwrap(), control.posterior().unwrap());
+        for d in 0..2 {
+            assert_eq!(sp.b[d], cp.b[d], "d={d} posterior b");
+        }
+    }
+
+    /// One `forget_batch` equals the corresponding descending sequence of
+    /// single `forget` calls bit-for-bit (factors and warm start).
+    #[test]
+    fn forget_batch_matches_sequential_forgets() {
+        let mut rng = Rng::new(93);
+        let sigma2 = 0.9;
+        let x_cols: Vec<Vec<f64>> =
+            (0..2).map(|_| rng.uniform_vec(30, 0.0, 5.0)).collect();
+        let y: Vec<f64> = (0..30).map(|i| x_cols[0][i].cos()).collect();
+        let mut batched = build_state(&x_cols, Nu::ThreeHalves, 1.0, sigma2);
+        let mut seq = build_state(&x_cols, Nu::ThreeHalves, 1.0, sigma2);
+        batched.ensure_posterior(&y);
+        seq.ensure_posterior(&y);
+
+        let indices = [3usize, 11, 12, 29];
+        let compacted = drop_rows(&x_cols, &indices);
+        let out = batched.forget_batch(&indices, &compacted);
+        assert!(!out.fallback);
+        assert_eq!(out.positions.len(), 2);
+        assert_eq!(out.positions[0].len(), indices.len());
+        // Descending singles keep earlier data indices valid.
+        let mut gone: Vec<usize> = Vec::new();
+        for &i in indices.iter().rev() {
+            gone.push(i);
+            let cols = drop_rows(&x_cols, &gone);
+            let _ = seq.forget(i, &cols);
+        }
+        assert_eq!(batched.n(), seq.n());
+        assert_eq!(batched.incremental_removes, seq.incremental_removes);
+        assert_eq!(batched.tilde, seq.tilde);
+        for d in 0..2 {
+            let (bd, sd) = (&batched.dims[d], &seq.dims[d]);
+            assert_eq!(bd.kp.xs, sd.kp.xs, "d={d} xs");
+            assert_eq!(bd.t.to_flat(), sd.t.to_flat(), "d={d} T");
+            assert_eq!(
+                bd.t_lu.fac_band().to_flat(),
+                sd.t_lu.fac_band().to_flat(),
+                "d={d} T LU"
+            );
+        }
     }
 
     /// Duplicate-heavy streams route through the per-dimension rebuild

@@ -219,6 +219,101 @@ impl AdditiveGP {
         BatchPath::Incremental
     }
 
+    /// Release the observation at data-order `index` — the sliding-window
+    /// downdate (DESIGN.md §FitState, "Downdates & rolling windows"). On an
+    /// active model this is the exact mirror of [`AdditiveGP::observe`]:
+    /// each dimension runs a windowed KP removal plus a prefix-reuse LU
+    /// patch from the lowest removed row, the `M̃` cache is invalidated only
+    /// in the `2ν` window around the closing gap, and the carried warm
+    /// start shrinks at the removed entry — no refit, and under the default
+    /// [`PatchPolicy::Exact`] the factors are bit-identical to never having
+    /// observed the point. Shrinking below `min_points` deactivates the
+    /// trained state instead (it rebuilds on the next activation crossing,
+    /// mirroring the observe-side boundary).
+    pub fn forget_index(&mut self, index: usize) {
+        let n = self.n();
+        assert!(index < n, "forget index {index} out of range (n = {n})");
+        for col in self.x_cols.iter_mut() {
+            col.remove(index);
+        }
+        self.y.remove(index);
+        if self.state.is_none() {
+            return;
+        }
+        if self.n() < self.min_points() {
+            self.state = None;
+            self.cache.clear();
+            return;
+        }
+        let state = self.state.as_mut().unwrap();
+        let positions = state.forget(index, &self.x_cols);
+        self.cache.on_remove(&positions, self.cfg.nu.q() + 1);
+        enforce(self, "AdditiveGP::forget_index");
+    }
+
+    /// Release the most recent observation whose coordinates equal `x`
+    /// exactly (the protocol's forget-by-value form). Returns `false` when
+    /// no stored row matches — nothing changes. Ties (duplicate rows)
+    /// resolve to the latest, matching a sliding window's arrival order.
+    pub fn forget(&mut self, x: &[f64]) -> bool {
+        assert_eq!(x.len(), self.input_dim());
+        let found = (0..self.n())
+            .rev()
+            .find(|&i| x.iter().enumerate().all(|(d, &v)| self.x_cols[d][i] == v));
+        match found {
+            Some(i) => {
+                self.forget_index(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Release a whole batch of observations at strictly increasing
+    /// data-order `indices` — one union-window downdate per dimension
+    /// ([`FitState::forget_batch`]) and one cache invalidation pass, the
+    /// deletion mirror of [`AdditiveGP::observe_batch`].
+    pub fn forget_batch(&mut self, indices: &[usize]) {
+        if indices.is_empty() {
+            return;
+        }
+        let n = self.n();
+        assert!(
+            indices.windows(2).all(|p| p[0] < p[1]),
+            "forget_batch indices must be strictly increasing"
+        );
+        assert!(indices[indices.len() - 1] < n, "forget index out of range (n = {n})");
+        let mut keep = vec![true; n];
+        for &i in indices {
+            keep[i] = false;
+        }
+        for col in self.x_cols.iter_mut() {
+            let mut it = keep.iter();
+            col.retain(|_| *it.next().unwrap());
+        }
+        let mut it = keep.iter();
+        self.y.retain(|_| *it.next().unwrap());
+        if self.state.is_none() {
+            return;
+        }
+        if self.n() < self.min_points() {
+            self.state = None;
+            self.cache.clear();
+            return;
+        }
+        let state = self.state.as_mut().unwrap();
+        let out = state.forget_batch(indices, &self.x_cols);
+        if out.fallback {
+            // A degenerate dimension rebuilt from the compacted data: its
+            // sorted order is unknown here, so invalidate coarsely (columns
+            // rebuild on demand; exactness is untouched).
+            self.cache.clear();
+        } else {
+            self.cache.on_remove_batch(&out.positions, self.cfg.nu.q() + 1);
+        }
+        enforce(self, "AdditiveGP::forget_batch");
+    }
+
     /// Rebuild per-dimension factorizations with the current hyperparameters
     /// (hyperparameter changes and large batches; the per-point path is
     /// [`AdditiveGP::observe`]).
@@ -333,6 +428,13 @@ impl AdditiveGP {
             Some(s) => (s.incremental_inserts, s.fallback_rebuilds, self.cache.refreshes),
             None => (0, 0, self.cache.refreshes),
         }
+    }
+
+    /// Observations released through the incremental downdate path (zero
+    /// before activation; resets when the state deactivates or refits, like
+    /// the insert counters).
+    pub fn incremental_removes(&self) -> u64 {
+        self.state.as_ref().map(|s| s.incremental_removes).unwrap_or(0)
     }
 
     /// Factor-update statistics `(prefix-reuse patches, full re-sweeps)`,
@@ -565,6 +667,76 @@ mod tests {
                 b.var
             );
         }
+    }
+
+    /// Observe-then-forget at the façade level is bit-identical to never
+    /// observing: factors restore exactly, both models run the same cold
+    /// posterior solve, and predictions agree to the last bit.
+    #[test]
+    fn forget_roundtrip_is_bitwise_never_observed() {
+        let (x, y) = toy_data(41, 2, 14);
+        let mut never = AdditiveGP::new(AdditiveGpConfig::default(), 2);
+        never.fit(&x[..40], &y[..40]);
+        let mut gp = AdditiveGP::new(AdditiveGpConfig::default(), 2);
+        gp.fit(&x[..40], &y[..40]);
+        gp.observe(&x[40], y[40]);
+        assert_eq!(gp.n(), 41);
+        assert!(gp.forget(&x[40]), "the observed row must be found by value");
+        assert_eq!(gp.n(), 40);
+        assert_eq!(gp.incremental_removes(), 2, "one downdate per dimension");
+        assert!(!gp.forget(&x[40]), "already forgotten");
+        for q in [[2.0, 2.5], [0.5, 4.0], [4.4, 0.1]] {
+            let a = gp.predict(&q, true);
+            let b = never.predict(&q, true);
+            assert_eq!(a.mean.to_bits(), b.mean.to_bits(), "mean at {q:?}");
+            assert_eq!(a.var.to_bits(), b.var.to_bits(), "var at {q:?}");
+            assert_eq!(a.var_grad[0].to_bits(), b.var_grad[0].to_bits());
+        }
+        assert!(gp.run_audit().1.is_ok());
+    }
+
+    /// Shrinking below `min_points` deactivates the trained state; crossing
+    /// back up reactivates it with a clean refit.
+    #[test]
+    fn forget_below_min_points_deactivates_and_reactivates() {
+        let mut gp = AdditiveGP::new(AdditiveGpConfig::default(), 2);
+        let (x, y) = toy_data(30, 2, 15);
+        let min = gp.min_points();
+        for i in 0..min {
+            gp.observe(&x[i], y[i]);
+        }
+        assert!(gp.dims().is_some(), "activated at min_points");
+        gp.forget_index(0);
+        assert!(gp.dims().is_none(), "shrunk below min_points");
+        assert_eq!(gp.n(), min - 1);
+        assert!(gp.fit_state().is_none(), "trained state must be dropped");
+        gp.observe(&x[min], y[min]);
+        assert!(gp.dims().is_some(), "re-crossed min_points");
+        assert!(gp.run_audit().1.is_ok());
+    }
+
+    /// `forget_batch` compacts data and state together and keeps the model
+    /// consistent with a from-scratch fit on the surviving rows.
+    #[test]
+    fn forget_batch_matches_fresh_fit_on_survivors() {
+        let (x, y) = toy_data(46, 2, 16);
+        let mut gp = AdditiveGP::new(AdditiveGpConfig::default(), 2);
+        gp.fit(&x, &y);
+        let gone = [0usize, 7, 8, 22, 45];
+        gp.forget_batch(&gone);
+        assert_eq!(gp.n(), 41);
+        let survivors: Vec<usize> = (0..46).filter(|i| !gone.contains(i)).collect();
+        let xs: Vec<Vec<f64>> = survivors.iter().map(|&i| x[i].clone()).collect();
+        let ys: Vec<f64> = survivors.iter().map(|&i| y[i]).collect();
+        let mut fresh = AdditiveGP::new(AdditiveGpConfig::default(), 2);
+        fresh.fit(&xs, &ys);
+        for q in [[1.0, 3.0], [3.3, 1.8]] {
+            let a = gp.predict(&q, false);
+            let b = fresh.predict(&q, false);
+            assert_eq!(a.mean.to_bits(), b.mean.to_bits(), "mean at {q:?}");
+            assert_eq!(a.var.to_bits(), b.var.to_bits(), "var at {q:?}");
+        }
+        assert!(gp.run_audit().1.is_ok());
     }
 
     /// The coordinator's read snapshot agrees with the engine's own predict

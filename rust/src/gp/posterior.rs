@@ -257,6 +257,116 @@ impl MTildeCache {
         self.visits.clear();
     }
 
+    /// Windowed invalidation after an incremental forget at sorted position
+    /// `positions[d]` in each dimension — the deletion mirror of
+    /// [`MTildeCache::on_insert`].
+    ///
+    /// The removed column itself and every column whose `2ν`-window overlaps
+    /// the closing gap are evicted. Every surviving column is re-keyed
+    /// (sorted indices above the removal shift down by one), has the removed
+    /// entry spliced *out* of each dimension's block (keeping vector shapes
+    /// aligned with the shrunk `n`), and is marked **stale** — served again
+    /// only after an exact warm-started re-solve in [`MTildeCache::column`],
+    /// so pre-removal values never leak into results.
+    ///
+    /// Truncation parity: an over-full cache routes through
+    /// [`MTildeCache::clear_truncated`] exactly like the insert path, so
+    /// `truncation_clears` counts thrown-away locality symmetrically for
+    /// observes and forgets.
+    pub fn on_remove(&mut self, positions: &[usize], w: usize) {
+        if self.cols.len() > Self::REMAP_MAX_COLS {
+            self.clear_truncated();
+            return;
+        }
+        let reach = (2 * w) as isize;
+        // Column remapping is order-independent (see on_insert).
+        // lint: hashmap-order-ok
+        let old: Vec<((u32, u32), Vec<Vec<f64>>)> = self.cols.drain().collect();
+        self.stale.clear();
+        let mut remap: HashMap<(u32, u32), (u32, u32)> = HashMap::new();
+        for ((dcol, j), mut col) in old {
+            let p = positions[dcol as usize];
+            if (j as isize - p as isize).abs() <= reach {
+                continue; // evict: window overlaps the closing gap (or j == p)
+            }
+            let nj = if j as usize > p { j - 1 } else { j };
+            for (d, v) in col.iter_mut().enumerate() {
+                v.remove(positions[d]);
+            }
+            self.stale.insert((dcol, nj));
+            remap.insert((dcol, j), (dcol, nj));
+            self.cols.insert((dcol, nj), col);
+        }
+        let order: Vec<(u32, u32)> =
+            self.order.iter().filter_map(|k| remap.get(k).copied()).collect();
+        self.order = order;
+        self.visits.clear();
+    }
+
+    /// Batched form of [`MTildeCache::on_remove`]: one invalidation pass for
+    /// a whole `forget_batch`. `positions[d]` holds dimension `d`'s
+    /// *pre-removal* sorted positions of the forgotten points (batch data
+    /// order). Overlap tests and splice-outs run in pre-removal coordinates
+    /// (descending splice order keeps earlier indices valid); surviving keys
+    /// shift down by the number of removals below them. Large batches and
+    /// near-full caches truncate, mirroring
+    /// [`MTildeCache::on_insert_batch`]'s counter behaviour.
+    pub fn on_remove_batch(&mut self, positions: &[Vec<usize>], w: usize) {
+        let m = positions.first().map(|p| p.len()).unwrap_or(0);
+        if m == 0 {
+            return;
+        }
+        if m == 1 {
+            let pos: Vec<usize> = positions.iter().map(|p| p[0]).collect();
+            self.on_remove(&pos, w);
+            return;
+        }
+        if self.cols.len() > Self::REMAP_MAX_COLS || m > Self::REMAP_MAX_BATCH {
+            self.clear_truncated();
+            return;
+        }
+        let sorted: Vec<Vec<usize>> = positions
+            .iter()
+            .map(|p| {
+                let mut q = p.clone();
+                q.sort_unstable();
+                q
+            })
+            .collect();
+        let reach = (2 * w) as isize;
+        // Column remapping is order-independent (see on_insert).
+        // lint: hashmap-order-ok
+        let old: Vec<((u32, u32), Vec<Vec<f64>>)> = self.cols.drain().collect();
+        self.stale.clear();
+        let mut remap: HashMap<(u32, u32), (u32, u32)> = HashMap::new();
+        'cols: for ((dcol, j), mut col) in old {
+            let qs = &sorted[dcol as usize];
+            let mut shift = 0usize;
+            for &q in qs {
+                if (j as isize - q as isize).abs() <= reach {
+                    continue 'cols; // evict: a removal hit its window
+                }
+                if q < j as usize {
+                    shift += 1;
+                }
+            }
+            let nj = j as usize - shift;
+            for (d, v) in col.iter_mut().enumerate() {
+                for &q in sorted[d].iter().rev() {
+                    v.remove(q);
+                }
+            }
+            let key = (dcol, nj as u32);
+            self.stale.insert(key);
+            remap.insert((dcol, j), key);
+            self.cols.insert(key, col);
+        }
+        let order: Vec<(u32, u32)> =
+            self.order.iter().filter_map(|k| remap.get(k).copied()).collect();
+        self.order = order;
+        self.visits.clear();
+    }
+
     /// Count a visit to a window signature; returns the previous count.
     fn visit(&mut self, starts: &[usize]) -> u32 {
         let key: Vec<u32> = starts.iter().map(|&s| s as u32).collect();
@@ -949,6 +1059,71 @@ mod tests {
         cache.on_insert_batch(&positions, 1);
         assert_eq!(cache.truncation_clears, 1);
         assert!(cache.is_empty());
+        // Removal parity: the forget paths count truncations through the
+        // same counter, so operators see thrown-away locality symmetrically.
+        cache.cols.insert((0, 40), vec![vec![0.0; 40]]);
+        cache.order.push((0, 40));
+        let wide = vec![(0..MTildeCache::REMAP_MAX_BATCH + 1).collect::<Vec<usize>>()];
+        cache.on_remove_batch(&wide, 1);
+        assert_eq!(cache.truncation_clears, 2);
+        assert!(cache.is_empty());
+        // A plain clear still doesn't count.
+        cache.clear();
+        assert_eq!(cache.truncation_clears, 2);
+    }
+
+    /// `on_remove` evicts gap-overlapping columns, re-keys the survivors one
+    /// slot down, splices the removed entry out of every block, and leaves a
+    /// structurally valid (auditable) cache at the shrunk `n`.
+    #[test]
+    fn on_remove_rekeys_and_splices_out() {
+        let mut cache = MTildeCache::new(0);
+        let n = 12;
+        let col = |tag: f64| vec![(0..n).map(|i| tag + i as f64).collect::<Vec<f64>>()];
+        for j in [2u32, 4, 10] {
+            cache.cols.insert((0, j), col(j as f64 * 100.0));
+            cache.order.push((0, j));
+        }
+        // Remove sorted position 5 with w = 1 (reach 2): column 4 overlaps
+        // the gap and is evicted; 2 keeps its key; 10 shifts to 9.
+        cache.on_remove(&[5], 1);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.cols.contains_key(&(0, 2)));
+        assert!(cache.cols.contains_key(&(0, 9)));
+        assert!(cache.stale.contains(&(0, 2)) && cache.stale.contains(&(0, 9)));
+        // Entry 5 spliced out: survivors hold n-1 values with index 5 gone.
+        let c2 = &cache.cols[&(0, 2)][0];
+        assert_eq!(c2.len(), n - 1);
+        assert_eq!(c2[4], 204.0);
+        assert_eq!(c2[5], 206.0);
+        assert!(cache.audit_with(1, n - 1).is_ok());
+    }
+
+    /// `on_remove_batch` matches the sequential single-remove story: same
+    /// survivors, same re-keyed positions, same spliced-out blocks.
+    #[test]
+    fn on_remove_batch_matches_sequential() {
+        let n = 20;
+        let seed = |cache: &mut MTildeCache| {
+            for j in [1u32, 8, 15, 18] {
+                cache.cols.insert((0, j), vec![(0..n).map(|i| i as f64).collect()]);
+                cache.order.push((0, j));
+            }
+        };
+        let mut batched = MTildeCache::new(0);
+        seed(&mut batched);
+        batched.on_remove_batch(&[vec![5, 11]], 1);
+        let mut seq = MTildeCache::new(0);
+        seed(&mut seq);
+        // Descending single removes keep pre-removal coordinates valid.
+        seq.on_remove(&[11], 1);
+        seq.on_remove(&[5], 1);
+        assert_eq!(batched.len(), seq.len());
+        for (key, col) in &batched.cols {
+            assert_eq!(seq.cols.get(key), Some(col), "key {key:?}");
+            assert!(seq.stale.contains(key));
+        }
+        assert!(batched.audit_with(1, n - 2).is_ok());
     }
 
     #[test]

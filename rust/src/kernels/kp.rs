@@ -283,6 +283,97 @@ impl KpFactorization {
         Some(final_pos)
     }
 
+    /// Incrementally remove the point at sorted position `pos` — the
+    /// deletion mirror of [`KpFactorization::insert`], behind
+    /// `FitState::forget` (DESIGN.md §FitState, "Downdates").
+    ///
+    /// Only the packets whose point window contained the removed point
+    /// change: in post-removal indices those are rows `i ∈ [pos−w, pos+w−1]`
+    /// (a surviving row `i ≥ pos+w` had old index `i+1` and old point window
+    /// `[i+1−w, i+1+w]`, which the band deletion shifts onto exactly the new
+    /// window `[i−w, i+w]`, so its stored coefficients are already the
+    /// from-scratch values; a row `i < pos−w` is untouched outright). The
+    /// rebuilt range below also absorbs every boundary/central type flip —
+    /// a row `i < pos−w` cannot become a right-boundary row because
+    /// `i + w < n_new` there.
+    ///
+    /// Returns the removed point's *original* (data-order) index; surviving
+    /// original indices above it shift down by one. Panics if the removal
+    /// would drop `n` below the packet minimum `2w+1` — the caller decides
+    /// between refusing and deactivating the model before calling.
+    pub fn remove(&mut self, pos: usize) -> usize {
+        let n = self.n();
+        let w = self.w();
+        assert!(pos < n, "remove: sorted position {pos} out of range {n}");
+        assert!(
+            n - 1 >= 2 * w + 1,
+            "remove: n = {} would drop below the packet minimum {}",
+            n - 1,
+            2 * w + 1
+        );
+        self.xs.remove(pos);
+        let orig = self.perm.remove(pos);
+        self.a.remove_row_col(pos);
+        self.phi.remove_row_col(pos);
+        let n = n - 1;
+        let lo = pos.saturating_sub(w);
+        let hi = (pos + w).min(n - 1);
+        for i in lo..=hi {
+            self.rebuild_row(i);
+        }
+        enforce(self, "KpFactorization::remove");
+        orig
+    }
+
+    /// Remove a whole batch of points in one pass — the batched form of
+    /// [`KpFactorization::remove`]: one band deletion per matrix plus one
+    /// packet re-solve over the *union* of the removal windows.
+    /// `sorted_positions` are current sorted positions, strictly increasing.
+    /// Returns the removed points' *original* indices (pre-compaction, in
+    /// the order of `sorted_positions`). Panics if the batch would drop `n`
+    /// below the packet minimum `2w+1`.
+    pub fn remove_batch(&mut self, sorted_positions: &[usize]) -> Vec<usize> {
+        let k = sorted_positions.len();
+        if k == 0 {
+            return Vec::new();
+        }
+        if k == 1 {
+            return vec![self.remove(sorted_positions[0])];
+        }
+        let w = self.w();
+        assert!(
+            self.n() - k >= 2 * w + 1,
+            "remove_batch: n = {} would drop below the packet minimum {}",
+            self.n() - k,
+            2 * w + 1
+        );
+        for &p in sorted_positions.iter().rev() {
+            self.xs.remove(p);
+        }
+        let origs = self.perm.remove_batch(sorted_positions);
+        self.a.remove_rows_cols(sorted_positions);
+        self.phi.remove_rows_cols(sorted_positions);
+        let n = self.n();
+        // Rebuild the union of windows [q′−w, q′+w] where q′ = q − t is the
+        // post-removal coordinate the t-th gap closed at (the per-removal
+        // coverage argument of `remove` applies unchanged).
+        let mut next = 0usize;
+        for (t, &q) in sorted_positions.iter().enumerate() {
+            let qq = q - t;
+            let lo = qq.saturating_sub(w).max(next);
+            let hi = (qq + w).min(n - 1);
+            if lo > hi {
+                continue;
+            }
+            for i in lo..=hi {
+                self.rebuild_row(i);
+            }
+            next = hi + 1;
+        }
+        enforce(self, "KpFactorization::remove_batch");
+        origs
+    }
+
     /// Recompute packet row `i` of `A` and the matching row of `Φ` from the
     /// current `xs` (used by [`KpFactorization::insert`]).
     fn rebuild_row(&mut self, i: usize) {
@@ -784,6 +875,129 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Incremental `remove` reproduces the from-scratch factorization of the
+    /// surviving points exactly (same moment systems ⇒ bit-identical
+    /// coefficients) for interior, minimum and maximum removals — and
+    /// `insert` followed by `remove` of the same point is bit-identical to
+    /// never having inserted it.
+    #[test]
+    fn remove_matches_fresh_factorization() {
+        for nu in [Nu::Half, Nu::ThreeHalves, Nu::FiveHalves] {
+            let pts = random_points(20, 0.0, 4.0, 52);
+            let kernel = Matern::new(nu, 1.3);
+            let mut inc = KpFactorization::new(&pts, kernel);
+            let mut all = pts.clone();
+            // Interior, minimum, maximum, near-boundary removals (sorted
+            // positions evaluated against the shrinking set).
+            for &pos in &[7usize, 0, 17, 1, 15] {
+                let orig = inc.remove(pos);
+                assert_eq!(all[orig], {
+                    let mut s = all.clone();
+                    s.sort_by(f64::total_cmp);
+                    s[pos]
+                });
+                all.remove(orig);
+                let fresh = KpFactorization::new(&all, kernel);
+                assert_eq!(inc.n(), fresh.n());
+                for (a, b) in inc.xs.iter().zip(&fresh.xs) {
+                    assert_eq!(a, b, "{nu:?} xs mismatch after remove {pos}");
+                }
+                for i in 0..inc.n() {
+                    assert_eq!(
+                        inc.perm.orig(i),
+                        fresh.perm.orig(i),
+                        "{nu:?} perm mismatch at {i}"
+                    );
+                }
+                for i in 0..inc.n() {
+                    for j in 0..inc.n() {
+                        assert!(
+                            (inc.a.get(i, j) - fresh.a.get(i, j)).abs() < 1e-13,
+                            "{nu:?} pos={pos} A[{i},{j}]: {} vs {}",
+                            inc.a.get(i, j),
+                            fresh.a.get(i, j)
+                        );
+                        assert!(
+                            (inc.phi.get(i, j) - fresh.phi.get(i, j)).abs() < 1e-12,
+                            "{nu:?} pos={pos} Φ[{i},{j}]: {} vs {}",
+                            inc.phi.get(i, j),
+                            fresh.phi.get(i, j)
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// `insert(x)` then `remove` of the same point restores every structure
+    /// bit-for-bit (the packet-level half of the forget property).
+    #[test]
+    fn insert_then_remove_is_identity_bitwise() {
+        for nu in [Nu::Half, Nu::ThreeHalves, Nu::FiveHalves] {
+            let pts = random_points(18, 0.0, 4.0, 53);
+            let kernel = Matern::new(nu, 1.1);
+            let base = KpFactorization::new(&pts, kernel);
+            for &x in &[2.17, -0.5, 4.9, 0.01] {
+                let mut f = base.clone();
+                let pos = f.insert(x).expect("distinct point must insert");
+                f.remove(pos);
+                assert_eq!(f.xs, base.xs, "{nu:?} x={x}");
+                for i in 0..f.n() {
+                    assert_eq!(f.perm.orig(i), base.perm.orig(i), "{nu:?} x={x}");
+                    for j in 0..f.n() {
+                        assert_eq!(f.a.get(i, j), base.a.get(i, j), "{nu:?} A[{i},{j}]");
+                        assert_eq!(
+                            f.phi.get(i, j),
+                            base.phi.get(i, j),
+                            "{nu:?} Φ[{i},{j}]"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// `remove_batch` is bit-identical to the equivalent sequence of single
+    /// `remove` calls (walked in descending order).
+    #[test]
+    fn remove_batch_matches_sequential_removes_bitwise() {
+        for nu in [Nu::Half, Nu::ThreeHalves, Nu::FiveHalves] {
+            let pts = random_points(24, 0.0, 4.0, 62);
+            let kernel = Matern::new(nu, 1.2);
+            let mut batched = KpFactorization::new(&pts, kernel);
+            let mut seq = KpFactorization::new(&pts, kernel);
+            let positions = [0usize, 5, 6, 11, 23];
+            let origs = batched.remove_batch(&positions);
+            assert_eq!(origs.len(), positions.len());
+            for &p in positions.iter().rev() {
+                seq.remove(p);
+            }
+            assert_eq!(batched.n(), seq.n());
+            for i in 0..batched.n() {
+                assert_eq!(batched.xs[i], seq.xs[i], "{nu:?} xs[{i}]");
+                assert_eq!(batched.perm.orig(i), seq.perm.orig(i), "{nu:?} perm[{i}]");
+                for j in 0..batched.n() {
+                    assert_eq!(batched.a.get(i, j), seq.a.get(i, j), "{nu:?} A[{i},{j}]");
+                    assert_eq!(
+                        batched.phi.get(i, j),
+                        seq.phi.get(i, j),
+                        "{nu:?} Φ[{i},{j}]"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Removing below the packet minimum is refused by panic — the caller
+    /// must deactivate instead.
+    #[test]
+    #[should_panic(expected = "packet minimum")]
+    fn remove_below_packet_minimum_panics() {
+        let pts: Vec<f64> = (0..3).map(|i| i as f64).collect();
+        let mut f = KpFactorization::new(&pts, Matern::new(Nu::Half, 1.0));
+        f.remove(0); // n = 3 = 2w+1 is already the floor for ν = 1/2
     }
 
     /// A batch containing an inseparable duplicate fails atomically: the

@@ -284,6 +284,52 @@ impl Banded {
         enforce(self, "Banded::insert_rows_cols");
     }
 
+    /// Remove the row *and* column at index `j`, shrinking the matrix to
+    /// `(n−1) × (n−1)` — the deletion mirror of
+    /// [`Banded::insert_row_col`]. Only the row-block chunks the deletion
+    /// straddles are rewritten.
+    ///
+    /// Band storage shifts every later row and its stored columns together,
+    /// so (exactly as for the insert) rows whose stored window lies entirely
+    /// on one side of `j` keep bit-identical entries; rows with
+    /// `|i - j| ≤ max(kl, ku)` (post-removal indices) end up referring to
+    /// shifted columns and must be rewritten by the caller (see
+    /// `KpFactorization::remove`).
+    pub fn remove_row_col(&mut self, j: usize) {
+        self.remove_rows_cols(&[j]);
+    }
+
+    /// Remove `k` rows *and* columns in one pass, shrinking the matrix to
+    /// `(n−k) × (n−k)`. `positions` are current indices, strictly
+    /// increasing, all `< n`. Only the chunks a deletion lands in are
+    /// rewritten; every other row-block chunk keeps its buffer verbatim.
+    /// The caller's rewrite contract is the batched form of the single one:
+    /// every surviving row within `max(kl, ku)` of any removed index must be
+    /// rewritten afterwards.
+    pub fn remove_rows_cols(&mut self, positions: &[usize]) {
+        let k = positions.len();
+        if k == 0 {
+            return;
+        }
+        for (t, &q) in positions.iter().enumerate() {
+            assert!(
+                q < self.n,
+                "remove_rows_cols: position {q} out of range for n={}",
+                self.n
+            );
+            if t > 0 {
+                assert!(
+                    q > positions[t - 1],
+                    "remove_rows_cols: positions must be strictly increasing"
+                );
+            }
+        }
+        assert!(k <= self.n, "remove_rows_cols: removing more rows than exist");
+        self.store.remove_rows(positions);
+        self.n -= k;
+        enforce(self, "Banded::remove_rows_cols");
+    }
+
     /// LU-factorize with threshold partial pivoting (row swaps only past
     /// `PIVOT_THRESHOLD`). `O((kl+ku)² n)`.
     pub fn lu(&self) -> BandedLU {
@@ -1113,6 +1159,82 @@ mod tests {
             for i in 0..7 {
                 for c in 0..7 {
                     assert_eq!(inc.get(i, c), fresh.get(i, c), "j={j} ({i},{c})");
+                }
+            }
+        }
+    }
+
+    /// Removing a row/col and rewriting the straddling `O(kl+ku)` window
+    /// (the caller's contract, mirror of the insert one) reproduces a
+    /// freshly-built matrix exactly.
+    #[test]
+    fn remove_row_col_then_window_rewrite_matches_fresh() {
+        let row_entries = |i: usize, n: usize, vals: &[f64]| -> Vec<(usize, f64)> {
+            let mut e = Vec::new();
+            if i > 0 {
+                e.push((i - 1, -vals[i]));
+            }
+            e.push((i, 2.0 + vals[i]));
+            if i + 1 < n {
+                e.push((i + 1, 0.5 * vals[i]));
+            }
+            e
+        };
+        let build = |vals: &[f64]| {
+            let n = vals.len();
+            let mut m = Banded::zeros(n, 1, 1);
+            for i in 0..n {
+                for (c, v) in row_entries(i, n, vals) {
+                    m.set(i, c, v);
+                }
+            }
+            m
+        };
+        for j in [0usize, 3, 6] {
+            let vals7 = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+            let mut vals6 = vals7.to_vec();
+            vals6.remove(j);
+            let fresh = build(&vals6);
+
+            let mut inc = build(&vals7);
+            inc.remove_row_col(j);
+            assert_eq!(inc.n(), 6);
+            // Rewrite the straddling window |i − j| ≤ max(kl, ku) = 1 in
+            // post-removal indices.
+            for i in j.saturating_sub(1)..=(j + 1).min(5) {
+                let (lo, hi) = inc.row_range(i);
+                for c in lo..hi {
+                    inc.set(i, c, 0.0);
+                }
+                for (c, v) in row_entries(i, 6, &vals6) {
+                    inc.set(i, c, v);
+                }
+            }
+            for i in 0..6 {
+                for c in 0..6 {
+                    assert_eq!(inc.get(i, c), fresh.get(i, c), "j={j} ({i},{c})");
+                }
+            }
+        }
+    }
+
+    /// Batched removal == repeated single removals (positions walked in
+    /// descending order so earlier removals don't shift later indices).
+    #[test]
+    fn remove_rows_cols_matches_repeated_single_removes() {
+        let base = tridiag(9, -1.5, 2.0, 0.75);
+        for positions in [vec![0usize, 1], vec![2, 5], vec![0, 3, 8], vec![7, 8]] {
+            let mut batched = base.clone();
+            batched.remove_rows_cols(&positions);
+            let mut seq = base.clone();
+            for &p in positions.iter().rev() {
+                seq.remove_row_col(p);
+            }
+            assert_eq!(batched.n(), seq.n(), "{positions:?}");
+            for i in 0..batched.n() {
+                let (lo, hi) = batched.row_range(i);
+                for c in lo..hi {
+                    assert_eq!(batched.get(i, c), seq.get(i, c), "{positions:?} ({i},{c})");
                 }
             }
         }

@@ -351,6 +351,69 @@ impl ChunkedRows {
         self.append_zero_rows(k - t);
     }
 
+    /// Remove the rows at the given indices (strictly increasing, all
+    /// `< n_rows`) — the deletion mirror of
+    /// [`ChunkedRows::insert_zero_rows`]. Only chunks a removal lands in are
+    /// rebuilt; every other chunk keeps its buffer verbatim, so structural
+    /// sharing with outstanding snapshots survives the deletion exactly as
+    /// it survives a splice. A chunk whose rows are all removed is dropped
+    /// entirely (empty chunks are structurally illegal).
+    ///
+    /// `memmove_bytes` accounts the bytes of surviving rows displaced within
+    /// each rewritten chunk — bounded by `O(MAX_CHUNK_ROWS · width)` per
+    /// straddled chunk, independent of `n_rows`.
+    pub fn remove_rows(&mut self, positions: &[usize]) {
+        let k = positions.len();
+        if k == 0 {
+            return;
+        }
+        let w = self.width;
+        debug_assert!(positions.windows(2).all(|p| p[0] < p[1]));
+        debug_assert!(positions.last().is_none_or(|&p| p < self.n_rows));
+        let n_chunks = self.chunks.len();
+        let mut new_chunks: Vec<Arc<Vec<f64>>> = Vec::with_capacity(n_chunks);
+        let mut new_dirty: Vec<bool> = Vec::with_capacity(n_chunks);
+        let mut t = 0usize;
+        for c in 0..n_chunks {
+            let s0 = self.starts[c];
+            let s1 = self.starts[c + 1];
+            let t0 = t;
+            while t < k && positions[t] < s1 {
+                t += 1;
+            }
+            if t == t0 {
+                // No removal lands here: the buffer survives verbatim.
+                new_chunks.push(Arc::clone(&self.chunks[c]));
+                new_dirty.push(self.dirty[c]);
+                continue;
+            }
+            let rem = &positions[t0..t];
+            let rows_old = s1 - s0;
+            if rem.len() == rows_old {
+                // Every row of this chunk is removed: drop the chunk.
+                continue;
+            }
+            let old = &self.chunks[c];
+            let mut v = Vec::with_capacity((rows_old - rem.len()) * w);
+            let mut pos = s0;
+            for &r in rem {
+                v.extend_from_slice(&old[(pos - s0) * w..(r - s0) * w]);
+                pos = r + 1;
+            }
+            v.extend_from_slice(&old[(pos - s0) * w..]);
+            // Surviving rows past the first removed index all shifted within
+            // this chunk.
+            self.memmove_bytes +=
+                ((s1 - rem[0] - rem.len()) * w * std::mem::size_of::<f64>()) as u64;
+            new_chunks.push(Arc::new(v));
+            new_dirty.push(true);
+        }
+        debug_assert_eq!(t, k, "remove_rows position out of range");
+        self.chunks = new_chunks;
+        self.dirty = new_dirty;
+        self.rebuild_starts();
+    }
+
     /// A new rope reusing rows `[0, keep)` of `self` plus `new_rows − keep`
     /// fresh zero rows: whole chunks below `keep` are `Arc`-shared (their
     /// bytes are settled prefix both sides agree on — the caller must
@@ -654,6 +717,83 @@ mod tests {
         assert_eq!(snap.row(CHUNK_ROWS + 3)[0], ((CHUNK_ROWS + 3) * 2) as f64);
         assert!(r.audit().is_ok());
         assert!(snap.audit().is_ok());
+    }
+
+    #[test]
+    fn remove_matches_flat_reference() {
+        let rows = 3 * CHUNK_ROWS;
+        let w = 2;
+        let r0 = ramp(w, rows);
+        for positions in [
+            vec![CHUNK_ROWS + 5],
+            vec![CHUNK_ROWS, CHUNK_ROWS + 1],
+            vec![0],
+            vec![rows - 1],
+            vec![0, CHUNK_ROWS + 3, rows - 1],
+            (CHUNK_ROWS..2 * CHUNK_ROWS).collect::<Vec<_>>(), // whole middle chunk
+        ] {
+            let mut r = r0.clone();
+            r.remove_rows(&positions);
+            assert!(r.audit().is_ok(), "{positions:?}");
+            // Flat reference: drain the removed rows from a plain Vec.
+            let mut flat = flat_ramp(w, rows);
+            for &p in positions.iter().rev() {
+                flat.drain(p * w..(p + 1) * w);
+            }
+            assert_eq!(r.to_flat(), flat, "{positions:?}");
+            assert_eq!(r.n_rows(), rows - positions.len());
+        }
+    }
+
+    #[test]
+    fn remove_drops_emptied_chunks_and_bounds_memmove() {
+        let rows = 3 * CHUNK_ROWS;
+        let w = 2;
+        let mut r = ramp(w, rows);
+        let chunks_before = r.num_chunks();
+        let before = r.stats().memmove_bytes;
+        // Removing every row of the middle chunk drops it outright: no rows
+        // move and no empty chunk is left behind.
+        r.remove_rows(&(CHUNK_ROWS..2 * CHUNK_ROWS).collect::<Vec<_>>());
+        assert_eq!(r.num_chunks(), chunks_before - 1);
+        assert_eq!(r.stats().memmove_bytes, before, "dropping a chunk moves nothing");
+        assert!(r.audit().is_ok());
+        // A mid-chunk removal moves at most the straddled chunk's tail.
+        let before = r.stats().memmove_bytes;
+        r.remove_rows(&[3]);
+        let delta = (r.stats().memmove_bytes - before) as usize;
+        assert!(delta <= MAX_CHUNK_ROWS * w * 8, "moved {delta} bytes");
+    }
+
+    #[test]
+    fn remove_preserves_untouched_chunk_buffers() {
+        let rows = 4 * CHUNK_ROWS;
+        let mut r = ramp(2, rows);
+        let snap = {
+            r.mark_clean();
+            r.clone()
+        };
+        // Remove from chunk 1: chunks 0, 2, 3 must still share buffers with
+        // the snapshot; the snapshot keeps reading the original bytes.
+        r.remove_rows(&[CHUNK_ROWS + 3]);
+        assert_eq!(Arc::strong_count(&r.chunks[0]), 2);
+        assert_eq!(Arc::strong_count(&r.chunks[2]), 2);
+        assert_eq!(snap.row(CHUNK_ROWS + 3)[0], ((CHUNK_ROWS + 3) * 2) as f64);
+        assert_eq!(r.row(CHUNK_ROWS + 3)[0], ((CHUNK_ROWS + 4) * 2) as f64);
+        assert!(r.audit().is_ok());
+        assert!(snap.audit().is_ok());
+    }
+
+    #[test]
+    fn insert_then_remove_restores_flat_contents() {
+        let rows = 2 * CHUNK_ROWS + 7;
+        let r0 = ramp(3, rows);
+        let mut r = r0.clone();
+        r.insert_zero_rows(&[5, CHUNK_ROWS + 2]);
+        r.remove_rows(&[5, CHUNK_ROWS + 2]);
+        assert_eq!(r.to_flat(), r0.to_flat());
+        assert_eq!(r.n_rows(), rows);
+        assert!(r.audit().is_ok());
     }
 
     #[test]

@@ -147,6 +147,83 @@ impl Permutation {
         self.inv = inv;
         enforce(self, "Permutation::insert_batch");
     }
+
+    /// Remove the element at sorted position `sorted_pos` — the deletion
+    /// mirror of [`Permutation::insert`]. Returns the *original* (data-order)
+    /// index of the removed element; surviving original indices above it
+    /// shift down by one (the data arrays compact the same way), as do
+    /// sorted positions above `sorted_pos`. `O(n)`.
+    pub fn remove(&mut self, sorted_pos: usize) -> usize {
+        assert!(sorted_pos < self.fwd.len());
+        let o = self.fwd.remove(sorted_pos);
+        for v in self.fwd.iter_mut() {
+            if *v > o {
+                *v -= 1;
+            }
+        }
+        self.inv.remove(o);
+        for v in self.inv.iter_mut() {
+            if *v > sorted_pos {
+                *v -= 1;
+            }
+        }
+        enforce(self, "Permutation::remove");
+        o
+    }
+
+    /// Remove `k` elements in one `O(n + k log k)` pass. `sorted_positions`
+    /// are current sorted positions, strictly increasing. Returns the
+    /// removed elements' *original* indices (pre-compaction, in the order of
+    /// `sorted_positions`). Equivalent to removing the positions one at a
+    /// time in descending order.
+    pub fn remove_batch(&mut self, sorted_positions: &[usize]) -> Vec<usize> {
+        let k = sorted_positions.len();
+        if k == 0 {
+            return Vec::new();
+        }
+        let n_old = self.fwd.len();
+        for (t, &s) in sorted_positions.iter().enumerate() {
+            assert!(s < n_old, "remove_batch: position {s} out of range {n_old}");
+            if t > 0 {
+                assert!(
+                    s > sorted_positions[t - 1],
+                    "remove_batch: positions must be strictly increasing"
+                );
+            }
+        }
+        let removed_orig: Vec<usize> =
+            sorted_positions.iter().map(|&s| self.fwd[s]).collect();
+        // shift[o] = number of removed original indices < o.
+        let mut orig_removed = vec![false; n_old];
+        for &o in &removed_orig {
+            orig_removed[o] = true;
+        }
+        let mut shift = vec![0usize; n_old];
+        let mut acc = 0usize;
+        for (o, s) in shift.iter_mut().enumerate() {
+            *s = acc;
+            if orig_removed[o] {
+                acc += 1;
+            }
+        }
+        let mut fwd = Vec::with_capacity(n_old - k);
+        let mut t = 0usize;
+        for (s, &o) in self.fwd.iter().enumerate() {
+            if t < k && sorted_positions[t] == s {
+                t += 1;
+                continue;
+            }
+            fwd.push(o - shift[o]);
+        }
+        let mut inv = vec![0usize; n_old - k];
+        for (s, &o) in fwd.iter().enumerate() {
+            inv[o] = s;
+        }
+        self.fwd = fwd;
+        self.inv = inv;
+        enforce(self, "Permutation::remove_batch");
+        removed_orig
+    }
 }
 
 impl Audit for Permutation {
@@ -274,6 +351,60 @@ mod tests {
         // Round-trip still works.
         let s = p.apply_sort(&pts);
         assert_eq!(p.to_original(&s), pts);
+    }
+
+    /// Incremental remove matches the argsort of the compacted point set.
+    #[test]
+    fn remove_matches_fresh_sort() {
+        let mut pts = vec![3.0, -1.0, 2.0, 0.5, 1.5, -2.0, 4.0, 0.0];
+        let mut p = Permutation::sorting(&pts);
+        for sorted_pos in [0usize, 5, 2, 4] {
+            let o = p.remove(sorted_pos);
+            let sorted = {
+                let mut s = pts.clone();
+                s.sort_by(f64::total_cmp);
+                s
+            };
+            assert_eq!(pts[o], sorted[sorted_pos], "removed the right element");
+            pts.remove(o);
+            let fresh = Permutation::sorting(&pts);
+            for q in 0..pts.len() {
+                assert_eq!(p.sorted_pos(q), fresh.sorted_pos(q), "pos={sorted_pos} o={q}");
+                assert_eq!(p.orig(p.sorted_pos(q)), q);
+            }
+        }
+    }
+
+    /// `remove_batch` equals the corresponding sequence of single removes
+    /// (walked in descending order), and reports the same original indices.
+    #[test]
+    fn remove_batch_matches_single_removes() {
+        let pts = vec![3.0, -1.0, 2.0, 0.5, 1.5, -2.0, 4.0, 0.0, 2.5];
+        for positions in [vec![0usize, 1], vec![2, 5, 8], vec![7, 8], vec![4]] {
+            let mut batched = Permutation::sorting(&pts);
+            let origs = batched.remove_batch(&positions);
+            let mut seq = Permutation::sorting(&pts);
+            let mut seq_origs = vec![0usize; positions.len()];
+            for (t, &s) in positions.iter().enumerate().rev() {
+                seq_origs[t] = seq.remove(s);
+            }
+            // Descending single removes report post-compaction original
+            // indices for later positions; map them back for comparison.
+            for t in 0..positions.len() {
+                let mut o = seq_origs[t];
+                for &later in &seq_origs[t + 1..] {
+                    if later <= o {
+                        o += 1;
+                    }
+                }
+                assert_eq!(origs[t], o, "{positions:?} t={t}");
+            }
+            assert_eq!(batched.len(), seq.len());
+            for q in 0..batched.len() {
+                assert_eq!(batched.sorted_pos(q), seq.sorted_pos(q), "{positions:?}");
+            }
+            assert!(batched.audit().is_ok());
+        }
     }
 
     /// Breaking the bijection is pinpointed at the first bad sorted slot.

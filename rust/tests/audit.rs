@@ -1,10 +1,11 @@
 //! Cross-op structural-audit soak (ISSUE 6, satellite 3): a ~1k-step
-//! random interleaving of `observe`, `observe_batch`, `predict` and
-//! periodic `optimize_hypers`, running the full structure-tree audit after
-//! every step. The per-structure corruption tests (in each module) prove
-//! the audits *can* fire; this test proves the real mutation paths never
-//! make them fire — across buffered → activated → incrementally-patched →
-//! re-trained lifecycles and every interleaving in between.
+//! random interleaving of `observe`, `observe_batch`, `forget`,
+//! `forget_batch`, `predict` and periodic `optimize_hypers`, running the
+//! full structure-tree audit after every step. The per-structure corruption
+//! tests (in each module) prove the audits *can* fire; this test proves the
+//! real mutation paths never make them fire — across buffered → activated →
+//! incrementally-patched → downdated → re-trained lifecycles and every
+//! interleaving in between.
 //!
 //! Runs identically with and without `--features strict-invariants`; with
 //! the feature on, the in-op `enforce` hooks audit a second time from
@@ -36,12 +37,12 @@ fn random_interleaving_keeps_every_invariant() {
             let _ = gp.optimize_hypers(&tcfg);
         } else {
             let roll = rng.uniform_in(0.0, 1.0);
-            if roll < 0.65 {
+            if roll < 0.55 {
                 // Single-point incremental insert (window patch / resweep).
                 let x = vec![rng.uniform_in(-2.0, 3.0), rng.uniform_in(-2.0, 3.0)];
                 let y = target(&x) + 0.05 * rng.normal();
                 gp.observe(&x, y);
-            } else if roll < 0.95 {
+            } else if roll < 0.80 {
                 // Batched insert, 1..=4 points (buffered / incremental /
                 // refit path chosen by the model).
                 let k = 1 + (rng.uniform_in(0.0, 4.0) as usize).min(3);
@@ -51,6 +52,20 @@ fn random_interleaving_keeps_every_invariant() {
                 let ys: Vec<f64> =
                     xs.iter().map(|x| target(x) + 0.05 * rng.normal()).collect();
                 let _ = gp.observe_batch(&xs, &ys);
+            } else if roll < 0.92 && gp.n() > gp.min_points() + 4 {
+                // Sliding-window downdate: forget a random row, or a small
+                // batch of distinct rows — the audit runs right after, same
+                // as every other op (sizing keeps the model active so both
+                // the incremental removal and the cache-remap paths fire).
+                if it % 2 == 0 {
+                    gp.forget_index(rng.below(gp.n()));
+                } else {
+                    let mut idx: Vec<usize> =
+                        (0..3).map(|_| rng.below(gp.n())).collect();
+                    idx.sort_unstable();
+                    idx.dedup();
+                    gp.forget_batch(&idx);
+                }
             } else if gp.n() >= gp.min_points() {
                 // Read op (active models only — predict requires the
                 // factorizations): exercises the M̃ cache (column

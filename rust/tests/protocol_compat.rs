@@ -196,6 +196,8 @@ fn response_stats_with_pool_fields() {
             memmove_bytes: 4096,
             chunks_copied: 6,
             chunks_shared: 44,
+            window_evictions: 12,
+            window_occupancy: 1000,
         },
         Some(2.0),
         r#"{"id":2,"ok":true,"n":1000,"d":4,"omegas":[1,0.5,2,1.5],
@@ -203,7 +205,93 @@ fn response_stats_with_pool_fields() {
             "factor_patches":90,"factor_resweeps":2,
             "cache_truncations":1,"fallback_rebuilds":0,
             "pool_workers":8,"pool_busy":3,"pool_queue_depth":5,"pool_steals":17,
-            "memmove_bytes":4096,"chunks_copied":6,"chunks_shared":44}"#,
+            "memmove_bytes":4096,"chunks_copied":6,"chunks_shared":44,
+            "window_evictions":12,"window_occupancy":1000}"#,
+    );
+}
+
+/// Protocol v2 surface (sliding-window forgetting). A missing `v` is the
+/// legacy v1 wire format and must stay parseable forever; the v2 ops parse
+/// only under a declared `v: 2`; versions the server does not speak are
+/// rejected with a stable, structured error.
+#[test]
+fn request_v2_forget_and_rolling_window() {
+    let (r, id) =
+        Request::parse(r#"{"op":"forget","model":2,"x":[0.5,-1.25],"v":2,"id":8}"#).unwrap();
+    assert_eq!(id, Some(8.0));
+    assert_eq!(r, Request::Forget { model: 2, x: vec![0.5, -1.25] });
+
+    let (r, _) =
+        Request::parse(r#"{"op":"forget_batch","model":9,"xs":[[1,2],[3,4]],"v":2}"#).unwrap();
+    assert_eq!(
+        r,
+        Request::ForgetBatch { model: 9, xs: vec![vec![1.0, 2.0], vec![3.0, 4.0]] }
+    );
+
+    let (r, _) = Request::parse(
+        r#"{"op":"rolling_window","model":5,"max_n":512,"max_age":100,"v":2}"#,
+    )
+    .unwrap();
+    assert_eq!(r, Request::RollingWindow { model: 5, max_n: 512, max_age: Some(100) });
+    let (r, _) =
+        Request::parse(r#"{"op":"rolling_window","model":5,"max_n":0,"v":2}"#).unwrap();
+    assert_eq!(
+        r,
+        Request::RollingWindow { model: 5, max_n: 0, max_age: None },
+        "max_n=0 disables rolling mode; max_age defaults to None"
+    );
+
+    assert!(Request::parse(r#"{"op":"forget","model":2,"v":2}"#).is_err(), "missing x");
+    assert!(
+        Request::parse(r#"{"op":"forget_batch","model":2,"v":2}"#).is_err(),
+        "missing xs"
+    );
+    assert!(
+        Request::parse(r#"{"op":"rolling_window","model":2,"v":2}"#).is_err(),
+        "missing max_n"
+    );
+}
+
+/// Version gating is part of the wire contract: the rejection *text* is
+/// pinned too, because clients branch on it to decide whether to downgrade.
+#[test]
+fn request_version_gating_is_stable() {
+    // v1 ops parse identically with no `v`, `v: 1`, and `v: 2`.
+    for frame in [
+        r#"{"op":"stats","model":1}"#,
+        r#"{"op":"stats","model":1,"v":1}"#,
+        r#"{"op":"stats","model":1,"v":2}"#,
+    ] {
+        let (r, _) = Request::parse(frame).unwrap();
+        assert_eq!(r, Request::Stats { model: 1 });
+    }
+    // A v2 op on a legacy (missing or explicit v1) frame is refused.
+    let e = Request::parse(r#"{"op":"forget","model":1,"x":[1.0]}"#).unwrap_err();
+    assert_eq!(e, "op 'forget' requires protocol v2 (request declared v1)");
+    let e = Request::parse(r#"{"op":"forget_batch","model":1,"xs":[[1]],"v":1}"#).unwrap_err();
+    assert_eq!(e, "op 'forget_batch' requires protocol v2 (request declared v1)");
+    // Versions above the server's ceiling fail loudly, naming the ceiling.
+    let e = Request::parse(r#"{"op":"stats","model":1,"v":3}"#).unwrap_err();
+    assert_eq!(e, "unsupported protocol version 3 (server speaks <= 2)");
+    // Malformed versions are rejected before any op dispatch.
+    assert!(Request::parse(r#"{"op":"stats","model":1,"v":0}"#).is_err());
+    assert!(Request::parse(r#"{"op":"stats","model":1,"v":1.5}"#).is_err());
+    assert!(Request::parse(r#"{"op":"stats","model":1,"v":"two"}"#).is_err());
+}
+
+/// The downdate mirror of `Observed`: post-forget size, how many
+/// observations were actually released, and the factor patch/re-sweep delta.
+#[test]
+fn response_forgotten() {
+    pin_response(
+        Response::Forgotten { n: 40, removed: 1, factor_patched: 4, factor_resweep: 0 },
+        Some(5.0),
+        r#"{"id":5,"ok":true,"n":40,"removed":1,"factor_patched":4,"factor_resweep":0}"#,
+    );
+    pin_response(
+        Response::Forgotten { n: 40, removed: 0, factor_patched: 0, factor_resweep: 0 },
+        None,
+        r#"{"ok":true,"n":40,"removed":0,"factor_patched":0,"factor_resweep":0}"#,
     );
 }
 

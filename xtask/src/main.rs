@@ -35,6 +35,14 @@
 //!    the three lines above stating why the clone is a reference bump or
 //!    not band data. `.to_flat()` — the flat-materialization escape hatch —
 //!    needs the same annotation anywhere in non-test `rust/src` code.
+//! 7. **mutation-plumbing** — the dim-level splice surface
+//!    (`.insert_point(s)` / `.remove_point(s)`) is `FitState::apply`'s
+//!    implementation detail: calling it from library code outside the
+//!    factor stack (`linalg/`, `kernels/kp.rs`, `gp/dim.rs`,
+//!    `gp/fit_state.rs`) bypasses the unified `Mutation` path — its
+//!    strict-invariant audits, counters and cache remaps. Intentional
+//!    exceptions are annotated `// lint: mutation-ok (<why>)` on the line
+//!    or within the three lines above.
 //!
 //! The scanners are deliberately string/line-based, not syn-based: they are
 //! auditable in a glance, dependency-free, and err toward *not* flagging
@@ -459,6 +467,51 @@ fn scan_cow(name: &str, src: &str, band_module: bool) -> Vec<String> {
     out
 }
 
+/// Lint 7: dim-level splice calls outside the factor stack. Mutations
+/// enter through `FitState::apply` (the unified `Mutation` path); a direct
+/// `insert_point(s)`/`remove_point(s)` call anywhere else skips its
+/// audits, counters and M̃-cache remaps. Suppression:
+/// `// lint: mutation-ok (<why>)` on the line or within the three lines
+/// above.
+fn scan_mutation_plumbing(name: &str, src: &str) -> Vec<String> {
+    let lines: Vec<&str> = src.lines().collect();
+    let mask = test_region_mask(&lines);
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        let code = code_only(line);
+        let hit = [".insert_point(", ".insert_points(", ".remove_point(", ".remove_points("]
+            .iter()
+            .any(|p| code.contains(p));
+        if !hit {
+            continue;
+        }
+        let suppressed =
+            (i.saturating_sub(3)..=i).any(|k| lines[k].contains("lint: mutation-ok"));
+        if !suppressed {
+            out.push(format!(
+                "{name}:{}: dim-level splice call outside the factor stack — \
+                 route the mutation through `FitState::apply` so audits, \
+                 counters and cache remaps fire (or annotate \
+                 `// lint: mutation-ok (<why>)`)",
+                i + 1
+            ));
+        }
+    }
+    out
+}
+
+/// The factor-stack modules lint 7 exempts (`linalg/` is exempted by path
+/// prefix): the splice surface's own implementation and its one sanctioned
+/// caller, `FitState`.
+const MUTATION_EXEMPT: &[&str] = &[
+    "rust/src/gp/dim.rs",
+    "rust/src/gp/fit_state.rs",
+    "rust/src/kernels/kp.rs",
+];
+
 /// The band-storage modules lint 6 polices (`linalg/chunks.rs` itself is
 /// exempt: it *implements* the COW mechanics).
 const BAND_MODULES: &[&str] = &[
@@ -501,8 +554,8 @@ fn lint() -> ExitCode {
         }
     }
 
-    // 3 + 4 + 6. Library sources: hashmap-order + feature-gate hygiene +
-    // COW band-storage discipline.
+    // 3 + 4 + 6 + 7. Library sources: hashmap-order + feature-gate
+    // hygiene + COW band-storage discipline + mutation plumbing.
     let mut src_files = Vec::new();
     rust_files(&rust.join("src"), &mut src_files);
     let mut lib_sources: Vec<(String, String)> = Vec::new();
@@ -512,6 +565,11 @@ fn lint() -> ExitCode {
         if name != "rust/src/linalg/chunks.rs" {
             let band = BAND_MODULES.contains(&name.as_str());
             findings.extend(scan_cow(&name, &src, band));
+        }
+        let exempt =
+            name.starts_with("rust/src/linalg/") || MUTATION_EXEMPT.contains(&name.as_str());
+        if !exempt {
+            findings.extend(scan_mutation_plumbing(&name, &src));
         }
         lib_sources.push((name, src));
     }
@@ -676,6 +734,24 @@ mod tests {
         // …while clone/copy_within are not.
         let clone_elsewhere = "fn f(v: &Vec<f64>) -> Vec<f64> {\n    v.clone()\n}\n";
         assert!(scan_cow("rust/src/gp/posterior.rs", clone_elsewhere, false).is_empty());
+    }
+
+    #[test]
+    fn mutation_plumbing_scanner_polices_splice_calls() {
+        let bad = "fn hack(d: &mut DimFactor) {\n    let _ = d.insert_point(0.5);\n    let _ = d.remove_points(&[1, 2]);\n}\n";
+        let f = scan_mutation_plumbing("rust/src/gp/model.rs", bad);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f[0].starts_with("rust/src/gp/model.rs:2:"), "{}", f[0]);
+        assert!(f[0].contains("FitState::apply"), "{}", f[0]);
+        let annotated = "fn surgical(d: &mut DimFactor) {\n    // lint: mutation-ok (fallback rebuild; audited by the caller)\n    let _ = d.remove_point(3);\n}\n";
+        assert!(scan_mutation_plumbing("rust/src/gp/model.rs", annotated).is_empty());
+        let in_test = "#[cfg(test)]\nmod tests {\n    fn t(d: &mut DimFactor) { let _ = d.insert_point(0.5); }\n}\n";
+        assert!(scan_mutation_plumbing("rust/src/gp/model.rs", in_test).is_empty());
+        let prose = "/// Callers never use .insert_point( directly.\nfn f() {}\n";
+        assert!(
+            scan_mutation_plumbing("rust/src/gp/model.rs", prose).is_empty(),
+            "comments stripped"
+        );
     }
 
     #[test]
