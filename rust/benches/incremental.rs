@@ -60,6 +60,14 @@
 //! from scratch each tick). The `rolling` JSON section carries both times;
 //! the gate requires the tick ≥ 5× faster than evict-by-refit at n = 10k.
 //!
+//! An eighth comparison (ISSUE 9) prices the **durability tax**: the same
+//! single-point observe stream at n = 10k driven through a 1-worker
+//! [`Scheduler`] twice — plain, and with the mutation journal enabled at
+//! `FsyncPolicy::EveryK(64)` (the recommended production setting). The
+//! `journal` JSON section carries both per-observe times plus the appended
+//! byte volume; the gate requires journaled observe throughput ≥ 90% of
+//! plain (the append + amortized-fsync overhead must cost ≤ 10%).
+//!
 //! `--smoke` halves the per-point repetitions (the size list already stops
 //! at the gated n = 10k without `--full`); `--json PATH` writes the
 //! measurements as one JSON object (the CI `bench-smoke` job uploads it as
@@ -68,14 +76,14 @@
 //! refit-per-point, `observe_batch(m=64)` beats 64 sequential observes,
 //! *and* the append-path patched factor update beats the full re-sweep —
 //! all by ≥ 5× (plus the pool gate when `--multi-model` ran, the
-//! rolling-tick gate when `--rolling` ran, and the two storage gates
-//! above, always). The JSON is written *before* the gate
-//! verdict so a failing run still uploads its numbers.
+//! rolling-tick gate when `--rolling` ran, and the two storage gates and
+//! the journal-overhead gate above, always). The JSON is written *before*
+//! the gate verdict so a failing run still uploads its numbers.
 
 use std::time::Instant;
 
 use addgp::coordinator::protocol::Response;
-use addgp::coordinator::{Command, EngineConfig, Scheduler};
+use addgp::coordinator::{Command, EngineConfig, FsyncPolicy, JournalConfig, Scheduler};
 use addgp::gp::model::{AdditiveGP, AdditiveGpConfig, BatchPath};
 use addgp::gp::DimFactor;
 use addgp::kernels::matern::Nu;
@@ -96,6 +104,12 @@ const POOL_GATE_SPEEDUP: f64 = 3.0;
 const STORAGE_SIZES: [usize; 2] = [10_000, 100_000];
 const STORAGE_GATE_N: usize = 100_000;
 const STORAGE_OBS_K: usize = 32;
+/// Journal-overhead bench shape (ISSUE 9): observes sampled per leg, the
+/// amortized-fsync cadence under test, and the gate floor — journaled
+/// observe throughput must stay ≥ 90% of plain.
+const JOURNAL_OBS_K: usize = 256;
+const JOURNAL_FSYNC_EVERY: u32 = 64;
+const JOURNAL_GATE_RATIO: f64 = 0.90;
 
 fn data(n: usize, d: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
     let mut rng = Rng::new(seed);
@@ -664,6 +678,96 @@ fn measure_storage(n: usize) -> StorageBench {
     StorageBench { n, snap_build_s, deep_copy_s, deep_copy_bytes, memmove_per_obs, band_row_bytes }
 }
 
+struct JournalBench {
+    n: usize,
+    plain_s_per_obs: f64,
+    journaled_s_per_obs: f64,
+    appends: u64,
+    bytes: u64,
+}
+
+impl JournalBench {
+    /// Journaled throughput as a fraction of plain — 1.0 means free.
+    fn throughput_ratio(&self) -> f64 {
+        self.plain_s_per_obs / self.journaled_s_per_obs.max(1e-12)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("observes", Json::Num(JOURNAL_OBS_K as f64)),
+            ("fsync_every", Json::Num(JOURNAL_FSYNC_EVERY as f64)),
+            ("plain_ms_per_obs", Json::Num(self.plain_s_per_obs * 1e3)),
+            ("journaled_ms_per_obs", Json::Num(self.journaled_s_per_obs * 1e3)),
+            (
+                "overhead_us_per_obs",
+                Json::Num((self.journaled_s_per_obs - self.plain_s_per_obs) * 1e6),
+            ),
+            ("journal_appends", Json::Num(self.appends as f64)),
+            ("journal_bytes", Json::Num(self.bytes as f64)),
+            ("throughput_ratio", Json::Num(self.throughput_ratio())),
+        ])
+    }
+}
+
+/// ISSUE 9: the durability tax. One model at size `n` absorbs
+/// `JOURNAL_OBS_K` single-point observes through a 1-worker scheduler,
+/// once plain and once with the mutation journal at
+/// `FsyncPolicy::EveryK(JOURNAL_FSYNC_EVERY)` — identical engine work, so
+/// the difference is exactly the append + amortized-fsync cost.
+fn measure_journal(n: usize, d: usize) -> JournalBench {
+    let k = JOURNAL_OBS_K;
+    let (x, y) = data(n + k, d, (n as u64) ^ 0x70A1);
+
+    let drive = |sched: &Scheduler| -> (u64, f64) {
+        let model = sched.create_model(pool_cfg(d));
+        match pool_call(sched, model, |reply| Command::ObserveBatch {
+            xs: x[..n].to_vec(),
+            ys: y[..n].to_vec(),
+            reply,
+        }) {
+            Response::BatchObserved { n: got, .. } => assert_eq!(got, n),
+            other => panic!("journal-bench setup failed: {other:?}"),
+        }
+        let t0 = Instant::now();
+        for i in 0..k {
+            match pool_call(sched, model, |reply| Command::Observe {
+                x: x[n + i].clone(),
+                y: y[n + i],
+                reply,
+            }) {
+                Response::Observed { .. } => {}
+                other => panic!("journal-bench observe failed: {other:?}"),
+            }
+        }
+        (model, t0.elapsed().as_secs_f64() / k as f64)
+    };
+
+    let plain = Scheduler::new(1);
+    let (_, plain_s_per_obs) = drive(&plain);
+    plain.shutdown();
+
+    let dir = std::env::temp_dir()
+        .join(format!("addgp-bench-journal-{}-{n}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut jcfg = JournalConfig::new(&dir);
+    jcfg.fsync = FsyncPolicy::EveryK(JOURNAL_FSYNC_EVERY);
+    let journaled = Scheduler::with_journal(1, jcfg);
+    let (jm, journaled_s_per_obs) = drive(&journaled);
+    let (appends, bytes) = match pool_call(&journaled, jm, |reply| Command::Stats { reply }) {
+        Response::Stats { journal_appends, journal_bytes, degraded, .. } => {
+            assert!(!degraded, "journal must not degrade during the bench");
+            (journal_appends, journal_bytes)
+        }
+        other => panic!("journal-bench stats failed: {other:?}"),
+    };
+    assert_eq!(appends, 1 + k as u64, "base batch + every observe journaled");
+    journaled.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    JournalBench { n, plain_s_per_obs, journaled_s_per_obs, appends, bytes }
+}
+
 /// Batch-size sweep at fixed `n`: where does one batched insert stop
 /// beating one refit? (Informs the `m ≤ n` crossover in
 /// `AdditiveGP::observe_batch`; see DESIGN.md §FitState.)
@@ -692,6 +796,14 @@ fn main() {
         !cfg!(feature = "strict-invariants"),
         "benches must run without strict-invariants: per-mutation audits \
          would dominate every measurement"
+    );
+    // Same argument for the seeded fault probes: even unarmed, a compiled-in
+    // probe branch per mutation would taint the journal-overhead numbers —
+    // and the release binary this bench stands in for never carries them.
+    assert!(
+        !cfg!(feature = "fault-inject"),
+        "benches must run without fault-inject: the durability-tax \
+         measurement prices the journal, not the chaos probes"
     );
     let args: Vec<String> = std::env::args().skip(1).collect();
     let has = |f: &str| args.iter().any(|a| a == f);
@@ -856,6 +968,25 @@ fn main() {
         );
     }
 
+    // ISSUE 9: the durability tax — journaled vs plain observe stream at
+    // the gate size, fsync amortized every JOURNAL_FSYNC_EVERY appends.
+    let journal = measure_journal(GATE_N, d);
+    println!(
+        "\n# mutation journal: plain vs journaled observe (n = {GATE_N}, \
+         fsync every {JOURNAL_FSYNC_EVERY})\n"
+    );
+    println!(
+        "{:>16}  {:>18}  {:>16}  {:>12}",
+        "plain ms/obs", "journaled ms/obs", "overhead µs/obs", "throughput"
+    );
+    println!(
+        "{:>16.3}  {:>18.3}  {:>16.1}  {:>11.3}×",
+        journal.plain_s_per_obs * 1e3,
+        journal.journaled_s_per_obs * 1e3,
+        (journal.journaled_s_per_obs - journal.plain_s_per_obs) * 1e6,
+        journal.throughput_ratio()
+    );
+
     // Gates are evaluated at n = 10k (present in every mode's size list).
     let mut gates: Vec<Gate> = results
         .iter()
@@ -928,6 +1059,13 @@ fn main() {
             threshold: 1.0,
         });
     }
+    // ISSUE 9 gate: the journal at fsync=every-64 may cost at most 10% of
+    // observe throughput (`value` is journaled/plain throughput, ≥ 0.90).
+    gates.push(Gate {
+        name: "journaled_observe_throughput_at_10k",
+        value: journal.throughput_ratio(),
+        threshold: JOURNAL_GATE_RATIO,
+    });
 
     if let Some(path) = json_path {
         let json = Json::obj(vec![
@@ -956,6 +1094,7 @@ fn main() {
                 "memmove",
                 Json::Arr(storage.iter().map(StorageBench::to_memmove_json).collect()),
             ),
+            ("journal", journal.to_json()),
             ("gates", Json::Arr(gates.iter().map(Gate::to_json).collect())),
         ]);
         std::fs::write(&path, format!("{json}\n")).expect("write bench json");

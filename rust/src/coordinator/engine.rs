@@ -13,9 +13,15 @@ use crate::bo::acquisition::Acquisition;
 use crate::coordinator::protocol::Response;
 use crate::gp::fit_state::PosteriorSnapshot;
 use crate::gp::model::{AdditiveGP, AdditiveGpConfig};
+use crate::gp::persist;
 use crate::gp::train::TrainCfg;
 use crate::kernels::matern::Nu;
 use crate::runtime::{WindowBatch, WindowExecutable};
+use crate::util::codec::{ByteReader, ByteWriter};
+
+/// Version byte leading every [`ModelEngine::encode_state`] payload, bumped
+/// on any layout change so a stale checkpoint errors instead of misparsing.
+const STATE_VERSION: u8 = 1;
 
 /// Engine construction options.
 #[derive(Clone, Debug)]
@@ -44,6 +50,38 @@ impl Default for EngineConfig {
             use_pjrt: true,
             seed: 7,
         }
+    }
+}
+
+impl EngineConfig {
+    /// Append the config to a checkpoint / journal record (bit-exact; the
+    /// `f64` fields travel as raw IEEE bits).
+    pub fn encode(&self, w: &mut ByteWriter) {
+        w.put_usize(self.d);
+        w.put_u8(self.nu.two_nu() as u8);
+        w.put_f64(self.omega0);
+        w.put_f64(self.sigma2);
+        w.put_f64(self.lo);
+        w.put_f64(self.hi);
+        w.put_bool(self.use_pjrt);
+        w.put_u64(self.seed);
+    }
+
+    /// Inverse of [`Self::encode`]; errors on truncated or invalid bytes.
+    pub fn decode(r: &mut ByteReader<'_>) -> Result<Self, String> {
+        let d = r.get_usize("cfg.d")?;
+        let two_nu = r.get_u8("cfg.nu")? as usize;
+        let nu = Nu::from_two_nu(two_nu).ok_or(format!("bad cfg 2ν = {two_nu}"))?;
+        Ok(EngineConfig {
+            d,
+            nu,
+            omega0: r.get_f64("cfg.omega0")?,
+            sigma2: r.get_f64("cfg.sigma2")?,
+            lo: r.get_f64("cfg.lo")?,
+            hi: r.get_f64("cfg.hi")?,
+            use_pjrt: r.get_bool("cfg.use_pjrt")?,
+            seed: r.get_u64("cfg.seed")?,
+        })
     }
 }
 
@@ -509,6 +547,106 @@ impl ModelEngine {
     /// Direct (in-process, non-threaded) access for tests and examples.
     pub fn gp_mut(&mut self) -> &mut AdditiveGP {
         &mut self.gp
+    }
+
+    /// Serialize the engine bit-exactly — config, arrival clock, counters
+    /// and the full trained model ([`persist::encode_gp`]). This is the
+    /// journal's checkpoint payload: `decode_state(encode_state())` is an
+    /// engine whose every future command follows the same bit trajectory
+    /// (the chaos suite's recovery property). PJRT executables are *not*
+    /// state — they live in worker-local registries and are recompiled on
+    /// demand after recovery.
+    pub fn encode_state(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u8(STATE_VERSION);
+        self.cfg.encode(&mut w);
+        w.put_u64(self.pjrt_batches);
+        w.put_u64(self.native_queries);
+        match self.rolling {
+            Some(rc) => {
+                w.put_bool(true);
+                w.put_usize(rc.max_n);
+                match rc.max_age {
+                    Some(a) => {
+                        w.put_bool(true);
+                        w.put_u64(a);
+                    }
+                    None => w.put_bool(false),
+                }
+            }
+            None => w.put_bool(false),
+        }
+        w.put_usize(self.arrival.len());
+        for &t in &self.arrival {
+            w.put_u64(t);
+        }
+        w.put_u64(self.ingest_ticks);
+        w.put_u64(self.window_evictions);
+        persist::encode_gp(&self.gp, &mut w);
+        w.into_bytes()
+    }
+
+    /// Rebuild an engine from [`Self::encode_state`] bytes. Errors (never
+    /// panics) on any truncated, corrupt or version-skewed payload, so a
+    /// damaged checkpoint degrades into a recovery error the scheduler can
+    /// report.
+    pub fn decode_state(bytes: &[u8]) -> Result<ModelEngine, String> {
+        let mut r = ByteReader::new(bytes);
+        let ver = r.get_u8("state version")?;
+        if ver != STATE_VERSION {
+            return Err(format!("checkpoint state version {ver}, expected {STATE_VERSION}"));
+        }
+        let cfg = EngineConfig::decode(&mut r)?;
+        let pjrt_batches = r.get_u64("pjrt_batches")?;
+        let native_queries = r.get_u64("native_queries")?;
+        let rolling = if r.get_bool("rolling present")? {
+            let max_n = r.get_usize("rolling.max_n")?;
+            let max_age = if r.get_bool("rolling.max_age present")? {
+                Some(r.get_u64("rolling.max_age")?)
+            } else {
+                None
+            };
+            Some(RollingCfg { max_n, max_age })
+        } else {
+            None
+        };
+        let n_arrival = r.get_usize("arrival len")?;
+        if n_arrival > r.remaining() / 8 {
+            return Err(format!("claimed {n_arrival} arrival ticks exceed remaining bytes"));
+        }
+        let mut arrival = Vec::with_capacity(n_arrival);
+        for _ in 0..n_arrival {
+            arrival.push(r.get_u64("arrival tick")?);
+        }
+        let ingest_ticks = r.get_u64("ingest_ticks")?;
+        let window_evictions = r.get_u64("window_evictions")?;
+        // Same config derivation as `ModelEngine::new`, so the checkpoint
+        // can never disagree with the declared engine shape.
+        let mut gpcfg = AdditiveGpConfig::default();
+        gpcfg.nu = cfg.nu;
+        gpcfg.omega0 = cfg.omega0;
+        gpcfg.sigma2_y = cfg.sigma2;
+        let gp = persist::decode_gp(&mut r, gpcfg, cfg.d)?;
+        if !r.is_done() {
+            return Err(format!("{} trailing bytes after checkpoint payload", r.remaining()));
+        }
+        if arrival.len() != gp.n() {
+            return Err(format!(
+                "arrival clock carries {} ticks for {} observations",
+                arrival.len(),
+                gp.n()
+            ));
+        }
+        Ok(ModelEngine {
+            cfg,
+            gp,
+            pjrt_batches,
+            native_queries,
+            rolling,
+            arrival,
+            ingest_ticks,
+            window_evictions,
+        })
     }
 
     /// In-process predict used by integration tests (native path; pass an

@@ -108,6 +108,15 @@ impl ModelMetrics {
 pub struct ServerMetrics {
     pub requests: AtomicU64,
     pub errors: AtomicU64,
+    /// Peers that vanished mid-request: the reply was computed but could
+    /// not be written back (or the line arrived torn at EOF). Each one also
+    /// frees its reader thread — pinned by `tests/coordinator_e2e.rs`.
+    pub client_disconnects: AtomicU64,
+    /// Requests whose `deadline_ms` budget expired before the scheduler
+    /// replied (the reply is dropped when it eventually arrives).
+    pub deadline_timeouts: AtomicU64,
+    /// Requests refused at the door by queue-depth load shedding.
+    pub shed_requests: AtomicU64,
     pub predict_points: AtomicU64,
     /// Points ingested through `observe` + `observe_batch`.
     pub observe_points: AtomicU64,
@@ -163,6 +172,18 @@ impl ServerMetrics {
 
     pub fn inc_errors(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_client_disconnects(&self) {
+        self.client_disconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_deadline_timeouts(&self) {
+        self.deadline_timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_shed_requests(&self) {
+        self.shed_requests.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn add_predict_points(&self, n: usize) {
@@ -237,7 +258,8 @@ impl ServerMetrics {
 
     pub fn report(&self) -> String {
         let mut out = format!(
-            "requests={} errors={} predict_points={} observe_points={} \
+            "requests={} errors={} disconnects={} deadline_timeouts={} shed={} \
+             predict_points={} observe_points={} \
              forgotten_points={} window_evictions={} \
              batches(incremental={} refit={} buffered={}) \
              factor(patched={} resweep={}) \
@@ -245,6 +267,9 @@ impl ServerMetrics {
              predict: {} | suggest: {} | ingest: {}",
             self.requests.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
+            self.client_disconnects.load(Ordering::Relaxed),
+            self.deadline_timeouts.load(Ordering::Relaxed),
+            self.shed_requests.load(Ordering::Relaxed),
             self.predict_points.load(Ordering::Relaxed),
             self.observe_points.load(Ordering::Relaxed),
             self.points_forgotten.load(Ordering::Relaxed),
@@ -332,9 +357,16 @@ mod tests {
         m.record_storage_stats(9, 1500, 5, 26);
         m.record_storage_stats(4, 100, 1, 2);
         m.record_storage_stats(4, 50, 0, 1);
+        m.inc_client_disconnects();
+        m.inc_deadline_timeouts();
+        m.inc_deadline_timeouts();
+        m.inc_shed_requests();
         let r = m.report();
         assert!(r.contains("requests=2"));
         assert!(r.contains("errors=1"));
+        assert!(r.contains("disconnects=1"), "{r}");
+        assert!(r.contains("deadline_timeouts=2"), "{r}");
+        assert!(r.contains("shed=1"), "{r}");
         assert!(r.contains("predict_points=64"));
         assert!(r.contains("observe_points=128"));
         assert!(r.contains("incremental=2"));

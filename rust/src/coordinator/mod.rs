@@ -13,6 +13,9 @@
 //!   requests routed into the scheduler; deterministic shutdown joins
 //!   every reader and every pool worker.
 //! * [`metrics`] — pool-wide and per-model latency histograms + counters.
+//! * [`journal`] — per-model durable mutation log + checkpoint compaction;
+//!   `Scheduler::recover` rebuilds a bit-identical engine fleet from it
+//!   after a crash (DESIGN.md §Durability).
 //!
 //! The offline image has no tokio/rayon, so concurrency is std threads,
 //! mutexes and mpsc — the architecture (registry → per-model queues →
@@ -20,14 +23,16 @@
 //! use.
 
 pub mod engine;
+pub mod journal;
 pub mod metrics;
 pub mod protocol;
 pub mod scheduler;
 pub mod server;
 
 pub use engine::{Command, EngineConfig, ModelEngine};
+pub use journal::{FsyncPolicy, JournalConfig, MutationOp};
 pub use protocol::{Request, Response};
-pub use scheduler::Scheduler;
+pub use scheduler::{RecoveryReport, Scheduler};
 pub use server::{Server, ShutdownStats};
 
 /// Lock a mutex, recovering the guard from a poisoned lock. The serving

@@ -96,7 +96,27 @@ pub enum Request {
 impl Request {
     /// Parse one request line. Returns `(request, client id echo)`.
     pub fn parse(line: &str) -> Result<(Request, Option<f64>), String> {
+        let (req, id, _) = Request::parse_meta(line)?;
+        Ok((req, id))
+    }
+
+    /// Parse one request line, also extracting the optional per-request
+    /// `deadline_ms` budget (additive field, no version bump: old servers
+    /// ignore it, old clients never send it). Returns
+    /// `(request, client id echo, deadline_ms)`. A non-positive or
+    /// non-integral `deadline_ms` is a structured parse error rather than a
+    /// silently unbounded request.
+    pub fn parse_meta(line: &str) -> Result<(Request, Option<f64>, Option<u64>), String> {
         let v = Json::parse(line)?;
+        let deadline_ms = match v.get("deadline_ms") {
+            None => None,
+            Some(x) => Some(
+                x.as_f64()
+                    .filter(|f| f.fract() == 0.0 && *f >= 1.0)
+                    .map(|f| f as u64)
+                    .ok_or("bad deadline_ms (want positive integer milliseconds)")?,
+            ),
+        };
         let id = v.get("id").and_then(|x| x.as_f64());
         let op = v.get("op").and_then(|x| x.as_str()).ok_or("missing op")?;
         // Explicit protocol version; a missing `v` is the legacy v1 wire
@@ -182,7 +202,7 @@ impl Request {
             "shutdown" => Request::Shutdown,
             other => return Err(format!("unknown op '{other}'")),
         };
-        Ok((req, id))
+        Ok((req, id, deadline_ms))
     }
 }
 
@@ -289,6 +309,26 @@ pub enum Response {
         /// models).
         window_evictions: u64,
         window_occupancy: u64,
+        /// Fault-tolerance observability (DESIGN.md §Durability). How many
+        /// times this model's engine panicked and was resurrected in place
+        /// from its mutation journal instead of being quarantined.
+        recoveries: u64,
+        /// True once journaling for this model has been disabled after an
+        /// append/checkpoint failure: the model keeps serving (graceful
+        /// degradation) but will not survive a crash beyond its last good
+        /// record, and panic resurrection is withheld.
+        degraded: bool,
+        /// Mutation records appended to this model's journal, bytes written
+        /// to it (records + checkpoints), and checkpoint compactions
+        /// performed. All zero when the scheduler runs without a journal.
+        journal_appends: u64,
+        journal_bytes: u64,
+        journal_checkpoints: u64,
+        /// PCG degradation ladder: warm-start solves that had to be retried
+        /// from a cold start, and cold retries that still failed and
+        /// escalated to a full refit.
+        solve_cold_retries: u64,
+        solve_refit_escalations: u64,
     },
 }
 
@@ -371,6 +411,13 @@ impl Response {
                 chunks_shared,
                 window_evictions,
                 window_occupancy,
+                recoveries,
+                degraded,
+                journal_appends,
+                journal_bytes,
+                journal_checkpoints,
+                solve_cold_retries,
+                solve_refit_escalations,
             } => {
                 pairs.push(("ok", Json::Bool(true)));
                 pairs.push(("n", Json::Num(*n as f64)));
@@ -393,6 +440,16 @@ impl Response {
                 pairs.push(("chunks_shared", Json::Num(*chunks_shared as f64)));
                 pairs.push(("window_evictions", Json::Num(*window_evictions as f64)));
                 pairs.push(("window_occupancy", Json::Num(*window_occupancy as f64)));
+                pairs.push(("recoveries", Json::Num(*recoveries as f64)));
+                pairs.push(("degraded", Json::Bool(*degraded)));
+                pairs.push(("journal_appends", Json::Num(*journal_appends as f64)));
+                pairs.push(("journal_bytes", Json::Num(*journal_bytes as f64)));
+                pairs.push(("journal_checkpoints", Json::Num(*journal_checkpoints as f64)));
+                pairs.push(("solve_cold_retries", Json::Num(*solve_cold_retries as f64)));
+                pairs.push((
+                    "solve_refit_escalations",
+                    Json::Num(*solve_refit_escalations as f64),
+                ));
             }
         }
         Json::obj(pairs)
@@ -480,6 +537,31 @@ mod tests {
             Request::parse(r#"{"op":"rolling_window","model":4,"v":2}"#).is_err(),
             "max_n required"
         );
+    }
+
+    #[test]
+    fn deadline_ms_parses_and_validates() {
+        // No deadline → None, on both parse paths.
+        let (_, _, dl) = Request::parse_meta(r#"{"op":"stats","model":1}"#).unwrap();
+        assert_eq!(dl, None);
+        // A positive integer deadline comes through in milliseconds.
+        let (r, id, dl) =
+            Request::parse_meta(r#"{"op":"suggest","model":2,"deadline_ms":250,"id":7}"#).unwrap();
+        assert_eq!(r, Request::Suggest { model: 2, beta: 2.0 });
+        assert_eq!(id, Some(7.0));
+        assert_eq!(dl, Some(250));
+        // Zero, negative and fractional deadlines are structured errors.
+        for bad in [
+            r#"{"op":"stats","model":1,"deadline_ms":0}"#,
+            r#"{"op":"stats","model":1,"deadline_ms":-5}"#,
+            r#"{"op":"stats","model":1,"deadline_ms":1.5}"#,
+            r#"{"op":"stats","model":1,"deadline_ms":"soon"}"#,
+        ] {
+            let e = Request::parse_meta(bad).unwrap_err();
+            assert!(e.contains("deadline_ms"), "got: {e}");
+        }
+        // `parse` ignores the field but still accepts the frame.
+        assert!(Request::parse(r#"{"op":"stats","model":1,"deadline_ms":250}"#).is_ok());
     }
 
     #[test]

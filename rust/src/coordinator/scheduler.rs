@@ -20,6 +20,17 @@
 //!   bit-identical to a read-free replay — pinned by the determinism stress
 //!   test in `tests/concurrency.rs`).
 //!
+//! **Durability & recovery** (DESIGN.md §Durability): when built
+//! [`Scheduler::with_journal`], every successful mutation is appended to the
+//! model's journal *after* it applied and before its reply, and the journal
+//! is compacted into a bit-exact checkpoint on a configurable cadence.
+//! [`Scheduler::recover`] rebuilds the whole fleet from those files after a
+//! crash. A *panicked* engine is no longer terminal: the drain job rebuilds
+//! it in place from its journal (the panicked command was never journaled,
+//! so replay lands exactly on the pre-command state), up to a bounded
+//! recovery budget. Journal I/O failures *degrade* the model — journaling
+//! stops, serving continues, `Stats` reports `degraded: true`.
+//!
 //! **PJRT affinity**: compiled `window_acq` executables are not `Send`, so
 //! each model's executable lives in a thread-local registry on the pool
 //! worker that compiled it, and that model's predicts are submitted with a
@@ -39,6 +50,7 @@ use crate::bo::acquisition::Acquisition;
 use crate::bo::run::BoEngine;
 use crate::bo::search::{search_next, SearchCfg};
 use crate::coordinator::engine::{Command, EngineConfig, ModelEngine};
+use crate::coordinator::journal::{self, JournalConfig, ModelJournal, MutationOp};
 use crate::coordinator::lock_clean;
 use crate::coordinator::protocol::Response;
 use crate::gp::fit_state::PosteriorSnapshot;
@@ -99,7 +111,30 @@ struct ModelCell {
     /// Cache stats folded in from retired snapshots.
     read_hits: AtomicU64,
     read_misses: AtomicU64,
+    /// The scheduler's journal configuration (None → durability off). Kept
+    /// per cell so a panic-resurrection can re-read the files without
+    /// reaching back into the registry.
+    jcfg: Option<JournalConfig>,
+    /// The model's open journal. Locked after the engine mutex wherever
+    /// both are held (same order as `snapshot`). Stays present after
+    /// degradation so `Stats` keeps reporting its counters; `degraded`
+    /// gates all further writes.
+    journal: Mutex<Option<ModelJournal>>,
+    /// Panic resurrections performed on this model (bounded by
+    /// [`MAX_RECOVERIES`]).
+    recoveries: AtomicU64,
+    /// Latched when a journal append/checkpoint failed (or the journal
+    /// could not be created): journaling stops, the model keeps serving,
+    /// and panic resurrection is withheld — the on-disk history is no
+    /// longer complete, so a rebuild from it would silently lose state.
+    degraded: AtomicBool,
 }
+
+/// How many times a model's engine may be rebuilt from its journal after a
+/// panic before the scheduler gives up and quarantines it — a crash-loop
+/// guard for nondeterministic panics (deterministic ones cannot recur on
+/// replay, because the panicked command is never journaled).
+const MAX_RECOVERIES: u64 = 3;
 
 struct TaggedSnapshot {
     gen: u64,
@@ -110,6 +145,24 @@ struct SchedInner {
     pool: WorkerPool,
     models: Mutex<HashMap<u64, Arc<ModelCell>>>,
     next_id: AtomicU64,
+    /// Durability configuration shared by every model (None → no journal).
+    journal: Option<JournalConfig>,
+}
+
+/// What [`Scheduler::recover`] rebuilt from a journal directory.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryReport {
+    /// Models successfully rebuilt and registered.
+    pub models: u64,
+    /// Op records replayed from journal tails (post-checkpoint).
+    pub replayed_ops: u64,
+    /// Records dropped at torn/corrupt journal tails, and the bytes
+    /// discarded with them (the files were repaired to their valid prefix).
+    pub dropped_records: u64,
+    pub dropped_bytes: u64,
+    /// Models whose files were unrecoverable; one message each in `errors`.
+    pub failed: u64,
+    pub errors: Vec<String>,
 }
 
 /// The process-wide scheduler: model registry + shared worker pool.
@@ -119,15 +172,104 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
-    /// Spawn a scheduler over `workers.max(1)` pool workers.
+    /// Spawn a scheduler over `workers.max(1)` pool workers, without
+    /// durability (mutations live only in memory).
     pub fn new(workers: usize) -> Self {
+        Scheduler::build(workers, None)
+    }
+
+    /// Spawn a scheduler whose models journal every successful mutation
+    /// under `jcfg.dir` (see [`JournalConfig`] for the fsync and compaction
+    /// knobs). Pair with [`Scheduler::recover`] on restart.
+    pub fn with_journal(workers: usize, jcfg: JournalConfig) -> Self {
+        Scheduler::build(workers, Some(jcfg))
+    }
+
+    fn build(workers: usize, jcfg: Option<JournalConfig>) -> Self {
         Scheduler {
             inner: Arc::new(SchedInner {
                 pool: WorkerPool::new(workers),
                 models: Mutex::new(HashMap::new()),
                 next_id: AtomicU64::new(1),
+                journal: jcfg,
             }),
         }
+    }
+
+    /// Rebuild the model fleet from a journal directory: every id with a
+    /// `model-<id>.journal` / `model-<id>.ckpt` file is decoded from its
+    /// checkpoint and replayed through its journal tail, landing each
+    /// engine on a state bit-identical to the pre-crash one (the chaos
+    /// suite asserts this per seed). Unrecoverable models are skipped and
+    /// reported; the scheduler keeps journaling under the same directory,
+    /// and fresh `create_model` ids continue past the highest recovered id.
+    pub fn recover(workers: usize, jcfg: JournalConfig) -> (Scheduler, RecoveryReport) {
+        let sched = Scheduler::build(workers, Some(jcfg.clone()));
+        let mut report = RecoveryReport::default();
+        let mut max_id = 0u64;
+        for id in journal::list_model_ids(&jcfg.dir) {
+            // Even an unrecoverable id holds the floor: reusing it would
+            // have `create_model` truncate the very journal someone may
+            // want to inspect post-mortem.
+            max_id = max_id.max(id);
+            match journal::recover_model(&jcfg, id) {
+                Ok(rec) => {
+                    report.models += 1;
+                    report.replayed_ops += rec.replayed_ops;
+                    report.dropped_records += rec.dropped_records;
+                    report.dropped_bytes += rec.dropped_bytes;
+                    sched.register_recovered(id, rec);
+                }
+                Err(e) => {
+                    report.failed += 1;
+                    report.errors.push(e);
+                }
+            }
+        }
+        // Fresh ids must never collide with recovered journals on disk.
+        let floor = max_id + 1;
+        sched.inner.next_id.fetch_max(floor, Ordering::SeqCst);
+        (sched, report)
+    }
+
+    /// Install one recovered engine as a live model cell, reattaching its
+    /// journal (repaired to its valid prefix by `recover_model`) and
+    /// rebuilding the PJRT executable when the recovered config asks for it.
+    fn register_recovered(&self, id: u64, rec: journal::RecoveredModel) {
+        let cfg = rec.engine.cfg.clone();
+        let exe_worker = self.build_pjrt_worker(id, &cfg);
+        let (jnl, degraded) = match self
+            .inner
+            .journal
+            .as_ref()
+            .map(|jcfg| ModelJournal::open_recovered(jcfg, id, rec.replayed_ops))
+        {
+            Some(Ok(j)) => (Some(j), false),
+            Some(Err(_)) => (None, true),
+            None => (None, false),
+        };
+        let cell = Arc::new(ModelCell {
+            id,
+            cfg,
+            engine: Mutex::new(rec.engine),
+            mut_queue: Mutex::new(VecDeque::new()),
+            mut_active: AtomicBool::new(false),
+            predict_queue: Mutex::new(VecDeque::new()),
+            predict_active: AtomicBool::new(false),
+            gen: AtomicU64::new(rec.gen),
+            snapshot: Mutex::new(None),
+            exe_worker,
+            dead: AtomicBool::new(false),
+            suggest_seq: AtomicU64::new(0),
+            native_reads: AtomicU64::new(0),
+            read_hits: AtomicU64::new(0),
+            read_misses: AtomicU64::new(0),
+            jcfg: self.inner.journal.clone(),
+            journal: Mutex::new(jnl),
+            recoveries: AtomicU64::new(0),
+            degraded: AtomicBool::new(degraded),
+        });
+        lock_clean(&self.inner.models).insert(id, cell);
     }
 
     pub fn workers(&self) -> usize {
@@ -145,23 +287,19 @@ impl Scheduler {
     pub fn create_model(&self, cfg: EngineConfig) -> u64 {
         let id = self.inner.next_id.fetch_add(1, Ordering::SeqCst);
         let engine = ModelEngine::new(cfg.clone());
-        let exe_worker = if cfg.use_pjrt {
-            let w = (id as usize) % self.inner.pool.workers();
-            let (tx, rx) = std::sync::mpsc::channel();
-            let build_cfg = cfg.clone();
-            let submitted = self.inner.pool.spawn_pinned(
-                w,
-                Box::new(move |_me| {
-                    let _ = tx.send(build_worker_exe(id, &build_cfg));
-                }),
-            );
-            if submitted && rx.recv().unwrap_or(false) {
-                Some(w)
-            } else {
-                None
-            }
-        } else {
-            None
+        let exe_worker = self.build_pjrt_worker(id, &cfg);
+        // Start the durable history: a config record at generation 0. If
+        // even that fails the model still serves, but flagged degraded —
+        // there is no file a post-crash recovery could trust.
+        let (jnl, degraded) = match self
+            .inner
+            .journal
+            .as_ref()
+            .map(|jcfg| ModelJournal::create(jcfg, id, &cfg))
+        {
+            Some(Ok(j)) => (Some(j), false),
+            Some(Err(_)) => (None, true),
+            None => (None, false),
         };
         let cell = Arc::new(ModelCell {
             id,
@@ -179,9 +317,45 @@ impl Scheduler {
             native_reads: AtomicU64::new(0),
             read_hits: AtomicU64::new(0),
             read_misses: AtomicU64::new(0),
+            jcfg: self.inner.journal.clone(),
+            journal: Mutex::new(jnl),
+            recoveries: AtomicU64::new(0),
+            degraded: AtomicBool::new(degraded),
         });
         lock_clean(&self.inner.models).insert(id, cell);
         id
+    }
+
+    /// Compile the model's `window_acq` artifact on its designated worker
+    /// (round-robin by id). Shared by `create_model` and recovery.
+    fn build_pjrt_worker(&self, id: u64, cfg: &EngineConfig) -> Option<usize> {
+        if !cfg.use_pjrt {
+            return None;
+        }
+        let w = (id as usize) % self.inner.pool.workers();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let build_cfg = cfg.clone();
+        let submitted = self.inner.pool.spawn_pinned(
+            w,
+            Box::new(move |_me| {
+                let _ = tx.send(build_worker_exe(id, &build_cfg));
+            }),
+        );
+        if submitted && rx.recv().unwrap_or(false) {
+            Some(w)
+        } else {
+            None
+        }
+    }
+
+    /// Test/inspection hook: the model's bit-exact serialized engine state
+    /// ([`ModelEngine::encode_state`]) — the currency of the chaos suite's
+    /// recovered-equals-uninterrupted comparisons. `None` for unknown
+    /// models or a poisoned engine lock.
+    pub fn engine_state_bytes(&self, model: u64) -> Option<Vec<u8>> {
+        let cell = lock_clean(&self.inner.models).get(&model).cloned()?;
+        let eng = cell.engine.lock().ok()?;
+        Some(eng.encode_state())
     }
 
     pub fn has_model(&self, model: u64) -> bool {
@@ -357,34 +531,26 @@ fn drain_mutations(cell: &ModelCell) {
             cmd.fail("engine stopped".into());
             continue;
         }
-        #[allow(clippy::type_complexity)]
-        let (reply, run): (Sender<Response>, Box<dyn FnOnce(&mut ModelEngine) -> Response>) =
-            match cmd {
-                Command::Observe { x, y, reply } => {
-                    (reply, Box::new(move |e: &mut ModelEngine| e.observe(&x, y)))
-                }
-                Command::ObserveBatch { xs, ys, reply } => (
-                    reply,
-                    Box::new(move |e: &mut ModelEngine| e.observe_batch(&xs, &ys)),
-                ),
-                Command::Forget { x, reply } => {
-                    (reply, Box::new(move |e: &mut ModelEngine| e.forget(&x)))
-                }
-                Command::ForgetBatch { xs, reply } => {
-                    (reply, Box::new(move |e: &mut ModelEngine| e.forget_batch(&xs)))
-                }
-                Command::RollingWindow { max_n, max_age, reply } => (
-                    reply,
-                    Box::new(move |e: &mut ModelEngine| e.rolling_window(max_n, max_age)),
-                ),
-                Command::Fit { steps, reply } => {
-                    (reply, Box::new(move |e: &mut ModelEngine| e.fit(steps)))
-                }
-                other => {
-                    other.fail("non-mutating command on the mutation queue".into());
-                    continue;
-                }
-            };
+        // Shear the command down to its journalable op — the same value the
+        // drain applies (via `journal::apply_op`), appends, and that replay
+        // re-applies after a crash, so live and recovered trajectories
+        // cannot drift.
+        let (reply, op): (Sender<Response>, MutationOp) = match cmd {
+            Command::Observe { x, y, reply } => (reply, MutationOp::Observe { x, y }),
+            Command::ObserveBatch { xs, ys, reply } => {
+                (reply, MutationOp::ObserveBatch { xs, ys })
+            }
+            Command::Forget { x, reply } => (reply, MutationOp::Forget { x }),
+            Command::ForgetBatch { xs, reply } => (reply, MutationOp::ForgetBatch { xs }),
+            Command::RollingWindow { max_n, max_age, reply } => {
+                (reply, MutationOp::RollingWindow { max_n, max_age })
+            }
+            Command::Fit { steps, reply } => (reply, MutationOp::Fit { steps }),
+            other => {
+                other.fail("non-mutating command on the mutation queue".into());
+                continue;
+            }
+        };
         let mut eng = match cell.engine.lock() {
             Ok(g) => g,
             Err(_) => {
@@ -393,27 +559,100 @@ fn drain_mutations(cell: &ModelCell) {
                 continue;
             }
         };
-        let outcome = catch_unwind(AssertUnwindSafe(|| run(&mut *eng)));
+        let outcome = catch_unwind(AssertUnwindSafe(|| journal::apply_op(&mut eng, &op)));
         match outcome {
             Ok(resp) => {
                 if !matches!(resp, Response::Error(_)) {
                     // Invalidate the read snapshot (still holding the engine
                     // lock, so readers re-checking under it see a stable gen).
-                    cell.gen.fetch_add(1, Ordering::SeqCst);
+                    let gen = cell.gen.fetch_add(1, Ordering::SeqCst) + 1;
+                    // Journal after the apply, before the reply: an
+                    // acknowledged mutation is on disk (modulo the fsync
+                    // policy), and a panicked one is never written, so
+                    // replay cannot re-panic. A journal panic must not
+                    // take the model down — contain it and degrade.
+                    let journaled = catch_unwind(AssertUnwindSafe(|| {
+                        journal_append(cell, &mut eng, gen, &op)
+                    }));
+                    if journaled.is_err() {
+                        cell.degraded.store(true, Ordering::SeqCst);
+                    }
                 }
                 drop(eng);
                 let _ = reply.send(resp);
             }
             Err(_) => {
-                // State is suspect: quarantine the model, keep the worker.
-                cell.dead.store(true, Ordering::SeqCst);
-                drop(eng);
-                let _ = reply
-                    .send(Response::Error("engine panicked; model disabled".into()));
-                fail_pending(cell, "engine stopped");
+                // State is suspect. The journal holds every acknowledged
+                // mutation and not the one that just panicked — rebuild the
+                // engine from it in place (bounded retries) instead of
+                // quarantining on first failure.
+                match try_resurrect(cell, &mut eng) {
+                    Ok(()) => {
+                        drop(eng);
+                        let _ = reply.send(Response::Error(
+                            "engine panicked; command aborted and model recovered from journal"
+                                .into(),
+                        ));
+                    }
+                    Err(msg) => {
+                        cell.dead.store(true, Ordering::SeqCst);
+                        drop(eng);
+                        let _ = reply.send(Response::Error(msg));
+                        fail_pending(cell, "engine stopped");
+                    }
+                }
             }
         }
     }
+}
+
+/// Append an applied op at its generation, compacting when due. Runs with
+/// the engine lock held (the caller's guard) so the journal order is the
+/// apply order. Any I/O failure latches `degraded`: journaling stops but
+/// the model keeps serving.
+fn journal_append(cell: &ModelCell, eng: &mut ModelEngine, gen: u64, op: &MutationOp) {
+    if cell.degraded.load(Ordering::SeqCst) {
+        return;
+    }
+    let mut slot = lock_clean(&cell.journal);
+    let Some(j) = slot.as_mut() else { return };
+    if j.append_op(gen, op).is_err() {
+        cell.degraded.store(true, Ordering::SeqCst);
+        return;
+    }
+    if j.due_for_checkpoint() && j.write_checkpoint(gen, &eng.encode_state()).is_err() {
+        cell.degraded.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Rebuild a panicked engine in place from its journal. Succeeds only when
+/// durability is on, the journal is intact (not degraded), the recovery
+/// budget has headroom, and the replayed history lands exactly on the
+/// cell's generation — any shortfall quarantines the model as before.
+fn try_resurrect(cell: &ModelCell, eng: &mut ModelEngine) -> Result<(), String> {
+    let Some(jcfg) = cell.jcfg.as_ref() else {
+        return Err("engine panicked; model disabled".into());
+    };
+    if cell.degraded.load(Ordering::SeqCst) {
+        return Err("engine panicked; model disabled (journal degraded)".into());
+    }
+    if cell.recoveries.load(Ordering::SeqCst) >= MAX_RECOVERIES {
+        return Err("engine panicked; model disabled (recovery budget exhausted)".into());
+    }
+    // Replay itself runs engine code and could (via an injected or
+    // nondeterministic fault) panic again — contain it.
+    let rec = catch_unwind(AssertUnwindSafe(|| journal::recover_model(jcfg, cell.id)))
+        .map_err(|_| "engine panicked; journal recovery also panicked — model disabled")??;
+    let want = cell.gen.load(Ordering::SeqCst);
+    if rec.gen != want {
+        return Err(format!(
+            "engine panicked; journal replays to generation {} but model is at {} — model disabled",
+            rec.gen, want
+        ));
+    }
+    *eng = rec.engine;
+    cell.recoveries.fetch_add(1, Ordering::SeqCst);
+    Ok(())
 }
 
 /// Pinned PJRT drain: take the whole predict backlog, group consecutive
@@ -651,6 +890,11 @@ fn serve_stats(cell: &ModelCell, pool: &WorkerPool, reply: Sender<Response>) {
         let slot = lock_clean(&cell.snapshot);
         slot.as_ref().map(|s| s.snap.cache_stats()).unwrap_or((0, 0))
     };
+    let (j_appends, j_bytes, j_ckpts) = {
+        // Lock order engine → journal, same as the mutation drain.
+        let slot = lock_clean(&cell.journal);
+        slot.as_ref().map(|j| (j.appends, j.bytes, j.checkpoints)).unwrap_or((0, 0, 0))
+    };
     let ps = pool.stats();
     let resp = Response::Stats {
         n: gp.n(),
@@ -677,6 +921,13 @@ fn serve_stats(cell: &ModelCell, pool: &WorkerPool, reply: Sender<Response>) {
         chunks_shared: shared,
         window_evictions: eng.window_evictions,
         window_occupancy: eng.window_occupancy() as u64,
+        recoveries: cell.recoveries.load(Ordering::Relaxed),
+        degraded: cell.degraded.load(Ordering::SeqCst),
+        journal_appends: j_appends,
+        journal_bytes: j_bytes,
+        journal_checkpoints: j_ckpts,
+        solve_cold_retries: gp.solve_cold_retries,
+        solve_refit_escalations: gp.solve_refit_escalations,
     };
     drop(eng);
     let _ = reply.send(resp);
@@ -875,6 +1126,65 @@ mod tests {
             other => panic!("unexpected {other:?}"),
         }
         sched.shutdown();
+    }
+
+    /// Full restart drill: a journaled scheduler ingests, is dropped with
+    /// no clean handoff, and [`Scheduler::recover`] rebuilds a fleet whose
+    /// serialized engine state is bit-identical and keeps serving.
+    #[test]
+    fn journaled_models_recover_after_restart() {
+        let dir = std::env::temp_dir().join(format!(
+            "addgp-sched-recover-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let jcfg = JournalConfig::new(&dir);
+        let sched = Scheduler::with_journal(2, jcfg.clone());
+        let m = sched.create_model(cfg(2));
+        let mut rng = Rng::new(17);
+        let xs: Vec<Vec<f64>> = (0..30)
+            .map(|_| vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)])
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x[0].sin() + x[1].cos()).collect();
+        let r = call(&sched, m, |reply| Command::ObserveBatch { xs, ys, reply });
+        assert!(matches!(r, Response::BatchObserved { .. }), "unexpected {r:?}");
+        for i in 0..4 {
+            let x = vec![0.3 * i as f64 + 0.1, 1.0];
+            let y = x[0].sin() + x[1].cos();
+            let r = call(&sched, m, |reply| Command::Observe { x, y, reply });
+            assert!(matches!(r, Response::Observed { .. }), "unexpected {r:?}");
+        }
+        let before = sched.engine_state_bytes(m).expect("state");
+        match call(&sched, m, |reply| Command::Stats { reply }) {
+            Response::Stats { journal_appends, degraded, recoveries, .. } => {
+                assert_eq!(journal_appends, 5, "batch + 4 observes all journaled");
+                assert!(!degraded);
+                assert_eq!(recoveries, 0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        sched.shutdown();
+        drop(sched);
+        let (sched2, report) = Scheduler::recover(2, jcfg);
+        assert_eq!((report.models, report.failed), (1, 0), "{:?}", report.errors);
+        assert_eq!(report.replayed_ops, 5);
+        assert_eq!((report.dropped_records, report.dropped_bytes), (0, 0));
+        assert!(sched2.has_model(m));
+        let after = sched2.engine_state_bytes(m).expect("state");
+        assert_eq!(before, after, "recovered state is bit-identical");
+        // The recovered model serves, and fresh ids continue past it.
+        let r = call(&sched2, m, |reply| Command::Predict {
+            xs: vec![vec![1.0, 2.0]],
+            beta: 2.0,
+            grad: false,
+            reply,
+        });
+        assert!(matches!(r, Response::Prediction { .. }), "unexpected {r:?}");
+        let m2 = sched2.create_model(cfg(2));
+        assert!(m2 > m, "fresh ids must clear the recovered journals");
+        sched2.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

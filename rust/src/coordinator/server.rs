@@ -7,13 +7,27 @@
 //! connection socket (unblocking its reader), joins every reader thread,
 //! and finally drains + joins the scheduler's pool workers — in that order,
 //! so an in-flight request can still get its reply from a live pool.
+//!
+//! Wire-input hardening (pinned by `tests/protocol_compat.rs`): lines are
+//! read through a bounded reader ([`MAX_LINE`]) — an overlong line is
+//! discarded up to its newline and answered with a structured error, and
+//! invalid UTF-8 is decoded lossily into an ordinary parse error, so no
+//! input byte sequence can panic a reader or silently close a connection.
+//! Requests may carry a `deadline_ms` budget (expired waits return a
+//! `retryable:` error and drop the late reply), and model-routed ops are
+//! load-shed with the same `retryable:` marker once the in-flight count
+//! passes the queue limit (default `workers * 256`,
+//! [`Server::set_queue_limit`]). A peer that vanishes mid-request is
+//! detected when its reply fails to write; the reader thread is freed and
+//! the disconnect counted in [`ServerMetrics`].
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::channel;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::anyhow;
 use crate::coordinator::engine::{Command, EngineConfig};
@@ -24,6 +38,16 @@ use crate::coordinator::scheduler::Scheduler;
 use crate::kernels::matern::Nu;
 use crate::util::error::Result;
 use crate::util::pool;
+
+/// Hard cap on one request line. The biggest legitimate frames (dense
+/// `observe_batch` payloads) sit far below it; anything larger is a
+/// protocol violation or garbage, answered with a structured error while
+/// the connection stays usable.
+pub const MAX_LINE: usize = 1 << 20;
+
+/// How long a reader blocks before re-checking the shutdown flag (also the
+/// poll cadence for a no-deadline reply wait).
+const READ_POLL: Duration = Duration::from_millis(250);
 
 /// What a clean [`Server::serve`] exit joined — the deterministic-shutdown
 /// receipt (no leaked reader threads, no leaked pool workers).
@@ -47,6 +71,11 @@ struct Shared {
     lo: f64,
     hi: f64,
     metrics: ServerMetrics,
+    /// Model-routed requests currently between dispatch and reply, across
+    /// all connections — the load-shedding signal.
+    inflight: AtomicU64,
+    /// Shed model-routed requests once `inflight` reaches this.
+    queue_limit: AtomicU64,
     /// Live connections: a socket handle (to force readers off a blocking
     /// read at shutdown) plus the reader thread's join handle.
     conns: Mutex<Vec<(TcpStream, JoinHandle<()>)>>,
@@ -89,6 +118,8 @@ impl Server {
                 lo,
                 hi,
                 metrics: ServerMetrics::default(),
+                inflight: AtomicU64::new(0),
+                queue_limit: AtomicU64::new((workers.max(1) as u64) * 256),
                 conns: Mutex::new(Vec::new()),
             }),
         })
@@ -96,6 +127,12 @@ impl Server {
 
     pub fn local_addr(&self) -> std::net::SocketAddr {
         self.addr
+    }
+
+    /// Override the load-shedding threshold (model-routed requests allowed
+    /// in flight before new ones are refused with a `retryable:` error).
+    pub fn set_queue_limit(&self, limit: u64) {
+        self.shared.queue_limit.store(limit.max(1), Ordering::SeqCst);
     }
 
     /// Serving-metrics report — pool-wide counters/histograms plus one line
@@ -154,11 +191,28 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break,
+    // Wake periodically so a reader parked on a quiet connection still
+    // notices shutdown even if the socket close races its blocking read.
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let mut reader = BufReader::new(stream);
+    loop {
+        let line = match read_bounded_line(&mut reader, &shared) {
+            LineRead::Line(l) => l,
+            LineRead::Overlong(n) => {
+                // The oversized frame was discarded up to its newline; the
+                // connection stays usable for the next request.
+                shared.metrics.inc_errors();
+                let resp = Response::Error(format!(
+                    "line too long ({n} bytes; limit {MAX_LINE}) — request discarded"
+                ));
+                let out = format!("{}\n", resp.to_json(None));
+                if writer.write_all(out.as_bytes()).is_err() {
+                    shared.metrics.inc_client_disconnects();
+                    return;
+                }
+                continue;
+            }
+            LineRead::Eof => return,
         };
         if line.trim().is_empty() {
             continue;
@@ -166,7 +220,10 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
         let (resp, id) = dispatch(&line, &shared);
         let out = format!("{}\n", resp.to_json(id));
         if writer.write_all(out.as_bytes()).is_err() {
-            break;
+            // The peer vanished mid-request: count it and free this
+            // reader thread (the computed reply is dropped).
+            shared.metrics.inc_client_disconnects();
+            return;
         }
         if shared.shutting_down.load(Ordering::SeqCst) {
             // Poke the accept loop so `serve` can exit.
@@ -174,7 +231,91 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
             if let Some(addr) = addr {
                 let _ = TcpStream::connect(addr);
             }
-            break;
+            return;
+        }
+    }
+}
+
+/// One bounded line read.
+enum LineRead {
+    Line(String),
+    /// The line exceeded [`MAX_LINE`]; this many bytes were discarded up to
+    /// (not including) its newline.
+    Overlong(usize),
+    Eof,
+}
+
+/// Read one `\n`-terminated line of at most [`MAX_LINE`] bytes. Longer
+/// lines are consumed and discarded to their newline and reported as
+/// [`LineRead::Overlong`] — the connection stays framed. Invalid UTF-8 is
+/// decoded lossily (the parser then rejects it as a structured error).
+/// Read timeouts re-check the shutdown flag and keep waiting, preserving
+/// any partial line already buffered.
+fn read_bounded_line(reader: &mut BufReader<TcpStream>, shared: &Shared) -> LineRead {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut overlong = false;
+    let mut dropped = 0usize;
+    loop {
+        let (done, used) = {
+            let chunk = match reader.fill_buf() {
+                Ok(c) => c,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                            | std::io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    if shared.shutting_down.load(Ordering::SeqCst) {
+                        return LineRead::Eof;
+                    }
+                    continue;
+                }
+                Err(_) => return LineRead::Eof,
+            };
+            if chunk.is_empty() {
+                // EOF. A torn final line (bytes but no newline) means the
+                // peer vanished mid-request.
+                if overlong {
+                    return LineRead::Overlong(dropped);
+                }
+                if !buf.is_empty() {
+                    shared.metrics.inc_client_disconnects();
+                }
+                return LineRead::Eof;
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    if overlong || buf.len() + pos > MAX_LINE {
+                        dropped += if overlong { pos } else { buf.len() + pos };
+                        overlong = true;
+                        buf.clear();
+                    } else {
+                        buf.extend_from_slice(&chunk[..pos]);
+                    }
+                    (true, pos + 1)
+                }
+                None => {
+                    let len = chunk.len();
+                    if overlong || buf.len() + len > MAX_LINE {
+                        dropped += if overlong { len } else { buf.len() + len };
+                        overlong = true;
+                        buf.clear();
+                    } else {
+                        buf.extend_from_slice(chunk);
+                    }
+                    (false, len)
+                }
+            }
+        };
+        reader.consume(used);
+        if done {
+            return if overlong {
+                LineRead::Overlong(dropped)
+            } else {
+                LineRead::Line(String::from_utf8_lossy(&buf).into_owned())
+            };
         }
     }
 }
@@ -182,7 +323,7 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
 fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
     shared.metrics.inc_requests();
     let t0 = std::time::Instant::now();
-    let (req, id) = match Request::parse(line) {
+    let (req, id, deadline_ms) = match Request::parse_meta(line) {
         Ok(v) => v,
         Err(e) => {
             shared.metrics.inc_errors();
@@ -238,6 +379,23 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
                 _ => unreachable!(),
             };
             routed_model = Some(model);
+            // Queue-depth load shedding: once too many model-routed
+            // requests sit between dispatch and reply, refuse at the door
+            // with a retry-able error instead of queueing without bound.
+            let limit = shared.queue_limit.load(Ordering::SeqCst);
+            let inflight = shared.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+            if inflight > limit {
+                shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                shared.metrics.inc_shed_requests();
+                shared.metrics.inc_errors();
+                return (
+                    Response::Error(format!(
+                        "retryable: server overloaded ({inflight} requests in flight, \
+                         limit {limit})"
+                    )),
+                    id,
+                );
+            }
             let (rtx, rrx) = channel();
             let cmd = match other {
                 Request::Observe { x, y, .. } => Command::Observe { x, y, reply: rtx },
@@ -259,10 +417,27 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
                 _ => unreachable!(),
             };
             shared.scheduler.dispatch(model, cmd);
-            match rrx.recv() {
-                Ok(r) => r,
-                Err(_) => Response::Error("engine dropped reply".into()),
-            }
+            let resp = match deadline_ms {
+                // Per-request deadline: give up waiting when the budget
+                // expires (the late reply is dropped with its sender) and
+                // tell the client it may retry.
+                Some(ms) => match rrx.recv_timeout(Duration::from_millis(ms)) {
+                    Ok(r) => r,
+                    Err(RecvTimeoutError::Timeout) => {
+                        shared.metrics.inc_deadline_timeouts();
+                        Response::Error(format!("retryable: deadline exceeded after {ms}ms"))
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        Response::Error("engine dropped reply".into())
+                    }
+                },
+                None => match rrx.recv() {
+                    Ok(r) => r,
+                    Err(_) => Response::Error("engine dropped reply".into()),
+                },
+            };
+            shared.inflight.fetch_sub(1, Ordering::SeqCst);
+            resp
         }
     };
     if matches!(resp, Response::Error(_)) {

@@ -115,6 +115,53 @@ impl DimFactor {
         }
     }
 
+    /// Reassemble a dimension from checkpoint-decoded parts (journal
+    /// recovery). The lazy GKP and band-of-inverse stay unmaterialized —
+    /// both are pure functions of the factors, rebuilt on demand, and never
+    /// affect prediction bits — and `monotone` is restored verbatim (it is
+    /// sticky state, not derivable: after a remove it can lag the grid
+    /// until the next rebuild, and recomputing it would steer the recovered
+    /// engine onto a different insert path than the live one).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        kp: KpFactorization,
+        t: Banded,
+        phit: Banded,
+        t_lu: BandedLU,
+        phi_lu: BandedLU,
+        phit_lu: BandedLU,
+        a_lu: BandedLU,
+        sigma2_y: f64,
+        patch_policy: PatchPolicy,
+        factor_patches: u64,
+        factor_resweeps: u64,
+        monotone: bool,
+    ) -> Self {
+        DimFactor {
+            kp,
+            t,
+            phit,
+            t_lu,
+            phi_lu,
+            phit_lu,
+            a_lu,
+            gkp: None,
+            c_band: None,
+            sigma2_y,
+            patch_policy,
+            factor_patches,
+            factor_resweeps,
+            timings: PatchTimings::default(),
+            monotone,
+        }
+    }
+
+    /// Whether `xs` is strictly increasing (see the field docs) — travels
+    /// through checkpoints via [`DimFactor::from_parts`].
+    pub fn monotone(&self) -> bool {
+        self.monotone
+    }
+
     /// Incrementally absorb one new point (appended in data order):
     /// `O(2ν+1)` packet re-solves via [`KpFactorization::insert`], then a
     /// *patched* update of all four banded LUs via

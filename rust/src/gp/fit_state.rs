@@ -627,6 +627,57 @@ impl FitState {
         gs.tol = self.gs_tol;
         gs
     }
+
+    /// The stored warm-start ṽ, if any — checkpoint serialization surface.
+    /// Both ṽ and the posterior must travel through checkpoints: whether a
+    /// posterior is present decides if the next
+    /// [`FitState::ensure_posterior`] solves at all, and ṽ seeds that
+    /// solve, so dropping either would fork the recovered engine's numeric
+    /// trajectory from the live one.
+    pub fn tilde(&self) -> Option<&BlockVec> {
+        self.tilde.as_ref()
+    }
+
+    /// Reassemble a trained state from checkpoint-decoded parts (journal
+    /// recovery).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        dims: Vec<DimFactor>,
+        post: Option<Posterior>,
+        tilde: Option<BlockVec>,
+        sigma2_y: f64,
+        gs_max_sweeps: usize,
+        gs_tol: f64,
+        patch_policy: PatchPolicy,
+        counters: (u64, u64, u64, u64),
+    ) -> Self {
+        assert!(!dims.is_empty(), "FitState needs at least one dimension");
+        let (incremental_inserts, incremental_removes, fallback_rebuilds, snapshot_chunks_shared) =
+            counters;
+        FitState {
+            dims,
+            post: post.map(Arc::new),
+            tilde,
+            sigma2_y,
+            gs_max_sweeps,
+            gs_tol,
+            incremental_inserts,
+            incremental_removes,
+            fallback_rebuilds,
+            patch_policy,
+            snapshot_chunks_shared,
+        }
+    }
+
+    /// Drop the stored posterior *and* warm start, then re-solve cold — the
+    /// second rung of the non-convergence escalation ladder
+    /// (`AdditiveGP::ensure_posterior`): a warm start that steered PCG into
+    /// stagnation is discarded rather than reused.
+    pub fn resolve_cold(&mut self, y: &[f64]) {
+        self.post = None;
+        self.tilde = None;
+        self.ensure_posterior(y);
+    }
 }
 
 impl Audit for FitState {

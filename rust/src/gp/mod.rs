@@ -15,12 +15,15 @@
 //!   log-determinant (**Algorithm 8**).
 //! * [`train`] — MLE of the scale hyperparameters by Adam on ∇l.
 //! * [`model`] — the [`model::AdditiveGP`] façade tying it together.
+//! * [`persist`] — bit-exact checkpoint encode/decode of a trained model,
+//!   the compaction payload of the coordinator's mutation journal.
 
 pub mod backfit;
 pub mod dim;
 pub mod fit_state;
 pub mod likelihood;
 pub mod model;
+pub mod persist;
 pub mod posterior;
 pub mod train;
 

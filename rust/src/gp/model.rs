@@ -93,6 +93,14 @@ pub struct AdditiveGP {
     /// Trained factorizations + posterior (None until `min_points`).
     state: Option<FitState>,
     cache: MTildeCache,
+    /// Warm posterior solves whose residual missed `gs_tol` and were
+    /// retried cold (escalation rung 1; see
+    /// [`AdditiveGP::ensure_posterior`]). Lives on the façade, not the
+    /// [`FitState`], so the count survives refits.
+    pub solve_cold_retries: u64,
+    /// Cold retries that still missed `gs_tol` and forced a full refit
+    /// (escalation rung 2).
+    pub solve_refit_escalations: u64,
 }
 
 impl AdditiveGP {
@@ -105,6 +113,8 @@ impl AdditiveGP {
             state: None,
             cache: MTildeCache::new(cfg.cache_capacity),
             cfg,
+            solve_cold_retries: 0,
+            solve_refit_escalations: 0,
         }
     }
 
@@ -338,10 +348,59 @@ impl AdditiveGP {
     }
 
     /// Ensure the posterior state (`b_Y`) exists — one (warm-started)
-    /// Algorithm 4 solve.
+    /// Algorithm 4 solve, escalated on non-convergence.
+    ///
+    /// Escalation ladder: a warm solve whose final relative residual misses
+    /// `gs_tol` is retried **cold** (the stale ṽ that steered PCG into
+    /// stagnation is discarded — [`FitState::resolve_cold`]); if the cold
+    /// solve also misses, the factorizations themselves are rebuilt by a
+    /// full [`AdditiveGP::refit`] and solved once more. Each rung is
+    /// counted ([`AdditiveGP::solve_cold_retries`] /
+    /// [`AdditiveGP::solve_refit_escalations`], surfaced through the
+    /// coordinator's `stats` reply), replacing the old behavior of silently
+    /// serving whatever the stagnated sweep left behind. The ladder is a
+    /// deterministic function of the solve result, so journal replay walks
+    /// the same rungs and recovery stays bit-identical. Only this
+    /// *perturbing* path escalates — the non-perturbing
+    /// [`AdditiveGP::read_snapshot`] never writes back, preserving the
+    /// read-path determinism contract.
     pub fn ensure_posterior(&mut self) {
         let state = self.state.as_mut().expect("fit() with enough points first");
+        if state.posterior().is_some() {
+            return;
+        }
         state.ensure_posterior(&self.y);
+        if self.solve_converged() {
+            return;
+        }
+        self.solve_cold_retries += 1;
+        self.state.as_mut().unwrap().resolve_cold(&self.y);
+        if self.solve_converged() {
+            return;
+        }
+        self.solve_refit_escalations += 1;
+        self.refit();
+        self.state.as_mut().expect("refit keeps an active model active").ensure_posterior(&self.y);
+    }
+
+    /// Did the last posterior solve reach `gs_tol`? (The fault plan can
+    /// force a "no" here — chaos tests drive the escalation ladder through
+    /// the `pcg.converge` point.)
+    fn solve_converged(&self) -> bool {
+        if let Some(act) = crate::util::fault::point!("pcg.converge") {
+            if act == crate::util::fault::FaultAction::ForceFail {
+                return false;
+            }
+        }
+        match self.state.as_ref() {
+            Some(s) => match s.gs_stats() {
+                // Mirror the solver's own stopping rule (strict `< tol`,
+                // `backfit.rs`) against the state's live tolerance.
+                Some(g) => g.rel_residual.is_finite() && g.rel_residual < s.gs_tol,
+                None => true, // nothing was solved; nothing to escalate
+            },
+            None => true,
+        }
     }
 
     /// Posterior mean at `x` — `O(D log n)` given the posterior.
@@ -484,6 +543,41 @@ impl AdditiveGP {
     /// Data access for baselines/benchmarks.
     pub fn data(&self) -> (&[Vec<f64>], &[f64]) {
         (&self.x_cols, &self.y)
+    }
+
+    /// Reinstall checkpoint-decoded parts (journal recovery): data columns,
+    /// targets, per-dimension scales, escalation counters and the trained
+    /// state. The `M̃` cache restarts cold — cached columns are
+    /// bit-identical to recomputation (pinned by the snapshot-vs-predict
+    /// equivalence tests), so a cold cache changes latency, never
+    /// prediction bits.
+    pub fn restore_parts(
+        &mut self,
+        omegas: Vec<f64>,
+        x_cols: Vec<Vec<f64>>,
+        y: Vec<f64>,
+        state: Option<FitState>,
+        solve_counters: (u64, u64),
+    ) -> Result<(), String> {
+        if omegas.len() != self.input_dim() || x_cols.len() != self.input_dim() {
+            return Err(format!(
+                "checkpoint carries {} dims, model built with {}",
+                x_cols.len(),
+                self.input_dim()
+            ));
+        }
+        if x_cols.iter().any(|c| c.len() != y.len()) {
+            return Err("checkpoint data columns disagree with y length".to_string());
+        }
+        self.omegas = omegas;
+        self.x_cols = x_cols;
+        self.y = y;
+        self.state = state;
+        self.cache = MTildeCache::new(self.cfg.cache_capacity);
+        self.solve_cold_retries = solve_counters.0;
+        self.solve_refit_escalations = solve_counters.1;
+        enforce(self, "AdditiveGP::restore_parts");
+        Ok(())
     }
 
     /// Immutable access to the factorizations (None before `fit`).

@@ -1,0 +1,407 @@
+//! Bit-exact checkpoint serialization of a trained model — the payload the
+//! coordinator's mutation journal compacts to (DESIGN.md §Durability).
+//!
+//! Why serialize *state* instead of refitting from the raw data: the
+//! incremental insert/remove paths are bit-identical to a refit only under
+//! [`PatchPolicy::Exact`]; under `EarlyExit` (and after mixed mutation
+//! histories) the live factors can differ from a cold rebuild in the last
+//! bits, and the crash-recovery contract is *bit-identity with the
+//! pre-crash engine*, not merely numerical agreement. So everything that
+//! influences future numeric trajectories travels verbatim:
+//!
+//! * the per-dimension factors and LUs (`f64` as raw IEEE bits);
+//! * the posterior **and** the warm-start ṽ — presence of a posterior
+//!   decides whether the next `ensure_posterior` solves at all, and ṽ seeds
+//!   that solve;
+//! * sticky flags (`DimFactor::monotone`) and the mutation counters.
+//!
+//! Deliberately *not* serialized, because they are pure functions of the
+//! above (rebuilt on demand, never affecting prediction bits): the lazy
+//! GKP and band-of-inverse, the `M̃` cache, and the band ropes' chunk
+//! boundaries (decode re-chunks canonically; chunk layout is storage
+//! bookkeeping — the soak property in `linalg/chunks.rs`). Wall-clock
+//! patch timings are skipped too: they are non-deterministic observability,
+//! not state.
+
+use crate::gp::backfit::{BlockVec, GsStats};
+use crate::gp::dim::DimFactor;
+use crate::gp::fit_state::FitState;
+use crate::gp::model::{AdditiveGP, AdditiveGpConfig};
+use crate::gp::posterior::Posterior;
+use crate::kernels::kp::KpFactorization;
+use crate::kernels::matern::{Matern, Nu};
+use crate::linalg::banded::{BandedLU, PatchPolicy};
+use crate::linalg::{Banded, Permutation};
+use crate::util::codec::{ByteReader, ByteWriter};
+
+fn put_banded(w: &mut ByteWriter, b: &Banded) {
+    w.put_usize(b.n());
+    w.put_usize(b.kl());
+    w.put_usize(b.ku());
+    // lint: cow-ok (checkpoint serialization: materialization is the point)
+    w.put_f64s(&b.to_flat());
+}
+
+fn get_banded(r: &mut ByteReader<'_>, what: &str) -> Result<Banded, String> {
+    let n = r.get_usize(what)?;
+    let kl = r.get_usize(what)?;
+    let ku = r.get_usize(what)?;
+    let flat = r.get_f64s(what)?;
+    Banded::from_flat(n, kl, ku, &flat).map_err(|e| format!("{what}: {e}"))
+}
+
+fn put_lu(w: &mut ByteWriter, lu: &BandedLU) {
+    w.put_usize(lu.n());
+    w.put_usize(lu.kl());
+    w.put_usize(lu.kuf());
+    put_banded(w, lu.fac_band());
+    w.put_usizes(lu.piv());
+    w.put_f64(lu.sign());
+}
+
+fn get_lu(r: &mut ByteReader<'_>, what: &str) -> Result<BandedLU, String> {
+    let n = r.get_usize(what)?;
+    let kl = r.get_usize(what)?;
+    let kuf = r.get_usize(what)?;
+    let fac = get_banded(r, what)?;
+    let piv = r.get_usizes(what)?;
+    let sign = r.get_f64(what)?;
+    BandedLU::from_parts(n, kl, kuf, fac, piv, sign).map_err(|e| format!("{what}: {e}"))
+}
+
+fn put_policy(w: &mut ByteWriter, p: PatchPolicy) {
+    match p {
+        PatchPolicy::Resweep => w.put_u8(0),
+        PatchPolicy::Exact => w.put_u8(1),
+        PatchPolicy::EarlyExit { rel_tol } => {
+            w.put_u8(2);
+            w.put_f64(rel_tol);
+        }
+    }
+}
+
+fn get_policy(r: &mut ByteReader<'_>) -> Result<PatchPolicy, String> {
+    match r.get_u8("patch policy")? {
+        0 => Ok(PatchPolicy::Resweep),
+        1 => Ok(PatchPolicy::Exact),
+        2 => Ok(PatchPolicy::EarlyExit { rel_tol: r.get_f64("patch policy rel_tol")? }),
+        v => Err(format!("unknown patch policy tag {v}")),
+    }
+}
+
+fn put_dim(w: &mut ByteWriter, d: &DimFactor) {
+    let kp = &d.kp;
+    w.put_u8(kp.kernel.nu.two_nu() as u8);
+    w.put_f64(kp.kernel.omega);
+    w.put_f64(kp.kernel.sigma2);
+    w.put_usizes(kp.perm.fwd());
+    w.put_f64s(&kp.xs);
+    put_banded(w, &kp.a);
+    put_banded(w, &kp.phi);
+    put_banded(w, &d.t);
+    put_banded(w, &d.phit);
+    put_lu(w, &d.t_lu);
+    put_lu(w, &d.phi_lu);
+    put_lu(w, &d.phit_lu);
+    put_lu(w, &d.a_lu);
+    w.put_f64(d.sigma2_y);
+    put_policy(w, d.patch_policy);
+    w.put_u64(d.factor_patches);
+    w.put_u64(d.factor_resweeps);
+    w.put_bool(d.monotone());
+}
+
+fn get_dim(r: &mut ByteReader<'_>) -> Result<DimFactor, String> {
+    let two_nu = r.get_u8("kernel nu")? as usize;
+    let nu = Nu::from_two_nu(two_nu).ok_or(format!("bad kernel 2ν = {two_nu}"))?;
+    let omega = r.get_f64("kernel omega")?;
+    let sigma2 = r.get_f64("kernel sigma2")?;
+    let kernel = Matern { nu, omega, sigma2 };
+    let fwd = r.get_usizes("perm")?;
+    let perm = Permutation::from_fwd(fwd)?;
+    let xs = r.get_f64s("xs")?;
+    let a = get_banded(r, "kp.a")?;
+    let phi = get_banded(r, "kp.phi")?;
+    let kp = KpFactorization { kernel, perm, xs, a, phi };
+    let t = get_banded(r, "t")?;
+    let phit = get_banded(r, "phit")?;
+    let t_lu = get_lu(r, "t_lu")?;
+    let phi_lu = get_lu(r, "phi_lu")?;
+    let phit_lu = get_lu(r, "phit_lu")?;
+    let a_lu = get_lu(r, "a_lu")?;
+    let sigma2_y = r.get_f64("sigma2_y")?;
+    let policy = get_policy(r)?;
+    let factor_patches = r.get_u64("factor_patches")?;
+    let factor_resweeps = r.get_u64("factor_resweeps")?;
+    let monotone = r.get_bool("monotone")?;
+    Ok(DimFactor::from_parts(
+        kp,
+        t,
+        phit,
+        t_lu,
+        phi_lu,
+        phit_lu,
+        a_lu,
+        sigma2_y,
+        policy,
+        factor_patches,
+        factor_resweeps,
+        monotone,
+    ))
+}
+
+fn put_blocks(w: &mut ByteWriter, blocks: &BlockVec) {
+    w.put_usize(blocks.len());
+    for b in blocks {
+        w.put_f64s(b);
+    }
+}
+
+fn get_blocks(r: &mut ByteReader<'_>, what: &str) -> Result<BlockVec, String> {
+    let d = r.get_usize(what)?;
+    if d > r.remaining() / 8 {
+        return Err(format!("{what}: claimed {d} blocks exceed remaining bytes"));
+    }
+    let mut out = Vec::with_capacity(d);
+    for _ in 0..d {
+        out.push(r.get_f64s(what)?);
+    }
+    Ok(out)
+}
+
+fn put_fit_state(w: &mut ByteWriter, s: &FitState) {
+    w.put_usize(s.dims().len());
+    for d in s.dims() {
+        put_dim(w, d);
+    }
+    match s.posterior() {
+        Some(p) => {
+            w.put_bool(true);
+            put_blocks(w, &p.b);
+            w.put_usize(p.gs_stats.sweeps);
+            w.put_f64(p.gs_stats.rel_residual);
+        }
+        None => w.put_bool(false),
+    }
+    match s.tilde() {
+        Some(t) => {
+            w.put_bool(true);
+            put_blocks(w, t);
+        }
+        None => w.put_bool(false),
+    }
+    w.put_f64(s.sigma2_y);
+    w.put_usize(s.gs_max_sweeps);
+    w.put_f64(s.gs_tol);
+    put_policy(w, s.patch_policy());
+    w.put_u64(s.incremental_inserts);
+    w.put_u64(s.incremental_removes);
+    w.put_u64(s.fallback_rebuilds);
+    w.put_u64(s.storage_stats().2); // snapshot_chunks_shared
+}
+
+fn get_fit_state(r: &mut ByteReader<'_>) -> Result<FitState, String> {
+    let dd = r.get_usize("dims")?;
+    if dd == 0 || dd > 1 << 20 {
+        return Err(format!("implausible dimension count {dd}"));
+    }
+    let mut dims = Vec::with_capacity(dd);
+    for _ in 0..dd {
+        dims.push(get_dim(r)?);
+    }
+    let post = if r.get_bool("post present")? {
+        let b = get_blocks(r, "posterior b")?;
+        let sweeps = r.get_usize("gs sweeps")?;
+        let rel_residual = r.get_f64("gs rel_residual")?;
+        Some(Posterior { b, gs_stats: GsStats { sweeps, rel_residual } })
+    } else {
+        None
+    };
+    let tilde = if r.get_bool("tilde present")? {
+        Some(get_blocks(r, "tilde")?)
+    } else {
+        None
+    };
+    let sigma2_y = r.get_f64("sigma2_y")?;
+    let gs_max_sweeps = r.get_usize("gs_max_sweeps")?;
+    let gs_tol = r.get_f64("gs_tol")?;
+    let policy = get_policy(r)?;
+    let ii = r.get_u64("incremental_inserts")?;
+    let ir = r.get_u64("incremental_removes")?;
+    let fr = r.get_u64("fallback_rebuilds")?;
+    let scs = r.get_u64("snapshot_chunks_shared")?;
+    Ok(FitState::from_parts(
+        dims,
+        post,
+        tilde,
+        sigma2_y,
+        gs_max_sweeps,
+        gs_tol,
+        policy,
+        (ii, ir, fr, scs),
+    ))
+}
+
+/// Serialize the mutable contents of a model — data, scales, trained state
+/// and escalation counters. The config is *not* included: the journal's
+/// own config record (the engine's `EngineConfig`) reconstructs it, so a
+/// checkpoint can never disagree with the model's declared shape.
+pub fn encode_gp(gp: &AdditiveGP, w: &mut ByteWriter) {
+    let (x_cols, y) = gp.data();
+    w.put_f64s(&gp.omegas);
+    w.put_usize(x_cols.len());
+    for c in x_cols {
+        w.put_f64s(c);
+    }
+    w.put_f64s(y);
+    w.put_u64(gp.solve_cold_retries);
+    w.put_u64(gp.solve_refit_escalations);
+    match gp.fit_state() {
+        Some(s) => {
+            w.put_bool(true);
+            put_fit_state(w, s);
+        }
+        None => w.put_bool(false),
+    }
+}
+
+/// Rebuild a model from [`encode_gp`] bytes onto a freshly-configured
+/// façade. Errors (never panics) on truncated or structurally inconsistent
+/// payloads, so a corrupt checkpoint surfaces as a recovery error.
+pub fn decode_gp(
+    r: &mut ByteReader<'_>,
+    cfg: AdditiveGpConfig,
+    d: usize,
+) -> Result<AdditiveGP, String> {
+    let omegas = r.get_f64s("omegas")?;
+    let dd = r.get_usize("x_cols")?;
+    if dd != d {
+        return Err(format!("checkpoint carries {dd} data columns, model declares {d}"));
+    }
+    let mut x_cols = Vec::with_capacity(dd);
+    for _ in 0..dd {
+        x_cols.push(r.get_f64s("x_col")?);
+    }
+    let y = r.get_f64s("y")?;
+    let cold = r.get_u64("solve_cold_retries")?;
+    let refits = r.get_u64("solve_refit_escalations")?;
+    let state = if r.get_bool("state present")? {
+        Some(get_fit_state(r)?)
+    } else {
+        None
+    };
+    let mut gp = AdditiveGP::new(cfg, d);
+    gp.restore_parts(omegas, x_cols, y, state, (cold, refits))?;
+    Ok(gp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn toy(n: usize, d: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.uniform_in(0.0, 5.0)).collect()).collect();
+        let y: Vec<f64> =
+            x.iter().map(|r| r.iter().map(|v| (1.1 * v).sin()).sum::<f64>()).collect();
+        (x, y)
+    }
+
+    fn roundtrip(gp: &AdditiveGP, d: usize) -> AdditiveGP {
+        let mut w = ByteWriter::new();
+        encode_gp(gp, &mut w);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        let back = decode_gp(&mut r, gp.cfg, d).expect("decode");
+        assert!(r.is_done(), "decoder consumed every byte");
+        back
+    }
+
+    /// encode → decode → encode is the identity on the bytes — the exact
+    /// property the recovery bit-identity argument needs.
+    #[test]
+    fn encode_decode_encode_is_identity() {
+        let (x, y) = toy(50, 2, 3);
+        let mut gp = AdditiveGP::new(AdditiveGpConfig::default(), 2);
+        gp.fit(&x[..40], &y[..40]);
+        // Leave a carried ṽ *and* a live posterior in place.
+        gp.predict(&[1.0, 2.0], false);
+        for i in 40..50 {
+            gp.observe(&x[i], y[i]);
+        }
+        gp.predict(&[2.0, 1.0], false);
+        let mut w = ByteWriter::new();
+        encode_gp(&gp, &mut w);
+        let first = w.into_bytes();
+        let back = roundtrip(&gp, 2);
+        let mut w2 = ByteWriter::new();
+        encode_gp(&back, &mut w2);
+        assert_eq!(first, w2.into_bytes(), "re-encode must be byte-identical");
+    }
+
+    /// A decoded model predicts bit-identically to the original, and its
+    /// *next* mutation + solve follows the same trajectory.
+    #[test]
+    fn decoded_model_is_bitwise_equivalent_forward() {
+        let (x, y) = toy(60, 3, 7);
+        let mut gp = AdditiveGP::new(AdditiveGpConfig::default(), 3);
+        gp.fit(&x[..52], &y[..52]);
+        for i in 52..58 {
+            gp.observe(&x[i], y[i]);
+        }
+        let mut back = roundtrip(&gp, 3);
+        // Same next mutations on both sides...
+        for i in 58..60 {
+            gp.observe(&x[i], y[i]);
+            back.observe(&x[i], y[i]);
+        }
+        // ...must land on bit-identical posteriors and predictions.
+        for q in [[1.0, 2.0, 3.0], [4.0, 0.5, 2.5]] {
+            let a = gp.predict(&q, true);
+            let b = back.predict(&q, true);
+            assert_eq!(a.mean.to_bits(), b.mean.to_bits(), "mean at {q:?}");
+            assert_eq!(a.var.to_bits(), b.var.to_bits(), "var at {q:?}");
+            for dd in 0..3 {
+                assert_eq!(a.mean_grad[dd].to_bits(), b.mean_grad[dd].to_bits());
+            }
+        }
+        assert!(back.run_audit().1.is_ok());
+    }
+
+    /// An inactive (pre-`min_points`) model round-trips too: raw data only.
+    #[test]
+    fn inactive_model_roundtrips() {
+        let (x, y) = toy(3, 2, 11);
+        let mut gp = AdditiveGP::new(AdditiveGpConfig::default(), 2);
+        for i in 0..3 {
+            gp.observe(&x[i], y[i]);
+        }
+        let back = roundtrip(&gp, 2);
+        assert_eq!(back.n(), 3);
+        assert!(back.fit_state().is_none());
+        assert_eq!(back.data().1, gp.data().1);
+    }
+
+    /// Corrupt payloads error with a diagnostic instead of panicking.
+    #[test]
+    fn corrupt_payloads_error_cleanly() {
+        let (x, y) = toy(45, 2, 5);
+        let mut gp = AdditiveGP::new(AdditiveGpConfig::default(), 2);
+        gp.fit(&x, &y);
+        gp.predict(&[1.0, 1.0], false);
+        let mut w = ByteWriter::new();
+        encode_gp(&gp, &mut w);
+        let bytes = w.into_bytes();
+        // Every truncation point must fail cleanly (or succeed only at the
+        // full length).
+        for cut in (0..bytes.len()).step_by(97) {
+            let mut r = ByteReader::new(&bytes[..cut]);
+            assert!(decode_gp(&mut r, gp.cfg, 2).is_err(), "cut at {cut}");
+        }
+        // Wrong dimension count is rejected up front.
+        let mut r = ByteReader::new(&bytes);
+        assert!(decode_gp(&mut r, gp.cfg, 3).unwrap_err().contains("columns"));
+    }
+}

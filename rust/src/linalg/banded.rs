@@ -371,6 +371,26 @@ impl Banded {
         self.store.to_flat()
     }
 
+    /// Rebuild from a flat row-major band layout (checkpoint decode). The
+    /// rope restarts with canonical chunk boundaries; chunk layout is
+    /// storage bookkeeping and never affects numeric content (the soak
+    /// property pinned in `linalg/chunks.rs`), so a decoded matrix is
+    /// bit-identical to the live one row by row.
+    pub fn from_flat(n: usize, kl: usize, ku: usize, flat: &[f64]) -> Result<Self, String> {
+        let w = kl + ku + 1;
+        if flat.len() != n * w {
+            return Err(format!(
+                "band payload is {} values, want n {n} × width {w}",
+                flat.len()
+            ));
+        }
+        let mut m = Banded::zeros(n, kl, ku);
+        for i in 0..n {
+            m.store.row_mut(i).copy_from_slice(&flat[i * w..(i + 1) * w]);
+        }
+        Ok(m)
+    }
+
     /// A new matrix reusing factor rows `[0, keep)` of `src` (whole chunks
     /// `Arc`-shared — `src` must be storage-clean, see
     /// [`ChunkedRows::from_prefix`]) padded with zero rows to `n_new`.
@@ -615,6 +635,11 @@ pub struct BandedLU {
 
 impl BandedLU {
     fn factor(a: &Banded) -> Self {
+        if let Some(act) = crate::util::fault::point!("lu.factor") {
+            if act == crate::util::fault::FaultAction::Panic {
+                panic!("injected fault: lu.factor");
+            }
+        }
         let n = a.n;
         let kl = a.kl;
         let kuf = (a.kl + a.ku).min(n.saturating_sub(1));
@@ -653,6 +678,51 @@ impl BandedLU {
     /// and the bench's deep-materialization baseline.
     pub fn fac_band(&self) -> &Banded {
         &self.fac
+    }
+
+    /// The pivot vector (`piv[k]` = row swapped with `k` at step `k`) —
+    /// checkpoint serialization surface.
+    pub fn piv(&self) -> &[usize] {
+        &self.piv
+    }
+
+    /// Determinant-sign parity of the pivoting (`±1`).
+    pub fn sign(&self) -> f64 {
+        self.sign
+    }
+
+    /// Reassemble a factorization from checkpoint-decoded parts. The parts
+    /// must come from `fac_band()`/`piv()`/`sign()` of a live factorization
+    /// (journal recovery); structural consistency is re-checked, numeric
+    /// content is trusted — re-eliminating here would break the recovery
+    /// bit-identity argument for matrices whose incremental factor differs
+    /// in rounding from a cold sweep.
+    pub fn from_parts(
+        n: usize,
+        kl: usize,
+        kuf: usize,
+        fac: Banded,
+        piv: Vec<usize>,
+        sign: f64,
+    ) -> Result<Self, String> {
+        if fac.n() != n || fac.kl() != kl || fac.ku() != kuf || piv.len() != n {
+            return Err(format!(
+                "LU parts disagree: n {n}, fac ({}, kl {}, ku {}), piv len {}",
+                fac.n(),
+                fac.kl(),
+                fac.ku(),
+                piv.len()
+            ));
+        }
+        if piv.iter().enumerate().any(|(k, &p)| p < k || p >= n) {
+            return Err("LU pivot vector out of range".to_string());
+        }
+        if sign != 1.0 && sign != -1.0 {
+            return Err(format!("LU sign {sign} is not ±1"));
+        }
+        let lu = BandedLU { n, kl, kuf, fac, piv: Arc::new(piv), sign };
+        enforce(&lu, "BandedLU::from_parts");
+        Ok(lu)
     }
 
     /// Storage counters of the packed factor's rope.

@@ -90,6 +90,28 @@ impl Permutation {
         self.to_sorted(points)
     }
 
+    /// The forward index vector (`fwd[s]` = original index of sorted
+    /// position `s`) — the checkpoint serialization surface: `inv` is
+    /// derived, so only `fwd` travels.
+    pub fn fwd(&self) -> &[usize] {
+        &self.fwd
+    }
+
+    /// Rebuild from a serialized forward vector, recomputing the inverse.
+    /// Errors (instead of panicking) on a non-bijection, so a corrupt
+    /// checkpoint surfaces as a recovery error.
+    pub fn from_fwd(fwd: Vec<usize>) -> Result<Self, String> {
+        let n = fwd.len();
+        let mut inv = vec![usize::MAX; n];
+        for (s, &o) in fwd.iter().enumerate() {
+            if o >= n || inv[o] != usize::MAX {
+                return Err(format!("permutation fwd is not a bijection at sorted pos {s}"));
+            }
+            inv[o] = s;
+        }
+        Ok(Permutation { fwd, inv })
+    }
+
     /// Extend the permutation with one new element: the new *original* index
     /// is `len()` (appended in data order) and it lands at `sorted_pos` in
     /// sorted order. `O(n)`.

@@ -1,0 +1,280 @@
+//! Minimal binary codec for the durability layer (`coordinator/journal.rs`
+//! and the checkpoint serializer in `gp::persist`).
+//!
+//! The offline image ships no serde, so records are hand-framed: fixed-width
+//! little-endian integers, `f64` shipped as raw IEEE-754 bits
+//! (`f64::to_bits`) so a decode → encode round trip is the identity on every
+//! value including `-0.0`, NaN payloads and subnormals — the property the
+//! crash-recovery bit-identity argument (DESIGN.md §Durability) rests on —
+//! and a table-driven CRC-32 (IEEE/zlib polynomial) for frame checksums.
+//!
+//! [`ByteReader`] is panic-free: every read is bounds-checked and returns
+//! `Err` on truncation, so a torn journal tail can never take the decoder
+//! down.
+
+/// Append-only byte sink with fixed-width little-endian encoders.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `usize` travels as `u64` so the format is identical across hosts.
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.put_u8(v as u8);
+    }
+
+    /// Raw IEEE bits — bit-exact round trip, no formatting/parsing.
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_f64s(&mut self, vs: &[f64]) {
+        self.put_usize(vs.len());
+        for &v in vs {
+            self.put_f64(v);
+        }
+    }
+
+    pub fn put_usizes(&mut self, vs: &[usize]) {
+        self.put_usize(vs.len());
+        for &v in vs {
+            self.put_usize(v);
+        }
+    }
+
+    pub fn put_bytes(&mut self, vs: &[u8]) {
+        self.put_usize(vs.len());
+        self.buf.extend_from_slice(vs);
+    }
+}
+
+/// Bounds-checked reader over an encoded byte slice. Errors name the field
+/// being decoded so a corrupt checkpoint is diagnosable.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "truncated while decoding {what}: need {n} bytes, have {}",
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self, what: &str) -> Result<u8, String> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn get_u32(&mut self, what: &str) -> Result<u32, String> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn get_u64(&mut self, what: &str) -> Result<u64, String> {
+        let b = self.take(8, what)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    pub fn get_usize(&mut self, what: &str) -> Result<usize, String> {
+        let v = self.get_u64(what)?;
+        usize::try_from(v).map_err(|_| format!("{what} {v} overflows usize"))
+    }
+
+    pub fn get_bool(&mut self, what: &str) -> Result<bool, String> {
+        match self.get_u8(what)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(format!("{what}: invalid bool byte {v}")),
+        }
+    }
+
+    pub fn get_f64(&mut self, what: &str) -> Result<f64, String> {
+        Ok(f64::from_bits(self.get_u64(what)?))
+    }
+
+    /// Length-prefixed `f64` vector. The length is sanity-checked against
+    /// the bytes actually remaining, so a corrupt prefix cannot trigger a
+    /// huge allocation.
+    pub fn get_f64s(&mut self, what: &str) -> Result<Vec<f64>, String> {
+        let n = self.get_usize(what)?;
+        if n > self.remaining() / 8 {
+            return Err(format!("{what}: claimed length {n} exceeds remaining bytes"));
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.get_f64(what)?);
+        }
+        Ok(v)
+    }
+
+    pub fn get_usizes(&mut self, what: &str) -> Result<Vec<usize>, String> {
+        let n = self.get_usize(what)?;
+        if n > self.remaining() / 8 {
+            return Err(format!("{what}: claimed length {n} exceeds remaining bytes"));
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.get_usize(what)?);
+        }
+        Ok(v)
+    }
+
+    pub fn get_bytes(&mut self, what: &str) -> Result<&'a [u8], String> {
+        let n = self.get_usize(what)?;
+        if n > self.remaining() {
+            return Err(format!("{what}: claimed length {n} exceeds remaining bytes"));
+        }
+        self.take(n, what)
+    }
+}
+
+/// CRC-32 (IEEE 802.3 / zlib polynomial, reflected), table-driven.
+pub fn crc32(data: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = !0u32;
+    for &b in data {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_primitives() {
+        let mut w = ByteWriter::new();
+        w.put_u8(0xAB);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 7);
+        w.put_usize(123_456);
+        w.put_bool(true);
+        w.put_bool(false);
+        w.put_f64(-0.0);
+        w.put_f64(f64::from_bits(0x7FF8_0000_0000_1234)); // NaN w/ payload
+        w.put_f64s(&[1.5, f64::MIN_POSITIVE, -3.25e300]);
+        w.put_usizes(&[0, 9, 42]);
+        w.put_bytes(b"tail");
+        let bytes = w.into_bytes();
+
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u8("a").unwrap(), 0xAB);
+        assert_eq!(r.get_u32("b").unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64("c").unwrap(), u64::MAX - 7);
+        assert_eq!(r.get_usize("d").unwrap(), 123_456);
+        assert!(r.get_bool("e").unwrap());
+        assert!(!r.get_bool("f").unwrap());
+        let z = r.get_f64("g").unwrap();
+        assert_eq!(z.to_bits(), (-0.0f64).to_bits(), "signed zero preserved");
+        assert_eq!(r.get_f64("h").unwrap().to_bits(), 0x7FF8_0000_0000_1234, "NaN bits preserved");
+        assert_eq!(r.get_f64s("i").unwrap(), vec![1.5, f64::MIN_POSITIVE, -3.25e300]);
+        assert_eq!(r.get_usizes("j").unwrap(), vec![0, 9, 42]);
+        assert_eq!(r.get_bytes("k").unwrap(), b"tail");
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn truncation_errors_not_panics() {
+        let mut w = ByteWriter::new();
+        w.put_f64s(&[1.0, 2.0, 3.0]);
+        let bytes = w.into_bytes();
+        for cut in 0..bytes.len() {
+            let mut r = ByteReader::new(&bytes[..cut]);
+            assert!(r.get_f64s("v").is_err(), "cut at {cut} must error");
+        }
+        // Absurd claimed length: rejected before allocating.
+        let mut w = ByteWriter::new();
+        w.put_u64(u64::MAX);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.get_f64s("v").unwrap_err().contains("exceeds remaining"));
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard check values for the IEEE polynomial.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn crc32_detects_bit_flips() {
+        let data = b"journal record payload";
+        let base = crc32(data);
+        let mut copy = data.to_vec();
+        for byte in 0..copy.len() {
+            for bit in 0..8 {
+                copy[byte] ^= 1 << bit;
+                assert_ne!(crc32(&copy), base, "flip at {byte}:{bit} undetected");
+                copy[byte] ^= 1 << bit;
+            }
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! Seeded fault injection for the chaos suite (`tests/chaos.rs`).
+//!
+//! A *fault plan* is a set of [`Rule`]s armed by a test: "on the Nth hit of
+//! injection point `journal.append`, return [`FaultAction::IoError`]".
+//! Production code marks its injectable sites with
+//! [`point!`](crate::util::fault::point) — a macro that expands to a plan
+//! lookup when the `fault-inject` feature is on, and to a literal `None`
+//! when it is off, so release builds carry no branch, no atomic, and no
+//! plan state on any hot path.
+//!
+//! Every site name must be registered in [`POINTS`]; `cargo xtask lint`
+//! cross-checks the call sites against this inventory in both directions
+//! (an unregistered site and a stale inventory entry both fail the gate)
+//! and bans calling [`check`] directly, so the feature gate cannot be
+//! bypassed by accident.
+//!
+//! The plan is process-global (the sites it serves are reached from pool
+//! workers, reader threads and the test thread alike), so tests that arm it
+//! must serialize on a lock of their own — see `chaos.rs`'s `fault_lock()`.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+/// Inventory of every fault-injection point compiled into the crate, in
+/// dispatch order (engine → journal → solver → substrate). `cargo xtask
+/// lint` fails if a `fault::point!` site uses a name missing here or if an
+/// entry here has no remaining call site.
+pub const POINTS: &[&str] = &[
+    "engine.mutate",
+    "journal.append",
+    "journal.fsync",
+    "journal.checkpoint",
+    "lu.factor",
+    "pcg.converge",
+    "pool.job",
+];
+
+/// What an armed rule makes the injection point do.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Panic at the site (exercises quarantine + journal resurrection).
+    Panic,
+    /// Surface an I/O error from the site (journal degradation paths).
+    IoError,
+    /// Write only the first `n` bytes of the record, then fail — a torn
+    /// tail, as left by a crash mid-`write`.
+    TornWrite(usize),
+    /// Report the operation as failed without side effects (e.g. force the
+    /// PCG convergence check to read "did not converge").
+    ForceFail,
+}
+
+/// One armed fault: fire `action` on the `nth` hit (1-based) of `point`
+/// since [`arm`]; `nth == 0` fires on every hit.
+#[derive(Clone, Copy, Debug)]
+pub struct Rule {
+    pub point: &'static str,
+    pub nth: u64,
+    pub action: FaultAction,
+}
+
+struct Plan {
+    rules: Vec<Rule>,
+    /// Hits per point since the last [`arm`] — the counter the `nth`
+    /// trigger is measured against.
+    hits: HashMap<&'static str, u64>,
+}
+
+fn plan() -> &'static Mutex<Plan> {
+    static PLAN: OnceLock<Mutex<Plan>> = OnceLock::new();
+    PLAN.get_or_init(|| Mutex::new(Plan { rules: Vec::new(), hits: HashMap::new() }))
+}
+
+fn plan_lock() -> std::sync::MutexGuard<'static, Plan> {
+    match plan().lock() {
+        Ok(g) => g,
+        // A panic *while armed* is the expected outcome of a Panic rule;
+        // the plan itself is only mutated under short straight-line
+        // sections, so the poisoned state is intact.
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Install a fault plan, resetting all hit counters. Replaces any plan
+/// already armed.
+pub fn arm(rules: &[Rule]) {
+    for r in rules {
+        assert!(
+            POINTS.contains(&r.point),
+            "fault rule targets unregistered point '{}'",
+            r.point
+        );
+    }
+    let mut p = plan_lock();
+    p.rules = rules.to_vec();
+    p.hits.clear();
+}
+
+/// Remove every armed rule (hit counters are kept until the next [`arm`]).
+pub fn disarm() {
+    plan_lock().rules.clear();
+}
+
+/// Number of times `point` has been hit since the last [`arm`].
+pub fn hits(point: &str) -> u64 {
+    *plan_lock().hits.get(point).unwrap_or(&0)
+}
+
+/// Record a hit of `point` and return the action to inject, if any rule
+/// matches. Call through [`point!`](crate::util::fault::point), never
+/// directly — the macro is what the `fault-inject` feature gates out.
+pub fn check(point: &'static str) -> Option<FaultAction> {
+    debug_assert!(POINTS.contains(&point), "unregistered fault point '{point}'");
+    let mut p = plan_lock();
+    if p.rules.is_empty() {
+        // Fast path for armed-capable but idle builds (the chaos suite
+        // between tests): count nothing, fire nothing.
+        return None;
+    }
+    let n = p.hits.entry(point).or_insert(0);
+    *n += 1;
+    let n = *n;
+    p.rules
+        .iter()
+        .find(|r| r.point == point && (r.nth == 0 || r.nth == n))
+        .map(|r| r.action)
+}
+
+/// The injection-point marker. Expands to [`check`]`(name)` under the
+/// `fault-inject` feature and to a constant `None` otherwise, so release
+/// builds compile every site to nothing.
+#[cfg(feature = "fault-inject")]
+#[macro_export]
+macro_rules! fault_point {
+    ($name:literal) => {
+        $crate::util::fault::check($name)
+    };
+}
+
+/// The injection-point marker (fault injection compiled out).
+#[cfg(not(feature = "fault-inject"))]
+#[macro_export]
+macro_rules! fault_point {
+    ($name:literal) => {{
+        None::<$crate::util::fault::FaultAction>
+    }};
+}
+
+pub use crate::fault_point as point;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The plan is process-global; these tests mutate it and so must not
+    // interleave. cargo runs tests in threads — serialize on a local lock.
+    fn serial() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        match LOCK.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    #[test]
+    fn nth_rule_fires_exactly_once() {
+        let _g = serial();
+        arm(&[Rule { point: "journal.append", nth: 3, action: FaultAction::IoError }]);
+        assert_eq!(check("journal.append"), None);
+        assert_eq!(check("journal.append"), None);
+        assert_eq!(check("journal.append"), Some(FaultAction::IoError));
+        assert_eq!(check("journal.append"), None, "nth is exact, not >=");
+        assert_eq!(hits("journal.append"), 4);
+        disarm();
+    }
+
+    #[test]
+    fn every_hit_rule_and_disarm() {
+        let _g = serial();
+        arm(&[Rule { point: "pool.job", nth: 0, action: FaultAction::Panic }]);
+        assert_eq!(check("pool.job"), Some(FaultAction::Panic));
+        assert_eq!(check("pool.job"), Some(FaultAction::Panic));
+        disarm();
+        assert_eq!(check("pool.job"), None);
+    }
+
+    #[test]
+    fn points_are_independent_and_rearm_resets() {
+        let _g = serial();
+        arm(&[Rule { point: "lu.factor", nth: 1, action: FaultAction::ForceFail }]);
+        assert_eq!(check("pcg.converge"), None, "other points unaffected");
+        assert_eq!(check("lu.factor"), Some(FaultAction::ForceFail));
+        arm(&[Rule { point: "lu.factor", nth: 1, action: FaultAction::ForceFail }]);
+        assert_eq!(check("lu.factor"), Some(FaultAction::ForceFail), "counters reset on arm");
+        disarm();
+    }
+
+    #[test]
+    #[should_panic(expected = "unregistered point")]
+    fn arming_an_unknown_point_is_a_test_bug() {
+        // No serial(): arm panics before touching rules used by others.
+        arm(&[Rule { point: "no.such.point", nth: 1, action: FaultAction::Panic }]);
+    }
+
+    #[test]
+    fn macro_matches_feature_gate() {
+        let _g = serial();
+        disarm();
+        let got: Option<FaultAction> = crate::util::fault::point!("engine.mutate");
+        assert_eq!(got, None, "idle plan injects nothing in either build");
+    }
+}

@@ -2,7 +2,9 @@
 //! (no `rand`, `serde_json`, `clap`, `criterion`, `anyhow`), so the small
 //! pieces this library needs are implemented here from scratch.
 
+pub mod codec;
 pub mod error;
+pub mod fault;
 pub mod json;
 pub mod pool;
 pub mod rng;

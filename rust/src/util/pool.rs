@@ -363,7 +363,16 @@ fn worker_loop(me: usize, sh: Arc<PoolShared>) {
         };
         let Some(job) = job else { return };
         sh.running.fetch_add(1, Ordering::Relaxed);
-        let outcome = catch_unwind(AssertUnwindSafe(|| job(me)));
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            // Chaos hook: lets the suite kill an arbitrary pool job inside
+            // the same containment the real payload runs under.
+            if let Some(act) = crate::util::fault::point!("pool.job") {
+                if act == crate::util::fault::FaultAction::Panic {
+                    panic!("injected fault: pool.job");
+                }
+            }
+            job(me)
+        }));
         sh.running.fetch_sub(1, Ordering::Relaxed);
         sh.executed.fetch_add(1, Ordering::Relaxed);
         if outcome.is_err() {

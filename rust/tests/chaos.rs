@@ -1,0 +1,637 @@
+//! Chaos suite (ISSUE 9): crash recovery and graceful degradation.
+//!
+//! Two layers:
+//!
+//! * **Unconditional** (any build): the crash-recovery bitwise property —
+//!   for every seed in `CHAOS_SEEDS`, a journaled scheduler that is
+//!   abandoned and rebuilt with [`Scheduler::recover`] must serve results
+//!   bit-identical to one that never crashed — plus torn-tail, bit-flip
+//!   and corrupt-head journal trials (recovery stops at the last valid
+//!   record, reports what it dropped, and never panics).
+//! * **`fault-inject` only** (the CI `chaos` job): seeded fault plans
+//!   drive the injection points — engine panics resurrect from the
+//!   journal, journal I/O errors latch `degraded` without dropping the
+//!   model, PCG non-convergence walks the warm → cold → refit ladder, and
+//!   a pool-job panic is contained to that job.
+//!
+//! The fault plan is process-global, and even the unarmed tests share the
+//! scheduler pool machinery, so every test serializes on [`serial`].
+//!
+//! Seeds come from `CHAOS_SEEDS` (comma-separated u64s; CI pins 8).
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Mutex, MutexGuard};
+
+use addgp::coordinator::engine::EngineConfig;
+use addgp::coordinator::{Command, JournalConfig, Response, Scheduler};
+use addgp::util::Rng;
+
+/// One test at a time: the fault plan is process-global, and interleaved
+/// armed/unarmed schedulers would read each other's rules.
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    match LOCK.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// The chaos seed set: `CHAOS_SEEDS` (comma-separated) or the CI default.
+fn seeds() -> Vec<u64> {
+    let raw = std::env::var("CHAOS_SEEDS")
+        .unwrap_or_else(|_| "11,23,37,41,53,67,79,97".to_string());
+    let out: Vec<u64> =
+        raw.split(',').filter_map(|s| s.trim().parse().ok()).collect();
+    assert!(!out.is_empty(), "CHAOS_SEEDS parsed to nothing: {raw:?}");
+    out
+}
+
+fn cfg(d: usize) -> EngineConfig {
+    EngineConfig { d, use_pjrt: false, lo: 0.0, hi: 4.0, seed: 11, ..Default::default() }
+}
+
+fn call(
+    sched: &Scheduler,
+    model: u64,
+    make: impl FnOnce(Sender<Response>) -> Command,
+) -> Response {
+    let (tx, rx) = channel();
+    sched.dispatch(model, make(tx));
+    rx.recv().expect("reply")
+}
+
+fn tmp_dir(tag: &str, seed: u64) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("addgp-chaos-{tag}-{}-{seed}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Drive a deterministic seeded mutation script: one activating batch, a
+/// rolling-window enable, then 12 mixed observe/forget ops. Returns the
+/// engine's data size after each journaled op (14 entries), so tail-loss
+/// tests know the state any journal prefix replays to.
+fn drive_script(sched: &Scheduler, m: u64, seed: u64) -> Vec<usize> {
+    let mut rng = Rng::new(seed);
+    let mut ns = Vec::new();
+    let n0 = 24 + (seed % 8) as usize;
+    let xs: Vec<Vec<f64>> = (0..n0)
+        .map(|_| vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)])
+        .collect();
+    let ys: Vec<f64> = xs.iter().map(|x| x[0].sin() + x[1].cos()).collect();
+    let mut known = xs.clone();
+    let r = call(sched, m, |reply| Command::ObserveBatch { xs, ys, reply });
+    match r {
+        Response::BatchObserved { n, .. } => {
+            assert_eq!(n, n0);
+            ns.push(n);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    // A cap slightly above n0: later observes overflow it, so replay also
+    // exercises deterministic evictions.
+    let r = call(sched, m, |reply| Command::RollingWindow {
+        max_n: n0 + 4,
+        max_age: None,
+        reply,
+    });
+    assert!(matches!(r, Response::Ok), "unexpected {r:?}");
+    ns.push(n0);
+    for _ in 0..12 {
+        if rng.uniform_in(0.0, 3.0) < 2.0 || known.is_empty() {
+            let x = vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)];
+            let y = x[0].sin() + x[1].cos() + 0.05 * rng.normal();
+            known.push(x.clone());
+            let r = call(sched, m, |reply| Command::Observe { x, y, reply });
+            match r {
+                Response::Observed { n, .. } => ns.push(n),
+                other => panic!("unexpected {other:?}"),
+            }
+        } else {
+            let i = (rng.uniform_in(0.0, known.len() as f64) as usize).min(known.len() - 1);
+            let x = known.swap_remove(i);
+            // A window-evicted point matches nothing (removed = 0) — still
+            // a journaled, deterministic op.
+            let r = call(sched, m, |reply| Command::Forget { x, reply });
+            match r {
+                Response::Forgotten { n, .. } => ns.push(n),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+    ns
+}
+
+/// A few more deterministic ops, used to check a recovered scheduler keeps
+/// tracking the never-crashed reference *after* the restart.
+fn drive_followup(sched: &Scheduler, m: u64, seed: u64) {
+    let mut rng = Rng::new(seed ^ 0xA5A5_5A5A);
+    for _ in 0..3 {
+        let x = vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)];
+        let y = x[0].sin() + x[1].cos();
+        let r = call(sched, m, |reply| Command::Observe { x, y, reply });
+        assert!(matches!(r, Response::Observed { .. }), "unexpected {r:?}");
+    }
+}
+
+/// Bitwise prediction surface at fixed probes (mean, variance, acquisition
+/// and gradients all ride along).
+fn probe(sched: &Scheduler, m: u64) -> Vec<u64> {
+    let xs = vec![vec![0.5, 3.5], vec![2.0, 2.0], vec![3.25, 0.75]];
+    let r = call(sched, m, |reply| Command::Predict { xs, beta: 2.0, grad: true, reply });
+    match r {
+        Response::Prediction { mu, svar, acq, gacq, .. } => mu
+            .iter()
+            .chain(&svar)
+            .chain(&acq)
+            .chain(gacq.iter().flatten())
+            .map(|v| v.to_bits())
+            .collect(),
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+/// The tentpole property: for every chaos seed, recover-then-serve equals
+/// never-crashed, bitwise — engine state bytes and the full prediction
+/// surface — and stays equal through post-recovery mutations.
+#[test]
+fn crash_recovery_is_bitwise_identical_across_seeds() {
+    let _g = serial();
+    for seed in seeds() {
+        let dir = tmp_dir("bitwise", seed);
+        let jcfg = JournalConfig::new(&dir);
+
+        // The run that will "crash", and the reference that never does.
+        let a = Scheduler::with_journal(2, jcfg.clone());
+        let ma = a.create_model(cfg(2));
+        drive_script(&a, ma, seed);
+        let r = Scheduler::new(2);
+        let mr = r.create_model(cfg(2));
+        drive_script(&r, mr, seed);
+
+        let state_a = a.engine_state_bytes(ma).expect("state");
+        let state_r = r.engine_state_bytes(mr).expect("state");
+        assert_eq!(state_a, state_r, "seed {seed}: journaling must not perturb the engine");
+        let preds_a = probe(&a, ma);
+        match call(&a, ma, |reply| Command::Stats { reply }) {
+            Response::Stats { journal_appends, degraded, recoveries, .. } => {
+                assert_eq!(journal_appends, 14, "seed {seed}: batch + window + 12 ops");
+                assert!(!degraded, "seed {seed}");
+                assert_eq!(recoveries, 0, "seed {seed}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Abandon with no handoff beyond what the journal already holds.
+        a.shutdown();
+        drop(a);
+
+        let (b, report) = Scheduler::recover(2, jcfg);
+        assert_eq!((report.models, report.failed), (1, 0), "seed {seed}: {:?}", report.errors);
+        assert_eq!(report.replayed_ops, 14, "seed {seed}");
+        assert_eq!((report.dropped_records, report.dropped_bytes), (0, 0), "seed {seed}");
+        let state_b = b.engine_state_bytes(ma).expect("recovered state");
+        assert_eq!(state_a, state_b, "seed {seed}: recovered state must be bit-identical");
+        assert_eq!(preds_a, probe(&b, ma), "seed {seed}: recovered predictions must match");
+
+        // Recover-then-serve == never-crashed: keep mutating both.
+        drive_followup(&b, ma, seed);
+        drive_followup(&r, mr, seed);
+        assert_eq!(
+            b.engine_state_bytes(ma),
+            r.engine_state_bytes(mr),
+            "seed {seed}: post-recovery trajectory diverged from the uncrashed run"
+        );
+        assert_eq!(probe(&b, ma), probe(&r, mr), "seed {seed}");
+
+        b.shutdown();
+        r.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Torn tails (a crash mid-`write`): recovery replays the valid prefix,
+/// repairs the file, reports exactly one dropped record, and the model
+/// serves at the prefix's state. Truncation points vary with the seed.
+#[test]
+fn torn_journal_tail_recovers_to_last_valid_record() {
+    let _g = serial();
+    for seed in seeds() {
+        let dir = tmp_dir("torn", seed);
+        let jcfg = JournalConfig::new(&dir);
+        let a = Scheduler::with_journal(2, jcfg.clone());
+        let m = a.create_model(cfg(2));
+        let ns = drive_script(&a, m, seed);
+        a.shutdown();
+        drop(a);
+
+        // Shear 1–8 bytes off the tail: every record is far larger, so the
+        // last record is torn mid-frame, never removed whole.
+        let path = jcfg.dir.join(format!("model-{m}.journal"));
+        let bytes = std::fs::read(&path).expect("journal");
+        assert!(bytes.len() > 200, "seed {seed}: short journal ({})", bytes.len());
+        let cut = 1 + (seed as usize % 8);
+        std::fs::write(&path, &bytes[..bytes.len() - cut]).expect("truncate");
+
+        let (b, report) = Scheduler::recover(2, jcfg);
+        assert_eq!((report.models, report.failed), (1, 0), "seed {seed}: {:?}", report.errors);
+        assert_eq!(report.replayed_ops, 13, "seed {seed}: all but the torn record");
+        assert_eq!(report.dropped_records, 1, "seed {seed}");
+        assert!(report.dropped_bytes > 0, "seed {seed}");
+        match call(&b, m, |reply| Command::Stats { reply }) {
+            Response::Stats { n, .. } => {
+                assert_eq!(n, ns[12], "seed {seed}: state of the 13-record prefix");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Still serving (probe panics on an Error reply).
+        assert!(!probe(&b, m).is_empty(), "seed {seed}");
+        b.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Bit-flips inside the tail (sector rot, partial page writes): the CRC
+/// catches the record, recovery stops there and reports the loss — no
+/// panic, no silent acceptance of corrupt state.
+#[test]
+fn bitflipped_journal_tail_is_detected_and_dropped() {
+    let _g = serial();
+    for seed in seeds() {
+        let dir = tmp_dir("bitflip", seed);
+        let jcfg = JournalConfig::new(&dir);
+        let a = Scheduler::with_journal(2, jcfg.clone());
+        let m = a.create_model(cfg(2));
+        drive_script(&a, m, seed);
+        a.shutdown();
+        drop(a);
+
+        let path = jcfg.dir.join(format!("model-{m}.journal"));
+        let mut bytes = std::fs::read(&path).expect("journal");
+        // Flip one bit ~30 bytes from the end: inside the last record (or
+        // its frame header), well past the config record.
+        let pos = bytes.len() - 30;
+        let bit = (seed % 8) as u32;
+        bytes[pos] ^= 1u8 << bit;
+        std::fs::write(&path, &bytes).expect("corrupt");
+
+        let (b, report) = Scheduler::recover(2, jcfg);
+        assert_eq!((report.models, report.failed), (1, 0), "seed {seed}: {:?}", report.errors);
+        assert!(report.dropped_records >= 1, "seed {seed}: {report:?}");
+        assert!(report.replayed_ops >= 11, "seed {seed}: {report:?}");
+        assert!(report.replayed_ops < 14, "seed {seed}: corrupt record must not replay");
+        b.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// A corrupt journal *head* (the config record) is unrecoverable — and the
+/// report says so instead of panicking: the model is skipped, the error is
+/// surfaced, and the recovered scheduler still accepts new models.
+#[test]
+fn corrupt_journal_head_fails_loud_not_crashy() {
+    let _g = serial();
+    let seed = seeds()[0];
+    let dir = tmp_dir("head", seed);
+    let jcfg = JournalConfig::new(&dir);
+    let a = Scheduler::with_journal(2, jcfg.clone());
+    let m = a.create_model(cfg(2));
+    drive_script(&a, m, seed);
+    a.shutdown();
+    drop(a);
+
+    let path = jcfg.dir.join(format!("model-{m}.journal"));
+    let mut bytes = std::fs::read(&path).expect("journal");
+    bytes[12] ^= 0x40; // inside the first (config) record's payload
+    std::fs::write(&path, &bytes).expect("corrupt");
+
+    let (b, report) = Scheduler::recover(2, jcfg.clone());
+    assert_eq!(report.models, 0, "{report:?}");
+    assert_eq!(report.failed, 1, "{report:?}");
+    assert!(!report.errors.is_empty(), "{report:?}");
+    assert!(!b.has_model(m));
+    // The fleet is degraded, not dead: fresh models still register (with
+    // ids clear of the failed journal).
+    let m2 = b.create_model(cfg(2));
+    assert!(m2 > m, "fresh ids must clear even unrecoverable journals");
+    b.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[cfg(feature = "fault-inject")]
+mod injected {
+    use super::*;
+    use addgp::util::fault::{self, FaultAction, Rule};
+
+    /// An injected engine panic mid-mutation: the command aborts with a
+    /// structured error, the engine is rebuilt bit-identical from its
+    /// journal, `Stats.recoveries` ticks, and serving continues.
+    #[test]
+    fn panicked_engine_resurrects_from_journal() {
+        let _g = serial();
+        let seed = seeds()[0];
+        let dir = tmp_dir("resurrect", seed);
+        let jcfg = JournalConfig::new(&dir);
+        let sched = Scheduler::with_journal(2, jcfg);
+        let m = sched.create_model(cfg(2));
+        let ns = drive_script(&sched, m, seed);
+        let before = sched.engine_state_bytes(m).expect("state");
+
+        fault::arm(&[Rule { point: "engine.mutate", nth: 1, action: FaultAction::Panic }]);
+        let r = call(&sched, m, |reply| Command::Observe {
+            x: vec![1.0, 1.0],
+            y: 0.5,
+            reply,
+        });
+        fault::disarm();
+        match r {
+            Response::Error(e) => {
+                assert!(e.contains("recovered from journal"), "{e}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Replay re-ran every journaled op exactly once.
+        assert_eq!(fault::hits("engine.mutate"), 15, "panicked op + 14 replayed");
+        let after = sched.engine_state_bytes(m).expect("state");
+        assert_eq!(before, after, "resurrection must be bit-identical");
+        match call(&sched, m, |reply| Command::Stats { reply }) {
+            Response::Stats { n, recoveries, degraded, .. } => {
+                assert_eq!(n, *ns.last().expect("script ran"), "panicked op never applied");
+                assert_eq!(recoveries, 1);
+                assert!(!degraded);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // And the model keeps mutating normally afterwards.
+        let r = call(&sched, m, |reply| Command::Observe {
+            x: vec![1.0, 1.0],
+            y: 0.5,
+            reply,
+        });
+        assert!(matches!(r, Response::Observed { .. }), "unexpected {r:?}");
+        sched.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Same drill, one layer deeper: a panic inside the banded-LU factor
+    /// update (mid-splice, engine state half-mutated) also resurrects.
+    #[test]
+    fn lu_factor_panic_resurrects_from_journal() {
+        let _g = serial();
+        let seed = seeds()[0];
+        let dir = tmp_dir("lufactor", seed);
+        let jcfg = JournalConfig::new(&dir);
+        let sched = Scheduler::with_journal(2, jcfg);
+        let m = sched.create_model(cfg(2));
+        drive_script(&sched, m, seed);
+        let before = sched.engine_state_bytes(m).expect("state");
+
+        fault::arm(&[Rule { point: "lu.factor", nth: 1, action: FaultAction::Panic }]);
+        let r = call(&sched, m, |reply| Command::Observe {
+            x: vec![2.0, 3.0],
+            y: -0.25,
+            reply,
+        });
+        fault::disarm();
+        match r {
+            Response::Error(e) => assert!(e.contains("recovered from journal"), "{e}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        let after = sched.engine_state_bytes(m).expect("state");
+        assert_eq!(before, after, "half-applied mutation must be rolled back bitwise");
+        match call(&sched, m, |reply| Command::Stats { reply }) {
+            Response::Stats { recoveries, .. } => assert_eq!(recoveries, 1),
+            other => panic!("unexpected {other:?}"),
+        }
+        sched.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// When even journal replay panics (the fault fires on *every* hit),
+    /// resurrection gives up cleanly: the model quarantines with a
+    /// structured error and queued work is failed, not hung.
+    #[test]
+    fn replay_panic_quarantines_instead_of_looping() {
+        let _g = serial();
+        let seed = seeds()[0];
+        let dir = tmp_dir("replaypanic", seed);
+        let jcfg = JournalConfig::new(&dir);
+        let sched = Scheduler::with_journal(2, jcfg);
+        let m = sched.create_model(cfg(2));
+        drive_script(&sched, m, seed);
+
+        fault::arm(&[Rule { point: "engine.mutate", nth: 0, action: FaultAction::Panic }]);
+        let r = call(&sched, m, |reply| Command::Observe {
+            x: vec![0.5, 0.5],
+            y: 0.1,
+            reply,
+        });
+        fault::disarm();
+        match r {
+            Response::Error(e) => {
+                assert!(e.contains("model disabled"), "{e}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Quarantined: every further command is refused, never queued.
+        let r = call(&sched, m, |reply| Command::Observe {
+            x: vec![0.5, 0.5],
+            y: 0.1,
+            reply,
+        });
+        match r {
+            Response::Error(e) => assert!(e.contains("engine stopped"), "{e}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        sched.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A journal I/O error must degrade durability, not availability: the
+    /// mutation that hit it still acks, `Stats.degraded` latches, serving
+    /// continues — but a later panic can no longer resurrect (the on-disk
+    /// history is incomplete) and says so.
+    #[test]
+    fn journal_io_error_degrades_but_keeps_serving() {
+        let _g = serial();
+        let seed = seeds()[1 % seeds().len()];
+        let dir = tmp_dir("degrade", seed);
+        let jcfg = JournalConfig::new(&dir);
+        let sched = Scheduler::with_journal(2, jcfg);
+        let m = sched.create_model(cfg(2));
+        drive_script(&sched, m, seed);
+
+        fault::arm(&[Rule { point: "journal.append", nth: 1, action: FaultAction::IoError }]);
+        let r = call(&sched, m, |reply| Command::Observe {
+            x: vec![3.0, 1.0],
+            y: 0.7,
+            reply,
+        });
+        fault::disarm();
+        // The op applied and acked — only its durability was lost.
+        match r {
+            Response::Observed { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        match call(&sched, m, |reply| Command::Stats { reply }) {
+            Response::Stats { degraded, journal_appends, .. } => {
+                assert!(degraded, "I/O failure must latch degraded");
+                assert_eq!(journal_appends, 14, "the failed append is not counted");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Still serving.
+        let r = call(&sched, m, |reply| Command::Observe {
+            x: vec![0.25, 3.75],
+            y: -0.1,
+            reply,
+        });
+        assert!(matches!(r, Response::Observed { .. }), "unexpected {r:?}");
+        // But resurrection is withheld: the journal no longer matches the
+        // live state, and silently replaying it would time-travel.
+        fault::arm(&[Rule { point: "engine.mutate", nth: 1, action: FaultAction::Panic }]);
+        let r = call(&sched, m, |reply| Command::Observe {
+            x: vec![1.5, 1.5],
+            y: 0.0,
+            reply,
+        });
+        fault::disarm();
+        match r {
+            Response::Error(e) => assert!(e.contains("journal degraded"), "{e}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        sched.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A torn write injected at the journal layer leaves the same on-disk
+    /// shape as a crash mid-`write`; a full restart then replays the valid
+    /// prefix and drops exactly the torn record.
+    #[test]
+    fn injected_torn_write_recovers_like_a_real_crash() {
+        let _g = serial();
+        let seed = seeds()[2 % seeds().len()];
+        let dir = tmp_dir("tornwrite", seed);
+        let jcfg = JournalConfig::new(&dir);
+        let sched = Scheduler::with_journal(2, jcfg.clone());
+        let m = sched.create_model(cfg(2));
+        let ns = drive_script(&sched, m, seed);
+
+        fault::arm(&[Rule { point: "journal.append", nth: 1, action: FaultAction::TornWrite(5) }]);
+        let r = call(&sched, m, |reply| Command::Observe {
+            x: vec![2.5, 2.5],
+            y: 0.3,
+            reply,
+        });
+        fault::disarm();
+        assert!(matches!(r, Response::Observed { .. }), "unexpected {r:?}");
+        match call(&sched, m, |reply| Command::Stats { reply }) {
+            Response::Stats { degraded, .. } => assert!(degraded),
+            other => panic!("unexpected {other:?}"),
+        }
+        sched.shutdown();
+        drop(sched);
+
+        let (b, report) = Scheduler::recover(2, jcfg);
+        assert_eq!((report.models, report.failed), (1, 0), "{:?}", report.errors);
+        assert_eq!(report.replayed_ops, 14, "every intact record replays");
+        assert_eq!(report.dropped_records, 1, "the torn record is dropped");
+        match call(&b, m, |reply| Command::Stats { reply }) {
+            Response::Stats { n, .. } => assert_eq!(n, ns[13], "pre-torn-op state"),
+            other => panic!("unexpected {other:?}"),
+        }
+        b.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Forced PCG non-convergence walks the escalation ladder: one miss
+    /// retries cold (counter ticks), two consecutive misses escalate to a
+    /// full refit — and the request still succeeds at every rung.
+    #[test]
+    fn pcg_nonconvergence_escalates_warm_cold_refit() {
+        let _g = serial();
+        let sched = Scheduler::new(2);
+        let m = sched.create_model(cfg(2));
+        let seed = seeds()[0];
+        drive_script(&sched, m, seed);
+        let (base_cold, base_refit) = match call(&sched, m, |reply| Command::Stats { reply }) {
+            Response::Stats { solve_cold_retries, solve_refit_escalations, .. } => {
+                (solve_cold_retries, solve_refit_escalations)
+            }
+            other => panic!("unexpected {other:?}"),
+        };
+
+        // Rung 1: warm solve "misses" once → cold retry converges.
+        fault::arm(&[Rule { point: "pcg.converge", nth: 1, action: FaultAction::ForceFail }]);
+        let r = call(&sched, m, |reply| Command::Observe {
+            x: vec![1.1, 2.2],
+            y: 0.4,
+            reply,
+        });
+        fault::disarm();
+        assert!(matches!(r, Response::Observed { .. }), "unexpected {r:?}");
+        match call(&sched, m, |reply| Command::Stats { reply }) {
+            Response::Stats { solve_cold_retries, solve_refit_escalations, .. } => {
+                assert_eq!(solve_cold_retries, base_cold + 1);
+                assert_eq!(solve_refit_escalations, base_refit);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // Rungs 1+2: warm and cold both miss → full refit, still served.
+        fault::arm(&[
+            Rule { point: "pcg.converge", nth: 1, action: FaultAction::ForceFail },
+            Rule { point: "pcg.converge", nth: 2, action: FaultAction::ForceFail },
+        ]);
+        let r = call(&sched, m, |reply| Command::Observe {
+            x: vec![3.3, 0.7],
+            y: -0.2,
+            reply,
+        });
+        fault::disarm();
+        assert!(matches!(r, Response::Observed { .. }), "unexpected {r:?}");
+        match call(&sched, m, |reply| Command::Stats { reply }) {
+            Response::Stats { solve_cold_retries, solve_refit_escalations, .. } => {
+                assert_eq!(solve_cold_retries, base_cold + 2);
+                assert_eq!(solve_refit_escalations, base_refit + 1);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        sched.shutdown();
+    }
+
+    /// A panic injected at the pool-job boundary kills exactly that job:
+    /// the caller sees a dropped reply, the worker survives, the panic is
+    /// counted, and the next job runs normally.
+    #[test]
+    fn pool_job_panic_is_contained_to_one_job() {
+        let _g = serial();
+        let sched = Scheduler::new(2);
+        let m = sched.create_model(cfg(2));
+        let seed = seeds()[0];
+        drive_script(&sched, m, seed);
+        let panics_before = sched.pool_stats().panics;
+
+        fault::arm(&[Rule { point: "pool.job", nth: 1, action: FaultAction::Panic }]);
+        let (tx, rx) = channel();
+        sched.dispatch(m, Command::Predict {
+            xs: vec![vec![1.0, 1.0]],
+            beta: 2.0,
+            grad: false,
+            reply: tx,
+        });
+        let lost = rx.recv();
+        fault::disarm();
+        assert!(lost.is_err(), "the killed job must drop its reply, got {lost:?}");
+        assert_eq!(sched.pool_stats().panics, panics_before + 1);
+
+        // The worker survived; the pool keeps serving.
+        let r = call(&sched, m, |reply| Command::Predict {
+            xs: vec![vec![1.0, 1.0]],
+            beta: 2.0,
+            grad: false,
+            reply,
+        });
+        assert!(matches!(r, Response::Prediction { .. }), "unexpected {r:?}");
+        sched.shutdown();
+    }
+}

@@ -148,3 +148,105 @@ fn concurrent_clients_share_the_worker_pool() {
     let mut c2 = Client::connect(addr).unwrap();
     let _ = c2.call(r#"{"op":"shutdown"}"#);
 }
+
+/// Regression (ISSUE 9 satellite): a peer that vanishes mid-request must
+/// not wedge its reader thread or take the server down. Two disconnect
+/// shapes are drilled — a torn final line (bytes, no newline, then EOF) and
+/// a pipelined client that closes before reading its replies — and both
+/// must land in the `disconnects=` counter of the metrics report while the
+/// server keeps serving and still shuts down with every thread joined.
+#[test]
+fn client_disconnect_mid_request_is_counted_and_survivable() {
+    use std::io::Write;
+    use std::net::TcpStream;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    // Keep a handle to the server (not just its address) so the test can
+    // read the metrics report while `serve` runs on its own thread.
+    let server = Arc::new(Server::bind("127.0.0.1:0", false, 0.0, 4.0).unwrap());
+    let addr = server.local_addr();
+    let srv = Arc::clone(&server);
+    let serve = std::thread::spawn(move || srv.serve().unwrap());
+
+    let disconnects = |report: &str| -> u64 {
+        report
+            .split("disconnects=")
+            .nth(1)
+            .and_then(|s| s.split_whitespace().next())
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0)
+    };
+    let wait_for_disconnects = |server: &Server, want: u64, what: &str| {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let got = disconnects(&server.metrics_report());
+            if got >= want {
+                return;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "{what}: disconnects stuck at {got}, want {want}\n{}",
+                server.metrics_report()
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    };
+
+    // A well-behaved client sets the model up.
+    let mut c = Client::connect(addr).unwrap();
+    let r = c.call(r#"{"op":"create_model","d":2}"#).unwrap();
+    let model = r.get("model").unwrap().as_usize().unwrap();
+    let mut rng = Rng::new(17);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for _ in 0..60 {
+        let x = vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)];
+        ys.push((x[0].sin() + x[1].cos()).to_string());
+        xs.push(format!("[{},{}]", x[0], x[1]));
+    }
+    let req = format!(
+        r#"{{"op":"observe_batch","model":{model},"xs":[{}],"ys":[{}]}}"#,
+        xs.join(","),
+        ys.join(",")
+    );
+    assert_eq!(c.call(&req).unwrap().get("ok").unwrap().as_bool(), Some(true));
+
+    // Disconnect shape 1: a torn final line — request bytes, no newline,
+    // then the peer vanishes. The bounded reader sees EOF with a partial
+    // buffer and counts the disconnect.
+    {
+        let mut torn = TcpStream::connect(addr).unwrap();
+        torn.write_all(format!("{{\"op\":\"stats\",\"model\":{model}").as_bytes()).unwrap();
+    } // dropped: FIN with the line unterminated
+    wait_for_disconnects(&server, 1, "torn final line");
+
+    // Disconnect shape 2: a pipelined client that closes before reading.
+    // The first (fast) reply hits the closed peer and provokes an RST, so
+    // the second reply's write — after a slow `fit` — fails and frees the
+    // reader thread.
+    {
+        let mut rude = TcpStream::connect(addr).unwrap();
+        rude.write_all(
+            format!(
+                "{{\"op\":\"stats\",\"model\":{model}}}\n{{\"op\":\"fit\",\"model\":{model},\"steps\":60}}\n"
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+    } // dropped with both replies unread
+    wait_for_disconnects(&server, 2, "pipelined close-before-read");
+
+    // The server is unimpressed: existing and new connections still serve.
+    let r = c.call(&format!(r#"{{"op":"stats","model":{model}}}"#)).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    let mut c2 = Client::connect(addr).unwrap();
+    let r = c2.call(&format!(r#"{{"op":"predict","model":{model},"xs":[[1.0,2.0]]}}"#)).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+
+    // Clean shutdown still joins every reader and worker — the vanished
+    // peers' reader threads did not leak or wedge the drain.
+    assert_eq!(c2.call(r#"{"op":"shutdown"}"#).unwrap().get("ok").unwrap().as_bool(), Some(true));
+    let stats = serve.join().unwrap();
+    assert!(stats.workers_joined >= 1, "pool must drain at shutdown");
+}

@@ -9,6 +9,7 @@
 //! here must be updated in the same PR — that is the point.
 
 use addgp::coordinator::protocol::{Request, Response};
+use addgp::coordinator::server::{Client, Server, MAX_LINE};
 use addgp::util::Json;
 
 /// Serialize `resp` (with optional id echo) and require exact equality with
@@ -170,8 +171,10 @@ fn response_prediction_and_suggestion() {
 
 /// The full stats surface, including the shared worker-pool fields added by
 /// the scheduler rewrite (`pool_workers`/`pool_busy`/`pool_queue_depth`/
-/// `pool_steals`) and the chunked-COW band-storage counters
-/// (`memmove_bytes`/`chunks_copied`/`chunks_shared` — additive, so old
+/// `pool_steals`), the chunked-COW band-storage counters
+/// (`memmove_bytes`/`chunks_copied`/`chunks_shared`), and the durability /
+/// degradation fields added with the mutation journal
+/// (`recoveries`/`degraded`/`journal_*`/`solve_*` — all additive, so old
 /// clients keep parsing). Removing or renaming any of these is a breaking
 /// wire change and must fail here.
 #[test]
@@ -198,6 +201,13 @@ fn response_stats_with_pool_fields() {
             chunks_shared: 44,
             window_evictions: 12,
             window_occupancy: 1000,
+            recoveries: 1,
+            degraded: false,
+            journal_appends: 250,
+            journal_bytes: 16384,
+            journal_checkpoints: 2,
+            solve_cold_retries: 3,
+            solve_refit_escalations: 1,
         },
         Some(2.0),
         r#"{"id":2,"ok":true,"n":1000,"d":4,"omegas":[1,0.5,2,1.5],
@@ -206,7 +216,10 @@ fn response_stats_with_pool_fields() {
             "cache_truncations":1,"fallback_rebuilds":0,
             "pool_workers":8,"pool_busy":3,"pool_queue_depth":5,"pool_steals":17,
             "memmove_bytes":4096,"chunks_copied":6,"chunks_shared":44,
-            "window_evictions":12,"window_occupancy":1000}"#,
+            "window_evictions":12,"window_occupancy":1000,
+            "recoveries":1,"degraded":false,
+            "journal_appends":250,"journal_bytes":16384,"journal_checkpoints":2,
+            "solve_cold_retries":3,"solve_refit_escalations":1}"#,
     );
 }
 
@@ -315,4 +328,204 @@ fn response_audit_report() {
         r#"{"ok":true,"passed":false,"structures":25,
             "violation":"Banded.data[3]: non-finite entry"}"#,
     );
+}
+
+// ---------------------------------------------------------------------------
+// Live-server wire hardening (ISSUE 9): malformed input of any shape must
+// come back as a structured `{"ok":false,"error":…}` on a connection that
+// stays usable — never a panic, never a silent close — and the graceful-
+// degradation error strings (`retryable:` deadline + load-shed markers) are
+// part of the wire contract, pinned byte-for-byte because clients branch on
+// them to decide whether to retry.
+// ---------------------------------------------------------------------------
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+/// Boot a native-only server, keeping a handle to it (the `Arc` lets the
+/// test reach `set_queue_limit`/`metrics_report` while `serve` runs).
+fn boot() -> (Arc<Server>, std::net::SocketAddr) {
+    let server = Arc::new(Server::bind("127.0.0.1:0", false, 0.0, 4.0).unwrap());
+    let addr = server.local_addr();
+    let srv = Arc::clone(&server);
+    std::thread::spawn(move || {
+        let _ = srv.serve();
+    });
+    (server, addr)
+}
+
+/// Read one reply line off a raw socket and require it to parse as JSON —
+/// a torn or absent reply fails here, which is exactly the regression this
+/// suite pins against.
+fn read_reply(reader: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.ends_with('\n'), "reply not newline-framed: {line:?}");
+    Json::parse(&line).expect("reply must be structured JSON")
+}
+
+/// Garbage bytes, invalid UTF-8, an absurd-length line, and a bad
+/// `deadline_ms` all get structured errors on the SAME connection, which
+/// then serves a real request — the reader survives every malformed frame.
+#[test]
+fn malformed_wire_input_gets_structured_errors_on_a_live_connection() {
+    let (_server, addr) = boot();
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+
+    // Garbage bytes that are not JSON.
+    w.write_all(b"!!definitely not json!!\n").unwrap();
+    let resp = read_reply(&mut r);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{resp}");
+    assert!(!resp.get("error").unwrap().as_str().unwrap().is_empty());
+
+    // Invalid UTF-8: decoded lossily, rejected by the parser — not a panic.
+    w.write_all(&[0xff, 0xfe, b'{', 0x80, b'}', b'\n']).unwrap();
+    let resp = read_reply(&mut r);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{resp}");
+
+    // Absurd length: one byte over MAX_LINE. The frame is discarded up to
+    // its newline and the error names the exact byte count — pinned.
+    let n = MAX_LINE + 1;
+    let mut big = vec![b'x'; n];
+    big.push(b'\n');
+    w.write_all(&big).unwrap();
+    let resp = read_reply(&mut r);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{resp}");
+    assert_eq!(
+        resp.get("error").unwrap().as_str(),
+        Some(format!("line too long ({n} bytes; limit {MAX_LINE}) — request discarded").as_str()),
+        "{resp}"
+    );
+
+    // Non-positive deadline budget: structured parse error, pinned text.
+    w.write_all(b"{\"op\":\"stats\",\"model\":0,\"deadline_ms\":0}\n").unwrap();
+    let resp = read_reply(&mut r);
+    assert_eq!(
+        resp.get("error").unwrap().as_str(),
+        Some("bad deadline_ms (want positive integer milliseconds)"),
+        "{resp}"
+    );
+
+    // After all of that the SAME connection still serves a real request,
+    // echoing its id — nothing was wedged or silently closed.
+    w.write_all(b"{\"op\":\"create_model\",\"d\":2,\"id\":42}\n").unwrap();
+    let resp = read_reply(&mut r);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+    assert_eq!(resp.get("id").unwrap().as_f64(), Some(42.0));
+
+    w.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
+    let resp = read_reply(&mut r);
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+}
+
+/// An expired `deadline_ms` budget returns the pinned `retryable:` error
+/// (the late reply is dropped server-side) and the connection — and the
+/// model — keep working afterwards.
+#[test]
+fn deadline_exceeded_is_a_pinned_retryable_error() {
+    let (_server, addr) = boot();
+    let mut c = Client::connect(addr).unwrap();
+    let r = c.call(r#"{"op":"create_model","d":4,"nu2":5}"#).unwrap();
+    let model = r.get("model").unwrap().as_usize().unwrap();
+
+    // A batch big enough (n=2500, d=4, ν=5/2) that its activating refit
+    // cannot possibly land inside a 1 ms budget.
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for i in 0..2500usize {
+        let a = (i % 50) as f64 * 0.08;
+        let b = (i / 50) as f64 * 0.08;
+        xs.push(format!("[{a},{b},{},{}]", (a + b) * 0.5, (a * b).fract()));
+        ys.push(format!("{}", a.sin() + b.cos()));
+    }
+    let req = format!(
+        r#"{{"op":"observe_batch","model":{model},"xs":[{}],"ys":[{}],"deadline_ms":1}}"#,
+        xs.join(","),
+        ys.join(",")
+    );
+    let r = c.call(&req).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+    assert_eq!(
+        r.get("error").unwrap().as_str(),
+        Some("retryable: deadline exceeded after 1ms"),
+        "{r}"
+    );
+
+    // The timed-out mutation still applies server-side (only the reply was
+    // dropped); an undeadlined follow-up sees the ingested batch. Stats
+    // serializes behind the batch on the engine lock, but poll in case the
+    // probe wins the lock before the drain job starts.
+    let mut n = 0;
+    for _ in 0..500 {
+        let r = c.call(&format!(r#"{{"op":"stats","model":{model}}}"#)).unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        n = r.get("n").unwrap().as_usize().unwrap();
+        if n == 2500 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert_eq!(n, 2500, "a timed-out mutation must still apply server-side");
+    let _ = c.call(r#"{"op":"shutdown"}"#);
+}
+
+/// Queue-depth load shedding: with the limit forced to 1, a request issued
+/// while another is in flight is refused at the door with the pinned
+/// `retryable:` overload error — and the in-flight request still completes.
+#[test]
+fn overload_sheds_with_a_pinned_retryable_error() {
+    let (server, addr) = boot();
+    server.set_queue_limit(1);
+    let mut c = Client::connect(addr).unwrap();
+    let r = c.call(r#"{"op":"create_model","d":3,"nu2":5}"#).unwrap();
+    let model = r.get("model").unwrap().as_usize().unwrap();
+
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for i in 0..800usize {
+        let a = (i % 40) as f64 * 0.1;
+        let b = (i / 40) as f64 * 0.2;
+        xs.push(format!("[{a},{b},{}]", (a + b) * 0.5));
+        ys.push(format!("{}", a.sin() + b.cos()));
+    }
+    let req = format!(
+        r#"{{"op":"observe_batch","model":{model},"xs":[{}],"ys":[{}]}}"#,
+        xs.join(","),
+        ys.join(",")
+    );
+    assert_eq!(c.call(&req).unwrap().get("ok").unwrap().as_bool(), Some(true));
+
+    // Occupy the single slot with a slow hyperparameter fit on a raw socket
+    // (written but not yet read, so it stays in flight while we probe).
+    let a = TcpStream::connect(addr).unwrap();
+    let mut aw = a.try_clone().unwrap();
+    let mut ar = BufReader::new(a);
+    aw.write_all(format!("{{\"op\":\"fit\",\"model\":{model},\"steps\":300}}\n").as_bytes())
+        .unwrap();
+
+    // Probe until we overlap the in-flight fit; the shed error is immediate
+    // (refused at the door, never queued) so this terminates fast.
+    let mut shed = None;
+    for _ in 0..10_000 {
+        let r = c.call(&format!(r#"{{"op":"stats","model":{model}}}"#)).unwrap();
+        if r.get("ok").unwrap().as_bool() == Some(false) {
+            shed = r.get("error").unwrap().as_str().map(str::to_owned);
+            break;
+        }
+    }
+    let shed = shed.expect("probe never overlapped the in-flight fit");
+    assert_eq!(shed, "retryable: server overloaded (2 requests in flight, limit 1)");
+
+    // Shedding refused the probe at the door — it did not cancel the
+    // in-flight fit, whose reply arrives intact.
+    let fit = read_reply(&mut ar);
+    assert_eq!(fit.get("ok").unwrap().as_bool(), Some(true), "{fit}");
+
+    // Fleet idle again: the previously-shed client is served normally.
+    let r = c.call(&format!(r#"{{"op":"stats","model":{model}}}"#)).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    let _ = c.call(r#"{"op":"shutdown"}"#);
 }

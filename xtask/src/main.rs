@@ -43,6 +43,13 @@
 //!    strict-invariant audits, counters and cache remaps. Intentional
 //!    exceptions are annotated `// lint: mutation-ok (<why>)` on the line
 //!    or within the three lines above.
+//! 8. **fault-inventory** — every seeded-fault injection site
+//!    (`fault::point!("name")`) must use a name registered in
+//!    `util/fault.rs`'s `POINTS` inventory, every inventory entry must
+//!    keep at least one call site (stale entries are findings), and
+//!    calling `fault::check(` directly outside `util/fault.rs` is banned —
+//!    the `point!` macro is what the `fault-inject` feature compiles out,
+//!    so a direct call would put plan lookups on release hot paths.
 //!
 //! The scanners are deliberately string/line-based, not syn-based: they are
 //! auditable in a glance, dependency-free, and err toward *not* flagging
@@ -503,6 +510,136 @@ fn scan_mutation_plumbing(name: &str, src: &str) -> Vec<String> {
     out
 }
 
+/// One line with comments dropped but string contents *kept* — lint 8 reads
+/// the injection-point name out of the string literal, which `code_only`
+/// would blank. Cuts at the first `//` outside a string literal.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut prev_backslash = false;
+    let mut iter = line.char_indices().peekable();
+    while let Some((i, c)) = iter.next() {
+        match c {
+            '\\' if in_str => {
+                prev_backslash = !prev_backslash;
+                continue;
+            }
+            '"' if !prev_backslash => in_str = !in_str,
+            '/' if !in_str => {
+                if let Some((_, '/')) = iter.peek() {
+                    return &line[..i];
+                }
+            }
+            _ => {}
+        }
+        prev_backslash = false;
+    }
+    line
+}
+
+/// Where the seeded-fault inventory lives (lint 8's single source of truth;
+/// the file is also the only one allowed to call `fault::check(` directly).
+const FAULT_RS: &str = "rust/src/util/fault.rs";
+
+/// Lint 8: the seeded-fault inventory, cross-checked both ways. Every
+/// `fault::point!("name")` call site must use a name registered in
+/// `FAULT_RS`'s `POINTS` const, and every `POINTS` entry must keep at
+/// least one call site (a stale entry means a chaos scenario silently
+/// stopped exercising anything). Direct `fault::check(` calls outside
+/// `FAULT_RS` are banned: the `point!` macro is the `fault-inject`
+/// feature gate — bypassing it would put plan lookups on release paths.
+fn scan_fault_points(files: &[(String, String)]) -> Vec<String> {
+    let mut out = Vec::new();
+    let Some((_, fault_src)) = files.iter().find(|(n, _)| n == FAULT_RS) else {
+        return vec![format!(
+            "{FAULT_RS}: missing — the fault-injection inventory lives here"
+        )];
+    };
+    // Parse the inventory: every string literal between the `pub const
+    // POINTS` line and its closing `];`.
+    let mut inventory: Vec<String> = Vec::new();
+    let mut in_points = false;
+    for line in fault_src.lines() {
+        let code = strip_comment(line);
+        if code.contains("pub const POINTS") {
+            in_points = true;
+        }
+        if !in_points {
+            continue;
+        }
+        let mut rest = code;
+        while let Some(a) = rest.find('"') {
+            let tail = &rest[a + 1..];
+            let Some(b) = tail.find('"') else { break };
+            inventory.push(tail[..b].to_string());
+            rest = &tail[b + 1..];
+        }
+        if code.contains("];") {
+            break;
+        }
+    }
+    if inventory.is_empty() {
+        out.push(format!(
+            "{FAULT_RS}: `pub const POINTS` inventory not found or empty"
+        ));
+    }
+    let mut used: Vec<String> = Vec::new();
+    for (name, src) in files {
+        let lines: Vec<&str> = src.lines().collect();
+        let mask = test_region_mask(&lines);
+        for (i, line) in lines.iter().enumerate() {
+            let code = strip_comment(line);
+            if name != FAULT_RS && !mask[i] && code.contains("fault::check(") {
+                out.push(format!(
+                    "{name}:{}: direct `fault::check(` call — go through \
+                     `fault::point!(\"…\")` so the `fault-inject` feature \
+                     gate compiles the probe out of release builds",
+                    i + 1
+                ));
+            }
+            let Some(pos) = code.find("point!(") else { continue };
+            // Only the fault macro (`fault::point!` / `fault_point!`), not
+            // some other macro whose name happens to end in `point`.
+            let head = &code[..pos];
+            if !(head.ends_with("fault::") || head.ends_with("fault_")) {
+                continue;
+            }
+            let tail = &code[pos..];
+            let lit = tail.find('"').and_then(|a| {
+                let t = &tail[a + 1..];
+                t.find('"').map(|b| t[..b].to_string())
+            });
+            let Some(lit) = lit else {
+                out.push(format!(
+                    "{name}:{}: fault point without a literal name — the \
+                     inventory cross-check needs `fault::point!(\"…\")`",
+                    i + 1
+                ));
+                continue;
+            };
+            if !inventory.contains(&lit) {
+                out.push(format!(
+                    "{name}:{}: fault point \"{lit}\" is not registered in \
+                     {FAULT_RS}'s POINTS inventory — register it there so \
+                     `fault::arm` can validate chaos plans against it",
+                    i + 1
+                ));
+            }
+            if !used.contains(&lit) {
+                used.push(lit);
+            }
+        }
+    }
+    for p in &inventory {
+        if !used.contains(p) {
+            out.push(format!(
+                "{FAULT_RS}: POINTS entry \"{p}\" has no remaining \
+                 `fault::point!` call site — stale inventory entry"
+            ));
+        }
+    }
+    out
+}
+
 /// The factor-stack modules lint 7 exempts (`linalg/` is exempted by path
 /// prefix): the splice surface's own implementation and its one sanctioned
 /// caller, `FitState`.
@@ -576,6 +713,9 @@ fn lint() -> ExitCode {
     let manifest =
         std::fs::read_to_string(rust.join("Cargo.toml")).unwrap_or_default();
     findings.extend(scan_feature_gate(&manifest, &lib_sources));
+
+    // 8. Fault-point inventory, two-way, over the same library sources.
+    findings.extend(scan_fault_points(&lib_sources));
 
     // 5. SAFETY comments, crate-wide (src + tests + benches + examples).
     let mut all_rust = Vec::new();
@@ -752,6 +892,79 @@ mod tests {
             scan_mutation_plumbing("rust/src/gp/model.rs", prose).is_empty(),
             "comments stripped"
         );
+    }
+
+    /// A minimal stand-in for `util/fault.rs` with a two-entry inventory.
+    fn fake_fault_rs(points: &[&str]) -> (String, String) {
+        let mut src = String::from("pub const POINTS: &[&str] = &[\n");
+        for p in points {
+            src.push_str(&format!("    \"{p}\",\n"));
+        }
+        src.push_str("];\npub fn check(name: &str) -> Option<u8> {\n    let _ = name;\n    None\n}\n");
+        (FAULT_RS.to_string(), src)
+    }
+
+    #[test]
+    fn strip_comment_keeps_strings_drops_comments() {
+        assert_eq!(strip_comment("point!(\"a.b\") // point!(\"prose\")"), "point!(\"a.b\") ");
+        assert_eq!(strip_comment("/// doc prose point!(\"x\")"), "");
+        assert_eq!(strip_comment("let s = \"slash // inside\";"), "let s = \"slash // inside\";");
+    }
+
+    #[test]
+    fn fault_point_scanner_two_way_inventory_check() {
+        let sites = (
+            "rust/src/a.rs".to_string(),
+            "fn f() {\n    if let Some(_a) = crate::util::fault::point!(\"a.b\") {}\n    \
+             if let Some(_c) = crate::util::fault::point!(\"c.d\") {}\n}\n"
+                .to_string(),
+        );
+        let clean = vec![fake_fault_rs(&["a.b", "c.d"]), sites.clone()];
+        assert!(scan_fault_points(&clean).is_empty(), "{:?}", scan_fault_points(&clean));
+
+        // Seeded violation 1: a call site using an unregistered name.
+        let rogue = (
+            "rust/src/b.rs".to_string(),
+            "fn g() {\n    let _ = crate::util::fault::point!(\"not.registered\");\n}\n".to_string(),
+        );
+        let f = scan_fault_points(&[fake_fault_rs(&["a.b", "c.d"]), sites.clone(), rogue]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].starts_with("rust/src/b.rs:2:"), "{}", f[0]);
+        assert!(f[0].contains("not.registered"), "{}", f[0]);
+
+        // Seeded violation 2: a stale inventory entry with no call site.
+        let f = scan_fault_points(&[fake_fault_rs(&["a.b", "c.d", "ghost.point"]), sites.clone()]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].contains("ghost.point"), "{}", f[0]);
+        assert!(f[0].contains("stale"), "{}", f[0]);
+
+        // Missing inventory file is itself a finding.
+        let f = scan_fault_points(&[sites]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].contains("missing"), "{}", f[0]);
+    }
+
+    #[test]
+    fn fault_point_scanner_bans_direct_check_and_strips_prose() {
+        let direct = (
+            "rust/src/c.rs".to_string(),
+            "fn h() {\n    let _ = crate::util::fault::check(\"a.b\");\n}\n".to_string(),
+        );
+        let sites = (
+            "rust/src/a.rs".to_string(),
+            "fn f() { let _ = crate::util::fault::point!(\"a.b\"); }\n".to_string(),
+        );
+        let f = scan_fault_points(&[fake_fault_rs(&["a.b"]), sites.clone(), direct]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].contains("direct `fault::check("), "{}", f[0]);
+        // …but fault.rs itself may call check (it *is* check), and prose
+        // mentions of point!("…") in comments are not call sites.
+        let prose = (
+            "rust/src/d.rs".to_string(),
+            "/// Thread chaos through fault::point!(\"bogus.name\") sites.\nfn f() {}\n".to_string(),
+        );
+        let f = scan_fault_points(&[fake_fault_rs(&["a.b"]), sites, prose]);
+        assert!(f.is_empty(), "{f:?}");
     }
 
     #[test]
