@@ -6,11 +6,12 @@
 //!   L2 JAX graph wrapping the
 //!   L1 Pallas window kernel
 //!
-//! — then drives a real workload over the wire: stream observations of the
-//! 5-D Schwefel function, fit hyperparameters, issue batched acquisition
-//! queries from concurrent clients, and run a short sequential BO loop via
-//! `suggest`. Reports latency/throughput and verifies PJRT actually served
-//! the batches (falls back to native with a notice if artifacts are absent).
+//! — then drives a real workload over the wire through the typed protocol
+//! v3 [`Client`]: stream observations of the 5-D Schwefel function, fit
+//! hyperparameters, issue batched acquisition queries from concurrent
+//! clients, and run a short sequential BO loop via `suggest`. Reports
+//! latency/throughput and verifies PJRT actually served the batches (falls
+//! back to native with a notice if artifacts are absent).
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example serve_bo
@@ -19,8 +20,8 @@
 use std::time::Instant;
 
 use addgp::bo::testfns::{schwefel, NoisyObjective};
-use addgp::coordinator::server::{Client, Server};
-use addgp::ensure;
+use addgp::coordinator::server::Server;
+use addgp::coordinator::Client;
 use addgp::util::error::Result;
 use addgp::util::Rng;
 
@@ -39,11 +40,7 @@ fn main() -> Result<()> {
     println!("coordinator on {addr}");
 
     let mut c = Client::connect(addr)?;
-    let r = c.call(&format!(
-        r#"{{"op":"create_model","d":{d},"nu2":1,"omega":0.01,"sigma2":1.0}}"#
-    ))?;
-    ensure!(r.get("ok").unwrap().as_bool() == Some(true), "create failed: {r}");
-    let model = r.get("model").unwrap().as_usize().unwrap();
+    let model = c.create_model(d, 1, 0.01, 1.0)?;
 
     // Stream 400 noisy Schwefel observations.
     let f = schwefel;
@@ -53,26 +50,20 @@ fn main() -> Result<()> {
     let mut ys = Vec::new();
     for _ in 0..400 {
         let x: Vec<f64> = (0..d).map(|_| rng.uniform_in(-500.0, 500.0)).collect();
-        let y = obj.sample(&x, &mut rng);
-        xs.push(format!(
-            "[{}]",
-            x.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
-        ));
-        ys.push(y.to_string());
+        ys.push(obj.sample(&x, &mut rng));
+        xs.push(x);
     }
     let t0 = Instant::now();
-    let r = c.call(&format!(
-        r#"{{"op":"observe_batch","model":{model},"xs":[{}],"ys":[{}]}}"#,
-        xs.join(","),
-        ys.join(",")
-    ))?;
-    ensure!(r.get("ok").unwrap().as_bool() == Some(true));
-    println!("ingested 400 observations in {:.2}s", t0.elapsed().as_secs_f64());
+    let b = c.observe_batch(model, &xs, &ys)?;
+    println!(
+        "ingested 400 observations in {:.2}s (path: {})",
+        t0.elapsed().as_secs_f64(),
+        b.path
+    );
 
     // Fit hyperparameters server-side.
     let t0 = Instant::now();
-    let r = c.call(&format!(r#"{{"op":"fit","model":{model},"steps":10}}"#))?;
-    ensure!(r.get("ok").unwrap().as_bool() == Some(true));
+    c.fit(model, 10)?;
     println!("MLE fit (10 Adam steps) in {:.2}s", t0.elapsed().as_secs_f64());
 
     // Batched acquisition queries from 4 concurrent clients.
@@ -81,32 +72,18 @@ fn main() -> Result<()> {
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for t in 0..4u64 {
-        let model = model;
         handles.push(std::thread::spawn(move || -> Vec<f64> {
             let mut c = Client::connect(addr).unwrap();
             let mut rng = Rng::new(0xC11E + t);
             let mut lat = Vec::new();
             for _ in 0..queries_per_client {
-                let rows: Vec<String> = (0..batch_per_query)
-                    .map(|_| {
-                        let x: Vec<String> = (0..5)
-                            .map(|_| rng.uniform_in(-480.0, 480.0).to_string())
-                            .collect();
-                        format!("[{}]", x.join(","))
-                    })
+                let rows: Vec<Vec<f64>> = (0..batch_per_query)
+                    .map(|_| (0..5).map(|_| rng.uniform_in(-480.0, 480.0)).collect())
                     .collect();
-                let req = format!(
-                    r#"{{"op":"predict","model":{model},"xs":[{}],"beta":2.0,"grad":true}}"#,
-                    rows.join(",")
-                );
                 let q0 = Instant::now();
-                let r = c.call(&req).unwrap();
+                let p = c.predict(model, &rows, 2.0, true).unwrap();
                 lat.push(q0.elapsed().as_secs_f64());
-                assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
-                assert_eq!(
-                    r.get("mu").unwrap().as_f64_vec().unwrap().len(),
-                    batch_per_query
-                );
+                assert_eq!(p.mu.len(), batch_per_query);
             }
             lat
         }));
@@ -131,37 +108,29 @@ fn main() -> Result<()> {
     let mut best = f64::INFINITY;
     let t0 = Instant::now();
     for _ in 0..20 {
-        let r = c.call(&format!(r#"{{"op":"suggest","model":{model},"beta":2.0}}"#))?;
-        let x = r.get("x").unwrap().as_f64_vec().unwrap();
+        let x = c.suggest(model, 2.0)?;
         let y = obj.sample(&x, &mut rng);
         best = best.min(y);
-        let req = format!(
-            r#"{{"op":"observe","model":{model},"x":[{}],"y":{y}}}"#,
-            x.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
-        );
-        let r = c.call(&req)?;
-        ensure!(r.get("ok").unwrap().as_bool() == Some(true));
+        c.observe(model, &x, y)?;
     }
     println!(
         "20 suggest→observe BO rounds in {:.2}s; best f = {best:.3}",
         t0.elapsed().as_secs_f64()
     );
 
-    // Confirm which execution path served the predictions.
-    let r = c.call(&format!(r#"{{"op":"stats","model":{model}}}"#))?;
-    let pjrt = r.get("pjrt_batches").unwrap().as_f64().unwrap();
-    let native = r.get("native_queries").unwrap().as_f64().unwrap();
+    // Confirm which execution path served the predictions — the typed
+    // stats reply carries the v3 nested sections already parsed.
+    let s = c.stats(model)?;
     println!(
-        "execution paths: {pjrt} PJRT batches, {native} native queries \
+        "execution paths: {} PJRT batches, {} native queries \
          (cache hits {} / misses {})",
-        r.get("cache_hits").unwrap().as_f64().unwrap(),
-        r.get("cache_misses").unwrap().as_f64().unwrap()
+        s.solve.pjrt_batches, s.solve.native_queries, s.solve.cache_hits, s.solve.cache_misses
     );
-    if pjrt == 0.0 {
+    if s.solve.pjrt_batches == 0 {
         println!("NOTE: PJRT did not serve — run `make artifacts` for the compiled path");
     }
 
-    let _ = c.call(r#"{"op":"shutdown"}"#);
+    let _ = c.shutdown();
     println!("serve_bo OK");
     Ok(())
 }

@@ -1,0 +1,239 @@
+//! **Cluster driver** (DESIGN.md §Replication): one writer process plus N
+//! stateless read replicas, wired through the protocol v3 replication
+//! surface — generation-numbered snapshot ships, invalidation pushes, and
+//! replica-served `predict`/`suggest` at arbitrary fan-out.
+//!
+//! The parent process boots the home shard (writer), seeds a model, then
+//! re-executes itself `--replica` N times: each child binds its own port,
+//! subscribes to the writer, imports the snapshot artifact, and serves
+//! reads until it receives a `shutdown`. The parent verifies every replica
+//! answers the probe grid **bit-identically** to the writer, then hammers
+//! the fleet with acquisition reads and reports aggregate throughput next
+//! to the single-writer baseline. CI runs this twice (2 then 4 replicas)
+//! and gates on the fleet throughput scaling — see the `cluster` job.
+//!
+//! ```sh
+//! cargo run --release --example serve_cluster           # 2 replicas
+//! REPLICAS=4 cargo run --release --example serve_cluster
+//! ```
+//!
+//! Machine-readable output lines:
+//!
+//! ```text
+//! BIT_IDENTITY OK replicas=<n>
+//! CLUSTER replicas=<n> fleet_pts_per_s=<f> writer_pts_per_s=<w> speedup=<r>
+//! ```
+
+use std::io::{BufRead, BufReader};
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+use addgp::coordinator::server::Server;
+use addgp::coordinator::{Client, Replica, ReplicaConfig};
+use addgp::util::error::Result;
+use addgp::util::Rng;
+use addgp::{anyhow, ensure};
+
+const D: usize = 4;
+const LO: f64 = 0.0;
+const HI: f64 = 4.0;
+const SEED_N: usize = 500;
+const BATCH: usize = 16;
+
+/// Child role: bind a replica, report its address on stdout, serve until
+/// the parent sends `shutdown`, then report the serve stats.
+fn replica_main(args: &[String]) -> Result<()> {
+    let writer = args.get(2).cloned().ok_or_else(|| anyhow!("--replica needs <writer_addr>"))?;
+    let model: u64 = args
+        .get(3)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("--replica needs <model_id>"))?;
+    let rep = Replica::bind(
+        "127.0.0.1:0",
+        ReplicaConfig { writer, models: vec![model], lo: LO, hi: HI, seed: 7 },
+    )
+    .map_err(|e| anyhow!("replica bind: {e}"))?;
+    println!("REPLICA_ADDR {}", rep.local_addr());
+    let stats = rep.serve();
+    println!(
+        "REPLICA_STATS imported={} invalidations={} refresh_failures={} reads={}",
+        stats.snapshots_imported,
+        stats.invalidations_seen,
+        stats.refresh_failures,
+        stats.reads_served
+    );
+    Ok(())
+}
+
+/// A fixed probe grid: the bitwise writer↔replica identity witness.
+fn probe_bits(c: &mut Client, model: u64) -> Result<Vec<u64>> {
+    let xs: Vec<Vec<f64>> = vec![
+        vec![0.5, 3.5, 1.0, 2.0],
+        vec![2.0, 2.0, 3.0, 0.5],
+        vec![3.25, 0.75, 2.5, 3.75],
+        vec![1.5, 1.5, 0.25, 1.25],
+    ];
+    let p = c.predict(model, &xs, 2.0, true)?;
+    ensure!(p.path == "native", "probe must ride the native path, got {}", p.path);
+    Ok(p.mu
+        .iter()
+        .chain(&p.svar)
+        .chain(&p.acq)
+        .chain(p.gacq.iter().flatten())
+        .map(|v| v.to_bits())
+        .collect())
+}
+
+/// One client thread per address, each issuing `requests` batched
+/// acquisition reads (grad=true — server-bound work) against its own
+/// target. Returns aggregate served points per second.
+fn hammer(addrs: &[String], model: u64, requests: usize) -> Result<f64> {
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for (t, addr) in addrs.iter().enumerate() {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || -> Result<usize> {
+            let mut c = Client::connect(&addr)?;
+            let mut rng = Rng::new(0xFA2_0017 + t as u64);
+            let mut served = 0;
+            for _ in 0..requests {
+                let xs: Vec<Vec<f64>> = (0..BATCH)
+                    .map(|_| (0..D).map(|_| rng.uniform_in(LO + 0.1, HI - 0.1)).collect())
+                    .collect();
+                let p = c.predict(model, &xs, 2.0, true)?;
+                ensure!(p.mu.len() == BATCH, "short reply: {} of {BATCH}", p.mu.len());
+                served += BATCH;
+            }
+            Ok(served)
+        }));
+    }
+    let mut total = 0usize;
+    for h in handles {
+        total += h.join().map_err(|_| anyhow!("hammer thread panicked"))??;
+    }
+    Ok(total as f64 / t0.elapsed().as_secs_f64())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    if args.get(1).map(String::as_str) == Some("--replica") {
+        return replica_main(&args);
+    }
+    let replicas: usize = std::env::var("REPLICAS")
+        .ok()
+        .or_else(|| args.get(1).cloned())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
+    let requests: usize = std::env::var("CLUSTER_READS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40);
+
+    // Home shard: native path so the example runs without PJRT artifacts.
+    let server = Server::bind("127.0.0.1:0", false, LO, HI)?;
+    let addr = server.local_addr();
+    std::thread::spawn(move || {
+        let _ = server.serve();
+    });
+    println!("writer on {addr}");
+
+    let mut c = Client::connect(addr)?;
+    let model = c.create_model(D, 1, 1.0, 1.0)?;
+    let mut rng = Rng::new(0x5EED);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for _ in 0..SEED_N {
+        let x: Vec<f64> = (0..D).map(|_| rng.uniform_in(LO, HI)).collect();
+        ys.push(x[0].sin() + x[1].cos() + 0.5 * x[2].sin() + 0.1 * rng.normal());
+        xs.push(x);
+    }
+    ensure!(c.observe_batch(model, &xs, &ys)?.n == SEED_N);
+    let gen = c.snapshot(model, None)?.gen;
+    println!("seeded model {model} with {SEED_N} observations (generation {gen})");
+
+    // Fan out: re-exec self as N replica processes, collect their ports.
+    let exe = std::env::current_exe()?;
+    let mut children = Vec::new();
+    let mut outs = Vec::new();
+    let mut raddrs = Vec::new();
+    for _ in 0..replicas {
+        let mut child = Command::new(&exe)
+            .args(["--replica", &addr.to_string(), &model.to_string()])
+            .stdout(Stdio::piped())
+            .spawn()?;
+        let mut out = BufReader::new(
+            child.stdout.take().ok_or_else(|| anyhow!("child stdout not captured"))?,
+        );
+        let mut line = String::new();
+        out.read_line(&mut line)?;
+        let raddr = line
+            .trim()
+            .strip_prefix("REPLICA_ADDR ")
+            .ok_or_else(|| anyhow!("bad child hello: {line:?}"))?
+            .to_string();
+        println!("replica on {raddr}");
+        raddrs.push(raddr);
+        outs.push(out);
+        children.push(child);
+    }
+
+    // Wait for every replica to import the writer's generation. The
+    // `have_gen` form doubles as a cheap generation query: a matching
+    // replica elides the payload.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut rclients = Vec::new();
+    for raddr in &raddrs {
+        let mut cr = loop {
+            match Client::connect(raddr) {
+                Ok(cr) => break cr,
+                Err(e) => {
+                    ensure!(Instant::now() < deadline, "replica {raddr} unreachable: {e}");
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+            }
+        };
+        while cr.snapshot(model, Some(gen))?.gen != gen {
+            ensure!(Instant::now() < deadline, "replica {raddr} never reached gen {gen}");
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        rclients.push(cr);
+    }
+
+    // The replication contract: every replica serves the probe grid
+    // bit-for-bit identically to the writer it mirrors.
+    let writer_bits = probe_bits(&mut c, model)?;
+    for (cr, raddr) in rclients.iter_mut().zip(&raddrs) {
+        ensure!(
+            probe_bits(cr, model)? == writer_bits,
+            "replica {raddr} diverged from the writer on the probe grid"
+        );
+        let x = cr.suggest(model, 2.0)?;
+        ensure!(x.len() == D && x.iter().all(|v| (LO..=HI).contains(v)));
+    }
+    println!("BIT_IDENTITY OK replicas={replicas}");
+
+    // Throughput: single-writer baseline, then the replica fleet with one
+    // client thread per replica.
+    let writer_pts = hammer(&[addr.to_string()], model, requests)?;
+    let fleet_pts = hammer(&raddrs, model, requests)?;
+    println!(
+        "CLUSTER replicas={replicas} fleet_pts_per_s={fleet_pts:.0} \
+         writer_pts_per_s={writer_pts:.0} speedup={:.2}",
+        fleet_pts / writer_pts
+    );
+
+    // Orderly teardown: shut each replica down over the wire, collect its
+    // serve stats, then stop the writer.
+    for (mut cr, (mut out, mut child)) in
+        rclients.into_iter().zip(outs.into_iter().zip(children.into_iter()))
+    {
+        cr.shutdown()?;
+        let mut line = String::new();
+        out.read_line(&mut line)?;
+        print!("{line}");
+        child.wait()?;
+    }
+    let _ = c.shutdown();
+    println!("serve_cluster OK");
+    Ok(())
+}

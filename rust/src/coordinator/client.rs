@@ -1,0 +1,906 @@
+//! The typed protocol v3 client (DESIGN.md §Coordinator, §Replication).
+//!
+//! Everything that talks to a coordinator from Rust goes through
+//! [`Client`]: builder-style connect with a versioned hello (`ping`),
+//! typed `predict`/`observe`/`suggest`/`stats` methods returning
+//! `Result<T, ProtocolError>`, and a [`Subscription`] handle for the v3
+//! invalidation push stream. Together with [`protocol`] this module is the
+//! one sanctioned place that constructs request JSON — `cargo xtask lint`
+//! bans raw `"op":...` literals everywhere else outside tests.
+//!
+//! ```no_run
+//! use addgp::coordinator::Client;
+//!
+//! let mut c = Client::connect("127.0.0.1:9000")?;
+//! let model = c.create_model(4, 5, 1.0, 1.0)?;
+//! c.observe(model, &[0.1, 0.2, 0.3, 0.4], 1.5)?;
+//! let pred = c.predict(model, &[vec![0.5; 4]], 2.0, false)?;
+//! println!("mu = {:?}", pred.mu);
+//! # Ok::<(), addgp::coordinator::ProtocolError>(())
+//! ```
+//!
+//! The client is version-transparent: `Client::builder(addr).version(2)`
+//! speaks the flat v2 wire format (and refuses v3-only methods locally
+//! with a structured error instead of a confusing server reject), while
+//! the default v3 client parses the nested `stats` sections. Both shapes
+//! are golden-pinned in `tests/protocol_compat.rs`.
+//!
+//! [`protocol`]: crate::coordinator::protocol
+
+use std::fmt;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::coordinator::protocol::{hex_decode, PROTOCOL_VERSION};
+use crate::util::Json;
+
+/// A structured client-side error: transport, server-reported, or a reply
+/// the client could not make sense of.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProtocolError {
+    /// Socket-level failure (connect, read, write, peer hangup).
+    Io(String),
+    /// The server answered with `{"ok":false,"error":...}`; carries the
+    /// server's error string verbatim.
+    Remote(String),
+    /// The server's reply parsed but did not have the promised shape
+    /// (missing field, id mismatch) — or a v3-only method was called on a
+    /// client pinned to an older protocol version.
+    Malformed(String),
+}
+
+impl ProtocolError {
+    /// True for load-shed rejections the caller should back off and retry
+    /// (the server prefixes those with `retryable:`).
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, ProtocolError::Remote(e) if e.starts_with("retryable:"))
+    }
+
+    /// True when the server refused the request over protocol versioning —
+    /// either the declared version is newer than the server speaks, or the
+    /// op needs a newer version than was declared.
+    pub fn is_version_rejection(&self) -> bool {
+        match self {
+            ProtocolError::Remote(e) => {
+                e.starts_with("unsupported protocol version")
+                    || e.contains("requires protocol v")
+            }
+            _ => false,
+        }
+    }
+}
+
+impl fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProtocolError::Io(e) => write!(f, "io: {e}"),
+            ProtocolError::Remote(e) => write!(f, "server: {e}"),
+            ProtocolError::Malformed(e) => write!(f, "malformed reply: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+fn io_err(e: std::io::Error) -> ProtocolError {
+    ProtocolError::Io(e.to_string())
+}
+
+/// `observe` acknowledgment: post-observe data size and this call's
+/// patched vs re-swept factor-update counts.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Observed {
+    pub n: usize,
+    pub factor_patched: u64,
+    pub factor_resweep: u64,
+}
+
+/// `observe_batch` acknowledgment; `path` is which ingest path ran
+/// ("incremental", "refit" or "buffered").
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BatchObserved {
+    pub n: usize,
+    pub path: String,
+    pub factor_patched: u64,
+    pub factor_resweep: u64,
+}
+
+/// `forget`/`forget_batch` acknowledgment — the downdate mirror of
+/// [`Observed`]; `removed` counts observations actually released.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Forgotten {
+    pub n: usize,
+    pub removed: usize,
+    pub factor_patched: u64,
+    pub factor_resweep: u64,
+}
+
+/// A `predict` reply: per-row posterior mean, additive variance, LCB
+/// acquisition, optional acquisition gradients (`[B, D]`, empty unless
+/// requested), and which execution path served it ("pjrt" or "native").
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Prediction {
+    pub mu: Vec<f64>,
+    pub svar: Vec<f64>,
+    pub acq: Vec<f64>,
+    pub gacq: Vec<Vec<f64>>,
+    pub path: String,
+}
+
+/// An `audit` reply: whether every structural invariant held, how many
+/// structures were walked, and the first violation (empty on pass).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AuditReport {
+    pub passed: bool,
+    pub structures: u64,
+    pub violation: String,
+}
+
+/// A `snapshot` reply: the served generation and — unless the server
+/// short-circuited on a matching `have_gen` — the decoded artifact bytes
+/// (feed them to [`crate::gp::persist::decode_snapshot`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SnapshotFetch {
+    pub gen: u64,
+    pub artifact: Option<Vec<u8>>,
+}
+
+/// The `solve` stats section: posterior cache + factor-update counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SolveStats {
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub pjrt_batches: u64,
+    pub native_queries: u64,
+    pub factor_patches: u64,
+    pub factor_resweeps: u64,
+    pub cache_truncations: u64,
+    pub fallback_rebuilds: u64,
+    pub cold_retries: u64,
+    pub refit_escalations: u64,
+}
+
+/// The `storage` stats section: chunked COW band-storage counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StorageStats {
+    pub memmove_bytes: u64,
+    pub chunks_copied: u64,
+    pub chunks_shared: u64,
+}
+
+/// The `journal` stats section: durability counters + degradation flag.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct JournalStats {
+    pub appends: u64,
+    pub bytes: u64,
+    pub checkpoints: u64,
+    pub recoveries: u64,
+    pub degraded: bool,
+}
+
+/// The `pool` stats section: shared worker-pool occupancy (pool-wide).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PoolSection {
+    pub workers: u64,
+    pub busy: u64,
+    pub queue_depth: u64,
+    pub steals: u64,
+}
+
+/// The `window` stats section: sliding-window eviction counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WindowStats {
+    pub evictions: u64,
+    pub occupancy: u64,
+}
+
+/// The `replication` stats section (v3-only; zero when the client speaks
+/// v1/v2, whose flat wire shape predates replication).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ReplicationStats {
+    pub snapshots_exported: u64,
+    pub invalidations_sent: u64,
+    pub subscribers: u64,
+}
+
+/// A typed `stats` reply. Parsed from the nested v3 sections, or — when
+/// the client is pinned to v1/v2 — assembled from the flat legacy shape,
+/// so callers never see the wire difference.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub d: usize,
+    pub omegas: Vec<f64>,
+    pub solve: SolveStats,
+    pub storage: StorageStats,
+    pub journal: JournalStats,
+    pub pool: PoolSection,
+    pub window: WindowStats,
+    pub replication: ReplicationStats,
+}
+
+/// One invalidation push event: `model` advanced to `gen`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Invalidation {
+    pub model: u64,
+    pub gen: u64,
+}
+
+/// Builder for [`Client`]: pin a protocol version, attach a per-request
+/// deadline, or skip the connect-time hello.
+#[derive(Clone, Debug)]
+pub struct ClientBuilder {
+    addr: String,
+    version: u64,
+    deadline_ms: Option<u64>,
+    hello: bool,
+}
+
+impl ClientBuilder {
+    /// Speak an older protocol version (1 or 2): requests carry that `v`
+    /// (v1 omits the field — the legacy wire format), replies are parsed
+    /// in the matching shape, and v3-only methods fail locally.
+    pub fn version(mut self, v: u64) -> Self {
+        self.version = v;
+        self
+    }
+
+    /// Attach `deadline_ms` to every request sent by this client.
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Skip the connect-time versioned hello (v3 clients send a `ping` by
+    /// default so a version mismatch surfaces before any real traffic).
+    pub fn no_hello(mut self) -> Self {
+        self.hello = false;
+        self
+    }
+
+    /// Connect and (for v3 with the hello enabled) verify the server
+    /// speaks this client's protocol version.
+    pub fn connect(self) -> Result<Client, ProtocolError> {
+        let stream = TcpStream::connect(&self.addr).map_err(io_err)?;
+        let _ = stream.set_nodelay(true);
+        let writer = stream.try_clone().map_err(io_err)?;
+        let mut c = Client {
+            reader: BufReader::new(stream),
+            writer,
+            version: self.version,
+            deadline_ms: self.deadline_ms,
+            next_id: 0,
+        };
+        if self.hello && self.version >= 3 {
+            let server = c.ping()?;
+            if server < c.version {
+                return Err(ProtocolError::Remote(format!(
+                    "server speaks v{server}, client requires v{}",
+                    c.version
+                )));
+            }
+        }
+        Ok(c)
+    }
+}
+
+/// A typed, blocking JSON-line client for the coordinator protocol.
+///
+/// One request in flight at a time (the protocol is strictly
+/// request/reply per connection); open one client per thread for
+/// concurrent load. Every request carries a monotonically increasing `id`
+/// and the reply's echo is checked, so a desynchronized connection
+/// surfaces as [`ProtocolError::Malformed`] instead of silently pairing
+/// replies with the wrong calls.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    version: u64,
+    deadline_ms: Option<u64>,
+    next_id: u64,
+}
+
+impl Client {
+    /// Start building a client for `addr` (anything that formats as
+    /// `host:port` — a `&str` or a `SocketAddr`).
+    pub fn builder(addr: impl fmt::Display) -> ClientBuilder {
+        ClientBuilder {
+            addr: addr.to_string(),
+            version: PROTOCOL_VERSION,
+            deadline_ms: None,
+            hello: true,
+        }
+    }
+
+    /// Connect with the defaults: current protocol version, no deadline,
+    /// versioned hello on.
+    pub fn connect(addr: impl fmt::Display) -> Result<Client, ProtocolError> {
+        Client::builder(addr).connect()
+    }
+
+    /// The protocol version this client speaks (and declares on the wire).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Send one request line, read one reply line, and run the shared
+    /// reply checks (transport, `error`, `ok`, id echo). All typed methods
+    /// bottom out here — the only place request JSON is built.
+    fn request(
+        &mut self,
+        op: &str,
+        fields: Vec<(&str, Json)>,
+    ) -> Result<Json, ProtocolError> {
+        self.next_id += 1;
+        let id = self.next_id as f64;
+        let mut pairs: Vec<(&str, Json)> = vec![("op", Json::Str(op.to_string()))];
+        if self.version >= 2 {
+            // A missing `v` *is* the v1 wire format, pinned forever.
+            pairs.push(("v", Json::Num(self.version as f64)));
+        }
+        pairs.push(("id", Json::Num(id)));
+        if let Some(ms) = self.deadline_ms {
+            pairs.push(("deadline_ms", Json::Num(ms as f64)));
+        }
+        pairs.extend(fields);
+        let line = Json::obj(pairs).to_string();
+        self.writer.write_all(line.as_bytes()).map_err(io_err)?;
+        self.writer.write_all(b"\n").map_err(io_err)?;
+
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply).map_err(io_err)?;
+        if n == 0 {
+            return Err(ProtocolError::Io("server closed the connection".into()));
+        }
+        let v = Json::parse(reply.trim_end())
+            .map_err(|e| ProtocolError::Malformed(format!("bad reply JSON: {e}")))?;
+        if let Some(e) = v.get("error").and_then(|x| x.as_str()) {
+            return Err(ProtocolError::Remote(e.to_string()));
+        }
+        if v.get("ok").and_then(|x| x.as_bool()) != Some(true) {
+            return Err(ProtocolError::Malformed(format!(
+                "reply missing ok:true: {}",
+                reply.trim_end()
+            )));
+        }
+        // Parse errors can't echo the id; every ok reply must.
+        match v.get("id").and_then(|x| x.as_f64()) {
+            Some(echo) if echo == id => Ok(v),
+            other => Err(ProtocolError::Malformed(format!(
+                "reply id {other:?} does not echo request id {id}"
+            ))),
+        }
+    }
+
+    /// Versioned hello (v3): returns the server's protocol version.
+    pub fn ping(&mut self) -> Result<u64, ProtocolError> {
+        need_v3(self.version, "ping")?;
+        let v = self.request("ping", Vec::new())?;
+        get_u64(&v, "server_version")
+    }
+
+    /// Create a model; returns its id. `nu2` is 2ν (1, 3 or 5).
+    pub fn create_model(
+        &mut self,
+        d: usize,
+        nu2: usize,
+        omega: f64,
+        sigma2: f64,
+    ) -> Result<u64, ProtocolError> {
+        let v = self.request(
+            "create_model",
+            vec![
+                ("d", Json::Num(d as f64)),
+                ("nu2", Json::Num(nu2 as f64)),
+                ("omega", Json::Num(omega)),
+                ("sigma2", Json::Num(sigma2)),
+            ],
+        )?;
+        get_u64(&v, "model")
+    }
+
+    /// Ingest one observation.
+    pub fn observe(
+        &mut self,
+        model: u64,
+        x: &[f64],
+        y: f64,
+    ) -> Result<Observed, ProtocolError> {
+        let v = self.request(
+            "observe",
+            vec![
+                ("model", Json::Num(model as f64)),
+                ("x", Json::arr_f64(x)),
+                ("y", Json::Num(y)),
+            ],
+        )?;
+        Ok(Observed {
+            n: get_usize(&v, "n")?,
+            factor_patched: get_u64(&v, "factor_patched")?,
+            factor_resweep: get_u64(&v, "factor_resweep")?,
+        })
+    }
+
+    /// Ingest a batch of observations in one posterior refresh.
+    pub fn observe_batch(
+        &mut self,
+        model: u64,
+        xs: &[Vec<f64>],
+        ys: &[f64],
+    ) -> Result<BatchObserved, ProtocolError> {
+        let v = self.request(
+            "observe_batch",
+            vec![
+                ("model", Json::Num(model as f64)),
+                ("xs", rows(xs)),
+                ("ys", Json::arr_f64(ys)),
+            ],
+        )?;
+        Ok(BatchObserved {
+            n: get_usize(&v, "n")?,
+            path: get_str(&v, "path")?,
+            factor_patched: get_u64(&v, "factor_patched")?,
+            factor_resweep: get_u64(&v, "factor_resweep")?,
+        })
+    }
+
+    /// Release the most recent observation equal to `x` (v2).
+    pub fn forget(&mut self, model: u64, x: &[f64]) -> Result<Forgotten, ProtocolError> {
+        let v = self.request(
+            "forget",
+            vec![("model", Json::Num(model as f64)), ("x", Json::arr_f64(x))],
+        )?;
+        parse_forgotten(&v)
+    }
+
+    /// Release a batch of observations by value (v2).
+    pub fn forget_batch(
+        &mut self,
+        model: u64,
+        xs: &[Vec<f64>],
+    ) -> Result<Forgotten, ProtocolError> {
+        let v = self.request(
+            "forget_batch",
+            vec![("model", Json::Num(model as f64)), ("xs", rows(xs))],
+        )?;
+        parse_forgotten(&v)
+    }
+
+    /// Put the model into sliding-window mode (v2); `max_n = 0` turns it
+    /// off.
+    pub fn rolling_window(
+        &mut self,
+        model: u64,
+        max_n: usize,
+        max_age: Option<u64>,
+    ) -> Result<(), ProtocolError> {
+        let mut fields = vec![
+            ("model", Json::Num(model as f64)),
+            ("max_n", Json::Num(max_n as f64)),
+        ];
+        if let Some(age) = max_age {
+            fields.push(("max_age", Json::Num(age as f64)));
+        }
+        self.request("rolling_window", fields).map(|_| ())
+    }
+
+    /// Run `steps` hyper-parameter fit steps.
+    pub fn fit(&mut self, model: u64, steps: usize) -> Result<(), ProtocolError> {
+        self.request(
+            "fit",
+            vec![
+                ("model", Json::Num(model as f64)),
+                ("steps", Json::Num(steps as f64)),
+            ],
+        )
+        .map(|_| ())
+    }
+
+    /// Batched posterior query at `xs` with LCB parameter `beta`.
+    pub fn predict(
+        &mut self,
+        model: u64,
+        xs: &[Vec<f64>],
+        beta: f64,
+        grad: bool,
+    ) -> Result<Prediction, ProtocolError> {
+        let v = self.request(
+            "predict",
+            vec![
+                ("model", Json::Num(model as f64)),
+                ("xs", rows(xs)),
+                ("beta", Json::Num(beta)),
+                ("grad", Json::Bool(grad)),
+            ],
+        )?;
+        let gacq = match v.get("gacq").and_then(|x| x.as_arr()) {
+            Some(arr) => arr
+                .iter()
+                .map(|row| {
+                    row.as_f64_vec().ok_or_else(|| {
+                        ProtocolError::Malformed("bad gacq row".into())
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+            None => Vec::new(),
+        };
+        Ok(Prediction {
+            mu: get_f64_vec(&v, "mu")?,
+            svar: get_f64_vec(&v, "svar")?,
+            acq: get_f64_vec(&v, "acq")?,
+            gacq,
+            path: get_str(&v, "path")?,
+        })
+    }
+
+    /// Ask for the next point to evaluate (multi-start LCB descent).
+    pub fn suggest(&mut self, model: u64, beta: f64) -> Result<Vec<f64>, ProtocolError> {
+        let v = self.request(
+            "suggest",
+            vec![("model", Json::Num(model as f64)), ("beta", Json::Num(beta))],
+        )?;
+        get_f64_vec(&v, "x")
+    }
+
+    /// Typed model + pool statistics (see [`Stats`]).
+    pub fn stats(&mut self, model: u64) -> Result<Stats, ProtocolError> {
+        let v = self.request("stats", vec![("model", Json::Num(model as f64))])?;
+        if self.version >= 3 {
+            parse_stats_nested(&v)
+        } else {
+            parse_stats_flat(&v)
+        }
+    }
+
+    /// Run the structural invariant audit on demand.
+    pub fn audit(&mut self, model: u64) -> Result<AuditReport, ProtocolError> {
+        let v = self.request("audit", vec![("model", Json::Num(model as f64))])?;
+        Ok(AuditReport {
+            passed: get_bool(&v, "passed")?,
+            structures: get_u64(&v, "structures")?,
+            violation: get_str(&v, "violation")?,
+        })
+    }
+
+    /// Fetch the model's posterior as a generation-numbered snapshot
+    /// artifact (v3). With `have_gen` matching the served generation the
+    /// reply is a payload-free `unchanged` ack (`artifact: None`).
+    pub fn snapshot(
+        &mut self,
+        model: u64,
+        have_gen: Option<u64>,
+    ) -> Result<SnapshotFetch, ProtocolError> {
+        need_v3(self.version, "snapshot")?;
+        let mut fields = vec![("model", Json::Num(model as f64))];
+        if let Some(g) = have_gen {
+            fields.push(("have_gen", Json::Num(g as f64)));
+        }
+        let v = self.request("snapshot", fields)?;
+        let gen = get_u64(&v, "gen")?;
+        let artifact = match v.get("snapshot").and_then(|x| x.as_str()) {
+            Some(hex) => Some(
+                hex_decode(hex)
+                    .map_err(|e| ProtocolError::Malformed(format!("bad artifact: {e}")))?,
+            ),
+            None => {
+                if v.get("unchanged").and_then(|x| x.as_bool()) != Some(true) {
+                    return Err(ProtocolError::Malformed(
+                        "snapshot reply has neither payload nor unchanged ack".into(),
+                    ));
+                }
+                None
+            }
+        };
+        Ok(SnapshotFetch { gen, artifact })
+    }
+
+    /// Ask the server to shut down (acknowledged before the listener
+    /// stops accepting).
+    pub fn shutdown(&mut self) -> Result<(), ProtocolError> {
+        self.request("shutdown", Vec::new()).map(|_| ())
+    }
+
+    /// Convert this connection into an invalidation push stream (v3).
+    /// Consumes the client: after the `subscribed` ack the server writes
+    /// only event lines here, so request/reply traffic needs its own
+    /// connection.
+    pub fn subscribe(mut self, model: u64) -> Result<Subscription, ProtocolError> {
+        need_v3(self.version, "subscribe")?;
+        let v = self.request("subscribe", vec![("model", Json::Num(model as f64))])?;
+        if v.get("subscribed").and_then(|x| x.as_bool()) != Some(true) {
+            return Err(ProtocolError::Malformed("subscribe reply not acked".into()));
+        }
+        let gen = get_u64(&v, "gen")?;
+        Ok(Subscription {
+            stream: self.writer,
+            reader: self.reader,
+            partial: String::new(),
+            gen,
+        })
+    }
+}
+
+/// A live invalidation stream: the consumed connection of a successful
+/// [`Client::subscribe`]. Dropping it disconnects, which is how the
+/// server learns to drop the subscriber.
+pub struct Subscription {
+    /// Kept for `set_read_timeout`; never written after the subscribe ack.
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+    /// Partial line carried across a read timeout, so a timeout that
+    /// lands mid-line never corrupts the stream.
+    partial: String,
+    gen: u64,
+}
+
+impl Subscription {
+    /// The model generation at subscription time — events only arrive for
+    /// generations after this one.
+    pub fn starting_gen(&self) -> u64 {
+        self.gen
+    }
+
+    /// Block up to `timeout` (forever when `None`) for the next
+    /// invalidation. `Ok(None)` means the timeout elapsed; the stream is
+    /// still live.
+    pub fn next_event(
+        &mut self,
+        timeout: Option<Duration>,
+    ) -> Result<Option<Invalidation>, ProtocolError> {
+        self.stream.set_read_timeout(timeout).map_err(io_err)?;
+        match self.reader.read_line(&mut self.partial) {
+            Ok(0) => {
+                return Err(ProtocolError::Io("subscription closed by server".into()))
+            }
+            Ok(_) if !self.partial.ends_with('\n') => {
+                return Err(ProtocolError::Io(
+                    "subscription closed mid-event".into(),
+                ))
+            }
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                return Ok(None)
+            }
+            Err(e) => return Err(io_err(e)),
+        }
+        let line = std::mem::take(&mut self.partial);
+        let v = Json::parse(line.trim_end())
+            .map_err(|e| ProtocolError::Malformed(format!("bad event JSON: {e}")))?;
+        if v.get("event").and_then(|x| x.as_str()) != Some("invalidate") {
+            return Err(ProtocolError::Malformed(format!(
+                "unexpected event line: {}",
+                line.trim_end()
+            )));
+        }
+        let inv = Invalidation {
+            model: get_u64(&v, "model")?,
+            gen: get_u64(&v, "gen")?,
+        };
+        self.gen = inv.gen;
+        Ok(Some(inv))
+    }
+}
+
+/// Refuse a v3-only method locally when the client is pinned older — a
+/// clearer failure than shipping an op the server will reject.
+fn need_v3(version: u64, op: &str) -> Result<(), ProtocolError> {
+    if version < 3 {
+        return Err(ProtocolError::Malformed(format!(
+            "op '{op}' requires protocol v3 but this client speaks v{version}"
+        )));
+    }
+    Ok(())
+}
+
+fn rows(xs: &[Vec<f64>]) -> Json {
+    Json::Arr(xs.iter().map(|row| Json::arr_f64(row)).collect())
+}
+
+fn missing(key: &str) -> ProtocolError {
+    ProtocolError::Malformed(format!("reply missing '{key}'"))
+}
+
+fn get_u64(v: &Json, key: &str) -> Result<u64, ProtocolError> {
+    v.get(key)
+        .and_then(|x| x.as_f64())
+        .map(|f| f as u64)
+        .ok_or_else(|| missing(key))
+}
+
+fn get_usize(v: &Json, key: &str) -> Result<usize, ProtocolError> {
+    v.get(key).and_then(|x| x.as_usize()).ok_or_else(|| missing(key))
+}
+
+fn get_bool(v: &Json, key: &str) -> Result<bool, ProtocolError> {
+    v.get(key).and_then(|x| x.as_bool()).ok_or_else(|| missing(key))
+}
+
+fn get_str(v: &Json, key: &str) -> Result<String, ProtocolError> {
+    v.get(key)
+        .and_then(|x| x.as_str())
+        .map(|s| s.to_string())
+        .ok_or_else(|| missing(key))
+}
+
+fn get_f64_vec(v: &Json, key: &str) -> Result<Vec<f64>, ProtocolError> {
+    v.get(key).and_then(|x| x.as_f64_vec()).ok_or_else(|| missing(key))
+}
+
+fn parse_forgotten(v: &Json) -> Result<Forgotten, ProtocolError> {
+    Ok(Forgotten {
+        n: get_usize(v, "n")?,
+        removed: get_usize(v, "removed")?,
+        factor_patched: get_u64(v, "factor_patched")?,
+        factor_resweep: get_u64(v, "factor_resweep")?,
+    })
+}
+
+/// Parse the nested v3 `stats` shape.
+fn parse_stats_nested(v: &Json) -> Result<Stats, ProtocolError> {
+    let section = |key: &str| -> Result<&Json, ProtocolError> {
+        v.get(key).ok_or_else(|| missing(key))
+    };
+    let solve = section("solve")?;
+    let storage = section("storage")?;
+    let journal = section("journal")?;
+    let pool = section("pool")?;
+    let window = section("window")?;
+    let replication = section("replication")?;
+    Ok(Stats {
+        n: get_usize(v, "n")?,
+        d: get_usize(v, "d")?,
+        omegas: get_f64_vec(v, "omegas")?,
+        solve: SolveStats {
+            cache_hits: get_u64(solve, "cache_hits")?,
+            cache_misses: get_u64(solve, "cache_misses")?,
+            pjrt_batches: get_u64(solve, "pjrt_batches")?,
+            native_queries: get_u64(solve, "native_queries")?,
+            factor_patches: get_u64(solve, "factor_patches")?,
+            factor_resweeps: get_u64(solve, "factor_resweeps")?,
+            cache_truncations: get_u64(solve, "cache_truncations")?,
+            fallback_rebuilds: get_u64(solve, "fallback_rebuilds")?,
+            cold_retries: get_u64(solve, "cold_retries")?,
+            refit_escalations: get_u64(solve, "refit_escalations")?,
+        },
+        storage: StorageStats {
+            memmove_bytes: get_u64(storage, "memmove_bytes")?,
+            chunks_copied: get_u64(storage, "chunks_copied")?,
+            chunks_shared: get_u64(storage, "chunks_shared")?,
+        },
+        journal: JournalStats {
+            appends: get_u64(journal, "appends")?,
+            bytes: get_u64(journal, "bytes")?,
+            checkpoints: get_u64(journal, "checkpoints")?,
+            recoveries: get_u64(journal, "recoveries")?,
+            degraded: get_bool(journal, "degraded")?,
+        },
+        pool: PoolSection {
+            workers: get_u64(pool, "workers")?,
+            busy: get_u64(pool, "busy")?,
+            queue_depth: get_u64(pool, "queue_depth")?,
+            steals: get_u64(pool, "steals")?,
+        },
+        window: WindowStats {
+            evictions: get_u64(window, "evictions")?,
+            occupancy: get_u64(window, "occupancy")?,
+        },
+        replication: ReplicationStats {
+            snapshots_exported: get_u64(replication, "snapshots_exported")?,
+            invalidations_sent: get_u64(replication, "invalidations_sent")?,
+            subscribers: get_u64(replication, "subscribers")?,
+        },
+    })
+}
+
+/// Parse the flat v1/v2 `stats` shape into the same typed struct (the
+/// replication section predates v3 on the wire, so it stays zero).
+fn parse_stats_flat(v: &Json) -> Result<Stats, ProtocolError> {
+    Ok(Stats {
+        n: get_usize(v, "n")?,
+        d: get_usize(v, "d")?,
+        omegas: get_f64_vec(v, "omegas")?,
+        solve: SolveStats {
+            cache_hits: get_u64(v, "cache_hits")?,
+            cache_misses: get_u64(v, "cache_misses")?,
+            pjrt_batches: get_u64(v, "pjrt_batches")?,
+            native_queries: get_u64(v, "native_queries")?,
+            factor_patches: get_u64(v, "factor_patches")?,
+            factor_resweeps: get_u64(v, "factor_resweeps")?,
+            cache_truncations: get_u64(v, "cache_truncations")?,
+            fallback_rebuilds: get_u64(v, "fallback_rebuilds")?,
+            cold_retries: get_u64(v, "solve_cold_retries")?,
+            refit_escalations: get_u64(v, "solve_refit_escalations")?,
+        },
+        storage: StorageStats {
+            memmove_bytes: get_u64(v, "memmove_bytes")?,
+            chunks_copied: get_u64(v, "chunks_copied")?,
+            chunks_shared: get_u64(v, "chunks_shared")?,
+        },
+        journal: JournalStats {
+            appends: get_u64(v, "journal_appends")?,
+            bytes: get_u64(v, "journal_bytes")?,
+            checkpoints: get_u64(v, "journal_checkpoints")?,
+            recoveries: get_u64(v, "recoveries")?,
+            degraded: get_bool(v, "degraded")?,
+        },
+        pool: PoolSection {
+            workers: get_u64(v, "pool_workers")?,
+            busy: get_u64(v, "pool_busy")?,
+            queue_depth: get_u64(v, "pool_queue_depth")?,
+            steals: get_u64(v, "pool_steals")?,
+        },
+        window: WindowStats {
+            evictions: get_u64(v, "window_evictions")?,
+            occupancy: get_u64(v, "window_occupancy")?,
+        },
+        replication: ReplicationStats::default(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn protocol_error_classification() {
+        let shed = ProtocolError::Remote("retryable: server overloaded".into());
+        assert!(shed.is_retryable());
+        assert!(!shed.is_version_rejection());
+        let v = ProtocolError::Remote(
+            "unsupported protocol version 9 (server speaks <= 3)".into(),
+        );
+        assert!(v.is_version_rejection());
+        assert!(!v.is_retryable());
+        let gate = ProtocolError::Remote(
+            "op 'snapshot' requires protocol v3 (request declared v2)".into(),
+        );
+        assert!(gate.is_version_rejection());
+        assert!(!ProtocolError::Io("eof".into()).is_version_rejection());
+        assert!(!ProtocolError::Malformed("x".into()).is_retryable());
+    }
+
+    #[test]
+    fn flat_and_nested_stats_parse_to_the_same_struct() {
+        let flat = r#"{"ok":true,"n":3,"d":2,"omegas":[1.0,2.0],
+            "cache_hits":1,"cache_misses":2,"pjrt_batches":0,"native_queries":4,
+            "factor_patches":5,"factor_resweeps":6,"cache_truncations":0,
+            "fallback_rebuilds":0,"pool_workers":4,"pool_busy":1,
+            "pool_queue_depth":0,"pool_steals":7,"memmove_bytes":8,
+            "chunks_copied":9,"chunks_shared":10,"window_evictions":0,
+            "window_occupancy":3,"recoveries":1,"degraded":false,
+            "journal_appends":11,"journal_bytes":12,"journal_checkpoints":1,
+            "solve_cold_retries":0,"solve_refit_escalations":0}"#;
+        let nested = r#"{"ok":true,"n":3,"d":2,"omegas":[1.0,2.0],
+            "solve":{"cache_hits":1,"cache_misses":2,"pjrt_batches":0,
+                "native_queries":4,"factor_patches":5,"factor_resweeps":6,
+                "cache_truncations":0,"fallback_rebuilds":0,"cold_retries":0,
+                "refit_escalations":0},
+            "storage":{"memmove_bytes":8,"chunks_copied":9,"chunks_shared":10},
+            "journal":{"appends":11,"bytes":12,"checkpoints":1,"recoveries":1,
+                "degraded":false},
+            "pool":{"workers":4,"busy":1,"queue_depth":0,"steals":7},
+            "window":{"evictions":0,"occupancy":3},
+            "replication":{"snapshots_exported":0,"invalidations_sent":0,
+                "subscribers":0}}"#;
+        let f = parse_stats_flat(&Json::parse(flat).unwrap()).unwrap();
+        let n = parse_stats_nested(&Json::parse(nested).unwrap()).unwrap();
+        assert_eq!(f, n);
+        assert_eq!(f.pool.steals, 7);
+        assert_eq!(f.journal.recoveries, 1);
+        assert_eq!(f.replication, ReplicationStats::default());
+    }
+
+    #[test]
+    fn v3_methods_fail_locally_on_old_clients() {
+        assert!(need_v3(3, "snapshot").is_ok());
+        let err = need_v3(2, "snapshot").unwrap_err();
+        assert!(matches!(err, ProtocolError::Malformed(_)));
+        assert!(err.to_string().contains("requires protocol v3"));
+    }
+}

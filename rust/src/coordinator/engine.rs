@@ -88,8 +88,8 @@ impl EngineConfig {
 /// A command routed to a model by the scheduler. `reply` receives exactly
 /// one [`Response`]. `Observe`/`ObserveBatch`/`Forget`/`ForgetBatch`/
 /// `RollingWindow`/`Fit` are *mutating* (per-model FIFO under mutual
-/// exclusion); `Predict`/`Suggest`/`Stats` are *reads* (served concurrently —
-/// see DESIGN.md §Coordinator, "Command classes").
+/// exclusion); `Predict`/`Suggest`/`Stats`/`Snapshot` are *reads* (served
+/// concurrently — see DESIGN.md §Coordinator, "Command classes").
 pub enum Command {
     Observe { x: Vec<f64>, y: f64, reply: Sender<Response> },
     ObserveBatch { xs: Vec<Vec<f64>>, ys: Vec<f64>, reply: Sender<Response> },
@@ -106,6 +106,15 @@ pub enum Command {
     /// On-demand structural invariant audit (a *read*: briefly locks the
     /// engine, walks every structure, never mutates).
     Audit { reply: Sender<Response> },
+    /// Export the model's read snapshot as a generation-numbered artifact
+    /// (protocol v3 — the replica feed). A `have_gen` matching the served
+    /// generation elides the payload (the cheap "unchanged" delta). A
+    /// *read*: rides the snapshot path, never perturbs the engine.
+    Snapshot { have_gen: Option<u64>, reply: Sender<Response> },
+    /// Register `events` for push invalidations: one
+    /// [`Response::Invalidate`] per generation bump until the receiver
+    /// hangs up (protocol v3).
+    Subscribe { events: Sender<Response>, reply: Sender<Response> },
 }
 
 impl Command {
@@ -122,7 +131,9 @@ impl Command {
             | Command::Predict { reply, .. }
             | Command::Suggest { reply, .. }
             | Command::Stats { reply }
-            | Command::Audit { reply } => reply,
+            | Command::Audit { reply }
+            | Command::Snapshot { reply, .. }
+            | Command::Subscribe { reply, .. } => reply,
         };
         let _ = reply.send(Response::Error(msg));
     }

@@ -133,6 +133,11 @@ pub struct ServerMetrics {
     pub batches_refit: AtomicU64,
     /// `observe_batch` calls that only buffered (below `min_points`).
     pub batches_buffered: AtomicU64,
+    /// Protocol v3 `snapshot` requests served (replica snapshot fetches,
+    /// including `have_gen` short-circuits that shipped no payload).
+    pub snapshot_requests: AtomicU64,
+    /// Protocol v3 `subscribe` registrations accepted.
+    pub subscribe_requests: AtomicU64,
     /// Banded-LU factor updates served by the prefix-reuse patch
     /// (`BandedLU::refactor_from`), summed over `observe`/`observe_batch`
     /// replies — with `factor_resweeps`, the production view of the
@@ -186,6 +191,14 @@ impl ServerMetrics {
         self.shed_requests.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn inc_snapshot_requests(&self) {
+        self.snapshot_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_subscribe_requests(&self) {
+        self.subscribe_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn add_predict_points(&self, n: usize) {
         self.predict_points.fetch_add(n as u64, Ordering::Relaxed);
     }
@@ -234,6 +247,10 @@ impl ServerMetrics {
     /// into the server-wide totals. Only the delta since the model's last
     /// report is added; a counter that went *backwards* (model re-created
     /// under the same id) contributes nothing until it catches back up.
+    /// Panic resurrection is *not* such a regression: the scheduler lifts
+    /// its wire counters by a per-recovery baseline, so a recovered model's
+    /// stats stay monotone and this fold never under-counts across a
+    /// resurrection (regression-tested in `tests/chaos.rs`).
     pub fn record_storage_stats(&self, model: u64, memmove: u64, copied: u64, shared: u64) {
         let (dm, dc, ds) = {
             let mut seen = lock_clean(&self.storage_seen);
@@ -263,7 +280,8 @@ impl ServerMetrics {
              forgotten_points={} window_evictions={} \
              batches(incremental={} refit={} buffered={}) \
              factor(patched={} resweep={}) \
-             storage(memmove_bytes={} chunks_copied={} chunks_shared={}) | \
+             storage(memmove_bytes={} chunks_copied={} chunks_shared={}) \
+             replication(snapshots={} subscribes={}) | \
              predict: {} | suggest: {} | ingest: {}",
             self.requests.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
@@ -282,6 +300,8 @@ impl ServerMetrics {
             self.storage_memmove_bytes.load(Ordering::Relaxed),
             self.storage_chunks_copied.load(Ordering::Relaxed),
             self.storage_chunks_shared.load(Ordering::Relaxed),
+            self.snapshot_requests.load(Ordering::Relaxed),
+            self.subscribe_requests.load(Ordering::Relaxed),
             self.predict_latency.report(),
             self.suggest_latency.report(),
             self.ingest_latency.report()
@@ -361,6 +381,9 @@ mod tests {
         m.inc_deadline_timeouts();
         m.inc_deadline_timeouts();
         m.inc_shed_requests();
+        m.inc_snapshot_requests();
+        m.inc_snapshot_requests();
+        m.inc_subscribe_requests();
         let r = m.report();
         assert!(r.contains("requests=2"));
         assert!(r.contains("errors=1"));
@@ -379,6 +402,8 @@ mod tests {
         assert!(r.contains("memmove_bytes=1600"), "{r}");
         assert!(r.contains("chunks_copied=6"), "{r}");
         assert!(r.contains("chunks_shared=28"), "{r}");
+        assert!(r.contains("snapshots=2"), "{r}");
+        assert!(r.contains("subscribes=1"), "{r}");
     }
 
     #[test]

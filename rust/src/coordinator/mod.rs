@@ -12,6 +12,13 @@
 //! * [`server`] — TCP accept loop, one reader thread per connection,
 //!   requests routed into the scheduler; deterministic shutdown joins
 //!   every reader and every pool worker.
+//! * [`client`] — the typed protocol v3 client: builder-style connect with
+//!   a versioned hello, typed `predict`/`observe`/`suggest`/`stats`
+//!   methods returning `Result<T, ProtocolError>`. The one sanctioned
+//!   place (besides [`protocol`] itself) that constructs wire JSON.
+//! * [`replica`] — stateless read replica: imports generation-numbered
+//!   posterior snapshots from a writer and serves `predict`/`suggest` at
+//!   any fan-out (DESIGN.md §Replication).
 //! * [`metrics`] — pool-wide and per-model latency histograms + counters.
 //! * [`journal`] — per-model durable mutation log + checkpoint compaction;
 //!   `Scheduler::recover` rebuilds a bit-identical engine fleet from it
@@ -22,16 +29,20 @@
 //! shared pool → batch → fan out) is the same one an async version would
 //! use.
 
+pub mod client;
 pub mod engine;
 pub mod journal;
 pub mod metrics;
 pub mod protocol;
+pub mod replica;
 pub mod scheduler;
 pub mod server;
 
+pub use client::{Client, ProtocolError, Subscription};
 pub use engine::{Command, EngineConfig, ModelEngine};
 pub use journal::{FsyncPolicy, JournalConfig, MutationOp};
 pub use protocol::{Request, Response};
+pub use replica::{Replica, ReplicaConfig, ReplicaStats};
 pub use scheduler::{RecoveryReport, Scheduler};
 pub use server::{Server, ShutdownStats};
 

@@ -14,6 +14,16 @@
 //! under a declared `v: 1` is rejected with a structured error rather than
 //! silently accepted, and any `v` above [`PROTOCOL_VERSION`] is rejected
 //! outright so future clients fail loudly against old servers.
+//!
+//! **v3** is the replication + redesign generation: the `snapshot` and
+//! `subscribe` ops (read replicas pull generation-numbered
+//! [`crate::gp::persist::encode_snapshot`] artifacts and receive
+//! invalidation pushes), and a restructured `stats` reply — requests
+//! declaring `v >= 3` receive the counters grouped into nested `solve` /
+//! `storage` / `journal` / `pool` / `window` / `replication` sections,
+//! while v1/v2 requests keep receiving the flat accreted form byte-for-byte
+//! (both shapes pinned in `tests/protocol_compat.rs`). Prefer the typed
+//! [`crate::coordinator::client::Client`] over hand-rolled frames.
 
 use crate::util::Json;
 
@@ -22,7 +32,45 @@ use crate::util::Json;
 /// * **2** — adds `forget`, `forget_batch`, `rolling_window`, the
 ///   `Forgotten` response, and the `window_evictions`/`window_occupancy`
 ///   stats fields.
-pub const PROTOCOL_VERSION: u64 = 2;
+/// * **3** — adds `snapshot`/`subscribe` (snapshot-shipping read replicas),
+///   the `ping` versioned hello, the `Snapshot`/`Subscribed`/`Invalidate`/
+///   `Hello` responses, and the nested `stats` sections (flat form still
+///   served to v1/v2 requests).
+pub const PROTOCOL_VERSION: u64 = 3;
+
+/// Encode bytes as lowercase hex — how binary snapshot artifacts travel
+/// inside the JSON-line wire format (the image ships no base64 either; hex
+/// keeps decode trivially panic-free).
+pub fn hex_encode(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push(char::from_digit((b >> 4) as u32, 16).unwrap_or('0'));
+        s.push(char::from_digit((b & 0xF) as u32, 16).unwrap_or('0'));
+    }
+    s
+}
+
+/// Decode [`hex_encode`] output. Errors (never panics) on odd length or
+/// non-hex bytes, so a corrupt wire frame surfaces as a structured error.
+pub fn hex_decode(s: &str) -> Result<Vec<u8>, String> {
+    let b = s.as_bytes();
+    if b.len() % 2 != 0 {
+        return Err(format!("hex payload has odd length {}", b.len()));
+    }
+    let nibble = |c: u8| -> Result<u8, String> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => Err(format!("bad hex byte {:?}", c as char)),
+        }
+    };
+    let mut out = Vec::with_capacity(b.len() / 2);
+    for pair in b.chunks_exact(2) {
+        out.push((nibble(pair[0])? << 4) | nibble(pair[1])?);
+    }
+    Ok(out)
+}
 
 /// A parsed client request.
 #[derive(Clone, Debug, PartialEq)]
@@ -82,6 +130,28 @@ pub enum Request {
     Stats {
         model: u64,
     },
+    /// Fetch the model's current posterior as a generation-numbered
+    /// snapshot artifact (v3; the replica pull path). When `have_gen`
+    /// matches the model's current generation the reply is a payload-free
+    /// `unchanged` ack — the cheap no-op "delta" — otherwise the full
+    /// artifact ships.
+    Snapshot {
+        model: u64,
+        have_gen: Option<u64>,
+    },
+    /// Convert this connection into an invalidation push stream (v3): the
+    /// server acks with the model's current generation, then writes one
+    /// `Invalidate` event line per mutation generation until the client
+    /// disconnects. A replica holds one subscription plus a separate
+    /// request connection for `snapshot` fetches.
+    Subscribe {
+        model: u64,
+    },
+    /// The versioned hello (v3): a model-free no-op whose reply reports the
+    /// server's [`PROTOCOL_VERSION`]. The typed client sends one at connect
+    /// time, so a version mismatch surfaces as a structured error before
+    /// any real traffic.
+    Ping,
     /// Run the structural invariant audit (`AdditiveGP::run_audit`) on
     /// demand — every stateful structure in the model walks its own
     /// invariants and the first violation is reported with its
@@ -107,6 +177,15 @@ impl Request {
     /// non-integral `deadline_ms` is a structured parse error rather than a
     /// silently unbounded request.
     pub fn parse_meta(line: &str) -> Result<(Request, Option<f64>, Option<u64>), String> {
+        let (req, meta) = Request::parse_wire(line)?;
+        Ok((req, meta.id, meta.deadline_ms))
+    }
+
+    /// Parse one request line keeping *all* frame metadata, including the
+    /// declared protocol version — the server threads it through to
+    /// response serialization so v1/v2 clients keep the flat `stats` shape
+    /// while v3 clients get the nested sections.
+    pub fn parse_wire(line: &str) -> Result<(Request, RequestMeta), String> {
         let v = Json::parse(line)?;
         let deadline_ms = match v.get("deadline_ms") {
             None => None,
@@ -137,6 +216,11 @@ impl Request {
         if matches!(op, "forget" | "forget_batch" | "rolling_window") && version < 2 {
             return Err(format!(
                 "op '{op}' requires protocol v2 (request declared v{version})"
+            ));
+        }
+        if matches!(op, "snapshot" | "subscribe" | "ping") && version < 3 {
+            return Err(format!(
+                "op '{op}' requires protocol v3 (request declared v{version})"
             ));
         }
         let model = || -> Result<u64, String> {
@@ -198,12 +282,31 @@ impl Request {
                 max_age: v.get("max_age").and_then(|x| x.as_usize()).map(|x| x as u64),
             },
             "stats" => Request::Stats { model: model()? },
+            "snapshot" => Request::Snapshot {
+                model: model()?,
+                have_gen: v
+                    .get("have_gen")
+                    .and_then(|x| x.as_f64())
+                    .map(|f| f as u64),
+            },
+            "subscribe" => Request::Subscribe { model: model()? },
+            "ping" => Request::Ping,
             "audit" => Request::Audit { model: model()? },
             "shutdown" => Request::Shutdown,
             other => return Err(format!("unknown op '{other}'")),
         };
-        Ok((req, id, deadline_ms))
+        Ok((req, RequestMeta { id, deadline_ms, version }))
     }
+}
+
+/// Frame metadata alongside a parsed [`Request`]: the client's `id` echo,
+/// the optional `deadline_ms` budget, and the declared protocol version
+/// (missing `v` = 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RequestMeta {
+    pub id: Option<f64>,
+    pub deadline_ms: Option<u64>,
+    pub version: u64,
 }
 
 /// A server response.
@@ -255,6 +358,30 @@ pub enum Response {
         removed: usize,
         factor_patched: u64,
         factor_resweep: u64,
+    },
+    /// A snapshot artifact reply (v3): the model's current mutation
+    /// generation and, unless the client already holds it (`have_gen`
+    /// matched), the hex-encoded [`crate::gp::persist::encode_snapshot`]
+    /// artifact.
+    Snapshot {
+        gen: u64,
+        artifact: Option<String>,
+    },
+    /// Acknowledges a `subscribe` (v3) with the model's current generation;
+    /// `Invalidate` events follow on the same connection.
+    Subscribed {
+        gen: u64,
+    },
+    /// Answers a `ping` (v3) with the server's [`PROTOCOL_VERSION`].
+    Hello {
+        version: u64,
+    },
+    /// An invalidation push event (v3): the model advanced to `gen`.
+    /// Written server→client on subscribed connections only, never as a
+    /// direct reply.
+    Invalidate {
+        model: u64,
+        gen: u64,
     },
     /// Result of an on-demand `audit` request: whether every structural
     /// invariant held, how many structures were walked, and (on failure)
@@ -329,6 +456,15 @@ pub enum Response {
         /// escalated to a full refit.
         solve_cold_retries: u64,
         solve_refit_escalations: u64,
+        /// Replication observability (v3; DESIGN.md §Replication): snapshot
+        /// artifacts exported to replicas, invalidation events pushed to
+        /// subscribers, and subscriptions currently attached to this model.
+        /// Deliberately *absent* from the flat (v1/v2) serialization — the
+        /// legacy shape is golden-pinned — and emitted only inside the v3
+        /// `replication` section.
+        snapshots_exported: u64,
+        invalidations_sent: u64,
+        subscribers: u64,
     },
 }
 
@@ -390,6 +526,29 @@ impl Response {
                 pairs.push(("structures", Json::Num(*structures as f64)));
                 pairs.push(("violation", Json::Str(violation.clone())));
             }
+            Response::Snapshot { gen, artifact } => {
+                pairs.push(("ok", Json::Bool(true)));
+                pairs.push(("gen", Json::Num(*gen as f64)));
+                match artifact {
+                    Some(hex) => pairs.push(("snapshot", Json::Str(hex.clone()))),
+                    None => pairs.push(("unchanged", Json::Bool(true))),
+                }
+            }
+            Response::Subscribed { gen } => {
+                pairs.push(("ok", Json::Bool(true)));
+                pairs.push(("subscribed", Json::Bool(true)));
+                pairs.push(("gen", Json::Num(*gen as f64)));
+            }
+            Response::Hello { version } => {
+                pairs.push(("ok", Json::Bool(true)));
+                pairs.push(("server_version", Json::Num(*version as f64)));
+            }
+            Response::Invalidate { model, gen } => {
+                pairs.push(("ok", Json::Bool(true)));
+                pairs.push(("event", Json::Str("invalidate".to_string())));
+                pairs.push(("model", Json::Num(*model as f64)));
+                pairs.push(("gen", Json::Num(*gen as f64)));
+            }
             Response::Stats {
                 n,
                 d,
@@ -418,6 +577,12 @@ impl Response {
                 journal_checkpoints,
                 solve_cold_retries,
                 solve_refit_escalations,
+                // The replication counters are v3-only: the flat shape
+                // below is the v1/v2 wire format, pinned byte-for-byte in
+                // tests/protocol_compat.rs, so they must not appear here.
+                snapshots_exported: _,
+                invalidations_sent: _,
+                subscribers: _,
             } => {
                 pairs.push(("ok", Json::Bool(true)));
                 pairs.push(("n", Json::Num(*n as f64)));
@@ -453,6 +618,122 @@ impl Response {
             }
         }
         Json::obj(pairs)
+    }
+
+    /// Serialize honoring the request's declared protocol version: `stats`
+    /// replies to v3+ requests carry the counters grouped into nested
+    /// `solve`/`storage`/`journal`/`pool`/`window`/`replication` sections;
+    /// every other (response, version) pair is identical to [`to_json`].
+    /// Both shapes are golden-pinned in `tests/protocol_compat.rs`.
+    ///
+    /// [`to_json`]: Response::to_json
+    pub fn to_json_v(&self, id: Option<f64>, version: u64) -> Json {
+        if version < 3 {
+            return self.to_json(id);
+        }
+        match self {
+            Response::Stats {
+                n,
+                d,
+                omegas,
+                cache_hits,
+                cache_misses,
+                pjrt_batches,
+                native_queries,
+                factor_patches,
+                factor_resweeps,
+                cache_truncations,
+                fallback_rebuilds,
+                pool_workers,
+                pool_busy,
+                pool_queue_depth,
+                pool_steals,
+                memmove_bytes,
+                chunks_copied,
+                chunks_shared,
+                window_evictions,
+                window_occupancy,
+                recoveries,
+                degraded,
+                journal_appends,
+                journal_bytes,
+                journal_checkpoints,
+                solve_cold_retries,
+                solve_refit_escalations,
+                snapshots_exported,
+                invalidations_sent,
+                subscribers,
+            } => {
+                let num = |v: u64| Json::Num(v as f64);
+                let mut pairs: Vec<(&str, Json)> = Vec::new();
+                if let Some(id) = id {
+                    pairs.push(("id", Json::Num(id)));
+                }
+                pairs.push(("ok", Json::Bool(true)));
+                pairs.push(("n", Json::Num(*n as f64)));
+                pairs.push(("d", Json::Num(*d as f64)));
+                pairs.push(("omegas", Json::arr_f64(omegas)));
+                pairs.push((
+                    "solve",
+                    Json::obj(vec![
+                        ("cache_hits", num(*cache_hits)),
+                        ("cache_misses", num(*cache_misses)),
+                        ("pjrt_batches", num(*pjrt_batches)),
+                        ("native_queries", num(*native_queries)),
+                        ("factor_patches", num(*factor_patches)),
+                        ("factor_resweeps", num(*factor_resweeps)),
+                        ("cache_truncations", num(*cache_truncations)),
+                        ("fallback_rebuilds", num(*fallback_rebuilds)),
+                        ("cold_retries", num(*solve_cold_retries)),
+                        ("refit_escalations", num(*solve_refit_escalations)),
+                    ]),
+                ));
+                pairs.push((
+                    "storage",
+                    Json::obj(vec![
+                        ("memmove_bytes", num(*memmove_bytes)),
+                        ("chunks_copied", num(*chunks_copied)),
+                        ("chunks_shared", num(*chunks_shared)),
+                    ]),
+                ));
+                pairs.push((
+                    "journal",
+                    Json::obj(vec![
+                        ("appends", num(*journal_appends)),
+                        ("bytes", num(*journal_bytes)),
+                        ("checkpoints", num(*journal_checkpoints)),
+                        ("recoveries", num(*recoveries)),
+                        ("degraded", Json::Bool(*degraded)),
+                    ]),
+                ));
+                pairs.push((
+                    "pool",
+                    Json::obj(vec![
+                        ("workers", num(*pool_workers)),
+                        ("busy", num(*pool_busy)),
+                        ("queue_depth", num(*pool_queue_depth)),
+                        ("steals", num(*pool_steals)),
+                    ]),
+                ));
+                pairs.push((
+                    "window",
+                    Json::obj(vec![
+                        ("evictions", num(*window_evictions)),
+                        ("occupancy", num(*window_occupancy)),
+                    ]),
+                ));
+                pairs.push((
+                    "replication",
+                    Json::obj(vec![
+                        ("snapshots_exported", num(*snapshots_exported)),
+                        ("invalidations_sent", num(*invalidations_sent)),
+                        ("subscribers", num(*subscribers)),
+                    ]),
+                ));
+                Json::obj(pairs)
+            }
+            other => other.to_json(id),
+        }
     }
 }
 
@@ -503,10 +784,90 @@ mod tests {
             Request::parse(r#"{"op":"rolling_window","model":1,"max_n":10,"v":1}"#).unwrap_err();
         assert!(e.contains("requires protocol v2"), "got: {e}");
         // ...and future versions are rejected loudly.
-        let e = Request::parse(r#"{"op":"stats","model":1,"v":3}"#).unwrap_err();
-        assert!(e.contains("unsupported protocol version 3"), "got: {e}");
+        let e = Request::parse(r#"{"op":"stats","model":1,"v":4}"#).unwrap_err();
+        assert!(e.contains("unsupported protocol version 4"), "got: {e}");
         assert!(Request::parse(r#"{"op":"stats","model":1,"v":0}"#).is_err());
         assert!(Request::parse(r#"{"op":"stats","model":1,"v":1.5}"#).is_err());
+    }
+
+    #[test]
+    fn version_gates_v3_ops() {
+        // v3 ops require the declaration: legacy and v2 frames are refused.
+        let e = Request::parse(r#"{"op":"snapshot","model":1}"#).unwrap_err();
+        assert!(e.contains("requires protocol v3"), "got: {e}");
+        let e = Request::parse(r#"{"op":"subscribe","model":1,"v":2}"#).unwrap_err();
+        assert!(e.contains("requires protocol v3"), "got: {e}");
+        // Under v3 they parse, and v1/v2 ops still parse under v3 too.
+        let (r, _) = Request::parse(r#"{"op":"snapshot","model":5,"v":3}"#).unwrap();
+        assert_eq!(r, Request::Snapshot { model: 5, have_gen: None });
+        let (r, _) =
+            Request::parse(r#"{"op":"snapshot","model":5,"have_gen":17,"v":3}"#).unwrap();
+        assert_eq!(r, Request::Snapshot { model: 5, have_gen: Some(17) });
+        let (r, _) = Request::parse(r#"{"op":"subscribe","model":5,"v":3}"#).unwrap();
+        assert_eq!(r, Request::Subscribe { model: 5 });
+        assert!(Request::parse(r#"{"op":"observe","model":1,"x":[1],"y":2,"v":3}"#).is_ok());
+    }
+
+    #[test]
+    fn ping_is_v3_and_model_free() {
+        let e = Request::parse(r#"{"op":"ping"}"#).unwrap_err();
+        assert!(e.contains("requires protocol v3"), "got: {e}");
+        let (r, _) = Request::parse(r#"{"op":"ping","v":3}"#).unwrap();
+        assert_eq!(r, Request::Ping);
+        let j = Response::Hello { version: 3 }.to_json(Some(1.0));
+        let v = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("server_version").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("id").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn parse_wire_reports_the_declared_version() {
+        let (_, meta) = Request::parse_wire(r#"{"op":"stats","model":1}"#).unwrap();
+        assert_eq!(meta.version, 1, "missing v is the legacy v1 wire format");
+        let (_, meta) =
+            Request::parse_wire(r#"{"op":"stats","model":1,"v":3,"id":4,"deadline_ms":50}"#)
+                .unwrap();
+        assert_eq!(meta, RequestMeta { id: Some(4.0), deadline_ms: Some(50), version: 3 });
+    }
+
+    #[test]
+    fn hex_roundtrips_and_rejects_garbage() {
+        assert_eq!(hex_encode(&[]), "");
+        assert_eq!(hex_encode(&[0x00, 0xAB, 0xFF]), "00abff");
+        assert_eq!(hex_decode("00abff"), Ok(vec![0x00, 0xAB, 0xFF]));
+        assert_eq!(hex_decode("00ABFF"), Ok(vec![0x00, 0xAB, 0xFF]));
+        let all: Vec<u8> = (0..=255).collect();
+        assert_eq!(hex_decode(&hex_encode(&all)), Ok(all));
+        assert!(hex_decode("abc").unwrap_err().contains("odd length"));
+        assert!(hex_decode("zz").unwrap_err().contains("bad hex"));
+    }
+
+    #[test]
+    fn snapshot_and_subscription_responses_serialize() {
+        let j = Response::Snapshot { gen: 9, artifact: Some("00ff".to_string()) }
+            .to_json(Some(2.0));
+        let v = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("gen").unwrap().as_usize(), Some(9));
+        assert_eq!(v.get("snapshot").unwrap().as_str(), Some("00ff"));
+        assert!(v.get("unchanged").is_none());
+
+        let j = Response::Snapshot { gen: 9, artifact: None }.to_json(None);
+        let v = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(v.get("unchanged").unwrap().as_bool(), Some(true));
+        assert!(v.get("snapshot").is_none());
+
+        let j = Response::Subscribed { gen: 3 }.to_json(Some(1.0));
+        let v = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(v.get("subscribed").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("gen").unwrap().as_usize(), Some(3));
+
+        let j = Response::Invalidate { model: 7, gen: 12 }.to_json(None);
+        let v = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(v.get("event").unwrap().as_str(), Some("invalidate"));
+        assert_eq!(v.get("model").unwrap().as_usize(), Some(7));
+        assert_eq!(v.get("gen").unwrap().as_usize(), Some(12));
     }
 
     #[test]
@@ -626,6 +987,76 @@ mod tests {
             v.get("violation").unwrap().as_str(),
             Some("Banded.data[3]: non-finite entry")
         );
+    }
+
+    fn full_stats() -> Response {
+        Response::Stats {
+            n: 10,
+            d: 2,
+            omegas: vec![1.0, 2.0],
+            cache_hits: 3,
+            cache_misses: 4,
+            pjrt_batches: 5,
+            native_queries: 6,
+            factor_patches: 7,
+            factor_resweeps: 8,
+            cache_truncations: 9,
+            fallback_rebuilds: 10,
+            pool_workers: 11,
+            pool_busy: 12,
+            pool_queue_depth: 13,
+            pool_steals: 14,
+            memmove_bytes: 15,
+            chunks_copied: 16,
+            chunks_shared: 17,
+            window_evictions: 18,
+            window_occupancy: 19,
+            recoveries: 20,
+            degraded: true,
+            journal_appends: 21,
+            journal_bytes: 22,
+            journal_checkpoints: 23,
+            solve_cold_retries: 24,
+            solve_refit_escalations: 25,
+            snapshots_exported: 26,
+            invalidations_sent: 27,
+            subscribers: 28,
+        }
+    }
+
+    #[test]
+    fn stats_nests_under_v3_and_stays_flat_below() {
+        let resp = full_stats();
+        // v1/v2 (and the legacy to_json): flat counters, no sections, and
+        // no replication fields at all.
+        for flat in [resp.to_json(Some(1.0)), resp.to_json_v(Some(1.0), 2)] {
+            let v = Json::parse(&flat.to_string()).unwrap();
+            assert_eq!(v.get("cache_hits").unwrap().as_usize(), Some(3));
+            assert_eq!(v.get("journal_appends").unwrap().as_usize(), Some(21));
+            assert!(v.get("solve").is_none());
+            assert!(v.get("replication").is_none());
+            assert!(v.get("snapshots_exported").is_none());
+        }
+        // v3: nested sections, no flat counters.
+        let v = Json::parse(&resp.to_json_v(Some(1.0), 3).to_string()).unwrap();
+        assert!(v.get("cache_hits").is_none());
+        assert!(v.get("journal_appends").is_none());
+        assert_eq!(v.get("n").unwrap().as_usize(), Some(10));
+        assert_eq!(v.get("solve").unwrap().get("cache_hits").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("solve").unwrap().get("refit_escalations").unwrap().as_usize(), Some(25));
+        assert_eq!(v.get("storage").unwrap().get("memmove_bytes").unwrap().as_usize(), Some(15));
+        assert_eq!(v.get("journal").unwrap().get("appends").unwrap().as_usize(), Some(21));
+        assert_eq!(v.get("journal").unwrap().get("degraded").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("pool").unwrap().get("workers").unwrap().as_usize(), Some(11));
+        assert_eq!(v.get("window").unwrap().get("evictions").unwrap().as_usize(), Some(18));
+        let rep = v.get("replication").unwrap();
+        assert_eq!(rep.get("snapshots_exported").unwrap().as_usize(), Some(26));
+        assert_eq!(rep.get("invalidations_sent").unwrap().as_usize(), Some(27));
+        assert_eq!(rep.get("subscribers").unwrap().as_usize(), Some(28));
+        // Non-stats responses are version-invariant.
+        let a = Response::Ok.to_json_v(Some(2.0), 3).to_string();
+        let b = Response::Ok.to_json(Some(2.0)).to_string();
+        assert_eq!(a, b);
     }
 
     #[test]

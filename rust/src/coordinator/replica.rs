@@ -1,0 +1,429 @@
+//! Stateless snapshot-shipping read replica (DESIGN.md §Replication).
+//!
+//! A [`Replica`] holds **no model state of its own**: it imports
+//! generation-numbered [`PosteriorSnapshot`] artifacts from its home shard
+//! (the writer) and serves `predict`/`suggest` from the last coherent
+//! import, through the *same* read-path math the writer's native path uses
+//! ([`scheduler::predict_on_snapshot`]) — so a replica's predictions are
+//! bit-identical to the writer's at the same generation.
+//!
+//! Freshness rides the v3 push protocol: one `subscribe` connection per
+//! model delivers invalidation events, each answered with a `snapshot`
+//! fetch carrying `have_gen` (the writer elides the payload when nothing
+//! changed — the cheap delta). Every import re-runs the full structural
+//! audit inside [`persist::decode_snapshot`], so a torn or corrupt ship
+//! can never install a mixed-generation posterior: the replica keeps
+//! serving its **last coherent generation** and retries. Writer restarts
+//! (journal recovery) are absorbed by the reconnect loop, which refetches
+//! unconditionally and installs whatever the writer now serves.
+//!
+//! Mutations are refused with a structured "read-only" error; route them
+//! to the home shard. Scale reads by running any number of replicas — see
+//! `examples/serve_cluster.rs` for a 1-writer + N-replica process fleet.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::check::Audit;
+use crate::coordinator::client::Client;
+use crate::coordinator::lock_clean;
+use crate::coordinator::protocol::{hex_encode, Request, Response, PROTOCOL_VERSION};
+use crate::coordinator::scheduler::{predict_on_snapshot, suggest_on_snapshot};
+use crate::gp::fit_state::PosteriorSnapshot;
+use crate::gp::persist;
+
+/// How often blocked reads and the accept loop re-check the shutdown flag.
+const POLL: Duration = Duration::from_millis(250);
+
+/// Configuration for a [`Replica`].
+#[derive(Clone, Debug)]
+pub struct ReplicaConfig {
+    /// The home shard's `host:port`.
+    pub writer: String,
+    /// Model ids to replicate. Each must already be *active* on the writer
+    /// (enough observations to build a read snapshot) when the replica
+    /// binds — the initial sync is a blocking full fetch.
+    pub models: Vec<u64>,
+    /// Suggest search bounds; must match the writer's engine config.
+    pub lo: f64,
+    pub hi: f64,
+    /// Base seed for this replica's suggest rng streams.
+    pub seed: u64,
+}
+
+/// Counters returned by [`Replica::serve`] after shutdown, summed over all
+/// replicated models.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ReplicaStats {
+    /// Snapshot artifacts decoded, audited and installed.
+    pub snapshots_imported: u64,
+    /// Invalidation events received on subscription connections.
+    pub invalidations_seen: u64,
+    /// Refresh attempts that failed (connect/fetch error or an artifact
+    /// that did not decode cleanly) — each one left the previous coherent
+    /// generation serving.
+    pub refresh_failures: u64,
+    /// Rows served by this replica's read path.
+    pub reads_served: u64,
+}
+
+/// A generation-tagged imported snapshot.
+struct TaggedSnap {
+    gen: u64,
+    snap: PosteriorSnapshot,
+}
+
+/// Per-model replica state.
+struct RepModel {
+    /// The serving snapshot. Always present (the initial sync happens in
+    /// [`Replica::bind`]); swapped atomically under a short lock so reads
+    /// never block on an import.
+    current: Mutex<Arc<TaggedSnap>>,
+    suggest_seq: AtomicU64,
+    snapshots_imported: AtomicU64,
+    invalidations_seen: AtomicU64,
+    refresh_failures: AtomicU64,
+    reads_served: AtomicU64,
+}
+
+impl RepModel {
+    /// Decode, audit and install an artifact. Installs unconditionally —
+    /// imports are serialized by the model's one sync thread, and after a
+    /// writer restart the authoritative generation may legitimately be
+    /// *lower* than what the replica holds. A decode failure (torn write,
+    /// bad CRC, failed audit) leaves the current snapshot serving.
+    fn install(&self, bytes: &[u8]) -> Result<u64, String> {
+        match persist::decode_snapshot(bytes) {
+            Ok((gen, snap)) => {
+                *lock_clean(&self.current) = Arc::new(TaggedSnap { gen, snap });
+                self.snapshots_imported.fetch_add(1, Ordering::Relaxed);
+                Ok(gen)
+            }
+            Err(e) => {
+                self.refresh_failures.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    fn cur(&self) -> Arc<TaggedSnap> {
+        Arc::clone(&lock_clean(&self.current))
+    }
+}
+
+struct RepShared {
+    cfg: ReplicaConfig,
+    models: HashMap<u64, RepModel>,
+    shutting_down: AtomicBool,
+}
+
+/// A running read replica: bind, then [`serve`](Replica::serve).
+pub struct Replica {
+    listener: TcpListener,
+    local: SocketAddr,
+    shared: Arc<RepShared>,
+}
+
+impl Replica {
+    /// Bind the serving socket and run the blocking initial sync: one full
+    /// snapshot fetch + audit per replicated model. Errors if the writer
+    /// is unreachable or any model cannot ship a coherent snapshot.
+    pub fn bind(addr: &str, cfg: ReplicaConfig) -> Result<Replica, String> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| format!("replica bind {addr}: {e}"))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| format!("replica local_addr: {e}"))?;
+        let mut client = Client::connect(&cfg.writer)
+            .map_err(|e| format!("writer {} connect: {e}", cfg.writer))?;
+        let mut models = HashMap::new();
+        for &m in &cfg.models {
+            let fetch = client
+                .snapshot(m, None)
+                .map_err(|e| format!("initial snapshot for model {m}: {e}"))?;
+            let bytes = fetch
+                .artifact
+                .ok_or_else(|| format!("writer sent no artifact for model {m}"))?;
+            let (gen, snap) = persist::decode_snapshot(&bytes)
+                .map_err(|e| format!("model {m} artifact: {e}"))?;
+            let cell = RepModel {
+                current: Mutex::new(Arc::new(TaggedSnap { gen, snap })),
+                suggest_seq: AtomicU64::new(0),
+                snapshots_imported: AtomicU64::new(1),
+                invalidations_seen: AtomicU64::new(0),
+                refresh_failures: AtomicU64::new(0),
+                reads_served: AtomicU64::new(0),
+            };
+            models.insert(m, cell);
+        }
+        Ok(Replica {
+            listener,
+            local,
+            shared: Arc::new(RepShared {
+                cfg,
+                models,
+                shutting_down: AtomicBool::new(false),
+            }),
+        })
+    }
+
+    /// The bound serving address.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// The generation currently served for `model` (`None` if the model is
+    /// not replicated here).
+    pub fn generation(&self, model: u64) -> Option<u64> {
+        self.shared.models.get(&model).map(|m| m.cur().gen)
+    }
+
+    /// Run the replica until a `shutdown` request arrives: one sync thread
+    /// per model (subscribe → invalidate → delta fetch, with reconnect
+    /// backoff), plus the accept loop. Joins every thread before
+    /// returning the accumulated counters.
+    pub fn serve(self) -> ReplicaStats {
+        let shared = self.shared;
+        let mut syncers: Vec<JoinHandle<()>> = Vec::new();
+        for &m in &shared.cfg.models {
+            let s = Arc::clone(&shared);
+            syncers.push(thread::spawn(move || sync_model(&s, m)));
+        }
+        let mut conns: Vec<JoinHandle<()>> = Vec::new();
+        let _ = self.listener.set_nonblocking(true);
+        while !shared.shutting_down.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let _ = stream.set_nonblocking(false);
+                    let s = Arc::clone(&shared);
+                    conns.push(thread::spawn(move || handle_conn(&s, stream)));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    thread::sleep(Duration::from_millis(10));
+                }
+                Err(_) => break,
+            }
+            conns.retain(|h| !h.is_finished());
+        }
+        for h in conns {
+            let _ = h.join();
+        }
+        for h in syncers {
+            let _ = h.join();
+        }
+        let mut out = ReplicaStats::default();
+        for m in shared.models.values() {
+            out.snapshots_imported += m.snapshots_imported.load(Ordering::Relaxed);
+            out.invalidations_seen += m.invalidations_seen.load(Ordering::Relaxed);
+            out.refresh_failures += m.refresh_failures.load(Ordering::Relaxed);
+            out.reads_served += m.reads_served.load(Ordering::Relaxed);
+        }
+        out
+    }
+}
+
+/// One model's freshness loop: subscribe to the writer, answer each
+/// invalidation with a `have_gen` delta fetch, reconnect with backoff on
+/// any failure — serving continues from the last coherent import
+/// throughout.
+fn sync_model(shared: &Arc<RepShared>, model: u64) {
+    let cell = match shared.models.get(&model) {
+        Some(c) => c,
+        None => return,
+    };
+    let mut backoff_ms = 50u64;
+    while !shared.shutting_down.load(Ordering::SeqCst) {
+        let attempt = || -> Result<(), String> {
+            let mut sub = Client::connect(&shared.cfg.writer)
+                .and_then(|c| c.subscribe(model))
+                .map_err(|e| e.to_string())?;
+            let mut req =
+                Client::connect(&shared.cfg.writer).map_err(|e| e.to_string())?;
+            // Catch-up fetch: covers mutations that landed between the
+            // last import and the subscription ack (and a writer restart,
+            // where the authoritative generation may have moved backward).
+            refresh(cell, model, &mut req)?;
+            loop {
+                if shared.shutting_down.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                match sub.next_event(Some(POLL)) {
+                    Ok(Some(_inv)) => {
+                        cell.invalidations_seen.fetch_add(1, Ordering::Relaxed);
+                        refresh(cell, model, &mut req)?;
+                    }
+                    Ok(None) => continue,
+                    Err(e) => return Err(e.to_string()),
+                }
+            }
+        };
+        match attempt() {
+            Ok(()) => return, // clean shutdown
+            Err(_) => {
+                cell.refresh_failures.fetch_add(1, Ordering::Relaxed);
+                thread::sleep(Duration::from_millis(backoff_ms));
+                backoff_ms = (backoff_ms * 2).min(500);
+            }
+        }
+    }
+}
+
+/// Fetch the writer's current artifact for `model` (eliding the payload
+/// via `have_gen` when the replica is already coherent) and install it. A
+/// transport error propagates (caller reconnects); a decode failure is
+/// absorbed by [`RepModel::install`] — last coherent generation keeps
+/// serving.
+fn refresh(cell: &RepModel, model: u64, req: &mut Client) -> Result<(), String> {
+    let have = cell.cur().gen;
+    let fetch = req.snapshot(model, Some(have)).map_err(|e| e.to_string())?;
+    if let Some(bytes) = fetch.artifact {
+        let _ = cell.install(&bytes);
+    }
+    Ok(())
+}
+
+/// One connection: JSON-line request/reply, bounded by the shutdown flag.
+fn handle_conn(shared: &Arc<RepShared>, stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(POLL));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => return,
+            Ok(_) if !line.ends_with('\n') => return, // EOF mid-line
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // A timeout mid-line leaves the partial in `line`; keep it.
+                if shared.shutting_down.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            Err(_) => return,
+        }
+        let text = std::mem::take(&mut line);
+        if text.trim().is_empty() {
+            continue;
+        }
+        let (resp, id, version) = dispatch(shared, text.trim());
+        let out = format!("{}\n", resp.to_json_v(id, version));
+        if writer.write_all(out.as_bytes()).is_err() {
+            return;
+        }
+    }
+}
+
+/// Serve one request from the imported snapshots. Reads come through the
+/// same helpers as the writer's native path; everything mutating is
+/// refused with a structured read-only error.
+fn dispatch(shared: &RepShared, line: &str) -> (Response, Option<f64>, u64) {
+    let (req, meta) = match Request::parse_wire(line) {
+        Ok(v) => v,
+        Err(e) => return (Response::Error(e), None, 1),
+    };
+    let (id, version) = (meta.id, meta.version);
+    let model_of = |m: u64| -> Result<&RepModel, Response> {
+        shared
+            .models
+            .get(&m)
+            .ok_or_else(|| Response::Error(format!("model {m} is not replicated here")))
+    };
+    let resp = match req {
+        Request::Ping => Response::Hello { version: PROTOCOL_VERSION },
+        Request::Shutdown => {
+            shared.shutting_down.store(true, Ordering::SeqCst);
+            Response::Ok
+        }
+        Request::Predict { model, xs, beta, grad } => match model_of(model) {
+            Err(e) => e,
+            Ok(cell) => {
+                let cur = cell.cur();
+                let d = cur.snap.input_dim();
+                if xs.iter().any(|r| r.len() != d) {
+                    Response::Error(format!("expected {d}-dim points"))
+                } else {
+                    cell.reads_served.fetch_add(xs.len() as u64, Ordering::Relaxed);
+                    predict_on_snapshot(&cur.snap, &xs, beta, grad)
+                }
+            }
+        },
+        Request::Suggest { model, beta } => match model_of(model) {
+            Err(e) => e,
+            Ok(cell) => {
+                let cur = cell.cur();
+                let seq = cell.suggest_seq.fetch_add(1, Ordering::SeqCst);
+                let x = suggest_on_snapshot(
+                    &cur.snap,
+                    cur.snap.input_dim(),
+                    shared.cfg.lo,
+                    shared.cfg.hi,
+                    shared.cfg.seed ^ model,
+                    seq,
+                    beta,
+                );
+                cell.reads_served.fetch_add(1, Ordering::Relaxed);
+                Response::Suggestion { x }
+            }
+        },
+        Request::Snapshot { model, have_gen } => match model_of(model) {
+            Err(e) => e,
+            Ok(cell) => {
+                // Re-export: a replica can feed another reader (or the CI
+                // bit-identity check) the exact artifact it serves from.
+                let cur = cell.cur();
+                if have_gen == Some(cur.gen) {
+                    Response::Snapshot { gen: cur.gen, artifact: None }
+                } else {
+                    let bytes = persist::encode_snapshot(&cur.snap, cur.gen);
+                    Response::Snapshot {
+                        gen: cur.gen,
+                        artifact: Some(hex_encode(&bytes)),
+                    }
+                }
+            }
+        },
+        Request::Audit { model } => match model_of(model) {
+            Err(e) => e,
+            Ok(cell) => match cell.cur().snap.audit() {
+                Ok(()) => Response::AuditReport {
+                    passed: true,
+                    structures: 1,
+                    violation: String::new(),
+                },
+                Err(e) => Response::AuditReport {
+                    passed: false,
+                    structures: 1,
+                    violation: e.to_string(),
+                },
+            },
+        },
+        Request::Subscribe { .. } => Response::Error(
+            "replica does not push invalidations; subscribe to the home shard".into(),
+        ),
+        Request::CreateModel { .. }
+        | Request::Observe { .. }
+        | Request::ObserveBatch { .. }
+        | Request::Forget { .. }
+        | Request::ForgetBatch { .. }
+        | Request::RollingWindow { .. }
+        | Request::Fit { .. }
+        | Request::Stats { .. } => Response::Error(
+            "replica is read-only: route this op to the home shard".into(),
+        ),
+    };
+    (resp, id, version)
+}

@@ -52,8 +52,9 @@ use crate::bo::search::{search_next, SearchCfg};
 use crate::coordinator::engine::{Command, EngineConfig, ModelEngine};
 use crate::coordinator::journal::{self, JournalConfig, ModelJournal, MutationOp};
 use crate::coordinator::lock_clean;
-use crate::coordinator::protocol::Response;
+use crate::coordinator::protocol::{hex_encode, Response};
 use crate::gp::fit_state::PosteriorSnapshot;
+use crate::gp::persist;
 use crate::gp::posterior::MTildeCache;
 use crate::runtime::xla;
 use crate::runtime::{ArtifactManifest, WindowExecutable};
@@ -128,6 +129,100 @@ struct ModelCell {
     /// and panic resurrection is withheld — the on-disk history is no
     /// longer complete, so a rebuild from it would silently lose state.
     degraded: AtomicBool,
+    /// Push-invalidation subscribers (protocol v3 `subscribe`): each sender
+    /// receives one [`Response::Invalidate`] per generation bump, in
+    /// generation order, until its receiver hangs up (pruned on the next
+    /// failed send). Locked after the engine mutex wherever both are held
+    /// (same order as `snapshot` / `journal`).
+    subscribers: Mutex<Vec<Sender<Response>>>,
+    /// Snapshot artifacts encoded and shipped (v3 `snapshot` op; payload
+    /// actually sent — `have_gen` short-circuits are not counted).
+    snapshots_exported: AtomicU64,
+    /// Invalidation events delivered to subscribers (lifetime total).
+    invalidations_sent: AtomicU64,
+    /// Counter continuity across panic resurrection: a recovered engine
+    /// restarts its cumulative counters at the journal-replay value, which
+    /// sits below the live pre-panic value for anything not serialized in
+    /// the checkpoint (storage splice/COW counters, read-path tallies). The
+    /// shortfall is captured here at each resurrection and added back by
+    /// `serve_stats`, so the wire counters stay monotone and the
+    /// saturating-delta folding in [`crate::coordinator::metrics`] cannot
+    /// under-count after a recovery.
+    metric_base: Mutex<CounterBase>,
+}
+
+/// The Stats-visible cumulative counters that can regress when a panicked
+/// engine is rebuilt from its journal (see `ModelCell::metric_base`).
+#[derive(Clone, Copy, Default)]
+struct CounterBase {
+    cache_hits: u64,
+    cache_misses: u64,
+    pjrt_batches: u64,
+    native_queries: u64,
+    factor_patches: u64,
+    factor_resweeps: u64,
+    cache_truncations: u64,
+    fallback_rebuilds: u64,
+    memmove_bytes: u64,
+    chunks_copied: u64,
+    chunks_shared: u64,
+    window_evictions: u64,
+    solve_cold_retries: u64,
+    solve_refit_escalations: u64,
+}
+
+impl CounterBase {
+    /// Fold in the counter shortfall of one resurrection: whatever the
+    /// recovered engine (`post`) restarts below the pre-panic engine
+    /// (`pre`) becomes a permanent offset. Counters the replay lands
+    /// exactly on contribute zero.
+    fn absorb_regression(&mut self, pre: &CounterBase, post: &CounterBase) {
+        self.cache_hits += pre.cache_hits.saturating_sub(post.cache_hits);
+        self.cache_misses += pre.cache_misses.saturating_sub(post.cache_misses);
+        self.pjrt_batches += pre.pjrt_batches.saturating_sub(post.pjrt_batches);
+        self.native_queries += pre.native_queries.saturating_sub(post.native_queries);
+        self.factor_patches += pre.factor_patches.saturating_sub(post.factor_patches);
+        self.factor_resweeps += pre.factor_resweeps.saturating_sub(post.factor_resweeps);
+        self.cache_truncations +=
+            pre.cache_truncations.saturating_sub(post.cache_truncations);
+        self.fallback_rebuilds +=
+            pre.fallback_rebuilds.saturating_sub(post.fallback_rebuilds);
+        self.memmove_bytes += pre.memmove_bytes.saturating_sub(post.memmove_bytes);
+        self.chunks_copied += pre.chunks_copied.saturating_sub(post.chunks_copied);
+        self.chunks_shared += pre.chunks_shared.saturating_sub(post.chunks_shared);
+        self.window_evictions +=
+            pre.window_evictions.saturating_sub(post.window_evictions);
+        self.solve_cold_retries +=
+            pre.solve_cold_retries.saturating_sub(post.solve_cold_retries);
+        self.solve_refit_escalations +=
+            pre.solve_refit_escalations.saturating_sub(post.solve_refit_escalations);
+    }
+}
+
+/// Sample every cumulative counter `serve_stats` reads off the engine — the
+/// before/after probe around a resurrection's engine swap.
+fn engine_counters(eng: &ModelEngine) -> CounterBase {
+    let gp = eng.gp();
+    let (hits, misses, _) = gp.cache_stats();
+    let (patches, resweeps) = gp.factor_stats();
+    let (_, fallbacks, _) = gp.incremental_stats();
+    let (memmove, copied, shared) = gp.storage_stats();
+    CounterBase {
+        cache_hits: hits,
+        cache_misses: misses,
+        pjrt_batches: eng.pjrt_batches,
+        native_queries: eng.native_queries,
+        factor_patches: patches,
+        factor_resweeps: resweeps,
+        cache_truncations: gp.cache_truncations(),
+        fallback_rebuilds: fallbacks,
+        memmove_bytes: memmove,
+        chunks_copied: copied,
+        chunks_shared: shared,
+        window_evictions: eng.window_evictions,
+        solve_cold_retries: gp.solve_cold_retries,
+        solve_refit_escalations: gp.solve_refit_escalations,
+    }
 }
 
 /// How many times a model's engine may be rebuilt from its journal after a
@@ -268,6 +363,10 @@ impl Scheduler {
             journal: Mutex::new(jnl),
             recoveries: AtomicU64::new(0),
             degraded: AtomicBool::new(degraded),
+            subscribers: Mutex::new(Vec::new()),
+            snapshots_exported: AtomicU64::new(0),
+            invalidations_sent: AtomicU64::new(0),
+            metric_base: Mutex::new(CounterBase::default()),
         });
         lock_clean(&self.inner.models).insert(id, cell);
     }
@@ -321,6 +420,10 @@ impl Scheduler {
             journal: Mutex::new(jnl),
             recoveries: AtomicU64::new(0),
             degraded: AtomicBool::new(degraded),
+            subscribers: Mutex::new(Vec::new()),
+            snapshots_exported: AtomicU64::new(0),
+            invalidations_sent: AtomicU64::new(0),
+            metric_base: Mutex::new(CounterBase::default()),
         });
         lock_clean(&self.inner.models).insert(id, cell);
         id
@@ -432,6 +535,20 @@ impl Scheduler {
                 let c = Arc::clone(&cell);
                 let job: Job = Box::new(move |_| serve_audit(&c, reply));
                 let _ = self.inner.pool.spawn(job);
+            }
+            Command::Snapshot { have_gen, reply } => {
+                let c = Arc::clone(&cell);
+                let job: Job = Box::new(move |_| serve_snapshot(&c, have_gen, reply));
+                let _ = self.inner.pool.spawn(job);
+            }
+            Command::Subscribe { events, reply } => {
+                // Register first, then report the generation: a bump racing
+                // this window delivers a duplicate invalidation (harmless —
+                // fetches are idempotent by generation) rather than a
+                // missed one.
+                lock_clean(&cell.subscribers).push(events);
+                let gen = cell.gen.load(Ordering::SeqCst);
+                let _ = reply.send(Response::Subscribed { gen });
             }
             _ => unreachable!("mutating commands are routed to the queue above"),
         }
@@ -577,6 +694,10 @@ fn drain_mutations(cell: &ModelCell) {
                     if journaled.is_err() {
                         cell.degraded.store(true, Ordering::SeqCst);
                     }
+                    // Push the invalidation while still holding the engine
+                    // lock: gen bumps are serialized under it, so every
+                    // subscriber sees generations in order.
+                    notify_subscribers(cell, gen);
                 }
                 drop(eng);
                 let _ = reply.send(resp);
@@ -650,9 +771,40 @@ fn try_resurrect(cell: &ModelCell, eng: &mut ModelEngine) -> Result<(), String> 
             rec.gen, want
         ));
     }
+    // The replay restarts cumulative counters at the journal's idea of the
+    // world — anything not in the checkpoint (storage splice/COW tallies,
+    // read-path counts since the last checkpoint) regresses. Capture the
+    // shortfall against the live pre-panic engine before discarding it, so
+    // `serve_stats` keeps the wire counters monotone (the `ServerMetrics`
+    // saturating-delta folding would otherwise silently under-count every
+    // post-recovery delta until the counter caught back up).
+    let pre = engine_counters(eng);
     *eng = rec.engine;
+    let post = engine_counters(eng);
+    lock_clean(&cell.metric_base).absorb_regression(&pre, &post);
     cell.recoveries.fetch_add(1, Ordering::SeqCst);
     Ok(())
+}
+
+/// Deliver one `Invalidate` event for `gen` to every subscriber, pruning
+/// the ones whose receiver is gone. Runs under the engine lock (the
+/// mutation drain's guard), so events arrive in generation order.
+fn notify_subscribers(cell: &ModelCell, gen: u64) {
+    let mut subs = lock_clean(&cell.subscribers);
+    if subs.is_empty() {
+        return;
+    }
+    let mut sent = 0u64;
+    subs.retain(|s| {
+        let ok = s.send(Response::Invalidate { model: cell.id, gen }).is_ok();
+        if ok {
+            sent += 1;
+        }
+        ok
+    });
+    if sent > 0 {
+        cell.invalidations_sent.fetch_add(sent, Ordering::Relaxed);
+    }
 }
 
 /// Pinned PJRT drain: take the whole predict backlog, group consecutive
@@ -784,13 +936,28 @@ fn serve_native_predict(
         let _ = reply.send(Response::Error(format!("expected {d}-dim points")));
         return;
     }
+    let resp = predict_on_snapshot(&tagged.snap, &xs, beta, grad);
+    cell.native_reads.fetch_add(xs.len() as u64, Ordering::Relaxed);
+    let _ = reply.send(resp);
+}
+
+/// The native read-path math over a posterior snapshot, shared by the home
+/// shard ([`serve_native_predict`]) and the replica
+/// ([`crate::coordinator::replica`]) — one code path is what makes replica
+/// predictions bit-identical to the writer's at the same generation.
+pub(crate) fn predict_on_snapshot(
+    snap: &PosteriorSnapshot,
+    xs: &[Vec<f64>],
+    beta: f64,
+    grad: bool,
+) -> Response {
     let a = Acquisition::LcbMin { beta };
     let mut mu = Vec::with_capacity(xs.len());
     let mut svar = Vec::with_capacity(xs.len());
     let mut acqv = Vec::with_capacity(xs.len());
     let mut gacq = Vec::with_capacity(xs.len());
-    for x in &xs {
-        let out = tagged.snap.predict(x, grad);
+    for x in xs {
+        let out = snap.predict(x, grad);
         let (v, g) = if grad {
             a.value_grad(out.mean, out.var, &out.mean_grad, &out.var_grad)
         } else {
@@ -801,14 +968,13 @@ fn serve_native_predict(
         acqv.push(v);
         gacq.push(g);
     }
-    cell.native_reads.fetch_add(xs.len() as u64, Ordering::Relaxed);
-    let _ = reply.send(Response::Prediction {
+    Response::Prediction {
         mu,
         svar,
         acq: acqv,
         gacq: if grad { gacq } else { Vec::new() },
         path: "native",
-    });
+    }
 }
 
 /// Read-only acquisition surface over a snapshot, with a private `M̃` cache
@@ -851,26 +1017,71 @@ fn serve_suggest(cell: &ModelCell, beta: f64, reply: Sender<Response>) {
         }
     };
     let seq = cell.suggest_seq.fetch_add(1, Ordering::SeqCst);
-    let mut rng = Rng::new(cell.cfg.seed ^ 0x9E3779B97F4A7C15u64.wrapping_mul(seq + 1));
-    let cache = tagged.snap.fresh_cache();
-    let mut eval = SnapshotEval { snap: &tagged.snap, cache };
-    let acq = Acquisition::LcbMin { beta };
-    let scfg = SearchCfg::default();
-    let x = search_next(
-        &mut eval,
-        &acq,
+    let x = suggest_on_snapshot(
+        &tagged.snap,
         cell.cfg.d,
         cell.cfg.lo,
         cell.cfg.hi,
-        &scfg,
-        &mut rng,
+        cell.cfg.seed,
+        seq,
+        beta,
     );
     cell.native_reads.fetch_add(1, Ordering::Relaxed);
     let _ = reply.send(Response::Suggestion { x });
 }
 
+/// Multi-start LCB gradient ascent over a posterior snapshot — the suggest
+/// mirror of [`predict_on_snapshot`], shared with the replica. Each call
+/// owns an independent rng derived from `(seed, seq)`, so a replica's
+/// suggest sequence is deterministic for its own `(seed, seq)` stream.
+pub(crate) fn suggest_on_snapshot(
+    snap: &PosteriorSnapshot,
+    d: usize,
+    lo: f64,
+    hi: f64,
+    seed: u64,
+    seq: u64,
+    beta: f64,
+) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ 0x9E3779B97F4A7C15u64.wrapping_mul(seq + 1));
+    let cache = snap.fresh_cache();
+    let mut eval = SnapshotEval { snap, cache };
+    let acq = Acquisition::LcbMin { beta };
+    let scfg = SearchCfg::default();
+    search_next(&mut eval, &acq, d, lo, hi, &scfg, &mut rng)
+}
+
+/// Export the model's current read snapshot as a generation-numbered
+/// artifact (protocol v3 `snapshot` op). A `have_gen` matching the served
+/// generation elides the payload — the cheap "unchanged" delta a replica
+/// rides between invalidations. The artifact is self-validating
+/// ([`persist::decode_snapshot`] re-audits on import), so a torn or stale
+/// ship can never install a mixed-generation posterior on a replica.
+fn serve_snapshot(cell: &ModelCell, have_gen: Option<u64>, reply: Sender<Response>) {
+    let tagged = match read_snapshot(cell) {
+        Ok(t) => t,
+        Err(e) => {
+            let _ = reply.send(Response::Error(e));
+            return;
+        }
+    };
+    if have_gen == Some(tagged.gen) {
+        let _ = reply.send(Response::Snapshot { gen: tagged.gen, artifact: None });
+        return;
+    }
+    let bytes = persist::encode_snapshot(&tagged.snap, tagged.gen);
+    cell.snapshots_exported.fetch_add(1, Ordering::Relaxed);
+    let _ = reply.send(Response::Snapshot {
+        gen: tagged.gen,
+        artifact: Some(hex_encode(&bytes)),
+    });
+}
+
 /// Stats: engine counters (brief engine lock) + read-path counters + pool
-/// occupancy/queue-depth/steal observability.
+/// occupancy/queue-depth/steal observability. Counters that can regress
+/// across a panic resurrection are lifted by the cell's `metric_base`
+/// offsets, so everything on the wire is monotone for the lifetime of the
+/// model id.
 fn serve_stats(cell: &ModelCell, pool: &WorkerPool, reply: Sender<Response>) {
     let eng = match cell.engine.lock() {
         Ok(g) => g,
@@ -881,11 +1092,8 @@ fn serve_stats(cell: &ModelCell, pool: &WorkerPool, reply: Sender<Response>) {
         }
     };
     let gp = eng.gp();
-    let (hits, misses, _) = gp.cache_stats();
-    let (patches, resweeps) = gp.factor_stats();
-    let (_, fallbacks, _) = gp.incremental_stats();
-    let truncations = gp.cache_truncations();
-    let (memmove, copied, shared) = gp.storage_stats();
+    let live = engine_counters(&eng);
+    let base = *lock_clean(&cell.metric_base);
     let (snap_h, snap_m) = {
         let slot = lock_clean(&cell.snapshot);
         slot.as_ref().map(|s| s.snap.cache_stats()).unwrap_or((0, 0))
@@ -900,34 +1108,42 @@ fn serve_stats(cell: &ModelCell, pool: &WorkerPool, reply: Sender<Response>) {
         n: gp.n(),
         d: gp.input_dim(),
         omegas: gp.omegas.clone(),
-        cache_hits: hits
+        cache_hits: live.cache_hits
+            + base.cache_hits
             + cell.read_hits.load(Ordering::Relaxed)
             + snap_h,
-        cache_misses: misses
+        cache_misses: live.cache_misses
+            + base.cache_misses
             + cell.read_misses.load(Ordering::Relaxed)
             + snap_m,
-        pjrt_batches: eng.pjrt_batches,
-        native_queries: eng.native_queries + cell.native_reads.load(Ordering::Relaxed),
-        factor_patches: patches,
-        factor_resweeps: resweeps,
-        cache_truncations: truncations,
-        fallback_rebuilds: fallbacks,
+        pjrt_batches: live.pjrt_batches + base.pjrt_batches,
+        native_queries: live.native_queries
+            + base.native_queries
+            + cell.native_reads.load(Ordering::Relaxed),
+        factor_patches: live.factor_patches + base.factor_patches,
+        factor_resweeps: live.factor_resweeps + base.factor_resweeps,
+        cache_truncations: live.cache_truncations + base.cache_truncations,
+        fallback_rebuilds: live.fallback_rebuilds + base.fallback_rebuilds,
         pool_workers: ps.workers as u64,
         pool_busy: ps.running,
         pool_queue_depth: ps.queued,
         pool_steals: ps.steals,
-        memmove_bytes: memmove,
-        chunks_copied: copied,
-        chunks_shared: shared,
-        window_evictions: eng.window_evictions,
+        memmove_bytes: live.memmove_bytes + base.memmove_bytes,
+        chunks_copied: live.chunks_copied + base.chunks_copied,
+        chunks_shared: live.chunks_shared + base.chunks_shared,
+        window_evictions: live.window_evictions + base.window_evictions,
         window_occupancy: eng.window_occupancy() as u64,
         recoveries: cell.recoveries.load(Ordering::Relaxed),
         degraded: cell.degraded.load(Ordering::SeqCst),
         journal_appends: j_appends,
         journal_bytes: j_bytes,
         journal_checkpoints: j_ckpts,
-        solve_cold_retries: gp.solve_cold_retries,
-        solve_refit_escalations: gp.solve_refit_escalations,
+        solve_cold_retries: live.solve_cold_retries + base.solve_cold_retries,
+        solve_refit_escalations: live.solve_refit_escalations
+            + base.solve_refit_escalations,
+        snapshots_exported: cell.snapshots_exported.load(Ordering::Relaxed),
+        invalidations_sent: cell.invalidations_sent.load(Ordering::Relaxed),
+        subscribers: lock_clean(&cell.subscribers).len() as u64,
     };
     drop(eng);
     let _ = reply.send(resp);
@@ -1185,6 +1401,96 @@ mod tests {
         assert!(m2 > m, "fresh ids must clear the recovered journals");
         sched2.shutdown();
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The v3 replication surface end-to-end in-process: subscribe, export
+    /// a snapshot artifact, decode it (audit included) to a posterior that
+    /// predicts bit-identically, ride the `have_gen` short-circuit, and see
+    /// the invalidation push + replication counters after a mutation.
+    #[test]
+    fn snapshot_export_and_invalidation_push() {
+        let sched = Scheduler::new(2);
+        let m = sched.create_model(cfg(2));
+        let mut rng = Rng::new(21);
+        let xs: Vec<Vec<f64>> = (0..40)
+            .map(|_| vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)])
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x[0].sin() + x[1].cos()).collect();
+        let r = call(&sched, m, |reply| Command::ObserveBatch { xs, ys, reply });
+        assert!(matches!(r, Response::BatchObserved { .. }), "unexpected {r:?}");
+        let (etx, erx) = channel();
+        let gen0 = match call(&sched, m, |reply| Command::Subscribe { events: etx, reply })
+        {
+            Response::Subscribed { gen } => gen,
+            other => panic!("unexpected {other:?}"),
+        };
+        let (gen, artifact) =
+            match call(&sched, m, |reply| Command::Snapshot { have_gen: None, reply }) {
+                Response::Snapshot { gen, artifact } => (gen, artifact),
+                other => panic!("unexpected {other:?}"),
+            };
+        assert_eq!(gen, gen0);
+        let hex = artifact.expect("first export carries the payload");
+        let bytes = crate::coordinator::protocol::hex_decode(&hex).expect("hex");
+        let (dec_gen, snap) = persist::decode_snapshot(&bytes).expect("decode + audit");
+        assert_eq!(dec_gen, gen);
+        // The imported posterior predicts bit-identically to the writer.
+        let probe = vec![1.3, 2.6];
+        let local = snap.predict(&probe, true);
+        match call(&sched, m, |reply| Command::Predict {
+            xs: vec![probe.clone()],
+            beta: 2.0,
+            grad: true,
+            reply,
+        }) {
+            Response::Prediction { mu, svar, .. } => {
+                assert_eq!(mu[0].to_bits(), local.mean.to_bits());
+                assert_eq!(svar[0].to_bits(), local.var.to_bits());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // `have_gen` at the served generation elides the payload.
+        match call(&sched, m, |reply| Command::Snapshot { have_gen: Some(gen), reply }) {
+            Response::Snapshot { gen: g, artifact } => {
+                assert_eq!(g, gen);
+                assert!(artifact.is_none(), "unchanged generation must ship no bytes");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // A mutation pushes exactly one in-order invalidation.
+        let x = vec![0.5, 0.5];
+        let y = x[0].sin() + x[1].cos();
+        let r = call(&sched, m, |reply| Command::Observe { x, y, reply });
+        assert!(matches!(r, Response::Observed { .. }), "unexpected {r:?}");
+        match erx.recv().expect("invalidation") {
+            Response::Invalidate { model, gen: g } => {
+                assert_eq!(model, m);
+                assert_eq!(g, gen + 1);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match call(&sched, m, |reply| Command::Stats { reply }) {
+            Response::Stats { snapshots_exported, invalidations_sent, subscribers, .. } => {
+                assert_eq!(snapshots_exported, 1, "have_gen short-circuit not counted");
+                assert_eq!(invalidations_sent, 1);
+                assert_eq!(subscribers, 1);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Dropping the receiver prunes the subscriber on the next bump.
+        drop(erx);
+        let x = vec![1.5, 1.5];
+        let y = x[0].sin() + x[1].cos();
+        let r = call(&sched, m, |reply| Command::Observe { x, y, reply });
+        assert!(matches!(r, Response::Observed { .. }), "unexpected {r:?}");
+        match call(&sched, m, |reply| Command::Stats { reply }) {
+            Response::Stats { invalidations_sent, subscribers, .. } => {
+                assert_eq!(invalidations_sent, 1, "dead subscriber gets nothing");
+                assert_eq!(subscribers, 0, "pruned on the failed send");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        sched.shutdown();
     }
 
     #[test]

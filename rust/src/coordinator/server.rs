@@ -20,21 +20,30 @@
 //! [`Server::set_queue_limit`]). A peer that vanishes mid-request is
 //! detected when its reply fails to write; the reader thread is freed and
 //! the disconnect counted in [`ServerMetrics`].
+//!
+//! Protocol v3 adds the replication surface (DESIGN.md §Replication): a
+//! `snapshot` request ships the model's generation-numbered posterior
+//! artifact, and a `subscribe` request converts its connection into a
+//! one-way invalidation stream — after the `subscribed` ack the reader
+//! thread forwards one `invalidate` line per generation bump and reads no
+//! further requests (a replica keeps a separate request/response
+//! connection for its snapshot fetches).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, RecvTimeoutError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::anyhow;
 use crate::coordinator::engine::{Command, EngineConfig};
+use crate::coordinator::journal::JournalConfig;
 use crate::coordinator::lock_clean;
 use crate::coordinator::metrics::ServerMetrics;
-use crate::coordinator::protocol::{Request, Response};
-use crate::coordinator::scheduler::Scheduler;
+use crate::coordinator::protocol::{Request, Response, PROTOCOL_VERSION};
+use crate::coordinator::scheduler::{RecoveryReport, Scheduler};
 use crate::kernels::matern::Nu;
 use crate::util::error::Result;
 use crate::util::pool;
@@ -106,13 +115,57 @@ impl Server {
         hi: f64,
         workers: usize,
     ) -> Result<Self> {
+        Self::bind_scheduler(addr, use_pjrt, lo, hi, workers, Scheduler::new(workers))
+    }
+
+    /// [`Server::bind_with`] with durable mutations: every model created
+    /// over the wire appends to a per-model journal under `jcfg`, so a
+    /// crashed or cleanly-stopped writer can be rebooted onto the same
+    /// fleet with [`Server::bind_recovered`] (DESIGN.md §Durability,
+    /// §Replication — this is the home-shard half of writer failover).
+    pub fn bind_journaled(
+        addr: &str,
+        use_pjrt: bool,
+        lo: f64,
+        hi: f64,
+        workers: usize,
+        jcfg: JournalConfig,
+    ) -> Result<Self> {
+        Self::bind_scheduler(addr, use_pjrt, lo, hi, workers, Scheduler::with_journal(workers, jcfg))
+    }
+
+    /// Bind a *restarted* writer: recover every journaled model from `jcfg`
+    /// (same model ids, bit-identical state, generations preserved), then
+    /// serve. The report rides along so callers can surface partial
+    /// recoveries; replicas reconnect and resync without re-registration.
+    pub fn bind_recovered(
+        addr: &str,
+        use_pjrt: bool,
+        lo: f64,
+        hi: f64,
+        workers: usize,
+        jcfg: JournalConfig,
+    ) -> Result<(Self, RecoveryReport)> {
+        let (scheduler, report) = Scheduler::recover(workers, jcfg);
+        let server = Self::bind_scheduler(addr, use_pjrt, lo, hi, workers, scheduler)?;
+        Ok((server, report))
+    }
+
+    fn bind_scheduler(
+        addr: &str,
+        use_pjrt: bool,
+        lo: f64,
+        hi: f64,
+        workers: usize,
+        scheduler: Scheduler,
+    ) -> Result<Self> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
         Ok(Server {
             listener,
             addr,
             shared: Arc::new(Shared {
-                scheduler: Scheduler::new(workers),
+                scheduler,
                 shutting_down: AtomicBool::new(false),
                 use_pjrt,
                 lo,
@@ -217,12 +270,19 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
         if line.trim().is_empty() {
             continue;
         }
-        let (resp, id) = dispatch(&line, &shared);
-        let out = format!("{}\n", resp.to_json(id));
+        let (resp, id, version, events) = dispatch(&line, &shared);
+        let out = format!("{}\n", resp.to_json_v(id, version));
         if writer.write_all(out.as_bytes()).is_err() {
             // The peer vanished mid-request: count it and free this
             // reader thread (the computed reply is dropped).
             shared.metrics.inc_client_disconnects();
+            return;
+        }
+        if let Some(events) = events {
+            // A successful `subscribe` converts this connection into a
+            // one-way invalidation stream; the reader thread becomes its
+            // forwarder and reads no further requests.
+            forward_events(&mut writer, events, &shared, version);
             return;
         }
         if shared.shutting_down.load(Ordering::SeqCst) {
@@ -232,6 +292,36 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
                 let _ = TcpStream::connect(addr);
             }
             return;
+        }
+    }
+}
+
+/// Forward scheduler invalidation events to a subscribed connection until
+/// the peer vanishes (a failed write), the model's subscriber entry is
+/// dropped (scheduler quarantine), or the server shuts down. The receive
+/// poll re-checks the shutdown flag on the same cadence as the bounded
+/// reader, so subscribed connections join the deterministic drain.
+fn forward_events(
+    writer: &mut TcpStream,
+    events: Receiver<Response>,
+    shared: &Shared,
+    version: u64,
+) {
+    loop {
+        match events.recv_timeout(READ_POLL) {
+            Ok(ev) => {
+                let out = format!("{}\n", ev.to_json_v(None, version));
+                if writer.write_all(out.as_bytes()).is_err() {
+                    shared.metrics.inc_client_disconnects();
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if shared.shutting_down.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
         }
     }
 }
@@ -320,16 +410,25 @@ fn read_bounded_line(reader: &mut BufReader<TcpStream>, shared: &Shared) -> Line
     }
 }
 
-fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
+/// Parse and serve one request line. Returns the reply, its echoed `id`,
+/// the request's declared protocol version (driving the reply shape via
+/// [`Response::to_json_v`]), and — for a successful `subscribe` — the
+/// event stream the connection must start forwarding.
+fn dispatch(
+    line: &str,
+    shared: &Arc<Shared>,
+) -> (Response, Option<f64>, u64, Option<Receiver<Response>>) {
     shared.metrics.inc_requests();
     let t0 = std::time::Instant::now();
-    let (req, id, deadline_ms) = match Request::parse_meta(line) {
+    let (req, meta) = match Request::parse_wire(line) {
         Ok(v) => v,
         Err(e) => {
             shared.metrics.inc_errors();
-            return (Response::Error(e), None);
+            return (Response::Error(e), None, 1, None);
         }
     };
+    let (id, deadline_ms, version) = (meta.id, meta.deadline_ms, meta.version);
+    let mut events_rx: Option<Receiver<Response>> = None;
     let is_predict = matches!(req, Request::Predict { .. });
     let is_suggest = matches!(req, Request::Suggest { .. });
     let is_ingest =
@@ -345,7 +444,7 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
         Request::CreateModel { d, nu2, omega, sigma2 } => {
             let nu = match Nu::from_two_nu(nu2) {
                 Some(nu) => nu,
-                None => return (Response::Error(format!("bad nu2 {nu2}")), id),
+                None => return (Response::Error(format!("bad nu2 {nu2}")), id, version, None),
             };
             let cfg = EngineConfig {
                 d,
@@ -364,6 +463,7 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
             shared.shutting_down.store(true, Ordering::SeqCst);
             Response::Ok
         }
+        Request::Ping => Response::Hello { version: PROTOCOL_VERSION },
         other => {
             let model = match &other {
                 Request::Observe { model, .. }
@@ -375,7 +475,9 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
                 | Request::Predict { model, .. }
                 | Request::Suggest { model, .. }
                 | Request::Stats { model }
-                | Request::Audit { model } => *model,
+                | Request::Audit { model }
+                | Request::Snapshot { model, .. }
+                | Request::Subscribe { model } => *model,
                 _ => unreachable!(),
             };
             routed_model = Some(model);
@@ -394,6 +496,8 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
                          limit {limit})"
                     )),
                     id,
+                    version,
+                    None,
                 );
             }
             let (rtx, rrx) = channel();
@@ -414,6 +518,16 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
                 Request::Suggest { beta, .. } => Command::Suggest { beta, reply: rtx },
                 Request::Stats { .. } => Command::Stats { reply: rtx },
                 Request::Audit { .. } => Command::Audit { reply: rtx },
+                Request::Snapshot { have_gen, .. } => {
+                    shared.metrics.inc_snapshot_requests();
+                    Command::Snapshot { have_gen, reply: rtx }
+                }
+                Request::Subscribe { .. } => {
+                    shared.metrics.inc_subscribe_requests();
+                    let (etx, erx) = channel();
+                    events_rx = Some(erx);
+                    Command::Subscribe { events: etx, reply: rtx }
+                }
                 _ => unreachable!(),
             };
             shared.scheduler.dispatch(model, cmd);
@@ -442,6 +556,9 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
     };
     if matches!(resp, Response::Error(_)) {
         shared.metrics.inc_errors();
+        // A refused subscribe (dead/unknown model, shed) must not leave the
+        // connection half-converted into an event stream.
+        events_rx = None;
     }
     match &resp {
         Response::BatchObserved { path, factor_patched, factor_resweep, .. } => {
@@ -497,7 +614,7 @@ fn dispatch(line: &str, shared: &Arc<Shared>) -> (Response, Option<f64>) {
             m.ingest_latency.record(elapsed);
         }
     }
-    (resp, id)
+    (resp, id, version, events_rx)
 }
 
 /// Minimal blocking client for tests, examples and benches.

@@ -833,6 +833,45 @@ impl PosteriorSnapshot {
         };
         (cache.hits, cache.misses)
     }
+
+    /// Reassemble a snapshot from decoded parts — the replica import path
+    /// (`gp/persist.rs::decode_snapshot`). The caller is responsible for
+    /// materializing each dimension's band-of-inverse before serving; run
+    /// the [`Audit`] to prove it (the replica always does).
+    pub fn from_parts(
+        dims: Vec<DimFactor>,
+        post: Posterior,
+        sigma2_y: f64,
+        cache_capacity: usize,
+    ) -> Self {
+        PosteriorSnapshot {
+            dims,
+            post: Arc::new(post),
+            sigma2_y,
+            cache_capacity,
+            cache: Mutex::new(MTildeCache::new(cache_capacity)),
+        }
+    }
+
+    /// The cloned per-dimension factorizations — snapshot export surface.
+    pub fn dims(&self) -> &[DimFactor] {
+        &self.dims
+    }
+
+    /// The posterior `b` vectors at this snapshot's generation.
+    pub fn posterior(&self) -> &Posterior {
+        &self.post
+    }
+
+    /// The snapshot's noise variance.
+    pub fn sigma2_y(&self) -> f64 {
+        self.sigma2_y
+    }
+
+    /// Configured capacity of the shared `M̃` column cache.
+    pub fn cache_capacity(&self) -> usize {
+        self.cache_capacity
+    }
 }
 
 impl Audit for PosteriorSnapshot {

@@ -23,16 +23,18 @@
 //! patch timings are skipped too: they are non-deterministic observability,
 //! not state.
 
+use crate::check::Audit;
 use crate::gp::backfit::{BlockVec, GsStats};
 use crate::gp::dim::DimFactor;
-use crate::gp::fit_state::FitState;
+use crate::gp::fit_state::{FitState, PosteriorSnapshot};
 use crate::gp::model::{AdditiveGP, AdditiveGpConfig};
 use crate::gp::posterior::Posterior;
 use crate::kernels::kp::KpFactorization;
 use crate::kernels::matern::{Matern, Nu};
 use crate::linalg::banded::{BandedLU, PatchPolicy};
 use crate::linalg::{Banded, Permutation};
-use crate::util::codec::{ByteReader, ByteWriter};
+use crate::util::codec::{crc32, ByteReader, ByteWriter};
+use crate::util::fault;
 
 fn put_banded(w: &mut ByteWriter, b: &Banded) {
     w.put_usize(b.n());
@@ -242,6 +244,142 @@ fn get_fit_state(r: &mut ByteReader<'_>) -> Result<FitState, String> {
     ))
 }
 
+/// Magic prefix of a snapshot artifact (`b"AGSN"`, little-endian).
+pub const SNAPSHOT_MAGIC: u32 = u32::from_le_bytes(*b"AGSN");
+
+/// Format version of the snapshot artifact. Bump on layout changes; a
+/// replica refuses artifacts it does not speak instead of mis-decoding.
+pub const SNAPSHOT_VERSION: u8 = 1;
+
+fn put_snapshot_payload(w: &mut ByteWriter, snap: &PosteriorSnapshot) {
+    let dims = snap.dims();
+    w.put_usize(dims.len());
+    for d in dims {
+        put_dim(w, d);
+    }
+    let p = snap.posterior();
+    put_blocks(w, &p.b);
+    w.put_usize(p.gs_stats.sweeps);
+    w.put_f64(p.gs_stats.rel_residual);
+    w.put_f64(snap.sigma2_y());
+    w.put_usize(snap.cache_capacity());
+}
+
+/// Serialize a [`PosteriorSnapshot`] into a self-verifying, generation-
+/// numbered artifact — the unit the writer ships to read replicas
+/// (DESIGN.md §Replication).
+///
+/// Layout (all little-endian):
+///
+/// ```text
+/// magic u32 ("AGSN") | format version u8 | generation u64
+/// | crc32(payload) u32 | payload length u64 | payload
+/// ```
+///
+/// The payload reuses the checkpoint encoders ([`put_dim`]-level framing):
+/// per-dimension factors + LUs, the posterior `b` blocks with solve stats,
+/// the noise variance and the cache capacity. Like checkpoints, the lazy
+/// band-of-inverse is *not* serialized — [`decode_snapshot`] rebuilds it —
+/// and the `M̃` cache starts cold on the importer.
+pub fn encode_snapshot(snap: &PosteriorSnapshot, generation: u64) -> Vec<u8> {
+    let mut inner = ByteWriter::new();
+    put_snapshot_payload(&mut inner, snap);
+    let payload = inner.into_bytes();
+    let mut w = ByteWriter::new();
+    w.put_u32(SNAPSHOT_MAGIC);
+    w.put_u8(SNAPSHOT_VERSION);
+    w.put_u64(generation);
+    w.put_u32(crc32(&payload));
+    w.put_bytes(&payload);
+    let mut bytes = w.into_bytes();
+    if let Some(action) = fault::point!("snapshot.encode") {
+        match action {
+            fault::FaultAction::TornWrite(keep) => bytes.truncate(keep.min(bytes.len())),
+            fault::FaultAction::Panic => panic!("injected fault: snapshot.encode"),
+            // IoError/ForceFail have no meaning for an in-memory encode.
+            _ => {}
+        }
+    }
+    bytes
+}
+
+/// The generation stamped on an artifact, without decoding the payload —
+/// what a replica checks before spending the full import.
+pub fn snapshot_generation(bytes: &[u8]) -> Result<u64, String> {
+    let mut r = ByteReader::new(bytes);
+    let magic = r.get_u32("snapshot magic")?;
+    if magic != SNAPSHOT_MAGIC {
+        return Err(format!("bad snapshot magic {magic:#010x}"));
+    }
+    let ver = r.get_u8("snapshot version")?;
+    if ver != SNAPSHOT_VERSION {
+        return Err(format!("unsupported snapshot format v{ver} (this build speaks v{SNAPSHOT_VERSION})"));
+    }
+    r.get_u64("snapshot generation")
+}
+
+/// Decode and verify an [`encode_snapshot`] artifact into a servable
+/// snapshot. Returns `(generation, snapshot)`.
+///
+/// Every failure mode surfaces as `Err`, never a panic or a silently wrong
+/// posterior: bad magic / version, truncation anywhere, CRC mismatch on the
+/// payload, and structural inconsistency. The imported snapshot has its
+/// band-of-inverse materialized and has passed the full structural
+/// [`Audit`] before this returns — the guarantee that a replica serving it
+/// can never produce a mixed-generation posterior.
+pub fn decode_snapshot(bytes: &[u8]) -> Result<(u64, PosteriorSnapshot), String> {
+    let mut r = ByteReader::new(bytes);
+    let magic = r.get_u32("snapshot magic")?;
+    if magic != SNAPSHOT_MAGIC {
+        return Err(format!("bad snapshot magic {magic:#010x}"));
+    }
+    let ver = r.get_u8("snapshot version")?;
+    if ver != SNAPSHOT_VERSION {
+        return Err(format!("unsupported snapshot format v{ver} (this build speaks v{SNAPSHOT_VERSION})"));
+    }
+    let generation = r.get_u64("snapshot generation")?;
+    let crc = r.get_u32("snapshot crc")?;
+    let payload = r.get_bytes("snapshot payload")?;
+    if !r.is_done() {
+        return Err("trailing bytes after snapshot payload".to_string());
+    }
+    let actual = crc32(payload);
+    if actual != crc {
+        return Err(format!("snapshot crc mismatch: stored {crc:#010x}, computed {actual:#010x}"));
+    }
+    let mut pr = ByteReader::new(payload);
+    let dd = pr.get_usize("snapshot dims")?;
+    if dd == 0 || dd > 1 << 20 {
+        return Err(format!("implausible snapshot dimension count {dd}"));
+    }
+    let mut dims = Vec::with_capacity(dd);
+    for _ in 0..dd {
+        dims.push(get_dim(&mut pr)?);
+    }
+    // The band-of-inverse is a pure function of the factors and is not
+    // shipped; materialize it here so the replica's predict path (pure
+    // `&`-access) never panics.
+    for d in dims.iter_mut() {
+        let _ = d.c_band();
+    }
+    let b = get_blocks(&mut pr, "snapshot posterior")?;
+    let sweeps = pr.get_usize("snapshot gs sweeps")?;
+    let rel_residual = pr.get_f64("snapshot gs rel_residual")?;
+    let sigma2_y = pr.get_f64("snapshot sigma2_y")?;
+    let cache_capacity = pr.get_usize("snapshot cache_capacity")?;
+    if !pr.is_done() {
+        return Err("trailing bytes inside snapshot payload".to_string());
+    }
+    let snap = PosteriorSnapshot::from_parts(
+        dims,
+        Posterior { b, gs_stats: GsStats { sweeps, rel_residual } },
+        sigma2_y,
+        cache_capacity,
+    );
+    snap.audit().map_err(|e| format!("imported snapshot failed audit: {e}"))?;
+    Ok((generation, snap))
+}
+
 /// Serialize the mutable contents of a model — data, scales, trained state
 /// and escalation counters. The config is *not* included: the journal's
 /// own config record (the engine's `EngineConfig`) reconstructs it, so a
@@ -382,6 +520,65 @@ mod tests {
         assert_eq!(back.n(), 3);
         assert!(back.fit_state().is_none());
         assert_eq!(back.data().1, gp.data().1);
+    }
+
+    /// An exported-then-imported snapshot serves bit-identical predictions
+    /// and passes the structural audit (the replica's coherence guard).
+    #[test]
+    fn snapshot_artifact_roundtrips_bitwise() {
+        let (x, y) = toy(55, 2, 13);
+        let mut gp = AdditiveGP::new(AdditiveGpConfig::default(), 2);
+        gp.fit(&x[..48], &y[..48]);
+        for i in 48..55 {
+            gp.observe(&x[i], y[i]);
+        }
+        let snap = gp.read_snapshot().expect("active model");
+        let bytes = encode_snapshot(&snap, 7);
+        assert_eq!(snapshot_generation(&bytes), Ok(7));
+        let (generation, back) = decode_snapshot(&bytes).expect("decode");
+        assert_eq!(generation, 7);
+        assert_eq!(back.n(), snap.n());
+        assert_eq!(back.input_dim(), 2);
+        for q in [[0.5, 3.5], [2.0, 2.0], [4.5, 1.0]] {
+            let a = snap.predict(&q, true);
+            let b = back.predict(&q, true);
+            assert_eq!(a.mean.to_bits(), b.mean.to_bits(), "mean at {q:?}");
+            assert_eq!(a.var.to_bits(), b.var.to_bits(), "var at {q:?}");
+            for d in 0..2 {
+                assert_eq!(a.mean_grad[d].to_bits(), b.mean_grad[d].to_bits());
+                assert_eq!(a.var_grad[d].to_bits(), b.var_grad[d].to_bits());
+            }
+        }
+        // And re-encoding the import reproduces the artifact bytes.
+        assert_eq!(bytes, encode_snapshot(&back, 7), "re-encode must be byte-identical");
+    }
+
+    /// Torn, bit-flipped and mislabeled artifacts all fail loudly — no
+    /// panic, no silently-wrong posterior on the replica.
+    #[test]
+    fn corrupt_snapshot_artifacts_error_cleanly() {
+        let (x, y) = toy(45, 2, 17);
+        let mut gp = AdditiveGP::new(AdditiveGpConfig::default(), 2);
+        gp.fit(&x, &y);
+        let snap = gp.read_snapshot().expect("active model");
+        let bytes = encode_snapshot(&snap, 3);
+        // Torn tails at every stride: decode errors, never panics.
+        for cut in (0..bytes.len()).step_by(131) {
+            assert!(decode_snapshot(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        // A single bit flip anywhere in the payload trips the CRC.
+        let mut flipped = bytes.clone();
+        let pos = bytes.len() - 9;
+        flipped[pos] ^= 0x10;
+        assert!(decode_snapshot(&flipped).unwrap_err().contains("crc mismatch"));
+        // Wrong magic and unknown format version are refused up front.
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] ^= 0xFF;
+        assert!(decode_snapshot(&bad_magic).unwrap_err().contains("magic"));
+        let mut bad_ver = bytes.clone();
+        bad_ver[4] = SNAPSHOT_VERSION + 1;
+        assert!(snapshot_generation(&bad_ver).unwrap_err().contains("unsupported"));
+        assert!(decode_snapshot(&bad_ver).unwrap_err().contains("unsupported"));
     }
 
     /// Corrupt payloads error with a diagnostic instead of panicking.

@@ -79,6 +79,41 @@
 //! let path = gp.observe_batch(&new_x, &new_y);
 //! println!("batch path: {}", path.as_str()); // "incremental"
 //! ```
+//!
+//! ## Serving quick start — the typed protocol v3 client
+//!
+//! Over the wire, the same engine is driven through
+//! [`coordinator::Client`] — a typed surface over the JSON-line protocol
+//! (connect performs a versioned hello; every op returns
+//! `Result<T, ProtocolError>`, never hand-parsed JSON):
+//!
+//! ```no_run
+//! use addgp::coordinator::server::Server;
+//! use addgp::coordinator::Client;
+//!
+//! # fn main() -> addgp::util::error::Result<()> {
+//! let server = Server::bind("127.0.0.1:0", false, 0.0, 4.0)?;
+//! let addr = server.local_addr();
+//! std::thread::spawn(move || server.serve());
+//!
+//! let mut c = Client::connect(addr)?;
+//! let model = c.create_model(2, 1, 1.0, 1.0)?;
+//! c.observe_batch(model, &[vec![0.1, 0.2], vec![1.5, 0.9]], &[0.3, 1.2])?;
+//! let p = c.predict(model, &[vec![1.0, 1.0]], 2.0, true)?;
+//! println!("μ = {}, acq = {}", p.mu[0], p.acq[0]);
+//! let s = c.stats(model)?;
+//! println!("n = {}, pool workers = {}", s.n, s.pool.workers);
+//! c.shutdown()?;
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Read scale-out rides the v3 replication surface: a stateless
+//! [`coordinator::Replica`] imports the writer's generation-numbered
+//! posterior snapshots, subscribes to invalidation pushes, and serves
+//! `predict`/`suggest` bit-identically to the home shard at any fan-out
+//! (DESIGN.md §Replication; cluster quickstart:
+//! `rust/src/coordinator/README.md`, demo: `examples/serve_cluster.rs`).
 
 pub mod baselines;
 pub mod bo;

@@ -33,6 +33,7 @@ pub const POINTS: &[&str] = &[
     "lu.factor",
     "pcg.converge",
     "pool.job",
+    "snapshot.encode",
 ];
 
 /// What an armed rule makes the injection point do.

@@ -23,7 +23,10 @@ use std::sync::mpsc::{channel, Sender};
 use std::sync::{Mutex, MutexGuard};
 
 use addgp::coordinator::engine::EngineConfig;
-use addgp::coordinator::{Command, JournalConfig, Response, Scheduler};
+use addgp::coordinator::server::Server;
+use addgp::coordinator::{
+    Client, Command, JournalConfig, Replica, ReplicaConfig, Response, Scheduler,
+};
 use addgp::util::Rng;
 
 /// One test at a time: the fault plan is process-global, and interleaved
@@ -149,6 +152,45 @@ fn probe(sched: &Scheduler, m: u64) -> Vec<u64> {
             .collect(),
         other => panic!("unexpected {other:?}"),
     }
+}
+
+/// Spin until `f` holds (25ms poll, 20s deadline) — replication drills
+/// wait on asynchronous snapshot ships and reconnects.
+fn wait_for(what: &str, mut f: impl FnMut() -> bool) {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+    while !f() {
+        assert!(std::time::Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+}
+
+/// [`probe`] over the wire: the same fixed probe points through the typed
+/// client, so writer and replica surfaces can be compared bit-for-bit
+/// (the JSON codec round-trips `f64` exactly).
+fn wire_probe(c: &mut Client, model: u64) -> Vec<u64> {
+    let xs = vec![vec![0.5, 3.5], vec![2.0, 2.0], vec![3.25, 0.75]];
+    let p = c.predict(model, &xs, 2.0, true).expect("probe predict");
+    assert_eq!(p.path, "native");
+    p.mu
+        .iter()
+        .chain(&p.svar)
+        .chain(&p.acq)
+        .chain(p.gacq.iter().flatten())
+        .map(|v| v.to_bits())
+        .collect()
+}
+
+/// Seed a wire-served model with the script's activating batch size.
+fn wire_seed(c: &mut Client, model: u64, seed: u64) -> usize {
+    let mut rng = Rng::new(seed);
+    let n0 = 24 + (seed % 8) as usize;
+    let xs: Vec<Vec<f64>> = (0..n0)
+        .map(|_| vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)])
+        .collect();
+    let ys: Vec<f64> = xs.iter().map(|x| x[0].sin() + x[1].cos()).collect();
+    let b = c.observe_batch(model, &xs, &ys).expect("seed batch");
+    assert_eq!(b.n, n0);
+    n0
 }
 
 /// The tentpole property: for every chaos seed, recover-then-serve equals
@@ -315,6 +357,106 @@ fn corrupt_journal_head_fails_loud_not_crashy() {
     assert!(m2 > m, "fresh ids must clear even unrecoverable journals");
     b.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Writer failover (ISSUE 10): a journaled home shard dies and reboots on
+/// the *same* address via [`Server::bind_recovered`]; throughout, a replica
+/// keeps serving its last coherent generation bit-for-bit, then reconnects
+/// to the reborn writer and resyncs. For every chaos seed:
+///
+/// 1. replica mirrors the writer (bitwise probe equality),
+/// 2. writer shuts down → replica still answers, bits unchanged,
+/// 3. writer recovers from the PR 9 mutation journal (same model id, same
+///    state bits) and rebinds the port,
+/// 4. the replica's reconnect loop resubscribes, a fresh mutation ships,
+///    and the replica converges to the new surface — bit-identical again.
+#[test]
+fn writer_restart_keeps_replica_serving_then_resyncs() {
+    let _g = serial();
+    for seed in seeds() {
+        let dir = tmp_dir("failover", seed);
+        let jcfg = JournalConfig::new(&dir);
+
+        let server =
+            Server::bind_journaled("127.0.0.1:0", false, 0.0, 4.0, 2, jcfg.clone()).unwrap();
+        let addr = server.local_addr();
+        let serve = std::thread::spawn(move || server.serve().unwrap());
+        let mut c = Client::connect(addr).unwrap();
+        let model = c.create_model(2, 1, 1.0, 1.0).unwrap();
+        wire_seed(&mut c, model, seed);
+        let gen0 = c.snapshot(model, None).unwrap().gen;
+
+        let rep = Replica::bind(
+            "127.0.0.1:0",
+            ReplicaConfig {
+                writer: addr.to_string(),
+                models: vec![model],
+                lo: 0.0,
+                hi: 4.0,
+                seed: 7,
+            },
+        )
+        .unwrap();
+        let raddr = rep.local_addr();
+        let rep_serve = std::thread::spawn(move || rep.serve());
+        let mut cr = Client::connect(raddr).unwrap();
+        wait_for(&format!("seed {seed}: replica import of gen {gen0}"), || {
+            cr.snapshot(model, Some(gen0)).unwrap().gen == gen0
+        });
+        let bits0 = wire_probe(&mut c, model);
+        assert_eq!(bits0, wire_probe(&mut cr, model), "seed {seed}: replica must mirror writer");
+
+        // Kill the writer cleanly and *join* its serve thread so the
+        // listener is dropped before the reborn writer rebinds the port.
+        c.shutdown().unwrap();
+        serve.join().unwrap();
+
+        // The replica serves through the outage — same bits, and its sync
+        // loop burns at least one failed reconnect attempt meanwhile.
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        assert_eq!(
+            bits0,
+            wire_probe(&mut cr, model),
+            "seed {seed}: replica must keep serving its last coherent generation"
+        );
+
+        // Reboot the writer on the SAME address from the journal.
+        let (server2, report) =
+            Server::bind_recovered(&addr.to_string(), false, 0.0, 4.0, 2, jcfg).unwrap();
+        assert_eq!((report.models, report.failed), (1, 0), "seed {seed}: {:?}", report.errors);
+        assert_eq!(report.replayed_ops, 1, "seed {seed}: the seeding batch");
+        let serve2 = std::thread::spawn(move || server2.serve().unwrap());
+        let mut c2 = Client::connect(addr).unwrap();
+        assert_eq!(
+            bits0,
+            wire_probe(&mut c2, model),
+            "seed {seed}: recovery must restore the writer bitwise"
+        );
+
+        // The replica resubscribes on its own; a fresh mutation then ships
+        // and the replica converges to the new surface.
+        wait_for(&format!("seed {seed}: replica resubscribe after failover"), || {
+            c2.stats(model).unwrap().replication.subscribers >= 1
+        });
+        c2.observe(model, &[1.25, 2.75], 0.4).unwrap();
+        let bits1 = wire_probe(&mut c2, model);
+        assert_ne!(bits0, bits1, "seed {seed}: the post-failover mutation must move the surface");
+        wait_for(&format!("seed {seed}: replica resync after failover"), || {
+            wire_probe(&mut cr, model) == bits1
+        });
+        assert!(cr.audit(model).unwrap().passed, "seed {seed}");
+
+        cr.shutdown().unwrap();
+        let rstats = rep_serve.join().unwrap();
+        assert!(
+            rstats.refresh_failures >= 1,
+            "seed {seed}: the outage must surface as refresh failures: {rstats:?}"
+        );
+        assert!(rstats.snapshots_imported >= 2, "seed {seed}: {rstats:?}");
+        c2.shutdown().unwrap();
+        serve2.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }
 
 #[cfg(feature = "fault-inject")]
@@ -633,5 +775,237 @@ mod injected {
         });
         assert!(matches!(r, Response::Prediction { .. }), "unexpected {r:?}");
         sched.shutdown();
+    }
+
+    /// Every cumulative counter in a `stats` reply, by name, plus the
+    /// recovery count — the monotonicity witness for the resurrection
+    /// drill below.
+    fn counter_vector(sched: &Scheduler, m: u64) -> (Vec<(&'static str, u64)>, u64) {
+        match call(sched, m, |reply| Command::Stats { reply }) {
+            Response::Stats {
+                cache_hits,
+                cache_misses,
+                pjrt_batches,
+                native_queries,
+                factor_patches,
+                factor_resweeps,
+                cache_truncations,
+                fallback_rebuilds,
+                memmove_bytes,
+                chunks_copied,
+                chunks_shared,
+                window_evictions,
+                solve_cold_retries,
+                solve_refit_escalations,
+                recoveries,
+                ..
+            } => (
+                vec![
+                    ("cache_hits", cache_hits),
+                    ("cache_misses", cache_misses),
+                    ("pjrt_batches", pjrt_batches),
+                    ("native_queries", native_queries),
+                    ("factor_patches", factor_patches),
+                    ("factor_resweeps", factor_resweeps),
+                    ("cache_truncations", cache_truncations),
+                    ("fallback_rebuilds", fallback_rebuilds),
+                    ("memmove_bytes", memmove_bytes),
+                    ("chunks_copied", chunks_copied),
+                    ("chunks_shared", chunks_shared),
+                    ("window_evictions", window_evictions),
+                    ("solve_cold_retries", solve_cold_retries),
+                    ("solve_refit_escalations", solve_refit_escalations),
+                ],
+                recoveries,
+            ),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    /// Regression (ISSUE 10 satellite): in-place resurrection must not
+    /// make a model's wire counters travel backwards. The scheduler lifts
+    /// every engine-derived counter by a per-recovery baseline captured at
+    /// resurrection time, so the values a `stats` reply reports stay
+    /// monotone for the model id's lifetime — and the saturating-delta
+    /// folds in [`ServerMetrics`] (`record_storage_stats`,
+    /// `record_window_evictions`) therefore never under-count across a
+    /// recovery: the folded total equals the final cumulative value
+    /// exactly, instead of silently dropping the replayed-history delta.
+    #[test]
+    fn resurrection_keeps_wire_counters_monotone() {
+        use std::sync::atomic::Ordering;
+
+        use addgp::coordinator::metrics::ServerMetrics;
+
+        let _g = serial();
+        let seed = seeds()[0];
+        let dir = tmp_dir("monotone", seed);
+        let jcfg = JournalConfig::new(&dir);
+        let sched = Scheduler::with_journal(2, jcfg);
+        let m = sched.create_model(cfg(2));
+        drive_script(&sched, m, seed);
+        // Touch the read path too, so cache/native counters are nonzero.
+        probe(&sched, m);
+        probe(&sched, m);
+        let (before, recov0) = counter_vector(&sched, m);
+        assert_eq!(recov0, 0);
+        let get = |v: &[(&'static str, u64)], k: &str| {
+            v.iter().find(|(name, _)| *name == k).expect("known counter").1
+        };
+
+        // A server-side metrics fold sees the pre-crash cumulative values.
+        let metrics = ServerMetrics::default();
+        metrics.record_storage_stats(
+            m,
+            get(&before, "memmove_bytes"),
+            get(&before, "chunks_copied"),
+            get(&before, "chunks_shared"),
+        );
+        metrics.record_window_evictions(m, get(&before, "window_evictions"));
+
+        // Panic mid-mutation → in-place resurrection from the journal.
+        fault::arm(&[Rule { point: "engine.mutate", nth: 1, action: FaultAction::Panic }]);
+        let r = call(&sched, m, |reply| Command::Observe {
+            x: vec![1.0, 1.0],
+            y: 0.5,
+            reply,
+        });
+        fault::disarm();
+        match r {
+            Response::Error(e) => assert!(e.contains("recovered from journal"), "{e}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        probe(&sched, m);
+        let (after, recov1) = counter_vector(&sched, m);
+        assert_eq!(recov1, 1, "the resurrection must be counted");
+
+        // Monotone by name: the rebuilt engine restarts its own counters
+        // from zero, but the wire reports live + per-recovery baseline.
+        for ((name, b), (_, a)) in before.iter().zip(&after) {
+            assert!(
+                a >= b,
+                "counter {name} travelled backwards across resurrection: {b} -> {a}"
+            );
+        }
+
+        // Re-fold the post-recovery values: the saturating delta is exact,
+        // so the folded totals equal the final cumulative values.
+        metrics.record_storage_stats(
+            m,
+            get(&after, "memmove_bytes"),
+            get(&after, "chunks_copied"),
+            get(&after, "chunks_shared"),
+        );
+        metrics.record_window_evictions(m, get(&after, "window_evictions"));
+        assert_eq!(
+            metrics.storage_memmove_bytes.load(Ordering::Relaxed),
+            get(&after, "memmove_bytes"),
+            "memmove fold must not drop the post-recovery delta"
+        );
+        assert_eq!(
+            metrics.storage_chunks_copied.load(Ordering::Relaxed),
+            get(&after, "chunks_copied")
+        );
+        assert_eq!(
+            metrics.storage_chunks_shared.load(Ordering::Relaxed),
+            get(&after, "chunks_shared")
+        );
+        assert_eq!(
+            metrics.window_evictions.load(Ordering::Relaxed),
+            get(&after, "window_evictions")
+        );
+        sched.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Replica lag under a torn snapshot ship (ISSUE 10): while every
+    /// export of the writer's artifact is truncated mid-frame, the replica
+    /// detects the tear (CRC/short-read in `decode_snapshot`), counts a
+    /// refresh failure, and keeps serving its last *coherent* generation
+    /// bit-for-bit — never a half-imported posterior. Once the fault
+    /// clears, the next ship lands and the replica converges.
+    #[test]
+    fn torn_snapshot_ship_keeps_replica_on_last_coherent_generation() {
+        let _g = serial();
+        for seed in seeds() {
+            let server = Server::bind_with("127.0.0.1:0", false, 0.0, 4.0, 2).unwrap();
+            let addr = server.local_addr();
+            let serve = std::thread::spawn(move || server.serve().unwrap());
+            let mut c = Client::connect(addr).unwrap();
+            let model = c.create_model(2, 1, 1.0, 1.0).unwrap();
+            wire_seed(&mut c, model, seed);
+            let gen0 = c.snapshot(model, None).unwrap().gen;
+
+            let rep = Replica::bind(
+                "127.0.0.1:0",
+                ReplicaConfig {
+                    writer: addr.to_string(),
+                    models: vec![model],
+                    lo: 0.0,
+                    hi: 4.0,
+                    seed: 7,
+                },
+            )
+            .unwrap();
+            let raddr = rep.local_addr();
+            let rep_serve = std::thread::spawn(move || rep.serve());
+            let mut cr = Client::connect(raddr).unwrap();
+            // `Some(gen0)` doubles as a generation query that never
+            // triggers an export encode — essential while the fault is
+            // armed below.
+            wait_for(&format!("seed {seed}: replica import of gen {gen0}"), || {
+                cr.snapshot(model, Some(gen0)).unwrap().gen == gen0
+            });
+            wait_for(&format!("seed {seed}: replica subscription"), || {
+                c.stats(model).unwrap().replication.subscribers >= 1
+            });
+            let bits0 = wire_probe(&mut c, model);
+            assert_eq!(bits0, wire_probe(&mut cr, model), "seed {seed}");
+
+            // Every snapshot export is now torn a seed-dependent few bytes
+            // in (nth: 0 = all hits).
+            fault::arm(&[Rule {
+                point: "snapshot.encode",
+                nth: 0,
+                action: FaultAction::TornWrite(5 + (seed as usize % 40)),
+            }]);
+            c.observe(model, &[1.5, 0.5], 0.2).unwrap();
+            wait_for(&format!("seed {seed}: a torn ship attempt"), || {
+                fault::hits("snapshot.encode") >= 1
+            });
+            // The replica is lagging — still on gen0, still serving the
+            // gen0 surface bit-for-bit, not a torn import.
+            assert_eq!(
+                cr.snapshot(model, Some(gen0)).unwrap().gen,
+                gen0,
+                "seed {seed}: a torn artifact must not install"
+            );
+            assert_eq!(
+                bits0,
+                wire_probe(&mut cr, model),
+                "seed {seed}: the lagging replica must serve its last coherent generation"
+            );
+            fault::disarm();
+
+            // Fault cleared: a second mutation ships cleanly and the
+            // replica converges to the writer's current surface.
+            c.observe(model, &[3.25, 1.75], -0.3).unwrap();
+            let bits1 = wire_probe(&mut c, model);
+            wait_for(&format!("seed {seed}: replica convergence after the tear"), || {
+                wire_probe(&mut cr, model) == bits1
+            });
+            assert!(cr.audit(model).unwrap().passed, "seed {seed}");
+
+            cr.shutdown().unwrap();
+            let rstats = rep_serve.join().unwrap();
+            assert!(
+                rstats.refresh_failures >= 1,
+                "seed {seed}: the torn ship must be counted: {rstats:?}"
+            );
+            assert!(rstats.snapshots_imported >= 2, "seed {seed}: {rstats:?}");
+            assert!(rstats.invalidations_seen >= 1, "seed {seed}: {rstats:?}");
+            c.shutdown().unwrap();
+            serve.join().unwrap();
+        }
     }
 }

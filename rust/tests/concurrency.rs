@@ -15,10 +15,12 @@
 //!   test the CI ThreadSanitizer leg leans on).
 //!
 //! Everything runs native-only (`use_pjrt = false`) so it passes without
-//! compiled artifacts.
+//! compiled artifacts, and all traffic goes through the typed protocol v3
+//! [`Client`].
 
-use addgp::coordinator::server::{Client, Server, ShutdownStats};
-use addgp::util::{Json, Rng};
+use addgp::coordinator::server::{Server, ShutdownStats};
+use addgp::coordinator::{Client, ProtocolError};
+use addgp::util::Rng;
 
 const MODELS: usize = 8;
 const CLIENTS: usize = 4;
@@ -32,15 +34,7 @@ fn boot(workers: usize) -> (std::net::SocketAddr, std::thread::JoinHandle<Shutdo
 }
 
 fn create_models(c: &mut Client, count: usize) -> Vec<u64> {
-    (0..count)
-        .map(|_| {
-            let r = c
-                .call(r#"{"op":"create_model","d":2,"nu2":1,"omega":1.0,"sigma2":1.0}"#)
-                .unwrap();
-            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
-            r.get("model").unwrap().as_f64().unwrap() as u64
-        })
-        .collect()
+    (0..count).map(|_| c.create_model(2, 1, 1.0, 1.0).unwrap()).collect()
 }
 
 fn sample_xy(rng: &mut Rng) -> (Vec<f64>, f64) {
@@ -49,26 +43,15 @@ fn sample_xy(rng: &mut Rng) -> (Vec<f64>, f64) {
     (x, y)
 }
 
-fn observe_req(model: u64, x: &[f64], y: f64) -> String {
-    format!(
-        r#"{{"op":"observe","model":{model},"x":[{}],"y":{y}}}"#,
-        x.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
-    )
-}
-
-fn batch_req(model: u64, rng: &mut Rng, m: usize) -> String {
+fn sample_batch(rng: &mut Rng, m: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
     let mut xs = Vec::new();
     let mut ys = Vec::new();
     for _ in 0..m {
         let (x, y) = sample_xy(rng);
-        xs.push(format!("[{},{}]", x[0], x[1]));
-        ys.push(y.to_string());
+        xs.push(x);
+        ys.push(y);
     }
-    format!(
-        r#"{{"op":"observe_batch","model":{model},"xs":[{}],"ys":[{}]}}"#,
-        xs.join(","),
-        ys.join(",")
-    )
+    (xs, ys)
 }
 
 /// One deterministic ingest stage of model `mi`'s mutation stream. The rng
@@ -78,33 +61,30 @@ fn ingest_stage(c: &mut Client, model: u64, mi: usize, stage: usize) {
     let mut rng = Rng::new(0xA11CE + (mi as u64) * 101 + (stage as u64) * 7919);
     match stage {
         0 => {
-            let r = c.call(&batch_req(model, &mut rng, 40)).unwrap();
-            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+            let (xs, ys) = sample_batch(&mut rng, 40);
+            c.observe_batch(model, &xs, &ys).unwrap();
         }
         1 => {
             for _ in 0..6 {
                 let (x, y) = sample_xy(&mut rng);
-                let r = c.call(&observe_req(model, &x, y)).unwrap();
-                assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+                c.observe(model, &x, y).unwrap();
             }
         }
         2 => {
-            let r = c.call(&batch_req(model, &mut rng, 8)).unwrap();
-            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+            let (xs, ys) = sample_batch(&mut rng, 8);
+            c.observe_batch(model, &xs, &ys).unwrap();
         }
         3 => {
             for _ in 0..4 {
                 let (x, y) = sample_xy(&mut rng);
-                let r = c.call(&observe_req(model, &x, y)).unwrap();
-                assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+                c.observe(model, &x, y).unwrap();
             }
         }
         _ => {
             // Final single observe — opens a fresh snapshot generation so
             // the probe pass starts from a cold, deterministic cache.
             let (x, y) = sample_xy(&mut rng);
-            let r = c.call(&observe_req(model, &x, y)).unwrap();
-            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+            c.observe(model, &x, y).unwrap();
         }
     }
 }
@@ -113,56 +93,36 @@ fn ingest_stage(c: &mut Client, model: u64, mi: usize, stage: usize) {
 const FINAL_N: usize = 40 + 6 + 8 + 4 + 1;
 
 /// Probe one model: final observe, then the fixed probe predictions in a
-/// fixed order. Returns the raw reply f64s (mu, svar, acq per probe) plus
-/// the deterministic stats fields.
-fn probe_model(c: &mut Client, model: u64, mi: usize) -> (Vec<u64>, (usize, f64, f64)) {
+/// fixed order. Returns the wire-exact reply f64 bits (mu, svar, acq,
+/// gacq per probe) plus the deterministic stats fields.
+fn probe_model(c: &mut Client, model: u64, mi: usize) -> (Vec<u64>, (usize, u64, u64)) {
     ingest_stage(c, model, mi, 4);
     let mut bits = Vec::new();
     for p in &PROBES {
-        let r = c
-            .call(&format!(
-                r#"{{"op":"predict","model":{model},"xs":[[{},{}]],"beta":2.0,"grad":true}}"#,
-                p[0], p[1]
-            ))
-            .unwrap();
-        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
-        assert_eq!(r.get("path").unwrap().as_str(), Some("native"));
-        for key in ["mu", "svar", "acq"] {
-            for v in r.get(key).unwrap().as_f64_vec().unwrap() {
-                bits.push(v.to_bits());
-            }
+        let r = c.predict(model, &[vec![p[0], p[1]]], 2.0, true).unwrap();
+        assert_eq!(r.path, "native");
+        for v in r.mu.iter().chain(&r.svar).chain(&r.acq) {
+            bits.push(v.to_bits());
         }
-        for row in r.get("gacq").unwrap().as_arr().unwrap() {
-            for v in row.as_f64_vec().unwrap() {
+        for row in &r.gacq {
+            for v in row {
                 bits.push(v.to_bits());
             }
         }
     }
-    let r = c.call(&format!(r#"{{"op":"stats","model":{model}}}"#)).unwrap();
-    let n = r.get("n").unwrap().as_usize().unwrap();
-    let patches = r.get("factor_patches").unwrap().as_f64().unwrap();
-    let resweeps = r.get("factor_resweeps").unwrap().as_f64().unwrap();
-    (bits, (n, patches, resweeps))
+    let s = c.stats(model).unwrap();
+    (bits, (s.n, s.solve.factor_patches, s.solve.factor_resweeps))
 }
 
 /// Fire-and-check a mid-stream predict: either a prediction or the
 /// well-formed "not enough observations" error (model not active yet).
 fn soft_predict(c: &mut Client, model: u64, x0: f64, x1: f64) {
-    let r = c
-        .call(&format!(
-            r#"{{"op":"predict","model":{model},"xs":[[{x0},{x1}]],"beta":2.0,"grad":false}}"#
-        ))
-        .unwrap();
-    match r.get("ok").unwrap().as_bool() {
-        Some(true) => {
-            let mu = r.get("mu").unwrap().as_f64_vec().unwrap();
-            assert!(mu[0].is_finite(), "{r}");
+    match c.predict(model, &[vec![x0, x1]], 2.0, false) {
+        Ok(p) => assert!(p.mu[0].is_finite(), "{p:?}"),
+        Err(ProtocolError::Remote(e)) => {
+            assert!(e.contains("not enough observations"), "{e}")
         }
-        Some(false) => {
-            let e = r.get("error").unwrap().as_str().unwrap().to_string();
-            assert!(e.contains("not enough observations"), "{r}");
-        }
-        None => panic!("malformed reply {r}"),
+        Err(e) => panic!("malformed reply: {e}"),
     }
 }
 
@@ -203,7 +163,7 @@ fn multi_model_stress_deterministic() {
     let mut c = Client::connect(addr).unwrap();
     let concurrent: Vec<_> =
         (0..MODELS).map(|mi| probe_model(&mut c, models[mi], mi)).collect();
-    let _ = c.call(r#"{"op":"shutdown"}"#);
+    let _ = c.shutdown();
     let stats = server.join().unwrap();
     assert!(stats.workers_joined >= 4);
 
@@ -219,7 +179,7 @@ fn multi_model_stress_deterministic() {
     }
     let replay: Vec<_> =
         (0..MODELS).map(|mi| probe_model(&mut c, models2[mi], mi)).collect();
-    let _ = c.call(r#"{"op":"shutdown"}"#);
+    let _ = c.shutdown();
     server2.join().unwrap();
 
     // --- Bit-identical posteriors and deterministic counters. ---
@@ -257,13 +217,12 @@ fn shutdown_joins_all_threads_and_workers() {
     for seed in 0..2u64 {
         let mut c = Client::connect(addr).unwrap();
         let mut rng = Rng::new(77 + seed);
-        let r = c.call(&batch_req(models[seed as usize], &mut rng, 30)).unwrap();
-        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        let (xs, ys) = sample_batch(&mut rng, 30);
+        assert_eq!(c.observe_batch(models[seed as usize], &xs, &ys).unwrap().n, 30);
         soft_predict(&mut c, models[seed as usize], 1.0, 1.0);
         others.push(c);
     }
-    let r = c0.call(r#"{"op":"shutdown"}"#).unwrap();
-    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    c0.shutdown().unwrap();
     let stats = server.join().unwrap();
     assert_eq!(stats.workers_joined, 3, "every pool worker joined");
     assert_eq!(stats.connections_joined, 3, "every reader thread joined");
@@ -290,51 +249,49 @@ fn interleaved_chaos_all_ops() {
             // before the mixed traffic (fit/predict on a cold model answers
             // a clean error, but the chaos should mostly hit live paths).
             for &mi in &[cl as usize, cl as usize + CLIENTS] {
-                let r = c.call(&batch_req(models[mi], &mut rng, 30)).unwrap();
-                assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+                let (xs, ys) = sample_batch(&mut rng, 30);
+                assert_eq!(c.observe_batch(models[mi], &xs, &ys).unwrap().n, 30);
             }
             for round in 0..12 {
                 let model = models[(rng.uniform_in(0.0, MODELS as f64)) as usize % MODELS];
                 match round % 5 {
                     0 => {
-                        let r = c.call(&batch_req(model, &mut rng, 12)).unwrap();
-                        assert!(r.get("ok").unwrap().as_bool().is_some(), "{r}");
+                        let (xs, ys) = sample_batch(&mut rng, 12);
+                        // A racing cold model may refuse; the reply must
+                        // still be structured.
+                        match c.observe_batch(model, &xs, &ys) {
+                            Ok(_) | Err(ProtocolError::Remote(_)) => {}
+                            Err(e) => panic!("malformed: {e}"),
+                        }
                     }
                     1 => {
                         let (x, y) = sample_xy(&mut rng);
-                        let r = c.call(&observe_req(model, &x, y)).unwrap();
-                        assert!(r.get("ok").unwrap().as_bool().is_some(), "{r}");
-                    }
-                    2 => soft_predict(&mut c, model, 2.0, 2.0),
-                    3 => {
-                        let r = c
-                            .call(&format!(r#"{{"op":"suggest","model":{model},"beta":2.0}}"#))
-                            .unwrap();
-                        match r.get("ok").unwrap().as_bool() {
-                            Some(true) => {
-                                let x = r.get("x").unwrap().as_f64_vec().unwrap();
-                                assert_eq!(x.len(), 2);
-                                assert!(x.iter().all(|v| (0.0..=4.0).contains(v)), "{r}");
-                            }
-                            Some(false) => {}
-                            None => panic!("malformed {r}"),
+                        match c.observe(model, &x, y) {
+                            Ok(_) | Err(ProtocolError::Remote(_)) => {}
+                            Err(e) => panic!("malformed: {e}"),
                         }
                     }
+                    2 => soft_predict(&mut c, model, 2.0, 2.0),
+                    3 => match c.suggest(model, 2.0) {
+                        Ok(x) => {
+                            assert_eq!(x.len(), 2);
+                            assert!(x.iter().all(|v| (0.0..=4.0).contains(v)), "{x:?}");
+                        }
+                        Err(ProtocolError::Remote(_)) => {}
+                        Err(e) => panic!("malformed: {e}"),
+                    },
                     _ => {
-                        let r = c
-                            .call(&format!(r#"{{"op":"stats","model":{model}}}"#))
-                            .unwrap();
-                        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
-                        assert!(r.get("pool_workers").unwrap().as_usize().unwrap() >= 1);
+                        let s = c.stats(model).unwrap();
+                        assert!(s.pool.workers >= 1);
                     }
                 }
             }
             // One small hyperparameter fit rides the mutation queue.
             let model = models[cl as usize % MODELS];
-            let r = c
-                .call(&format!(r#"{{"op":"fit","model":{model},"steps":1}}"#))
-                .unwrap();
-            assert!(r.get("ok").unwrap().as_bool().is_some(), "{r}");
+            match c.fit(model, 1) {
+                Ok(()) | Err(ProtocolError::Remote(_)) => {}
+                Err(e) => panic!("malformed: {e}"),
+            }
         }));
     }
     for h in clients {
@@ -342,10 +299,9 @@ fn interleaved_chaos_all_ops() {
     }
     let mut c = Client::connect(addr).unwrap();
     for (mi, &m) in models.iter().enumerate() {
-        let r = c.call(&format!(r#"{{"op":"stats","model":{m}}}"#)).unwrap();
-        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "model {mi}: {r}");
-        let _ = Json::parse(&r.to_string()).unwrap();
+        let s = c.stats(m).unwrap();
+        assert!(s.n > 0, "model {mi}: {s:?}");
     }
-    let _ = c.call(r#"{"op":"shutdown"}"#);
+    let _ = c.shutdown();
     server.join().unwrap();
 }

@@ -1,10 +1,11 @@
 //! End-to-end coordinator test: boot the TCP server, create a model over
 //! the wire, stream observations, predict (batched), suggest, and shut
-//! down. Runs native-only (`use_pjrt = false`) so it passes without
-//! artifacts; the PJRT path is covered by `runtime_pjrt.rs` and the
-//! `serve_bo` example.
+//! down — all through the typed protocol v3 [`Client`]. Runs native-only
+//! (`use_pjrt = false`) so it passes without artifacts; the PJRT path is
+//! covered by `runtime_pjrt.rs` and the `serve_bo` example.
 
-use addgp::coordinator::server::{Client, Server};
+use addgp::coordinator::server::Server;
+use addgp::coordinator::{Client, ProtocolError};
 use addgp::util::Rng;
 
 fn boot(use_pjrt: bool) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
@@ -19,14 +20,12 @@ fn boot(use_pjrt: bool) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
 #[test]
 fn full_protocol_roundtrip() {
     let (addr, _handle) = boot(false);
+    // Default connect performs the versioned hello; a reply proves the
+    // server speaks the client's protocol version.
     let mut c = Client::connect(addr).unwrap();
+    assert_eq!(c.version(), 3);
 
-    // Create.
-    let r = c
-        .call(r#"{"op":"create_model","d":2,"nu2":1,"omega":1.0,"sigma2":1.0,"id":1}"#)
-        .unwrap();
-    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
-    let model = r.get("model").unwrap().as_usize().unwrap();
+    let model = c.create_model(2, 1, 1.0, 1.0).unwrap();
 
     // Observe a batch.
     let mut rng = Rng::new(9);
@@ -35,77 +34,57 @@ fn full_protocol_roundtrip() {
     for _ in 0..60 {
         let x = vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)];
         ys.push(x[0].sin() + x[1].cos() + 0.1 * rng.normal());
-        xs.push(format!("[{},{}]", x[0], x[1]));
+        xs.push(x);
     }
-    let req = format!(
-        r#"{{"op":"observe_batch","model":{model},"xs":[{}],"ys":[{}]}}"#,
-        xs.join(","),
-        ys.iter().map(|y| y.to_string()).collect::<Vec<_>>().join(",")
-    );
-    let r = c.call(&req).unwrap();
-    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
     // The reply lands after the posterior refresh and reports the post-batch
     // size and ingest path (first batch activates the model → full refit).
-    assert_eq!(r.get("n").unwrap().as_usize(), Some(60), "{r}");
-    assert_eq!(r.get("path").unwrap().as_str(), Some("refit"), "{r}");
+    let b = c.observe_batch(model, &xs, &ys).unwrap();
+    assert_eq!(b.n, 60);
+    assert_eq!(b.path, "refit");
 
     // A small follow-up batch rides the batched incremental path.
-    let req = format!(
-        r#"{{"op":"observe_batch","model":{model},"xs":[[0.5,1.5],[2.5,3.5]],"ys":[1.0,-0.5]}}"#
-    );
-    let r = c.call(&req).unwrap();
-    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
-    assert_eq!(r.get("n").unwrap().as_usize(), Some(62), "{r}");
-    assert_eq!(r.get("path").unwrap().as_str(), Some("incremental"), "{r}");
+    let b = c
+        .observe_batch(model, &[vec![0.5, 1.5], vec![2.5, 3.5]], &[1.0, -0.5])
+        .unwrap();
+    assert_eq!(b.n, 62);
+    assert_eq!(b.path, "incremental");
 
     // Predict a small batch with gradients.
-    let r = c
-        .call(&format!(
-            r#"{{"op":"predict","model":{model},"xs":[[1.0,1.0],[2.0,3.0]],"beta":2.0,"grad":true}}"#
-        ))
+    let p = c
+        .predict(model, &[vec![1.0, 1.0], vec![2.0, 3.0]], 2.0, true)
         .unwrap();
-    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
-    let mu = r.get("mu").unwrap().as_f64_vec().unwrap();
-    let svar = r.get("svar").unwrap().as_f64_vec().unwrap();
-    assert_eq!(mu.len(), 2);
-    assert!(svar.iter().all(|&v| v >= 0.0));
-    assert_eq!(r.get("path").unwrap().as_str(), Some("native"));
-    let gacq = r.get("gacq").unwrap().as_arr().unwrap();
-    assert_eq!(gacq.len(), 2);
-    assert_eq!(gacq[0].as_f64_vec().unwrap().len(), 2);
+    assert_eq!(p.mu.len(), 2);
+    assert!(p.svar.iter().all(|&v| v >= 0.0));
+    assert_eq!(p.path, "native");
+    assert_eq!(p.gacq.len(), 2);
+    assert_eq!(p.gacq[0].len(), 2);
 
     // Suggest.
-    let r = c.call(&format!(r#"{{"op":"suggest","model":{model},"beta":2.0}}"#)).unwrap();
-    let x = r.get("x").unwrap().as_f64_vec().unwrap();
+    let x = c.suggest(model, 2.0).unwrap();
     assert_eq!(x.len(), 2);
     assert!(x.iter().all(|&v| (0.0..=4.0).contains(&v)));
 
-    // Stats — per-model counters plus the shared-pool observability fields.
-    let r = c.call(&format!(r#"{{"op":"stats","model":{model}}}"#)).unwrap();
-    assert_eq!(r.get("n").unwrap().as_usize(), Some(62));
-    assert_eq!(r.get("d").unwrap().as_usize(), Some(2));
-    assert!(r.get("pool_workers").unwrap().as_usize().unwrap() >= 1, "{r}");
-    assert!(r.get("pool_queue_depth").unwrap().as_f64().is_some(), "{r}");
-    assert!(r.get("pool_busy").unwrap().as_f64().is_some(), "{r}");
-    assert!(r.get("pool_steals").unwrap().as_f64().is_some(), "{r}");
+    // Stats — typed, with the v3 nested sections already parsed.
+    let s = c.stats(model).unwrap();
+    assert_eq!(s.n, 62);
+    assert_eq!(s.d, 2);
+    assert!(s.pool.workers >= 1, "{s:?}");
+    assert!(!s.journal.degraded);
 
-    // Errors surface cleanly.
-    let r = c.call(r#"{"op":"predict","model":999,"xs":[[1,1]]}"#).unwrap();
-    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
-    let r = c.call(r#"{"op":"wat"}"#).unwrap();
-    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    // Errors surface as typed remote errors, not panics.
+    let err = c.predict(999, &[vec![1.0, 1.0]], 2.0, false).unwrap_err();
+    assert!(matches!(err, ProtocolError::Remote(_)), "{err}");
+    assert!(!err.is_retryable());
 
     // Shutdown.
-    let r = c.call(r#"{"op":"shutdown"}"#).unwrap();
-    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    c.shutdown().unwrap();
 }
 
 #[test]
 fn concurrent_clients_share_the_worker_pool() {
     let (addr, _handle) = boot(false);
     let mut c = Client::connect(addr).unwrap();
-    let r = c.call(r#"{"op":"create_model","d":2,"nu2":1,"omega":1.0,"sigma2":1.0}"#).unwrap();
-    let model = r.get("model").unwrap().as_usize().unwrap();
+    let model = c.create_model(2, 1, 1.0, 1.0).unwrap();
 
     let mut rng = Rng::new(5);
     let mut xs = Vec::new();
@@ -113,14 +92,9 @@ fn concurrent_clients_share_the_worker_pool() {
     for _ in 0..50 {
         let x = vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)];
         ys.push(x[0].sin() + x[1].cos());
-        xs.push(format!("[{},{}]", x[0], x[1]));
+        xs.push(x);
     }
-    let req = format!(
-        r#"{{"op":"observe_batch","model":{model},"xs":[{}],"ys":[{}]}}"#,
-        xs.join(","),
-        ys.iter().map(|y| y.to_string()).collect::<Vec<_>>().join(",")
-    );
-    assert_eq!(c.call(&req).unwrap().get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(c.observe_batch(model, &xs, &ys).unwrap().n, 50);
 
     // Fan out 8 clients issuing predictions concurrently.
     let mut handles = Vec::new();
@@ -131,14 +105,8 @@ fn concurrent_clients_share_the_worker_pool() {
             for _ in 0..10 {
                 let x0 = rng.uniform_in(0.5, 3.5);
                 let x1 = rng.uniform_in(0.5, 3.5);
-                let r = c
-                    .call(&format!(
-                        r#"{{"op":"predict","model":{model},"xs":[[{x0},{x1}]],"beta":2.0,"grad":false}}"#
-                    ))
-                    .unwrap();
-                assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
-                let mu = r.get("mu").unwrap().as_f64_vec().unwrap();
-                assert!(mu[0].is_finite());
+                let p = c.predict(model, &[vec![x0, x1]], 2.0, false).unwrap();
+                assert!(p.mu[0].is_finite());
             }
         }));
     }
@@ -146,7 +114,7 @@ fn concurrent_clients_share_the_worker_pool() {
         h.join().unwrap();
     }
     let mut c2 = Client::connect(addr).unwrap();
-    let _ = c2.call(r#"{"op":"shutdown"}"#);
+    let _ = c2.shutdown();
 }
 
 /// Regression (ISSUE 9 satellite): a peer that vanishes mid-request must
@@ -155,6 +123,8 @@ fn concurrent_clients_share_the_worker_pool() {
 /// a pipelined client that closes before reading its replies — and both
 /// must land in the `disconnects=` counter of the metrics report while the
 /// server keeps serving and still shuts down with every thread joined.
+/// The rude peers write raw bytes on purpose (the drill needs torn frames
+/// the typed client cannot produce); the well-behaved traffic is typed.
 #[test]
 fn client_disconnect_mid_request_is_counted_and_survivable() {
     use std::io::Write;
@@ -195,26 +165,20 @@ fn client_disconnect_mid_request_is_counted_and_survivable() {
 
     // A well-behaved client sets the model up.
     let mut c = Client::connect(addr).unwrap();
-    let r = c.call(r#"{"op":"create_model","d":2}"#).unwrap();
-    let model = r.get("model").unwrap().as_usize().unwrap();
+    let model = c.create_model(2, 1, 1.0, 1.0).unwrap();
     let mut rng = Rng::new(17);
     let mut xs = Vec::new();
     let mut ys = Vec::new();
     for _ in 0..60 {
         let x = vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)];
-        ys.push((x[0].sin() + x[1].cos()).to_string());
-        xs.push(format!("[{},{}]", x[0], x[1]));
+        ys.push(x[0].sin() + x[1].cos());
+        xs.push(x);
     }
-    let req = format!(
-        r#"{{"op":"observe_batch","model":{model},"xs":[{}],"ys":[{}]}}"#,
-        xs.join(","),
-        ys.join(",")
-    );
-    assert_eq!(c.call(&req).unwrap().get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(c.observe_batch(model, &xs, &ys).unwrap().n, 60);
 
     // Disconnect shape 1: a torn final line — request bytes, no newline,
     // then the peer vanishes. The bounded reader sees EOF with a partial
-    // buffer and counts the disconnect.
+    // buffer and counts the disconnect. (Raw socket on purpose.)
     {
         let mut torn = TcpStream::connect(addr).unwrap();
         torn.write_all(format!("{{\"op\":\"stats\",\"model\":{model}").as_bytes()).unwrap();
@@ -224,7 +188,8 @@ fn client_disconnect_mid_request_is_counted_and_survivable() {
     // Disconnect shape 2: a pipelined client that closes before reading.
     // The first (fast) reply hits the closed peer and provokes an RST, so
     // the second reply's write — after a slow `fit` — fails and frees the
-    // reader thread.
+    // reader thread. (Raw socket on purpose: the typed client cannot
+    // pipeline-then-vanish.)
     {
         let mut rude = TcpStream::connect(addr).unwrap();
         rude.write_all(
@@ -238,15 +203,15 @@ fn client_disconnect_mid_request_is_counted_and_survivable() {
     wait_for_disconnects(&server, 2, "pipelined close-before-read");
 
     // The server is unimpressed: existing and new connections still serve.
-    let r = c.call(&format!(r#"{{"op":"stats","model":{model}}}"#)).unwrap();
-    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    let s = c.stats(model).unwrap();
+    assert_eq!(s.n, 60);
     let mut c2 = Client::connect(addr).unwrap();
-    let r = c2.call(&format!(r#"{{"op":"predict","model":{model},"xs":[[1.0,2.0]]}}"#)).unwrap();
-    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    let p = c2.predict(model, &[vec![1.0, 2.0]], 2.0, false).unwrap();
+    assert!(p.mu[0].is_finite());
 
     // Clean shutdown still joins every reader and worker — the vanished
     // peers' reader threads did not leak or wedge the drain.
-    assert_eq!(c2.call(r#"{"op":"shutdown"}"#).unwrap().get("ok").unwrap().as_bool(), Some(true));
+    c2.shutdown().unwrap();
     let stats = serve.join().unwrap();
     assert!(stats.workers_joined >= 1, "pool must drain at shutdown");
 }

@@ -208,6 +208,11 @@ fn response_stats_with_pool_fields() {
             journal_checkpoints: 2,
             solve_cold_retries: 3,
             solve_refit_escalations: 1,
+            // v3-only counters: deliberately absent from the flat golden
+            // below — the legacy shape must not grow fields.
+            snapshots_exported: 5,
+            invalidations_sent: 40,
+            subscribers: 2,
         },
         Some(2.0),
         r#"{"id":2,"ok":true,"n":1000,"d":4,"omegas":[1,0.5,2,1.5],
@@ -283,9 +288,16 @@ fn request_version_gating_is_stable() {
     assert_eq!(e, "op 'forget' requires protocol v2 (request declared v1)");
     let e = Request::parse(r#"{"op":"forget_batch","model":1,"xs":[[1]],"v":1}"#).unwrap_err();
     assert_eq!(e, "op 'forget_batch' requires protocol v2 (request declared v1)");
+    // A v3 op on a v2 frame is refused with the same structured shape.
+    let e = Request::parse(r#"{"op":"snapshot","model":1,"v":2}"#).unwrap_err();
+    assert_eq!(e, "op 'snapshot' requires protocol v3 (request declared v2)");
+    let e = Request::parse(r#"{"op":"subscribe","model":1}"#).unwrap_err();
+    assert_eq!(e, "op 'subscribe' requires protocol v3 (request declared v1)");
+    let e = Request::parse(r#"{"op":"ping","v":2}"#).unwrap_err();
+    assert_eq!(e, "op 'ping' requires protocol v3 (request declared v2)");
     // Versions above the server's ceiling fail loudly, naming the ceiling.
-    let e = Request::parse(r#"{"op":"stats","model":1,"v":3}"#).unwrap_err();
-    assert_eq!(e, "unsupported protocol version 3 (server speaks <= 2)");
+    let e = Request::parse(r#"{"op":"stats","model":1,"v":4}"#).unwrap_err();
+    assert_eq!(e, "unsupported protocol version 4 (server speaks <= 3)");
     // Malformed versions are rejected before any op dispatch.
     assert!(Request::parse(r#"{"op":"stats","model":1,"v":0}"#).is_err());
     assert!(Request::parse(r#"{"op":"stats","model":1,"v":1.5}"#).is_err());
@@ -328,6 +340,121 @@ fn response_audit_report() {
         r#"{"ok":true,"passed":false,"structures":25,
             "violation":"Banded.data[3]: non-finite entry"}"#,
     );
+}
+
+/// Protocol v3 request surface (snapshot-shipping read replicas): the
+/// `snapshot` fetch with its optional `have_gen` delta marker, the
+/// `subscribe` stream conversion, and the model-free `ping` hello.
+#[test]
+fn request_v3_snapshot_subscribe_ping() {
+    let (r, id) =
+        Request::parse(r#"{"op":"snapshot","model":7,"v":3,"id":2}"#).unwrap();
+    assert_eq!(id, Some(2.0));
+    assert_eq!(r, Request::Snapshot { model: 7, have_gen: None });
+    let (r, _) =
+        Request::parse(r#"{"op":"snapshot","model":7,"have_gen":41,"v":3}"#).unwrap();
+    assert_eq!(r, Request::Snapshot { model: 7, have_gen: Some(41) });
+    let (r, _) = Request::parse(r#"{"op":"subscribe","model":7,"v":3}"#).unwrap();
+    assert_eq!(r, Request::Subscribe { model: 7 });
+    let (r, _) = Request::parse(r#"{"op":"ping","v":3}"#).unwrap();
+    assert_eq!(r, Request::Ping);
+    assert!(Request::parse(r#"{"op":"snapshot","v":3}"#).is_err(), "snapshot needs model");
+    assert!(Request::parse(r#"{"op":"subscribe","v":3}"#).is_err(), "subscribe needs model");
+}
+
+/// Protocol v3 response surface: the snapshot artifact reply (payload and
+/// `unchanged` delta forms), the subscription ack, the invalidation push
+/// event, and the `ping` hello.
+#[test]
+fn response_v3_replication_surface() {
+    pin_response(
+        Response::Snapshot { gen: 17, artifact: Some("00ff7a".into()) },
+        Some(3.0),
+        r#"{"id":3,"ok":true,"gen":17,"snapshot":"00ff7a"}"#,
+    );
+    pin_response(
+        Response::Snapshot { gen: 17, artifact: None },
+        None,
+        r#"{"ok":true,"gen":17,"unchanged":true}"#,
+    );
+    pin_response(
+        Response::Subscribed { gen: 9 },
+        Some(1.0),
+        r#"{"id":1,"ok":true,"subscribed":true,"gen":9}"#,
+    );
+    pin_response(
+        Response::Invalidate { model: 4, gen: 10 },
+        None,
+        r#"{"ok":true,"event":"invalidate","model":4,"gen":10}"#,
+    );
+    pin_response(
+        Response::Hello { version: 3 },
+        Some(1.0),
+        r#"{"id":1,"ok":true,"server_version":3}"#,
+    );
+}
+
+/// The nested v3 `stats` shape — and the guarantee that the SAME response
+/// value still serializes to the flat legacy shape for v1/v2 requests.
+/// Both shapes are the wire contract; this is the pin.
+#[test]
+fn response_stats_v3_nested_sections() {
+    let stats = Response::Stats {
+        n: 1000,
+        d: 4,
+        omegas: vec![1.0, 0.5, 2.0, 1.5],
+        cache_hits: 10,
+        cache_misses: 3,
+        pjrt_batches: 7,
+        native_queries: 21,
+        factor_patches: 90,
+        factor_resweeps: 2,
+        cache_truncations: 1,
+        fallback_rebuilds: 0,
+        pool_workers: 8,
+        pool_busy: 3,
+        pool_queue_depth: 5,
+        pool_steals: 17,
+        memmove_bytes: 4096,
+        chunks_copied: 6,
+        chunks_shared: 44,
+        window_evictions: 12,
+        window_occupancy: 1000,
+        recoveries: 1,
+        degraded: false,
+        journal_appends: 250,
+        journal_bytes: 16384,
+        journal_checkpoints: 2,
+        solve_cold_retries: 3,
+        solve_refit_escalations: 1,
+        snapshots_exported: 5,
+        invalidations_sent: 40,
+        subscribers: 2,
+    };
+    let nested = stats.to_json_v(Some(2.0), 3);
+    let want = Json::parse(
+        r#"{"id":2,"ok":true,"n":1000,"d":4,"omegas":[1,0.5,2,1.5],
+            "solve":{"cache_hits":10,"cache_misses":3,"pjrt_batches":7,
+                "native_queries":21,"factor_patches":90,"factor_resweeps":2,
+                "cache_truncations":1,"fallback_rebuilds":0,
+                "cold_retries":3,"refit_escalations":1},
+            "storage":{"memmove_bytes":4096,"chunks_copied":6,"chunks_shared":44},
+            "journal":{"appends":250,"bytes":16384,"checkpoints":2,
+                "recoveries":1,"degraded":false},
+            "pool":{"workers":8,"busy":3,"queue_depth":5,"steals":17},
+            "window":{"evictions":12,"occupancy":1000},
+            "replication":{"snapshots_exported":5,"invalidations_sent":40,
+                "subscribers":2}}"#,
+    )
+    .unwrap();
+    assert_eq!(nested, want, "v3 nested stats drift:\n got: {nested}\nwant: {want}");
+    // v1/v2 requests get the flat legacy serialization, byte-for-byte what
+    // `to_json` produces (the replication counters never leak into it).
+    assert_eq!(stats.to_json_v(Some(2.0), 1), stats.to_json(Some(2.0)));
+    assert_eq!(stats.to_json_v(Some(2.0), 2), stats.to_json(Some(2.0)));
+    // Non-stats responses are version-invariant.
+    let ok = Response::Ok;
+    assert_eq!(ok.to_json_v(None, 3), ok.to_json(None));
 }
 
 // ---------------------------------------------------------------------------

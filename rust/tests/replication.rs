@@ -1,0 +1,290 @@
+//! Replicated read path, end to end over the wire (DESIGN.md §Replication).
+//!
+//! * `snapshot_export_import_is_bit_identical` — the tentpole property: a
+//!   snapshot artifact fetched over protocol v3, decoded and audited
+//!   locally, serves predictions **bit-identical** to the writer's own
+//!   replies at the same generation; `have_gen` elides the payload; a
+//!   mutation advances the generation.
+//! * `replica_tracks_the_writer_and_serves_identical_reads` — boot a real
+//!   [`Replica`] against a live writer: bit-identical predicts, suggest
+//!   determinism across two replicas (and vs the writer under a matched
+//!   seed), audit-on-import coherence, artifact re-export, invalidation-
+//!   driven generation tracking, and the shutdown stats receipt.
+//! * `replica_refuses_mutations_and_unknown_models` — the read-only
+//!   surface: every mutating op (and `subscribe`) answers a structured
+//!   error naming the home shard; unreplicated models are refused.
+//!
+//! Plain artifact-corruption drills (torn tails, bit flips, bad magic)
+//! live in `gp/persist.rs` unit tests; the injected-fault ship drills
+//! (torn `snapshot.encode` under chaos seeds) live in `tests/chaos.rs`.
+
+use std::time::{Duration, Instant};
+
+use addgp::check::Audit;
+use addgp::coordinator::replica::ReplicaStats;
+use addgp::coordinator::server::Server;
+use addgp::coordinator::{Client, ProtocolError, Replica, ReplicaConfig};
+use addgp::gp::persist;
+use addgp::util::Rng;
+
+const D: usize = 2;
+const PROBES: [[f64; 2]; 4] = [[0.7, 2.3], [1.9, 0.4], [3.1, 3.6], [2.0, 2.0]];
+
+fn boot_writer() -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let server = Server::bind("127.0.0.1:0", false, 0.0, 4.0).unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || {
+        let _ = server.serve();
+    });
+    (addr, handle)
+}
+
+fn seed_model(c: &mut Client, n: usize, seed: u64) -> u64 {
+    let model = c.create_model(D, 1, 1.0, 1.0).unwrap();
+    let mut rng = Rng::new(seed);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for _ in 0..n {
+        let x = vec![rng.uniform_in(0.0, 4.0), rng.uniform_in(0.0, 4.0)];
+        ys.push(x[0].sin() + x[1].cos() + 0.05 * rng.normal());
+        xs.push(x);
+    }
+    assert_eq!(c.observe_batch(model, &xs, &ys).unwrap().n, n);
+    model
+}
+
+/// Probe a server (writer or replica) and return the reply f64 bits for
+/// mu/svar/acq/gacq over the fixed probe set.
+fn probe_bits(c: &mut Client, model: u64) -> Vec<u64> {
+    let mut bits = Vec::new();
+    for p in &PROBES {
+        let r = c.predict(model, &[vec![p[0], p[1]]], 2.0, true).unwrap();
+        assert_eq!(r.path, "native");
+        for v in r.mu.iter().chain(&r.svar).chain(&r.acq) {
+            bits.push(v.to_bits());
+        }
+        for row in &r.gacq {
+            for v in row {
+                bits.push(v.to_bits());
+            }
+        }
+    }
+    bits
+}
+
+/// Poll `f` until it returns true or the deadline expires.
+fn wait_for(what: &str, mut f: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while !f() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// The tentpole property over the real wire: export → import → serve is
+/// the identity on prediction bits at a fixed generation.
+#[test]
+fn snapshot_export_import_is_bit_identical() {
+    let (addr, _handle) = boot_writer();
+    let mut c = Client::connect(addr).unwrap();
+    let model = seed_model(&mut c, 60, 29);
+
+    // Fetch the generation-numbered artifact and import it like a replica:
+    // decode runs the full structural audit before returning.
+    let fetch = c.snapshot(model, None).unwrap();
+    let bytes = fetch.artifact.expect("first fetch ships the payload");
+    let (gen, snap) = persist::decode_snapshot(&bytes).unwrap();
+    assert_eq!(gen, fetch.gen);
+    snap.audit().expect("imported snapshot is coherent");
+    assert_eq!(snap.input_dim(), D);
+
+    // Bit-identity: the imported snapshot's local predictions equal the
+    // writer's wire replies value-for-value. The wire uses shortest-round-
+    // trip float formatting, so `to_bits` comparison is exact.
+    for p in &PROBES {
+        let wire = c.predict(model, &[vec![p[0], p[1]]], 2.0, true).unwrap();
+        let local = snap.predict(p, true);
+        assert_eq!(wire.mu[0].to_bits(), local.mean.to_bits(), "mean at {p:?}");
+        assert_eq!(wire.svar[0].to_bits(), local.var.to_bits(), "var at {p:?}");
+        for d in 0..D {
+            // gacq folds ∇μ and ∇s through the acquisition; checking the
+            // raw gradients pins the underlying read path.
+            assert!(local.mean_grad[d].is_finite() && local.var_grad[d].is_finite());
+        }
+    }
+
+    // A coherent replica's delta fetch is payload-free...
+    let delta = c.snapshot(model, Some(gen)).unwrap();
+    assert_eq!(delta.gen, gen);
+    assert!(delta.artifact.is_none(), "matching have_gen elides the payload");
+
+    // ...and a mutation advances the generation and ships a new artifact.
+    c.observe(model, &[1.25, 2.75], 0.3).unwrap();
+    let next = c.snapshot(model, Some(gen)).unwrap();
+    assert!(next.gen > gen, "generation advances: {} -> {}", gen, next.gen);
+    let bytes2 = next.artifact.expect("stale have_gen ships the new payload");
+    let (gen2, snap2) = persist::decode_snapshot(&bytes2).unwrap();
+    assert_eq!(gen2, next.gen);
+    assert_eq!(snap2.n(), snap.n() + 1);
+
+    // Replication counters surfaced in the v3 stats: two real exports, and
+    // the unchanged ack did not count as one.
+    let s = c.stats(model).unwrap();
+    assert_eq!(s.replication.snapshots_exported, 2, "{s:?}");
+
+    let _ = c.shutdown();
+}
+
+#[test]
+fn replica_tracks_the_writer_and_serves_identical_reads() {
+    let (addr, _writer) = boot_writer();
+    let mut c = Client::connect(addr).unwrap();
+    let model = seed_model(&mut c, 60, 31);
+    let gen0 = c.snapshot(model, None).unwrap().gen;
+
+    // The writer derives its suggest rng from `0xC0FE ^ d`; give replica A
+    // a seed that lands on the same per-model stream so its first suggest
+    // must be bit-identical to the writer's first suggest.
+    let matched_seed = (0xC0FE ^ D as u64) ^ model;
+    let cfg = |seed: u64| ReplicaConfig {
+        writer: addr.to_string(),
+        models: vec![model],
+        lo: 0.0,
+        hi: 4.0,
+        seed,
+    };
+    let rep_a = Replica::bind("127.0.0.1:0", cfg(matched_seed)).unwrap();
+    let rep_b = Replica::bind("127.0.0.1:0", cfg(matched_seed)).unwrap();
+    assert_eq!(rep_a.generation(model), Some(gen0), "initial sync lands on the writer's gen");
+    let (addr_a, addr_b) = (rep_a.local_addr(), rep_b.local_addr());
+    let serve_a = std::thread::spawn(move || rep_a.serve());
+    let serve_b = std::thread::spawn(move || rep_b.serve());
+
+    // The typed client speaks to a replica exactly as to a writer — the
+    // connect-time hello works because replicas answer `ping`.
+    let mut ca = Client::connect(addr_a).unwrap();
+    let mut cb = Client::connect(addr_b).unwrap();
+
+    // Reads at gen0: writer and both replicas are bit-identical.
+    let w_bits = probe_bits(&mut c, model);
+    assert_eq!(probe_bits(&mut ca, model), w_bits, "replica A diverged from writer");
+    assert_eq!(probe_bits(&mut cb, model), w_bits, "replica B diverged from writer");
+
+    // Suggest: replica A's first draw equals the writer's first draw (the
+    // seed was matched above), and replica B — same seed, same generation,
+    // same seq — reproduces it bit-for-bit at any fan-out.
+    let xw = c.suggest(model, 2.0).unwrap();
+    let xa = ca.suggest(model, 2.0).unwrap();
+    let xb = cb.suggest(model, 2.0).unwrap();
+    assert_eq!(xa, xw, "replica suggest must ride the writer's read path");
+    assert_eq!(xa, xb, "same (seed, seq, gen) ⇒ same suggestion on every replica");
+    assert!(xa.iter().all(|v| (0.0..=4.0).contains(v)), "{xa:?}");
+
+    // The audit-on-import guarantee, visible over the wire.
+    let audit = ca.audit(model).unwrap();
+    assert!(audit.passed, "{audit:?}");
+
+    // A replica re-exports the exact artifact it serves from.
+    let re = ca.snapshot(model, None).unwrap();
+    assert_eq!(re.gen, gen0);
+    let (g, resnap) = persist::decode_snapshot(&re.artifact.unwrap()).unwrap();
+    assert_eq!(g, gen0);
+    assert_eq!(resnap.n(), 60);
+    assert!(ca.snapshot(model, Some(gen0)).unwrap().artifact.is_none());
+
+    // Wait until both sync threads are subscribed before mutating, so the
+    // invalidation push (not a lucky catch-up fetch) drives the refresh.
+    wait_for("both replicas subscribed", || {
+        c.stats(model).unwrap().replication.subscribers >= 2
+    });
+
+    // Mutate the writer: the push protocol must carry both replicas to the
+    // new generation, and reads must re-converge bit-identically.
+    c.observe(model, &[0.6, 3.2], -0.4).unwrap();
+    let gen1 = c.snapshot(model, Some(gen0)).unwrap().gen;
+    assert!(gen1 > gen0);
+    for (who, addr) in [("A", addr_a), ("B", addr_b)] {
+        let mut probe = Client::connect(addr).unwrap();
+        wait_for(&format!("replica {who} catching up to gen {gen1}"), || {
+            probe.snapshot(model, Some(gen1)).unwrap().gen == gen1
+        });
+    }
+    let w_bits = probe_bits(&mut c, model);
+    assert_eq!(probe_bits(&mut ca, model), w_bits, "replica A diverged after catch-up");
+    assert_eq!(probe_bits(&mut cb, model), w_bits, "replica B diverged after catch-up");
+
+    // Shutdown receipts: each replica imported at least the initial
+    // snapshot plus the invalidation-driven refresh, saw the invalidation,
+    // and served every read above.
+    ca.shutdown().unwrap();
+    cb.shutdown().unwrap();
+    let sa: ReplicaStats = serve_a.join().unwrap();
+    let sb: ReplicaStats = serve_b.join().unwrap();
+    for (who, s) in [("A", sa), ("B", sb)] {
+        assert!(s.snapshots_imported >= 2, "replica {who}: {s:?}");
+        assert!(s.invalidations_seen >= 1, "replica {who}: {s:?}");
+        assert!(s.reads_served > 0, "replica {who}: {s:?}");
+    }
+    let _ = c.shutdown();
+}
+
+#[test]
+fn replica_refuses_mutations_and_unknown_models() {
+    let (addr, _writer) = boot_writer();
+    let mut c = Client::connect(addr).unwrap();
+    let model = seed_model(&mut c, 55, 37);
+
+    let rep = Replica::bind(
+        "127.0.0.1:0",
+        ReplicaConfig {
+            writer: addr.to_string(),
+            models: vec![model],
+            lo: 0.0,
+            hi: 4.0,
+            seed: 1,
+        },
+    )
+    .unwrap();
+    let rep_addr = rep.local_addr();
+    let serve = std::thread::spawn(move || rep.serve());
+    let mut cr = Client::connect(rep_addr).unwrap();
+
+    // Every mutating op answers a structured read-only error, and the
+    // serving state is untouched afterwards.
+    let read_only = |r: Result<String, ProtocolError>| match r {
+        Err(ProtocolError::Remote(e)) => {
+            assert!(e.contains("read-only"), "{e}");
+            assert!(e.contains("home shard"), "{e}");
+        }
+        other => panic!("expected read-only rejection, got {other:?}"),
+    };
+    read_only(cr.observe(model, &[1.0, 1.0], 0.5).map(|r| format!("{r:?}")));
+    read_only(cr.observe_batch(model, &[vec![1.0, 1.0]], &[0.5]).map(|r| format!("{r:?}")));
+    read_only(cr.forget(model, &[1.0, 1.0]).map(|r| format!("{r:?}")));
+    read_only(cr.fit(model, 2).map(|r| format!("{r:?}")));
+    read_only(cr.rolling_window(model, 10, None).map(|r| format!("{r:?}")));
+    read_only(cr.stats(model).map(|r| format!("{r:?}")));
+    read_only(cr.create_model(2, 1, 1.0, 1.0).map(|r| format!("{r:?}")));
+
+    // Subscribing to a replica is refused with a pointer at the writer
+    // (replicas consume invalidations; they do not originate them).
+    let sub_err = Client::connect(rep_addr).unwrap().subscribe(model).unwrap_err();
+    match sub_err {
+        ProtocolError::Remote(e) => assert!(e.contains("home shard"), "{e}"),
+        other => panic!("{other:?}"),
+    }
+
+    // Unreplicated models are named in the refusal.
+    match cr.predict(999, &[vec![1.0, 1.0]], 2.0, false).unwrap_err() {
+        ProtocolError::Remote(e) => assert!(e.contains("not replicated"), "{e}"),
+        other => panic!("{other:?}"),
+    }
+
+    // The replica still serves after the rejection gauntlet.
+    let p = cr.predict(model, &[vec![1.0, 2.0]], 2.0, false).unwrap();
+    assert!(p.mu[0].is_finite());
+
+    cr.shutdown().unwrap();
+    serve.join().unwrap();
+    let _ = c.shutdown();
+}

@@ -50,6 +50,16 @@
 //!    calling `fault::check(` directly outside `util/fault.rs` is banned —
 //!    the `point!` macro is what the `fault-inject` feature compiles out,
 //!    so a direct call would put plan lookups on release hot paths.
+//! 9. **wire-discipline** — hand-rolled protocol frames (a string literal
+//!    carrying the `"op":` request marker) are banned outside the typed
+//!    client (`coordinator/client.rs`), the codec
+//!    (`coordinator/protocol.rs`), and tests: every other caller goes
+//!    through `coordinator::Client`, so the wire shape has exactly one
+//!    writer per side. Deliberate raw-wire drills (torn frames, version
+//!    pins a typed client cannot produce) are annotated
+//!    `// lint: wire-ok (<why>)` on the line or within the three lines
+//!    above. Scans `rust/src`, `rust/benches`, and the repo-root
+//!    `examples/`.
 //!
 //! The scanners are deliberately string/line-based, not syn-based: they are
 //! auditable in a glance, dependency-free, and err toward *not* flagging
@@ -640,6 +650,47 @@ fn scan_fault_points(files: &[(String, String)]) -> Vec<String> {
     out
 }
 
+/// The two files allowed to build wire frames (lint 9): the typed client
+/// and the protocol codec. Everything else speaks through them.
+const WIRE_EXEMPT: &[&str] = &[
+    "rust/src/coordinator/client.rs",
+    "rust/src/coordinator/protocol.rs",
+];
+
+/// Lint 9: hand-rolled wire frames. A non-test line whose string literal
+/// carries the request frame marker (`"op":`, raw or escaped) is bypassing
+/// the typed [`coordinator::Client`] — the protocol v3 redesign made that
+/// surface the only sanctioned frame writer outside the codec itself.
+/// Suppression: `// lint: wire-ok (<why>)` on the line or within the three
+/// lines above (for deliberate raw-wire drills such as torn-frame tests
+/// living outside `rust/tests/`).
+fn scan_wire_discipline(name: &str, src: &str) -> Vec<String> {
+    let lines: Vec<&str> = src.lines().collect();
+    let mask = test_region_mask(&lines);
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        let code = strip_comment(line);
+        // Raw-string form (`{"op":"stats"}`) or escaped form (`{\"op\":`).
+        if !(code.contains(r#""op":"#) || code.contains(r#"\"op\":"#)) {
+            continue;
+        }
+        let suppressed =
+            (i.saturating_sub(3)..=i).any(|k| lines[k].contains("lint: wire-ok"));
+        if !suppressed {
+            out.push(format!(
+                "{name}:{}: hand-rolled wire frame (`\"op\":…`) outside the \
+                 typed client — go through `coordinator::Client`, or annotate \
+                 `// lint: wire-ok (<why>)` for a deliberate raw-wire drill",
+                i + 1
+            ));
+        }
+    }
+    out
+}
+
 /// The factor-stack modules lint 7 exempts (`linalg/` is exempted by path
 /// prefix): the splice surface's own implementation and its one sanctioned
 /// caller, `FitState`.
@@ -723,6 +774,23 @@ fn lint() -> ExitCode {
     for path in &all_rust {
         let (name, src) = read_rel(&root, path);
         findings.extend(scan_unsafe_safety(&name, &src));
+    }
+
+    // 9. Wire discipline: rust/src + rust/benches (tests are exempt — the
+    // protocol golden pins *must* write raw frames) plus the repo-root
+    // examples tree, which compiles into the crate's example targets.
+    let mut wire_files: Vec<PathBuf> = all_rust
+        .iter()
+        .filter(|p| !p.starts_with(rust.join("tests")))
+        .cloned()
+        .collect();
+    rust_files(&root.join("examples"), &mut wire_files);
+    for path in &wire_files {
+        let (name, src) = read_rel(&root, path);
+        if WIRE_EXEMPT.contains(&name.as_str()) {
+            continue;
+        }
+        findings.extend(scan_wire_discipline(&name, &src));
     }
 
     if findings.is_empty() {
@@ -965,6 +1033,31 @@ mod tests {
         );
         let f = scan_fault_points(&[fake_fault_rs(&["a.b"]), sites, prose]);
         assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn wire_scanner_bans_raw_frames_outside_the_client() {
+        let raw = "fn f(c: &mut Client) {\n    let _ = c.call(r#\"{\"op\":\"stats\",\"model\":1}\"#);\n}\n";
+        let f = scan_wire_discipline("rust/src/coordinator/server.rs", raw);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].starts_with("rust/src/coordinator/server.rs:2:"), "{}", f[0]);
+        assert!(f[0].contains("coordinator::Client"), "{}", f[0]);
+        // The escaped form is caught too.
+        let escaped =
+            "fn f(w: &mut W) {\n    w.write_all(b\"{\\\"op\\\":\\\"ping\\\"}\\n\").ok();\n}\n";
+        assert_eq!(scan_wire_discipline("examples/x.rs", escaped).len(), 1);
+        // Suppression within three lines above.
+        let suppressed = "fn drill(c: &mut C) {\n    // torn-frame drill needs raw bytes. lint: wire-ok\n    let _ = c.call(r#\"{\"op\":\"stats\"\"#);\n}\n";
+        assert!(scan_wire_discipline("examples/x.rs", suppressed).is_empty());
+        // Test regions and prose mentions are exempt.
+        let in_test =
+            "#[cfg(test)]\nmod tests {\n    const FRAME: &str = r#\"{\"op\":\"ping\"}\"#;\n}\n";
+        assert!(scan_wire_discipline("rust/src/a.rs", in_test).is_empty());
+        let prose = "/// Send `{\"op\":\"ping\"}` to say hello.\nfn f() {}\n";
+        assert!(scan_wire_discipline("rust/src/a.rs", prose).is_empty(), "comments stripped");
+        // `v.get(\"op\")` — reading the field, not building a frame.
+        let get = "fn f(v: &Json) {\n    let _ = v.get(\"op\");\n}\n";
+        assert!(scan_wire_discipline("rust/src/a.rs", get).is_empty());
     }
 
     #[test]
